@@ -1,0 +1,196 @@
+//! Benchmark suite (`cargo bench`) — in-tree harness (no criterion in
+//! the offline cache; see util::bench).
+//!
+//! Coverage maps to the paper exhibits and the hot paths behind them:
+//!   datagen / subsample / kmeans      -> substrate throughput (Fig 1)
+//!   ranking metrics                   -> PER / regret@k kernels (§3.2)
+//!   law fit / predictors              -> §4.2 strategies (Figs 5, 9, 10)
+//!   search replay                     -> Alg. 1 over a bank (Figs 3, 4, 8)
+//!   surrogate                         -> Fig 6 generator
+//!   proxy step / pjrt step            -> L3 + L1/L2 training hot path
+//!
+//! Filter with: cargo bench -- <substring>. Output quoted in
+//! EXPERIMENTS.md §Perf.
+
+use nshpo::data::{Plan, Stream, StreamConfig};
+use nshpo::metrics;
+use nshpo::predict::{self, LawKind, Strategy};
+use nshpo::search::equally_spaced_stops;
+use nshpo::surrogate;
+use nshpo::train::{LogisticProxy, OnlineModel};
+use nshpo::util::bench::{bench, black_box, BenchResult};
+use nshpo::util::prng::Rng;
+use std::time::Duration;
+
+const SAMPLES: usize = 7;
+const MIN_SAMPLE: Duration = Duration::from_millis(40);
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let mut results: Vec<String> = Vec::new();
+    let mut run = |name: &str, f: &mut dyn FnMut() -> BenchResult| {
+        if let Some(fil) = &filter {
+            if !name.contains(fil.as_str()) {
+                return;
+            }
+        }
+        let r = f();
+        println!("{}", r.report());
+        results.push(r.report());
+    };
+
+    // ---------------------------------------------------------- data
+    let stream = Stream::new(StreamConfig::default());
+    run("datagen/batch_at_256", &mut || {
+        let mut t = 0usize;
+        bench("datagen/batch_at_256", SAMPLES, MIN_SAMPLE, || {
+            t = (t + 1) % 576;
+            black_box(stream.batch_at(t))
+        })
+    });
+    let batch = stream.batch_at(0);
+    run("datagen/subsample_weights", &mut || {
+        bench("datagen/subsample_weights", SAMPLES, MIN_SAMPLE, || {
+            black_box(Plan::negative_only(0.5).weights(&batch, 7, 3))
+        })
+    });
+
+    // ---------------------------------------------------------- cluster
+    let pts: Vec<Vec<f64>> = {
+        let mut rng = Rng::new(3);
+        (0..2000).map(|_| (0..8).map(|_| rng.normal()).collect()).collect()
+    };
+    run("cluster/kmeans_fit_k32_n2000", &mut || {
+        bench("cluster/kmeans_fit_k32_n2000", 3, MIN_SAMPLE, || {
+            black_box(nshpo::cluster::fit(&pts, 32, 1, 10))
+        })
+    });
+    let km = nshpo::cluster::fit(&pts, 32, 1, 10);
+    run("cluster/assign_batch", &mut || {
+        bench("cluster/assign_batch", SAMPLES, MIN_SAMPLE, || {
+            black_box(nshpo::cluster::assign_rows_f32(&km.centroids, &batch.dense, 8))
+        })
+    });
+
+    // ---------------------------------------------------------- metrics
+    let mut rng = Rng::new(5);
+    let truth: Vec<f64> = (0..100).map(|_| rng.uniform_range(0.4, 0.6)).collect();
+    let scores: Vec<f64> = (0..100).map(|_| rng.uniform_range(0.4, 0.6)).collect();
+    let ranking = metrics::ranking_from_scores(&scores);
+    run("metrics/per_100_configs", &mut || {
+        bench("metrics/per_100_configs", SAMPLES, MIN_SAMPLE, || {
+            black_box(metrics::per(&ranking, &truth))
+        })
+    });
+    run("metrics/regret_at_3_100_configs", &mut || {
+        bench("metrics/regret_at_3_100_configs", SAMPLES, MIN_SAMPLE, || {
+            black_box(metrics::regret_at_k(&ranking, &truth, 3))
+        })
+    });
+
+    // ---------------------------------------------------------- predict
+    let day_means: Vec<Vec<f64>> = (0..27)
+        .map(|c| {
+            (0..12)
+                .map(|d| 0.5 + 0.01 * c as f64 + 0.2 / ((d + 1) as f64 / 24.0))
+                .collect()
+        })
+        .collect();
+    run("predict/fit_pairwise_ipl_27cfg", &mut || {
+        bench("predict/fit_pairwise_ipl_27cfg", 3, MIN_SAMPLE, || {
+            black_box(predict::trajectory_predict(
+                LawKind::InversePowerLaw,
+                &day_means,
+                24,
+                3,
+            ))
+        })
+    });
+    run("predict/constant_27cfg", &mut || {
+        bench("predict/constant_27cfg", SAMPLES, MIN_SAMPLE, || {
+            black_box(
+                day_means
+                    .iter()
+                    .map(|dm| predict::constant_prediction(dm, 3))
+                    .sum::<f64>(),
+            )
+        })
+    });
+
+    // ---------------------------------------------------------- search
+    let ts = surrogate::sample_task(
+        &surrogate::SurrogateConfig { n_configs: 27, ..Default::default() },
+        11,
+    );
+    run("search/one_shot_constant", &mut || {
+        bench("search/one_shot_constant", SAMPLES, MIN_SAMPLE, || {
+            black_box(ts.one_shot(Strategy::Constant, 12))
+        })
+    });
+    run("search/perf_stopping_constant", &mut || {
+        let stops = equally_spaced_stops(ts.days, 3);
+        bench("search/perf_stopping_constant", SAMPLES, MIN_SAMPLE, || {
+            black_box(ts.performance_based(Strategy::Constant, &stops, 0.5))
+        })
+    });
+    run("search/perf_stopping_trajectory", &mut || {
+        let stops = equally_spaced_stops(ts.days, 6);
+        bench("search/perf_stopping_trajectory", 3, MIN_SAMPLE, || {
+            black_box(ts.performance_based(
+                Strategy::Trajectory(LawKind::InversePowerLaw),
+                &stops,
+                0.5,
+            ))
+        })
+    });
+
+    // ---------------------------------------------------------- surrogate
+    run("surrogate/sample_task_30cfg", &mut || {
+        bench("surrogate/sample_task_30cfg", 3, MIN_SAMPLE, || {
+            black_box(surrogate::sample_task(&Default::default(), 3))
+        })
+    });
+
+    // ---------------------------------------------------------- trainers
+    run("train/proxy_step_b256", &mut || {
+        let mut m = LogisticProxy::new(0);
+        let w = vec![1.0f32; batch.len()];
+        bench("train/proxy_step_b256", SAMPLES, MIN_SAMPLE, || {
+            black_box(m.step(&batch, &w, 0.5, [-2.0, -2.5, 1e-6]).unwrap())
+        })
+    });
+
+    // PJRT step benches need artifacts (skipped quietly otherwise).
+    if let Ok(manifest) = nshpo::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        let engine = nshpo::runtime::Engine::cpu().expect("pjrt cpu client");
+        for name in ["fm_base", "cn_l3", "moe_e4"] {
+            let label = format!("runtime/pjrt_step_{name}");
+            run(&label, &mut || {
+                let model = engine.load_model(manifest.variant(name).unwrap()).unwrap();
+                let mut run_state = model.init_state(0).unwrap();
+                let w = vec![1.0f32; batch.len()];
+                bench(&label, 3, MIN_SAMPLE, || {
+                    black_box(
+                        model
+                            .step(&mut run_state, &batch, &w, 0.5, [-2.0, -2.5, 1e-6])
+                            .unwrap(),
+                    )
+                })
+            });
+        }
+    } else {
+        eprintln!("(pjrt benches skipped: run `make artifacts`)");
+    }
+
+    // ---------------------------------------------------------- io
+    run("io/json_parse_manifest_like", &mut || {
+        let text = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+            r#"{"schema":{"batch":256,"n_dense":8,"n_cat":12},"variants":[]}"#.into()
+        });
+        bench("io/json_parse_manifest_like", SAMPLES, MIN_SAMPLE, || {
+            black_box(nshpo::util::json::Json::parse(&text).unwrap())
+        })
+    });
+
+    println!("\n{} benches run", results.len());
+}

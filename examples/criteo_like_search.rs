@@ -1,0 +1,106 @@
+//! End-to-end driver (the DESIGN.md §6 validation run): the full
+//! three-layer stack on a real small workload.
+//!
+//! * L1/L2: AOT-compiled JAX models with Pallas kernels (requires
+//!   `make artifacts`), executed via PJRT from Rust.
+//! * L3: the coordinator trains a real FM hyperparameter sweep on the
+//!   24-day synthetic clickstream (progressive validation), then runs
+//!   the paper's search strategies over the recorded trajectories and
+//!   reports cost-vs-regret@3 — the Figure 3 experiment at example scale.
+//!
+//! Run: make artifacts && cargo run --release --example criteo_like_search
+//! (pass --quick for a smaller sweep; results logged in EXPERIMENTS.md)
+
+use nshpo::coordinator::{build_bank, BankOptions};
+use nshpo::data::{Plan, StreamConfig};
+use nshpo::metrics;
+use nshpo::predict::{LawKind, Strategy};
+use nshpo::search::equally_spaced_stops;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = BankOptions {
+        stream: StreamConfig {
+            seed: 17,
+            days: if quick { 12 } else { 24 },
+            steps_per_day: if quick { 3 } else { 4 },
+            batch: 256, // must match `make artifacts`
+            n_clusters: 32,
+        },
+        eval_days: 3,
+        families: vec!["fm".into()],
+        plans: vec![Plan::Full, Plan::negative_only(0.5)],
+        thin: 3, // 9 configs of the 27-point paper grid
+        use_proxy: false, // the real thing: PJRT + Pallas-kernel models
+        variance_seeds: 0,
+        cluster_k: 16,
+        verbose: true,
+        ..BankOptions::default()
+    };
+
+    println!(
+        "== NS-HPO end-to-end: FM sweep x {} days x {} steps/day (PJRT, batch 256) ==",
+        opts.stream.days, opts.stream.steps_per_day
+    );
+    let t0 = Instant::now();
+    let bank = build_bank(&opts)?;
+    let train_wall = t0.elapsed().as_secs_f64();
+
+    let (ts_full, labels) = bank.trajectory_set("fm", "full", 0).unwrap();
+    let (ts_neg, _) = bank.trajectory_set("fm", "pos1.00neg0.50", 0).unwrap();
+    let truth = ts_full.ground_truth();
+    let reference = truth.iter().cloned().fold(f64::MAX, f64::min);
+    let neg_mult = {
+        let (mut tr, mut seen) = (0u64, 0u64);
+        for r in &bank.runs {
+            if r.key.plan_tag == "pos1.00neg0.50" {
+                tr += r.examples_trained;
+                seen += r.examples_seen;
+            }
+        }
+        tr as f64 / seen as f64
+    };
+
+    println!("\ntrained {} runs in {:.0}s; loss curve of the best config:", bank.runs.len(), train_wall);
+    let best = metrics::ranking_from_scores(&truth)[0];
+    let dm = ts_full.day_means(best, ts_full.days);
+    for (d, m) in dm.iter().enumerate() {
+        if d % 3 == 0 || d + 1 == dm.len() {
+            println!("  day {d:>2}: loss {m:.4}");
+        }
+    }
+    println!("  ground-truth best: {}", labels[best]);
+
+    println!("\nstrategy comparison (normalized regret@3 target 1e-3):");
+    println!("{:<52} {:>8} {:>12}", "strategy", "C", "regret@3");
+    let report = |name: &str, cost: f64, ranking: &[usize]| {
+        let r3 = metrics::regret_at_k(ranking, &truth, 3) / reference;
+        println!("{name:<52} {cost:>8.3} {r3:>12.6}");
+    };
+    for day in [ts_full.days / 4, ts_full.days / 2] {
+        let o = ts_full.one_shot(Strategy::Constant, day);
+        report(&format!("one-shot @ day {day} + constant"), o.cost, &o.ranking);
+    }
+    let stops = equally_spaced_stops(ts_full.days, (ts_full.days / 6).max(2));
+    for (name, strat, ts, mult) in [
+        ("perf-based + constant", Strategy::Constant, &ts_full, 1.0),
+        (
+            "perf-based + trajectory(IPL)",
+            Strategy::Trajectory(LawKind::InversePowerLaw),
+            &ts_full,
+            1.0,
+        ),
+        (
+            "perf-based + stratified + neg0.5 (ours)",
+            Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 5 },
+            &ts_neg,
+            neg_mult,
+        ),
+    ] {
+        let o = ts.performance_based(strat, &stops, 0.5);
+        report(name, o.cost * mult, &o.ranking);
+    }
+    println!("\n(cost C is relative to training all {} configs on full data)", labels.len());
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT pipeline: lower every model variant to HLO text + manifest.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path. Interchange is **HLO text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published xla crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (/opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--batch 256]
+                                       [--variants fm_base,cn_l2] [--list]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as registry
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant, batch):
+    """Lower one registry entry to (step_hlo_text, init_hlo_text, meta)."""
+    step_fn, init_fn, meta = registry.build(variant, batch=batch)
+    s = meta["state_size"]
+    shapes = (
+        jax.ShapeDtypeStruct((s,), jnp.float32),            # state
+        jax.ShapeDtypeStruct((batch, meta["n_dense"]), jnp.float32),
+        jax.ShapeDtypeStruct((batch, meta["n_cat"]), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.float32),        # labels
+        jax.ShapeDtypeStruct((batch,), jnp.float32),        # weights
+        jax.ShapeDtypeStruct((), jnp.float32),              # progress
+        jax.ShapeDtypeStruct((3,), jnp.float32),            # hparams
+    )
+    step_hlo = to_hlo_text(jax.jit(step_fn).lower(*shapes))
+    init_hlo = to_hlo_text(
+        jax.jit(init_fn).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    )
+    return step_hlo, init_hlo, meta
+
+
+def _jsonable(obj):
+    if isinstance(obj, tuple):
+        return list(obj)
+    return obj
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=registry.BATCH)
+    ap.add_argument("--variants", default="", help="comma-separated subset")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    wanted = [v for v in args.variants.split(",") if v]
+    variants = registry.VARIANTS
+    if wanted:
+        variants = [registry.variant_by_name(n) for n in wanted]
+    if args.list:
+        for v in variants:
+            print(v["name"], v["family"])
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "schema": {
+            "batch": args.batch,
+            "n_dense": registry.N_DENSE,
+            "n_cat": registry.N_CAT,
+            "hparam_layout": ["log10_lr", "log10_final_lr", "weight_decay"],
+        },
+        "variants": [],
+    }
+    for v in variants:
+        step_hlo, init_hlo, meta = lower_variant(v, args.batch)
+        step_path = f"{v['name']}.step.hlo.txt"
+        init_path = f"{v['name']}.init.hlo.txt"
+        with open(os.path.join(args.out_dir, step_path), "w") as f:
+            f.write(step_hlo)
+        with open(os.path.join(args.out_dir, init_path), "w") as f:
+            f.write(init_hlo)
+        meta["step_hlo"] = step_path
+        meta["init_hlo"] = init_path
+        meta["arch"] = {k: _jsonable(x) for k, x in meta["arch"].items()}
+        manifest["variants"].append(meta)
+        print(
+            f"lowered {v['name']:<12} params={meta['n_params']:>8} "
+            f"state={meta['state_size']:>9} "
+            f"step={len(step_hlo)//1024}KiB init={len(init_hlo)//1024}KiB"
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} "
+          f"({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

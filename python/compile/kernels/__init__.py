@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the CTR-model compute hot spots.
+
+All kernels lower under interpret=True so the AOT HLO runs on the CPU PJRT
+plugin; see tiling.py for the hardware-adaptation notes.
+"""
+
+from .cross_layer import cross_layer
+from .fm_interaction import fm_interaction
+from .mlp_block import mlp_block
+from . import ref
+
+__all__ = ["cross_layer", "fm_interaction", "mlp_block", "ref"]

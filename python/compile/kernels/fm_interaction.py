@@ -1,0 +1,87 @@
+"""Pallas kernel: batched second-order factorization-machine interaction.
+
+Forward:  f(E)[b] = 0.5 * sum_d ( (sum_f E[b,f,d])^2 - sum_f E[b,f,d]^2 )
+Backward: dE[b,f,d] = g[b] * ( S[b,d] - E[b,f,d] ),  S = sum_f E.
+
+This is the compute hot-spot of the FM / FM-v2 / (HOFM-proxy) models: the
+O(F*D) linearization of the O(F^2*D) pairwise dot-product sum (Rendle,
+2010).  The kernel is batch-tiled; each block keeps the full [blk, F, D]
+field-embedding tile resident (VMEM-sized; see tiling.py) and reduces over
+fields then dims in-register.  The backward pass is its own Pallas kernel
+wired up via jax.custom_vjp so the AOT-lowered training step contains only
+kernel HLO on the hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _fwd_kernel(e_ref, o_ref):
+    e = e_ref[...]                       # [blk, F, D]
+    s = jnp.sum(e, axis=1)               # [blk, D]
+    sq = jnp.sum(e * e, axis=1)          # [blk, D]
+    o_ref[...] = 0.5 * jnp.sum(s * s - sq, axis=1)
+
+
+def _bwd_kernel(e_ref, g_ref, de_ref):
+    e = e_ref[...]                       # [blk, F, D]
+    g = g_ref[...]                       # [blk]
+    s = jnp.sum(e, axis=1, keepdims=True)  # [blk, 1, D]
+    de_ref[...] = g[:, None, None] * (s - e)
+
+
+def _fwd_call(emb, block_b):
+    b, f, d = emb.shape
+    blk = tiling.pick_block(b, block_b)
+    (emb_p,), b0 = tiling.pad_batch([emb], blk)
+    steps = tiling.grid_steps(emb_p.shape[0], blk)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((blk, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((emb_p.shape[0],), emb.dtype),
+        interpret=tiling.INTERPRET,
+    )(emb_p)
+    return out[:b0]
+
+
+def _bwd_call(emb, g, block_b):
+    b, f, d = emb.shape
+    blk = tiling.pick_block(b, block_b)
+    (emb_p, g_p), b0 = tiling.pad_batch([emb, g], blk)
+    steps = tiling.grid_steps(emb_p.shape[0], blk)
+    de = pl.pallas_call(
+        _bwd_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((blk, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(emb_p.shape, emb.dtype),
+        interpret=tiling.INTERPRET,
+    )(emb_p, g_p)
+    return de[:b0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fm_interaction(emb, block_b=None):
+    """FM second-order interaction term, [B, F, D] -> [B]."""
+    return _fwd_call(emb, block_b)
+
+
+def _vjp_fwd(emb, block_b):
+    return _fwd_call(emb, block_b), emb
+
+
+def _vjp_bwd(block_b, emb, g):
+    return (_bwd_call(emb, g, block_b),)
+
+
+fm_interaction.defvjp(_vjp_fwd, _vjp_bwd)

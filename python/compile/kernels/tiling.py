@@ -1,0 +1,50 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode pallas_call lowers to plain
+HLO ops that any backend runs (see /opt/xla-example/README.md).  The
+BlockSpec structure is nevertheless written the way a real TPU lowering
+would want it: batch-tiled blocks sized for VMEM, full (small) feature
+dimensions kept resident per block, grid-sequential accumulation for
+weight gradients.  DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf
+derive the VMEM/MXU estimates from these shapes.
+"""
+
+import jax.numpy as jnp
+
+INTERPRET = True
+
+# Default batch-tile. 128 rows x (F*D or Din+Dout) f32 stays well under a
+# 1 MiB/block VMEM budget for every model in this repo, and keeps the
+# sublane dimension a multiple of the 8x128 VPU tile on a real TPU.
+BATCH_BLOCK = 128
+
+
+def pick_block(batch, requested=None):
+    """Choose a batch-tile size: the requested (or default) block, clamped
+    to the batch size. The wrapper pads the batch so the grid divides it.
+    """
+    blk = requested or BATCH_BLOCK
+    return max(1, min(blk, batch))
+
+
+def pad_batch(arrs, block):
+    """Zero-pad axis 0 of every array in ``arrs`` to a multiple of ``block``.
+
+    Returns (padded_arrays, original_batch). Zero rows are mathematically
+    inert for every kernel in this package (they only produce zero rows in
+    the output, which the wrapper slices away), so no masking is needed.
+    """
+    b = arrs[0].shape[0]
+    pad = (-b) % block
+    if pad == 0:
+        return list(arrs), b
+    out = []
+    for a in arrs:
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        out.append(jnp.pad(a, widths))
+    return out, b
+
+
+def grid_steps(padded_batch, block):
+    return padded_batch // block

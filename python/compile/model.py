@@ -1,0 +1,123 @@
+"""Variant registry: every AOT artifact the Rust coordinator can execute.
+
+One artifact per *architectural* variant; optimization hyperparameters
+(learning rate, final learning rate, weight decay) are runtime inputs so
+each 3x3x3 sweep of the paper's Appendix A.1 reuses a single artifact.
+
+Families (paper §5.1.1 / Appendix A.1, scaled per DESIGN.md §5):
+  FM     — one artifact, 27 optimization configs.
+  FM v2  — three embedding memory structures (high/low-cardinality
+           dim + hash-bucket splits at ~constant footprint).
+  CN     — cross-layer depth in {2, 3, 5}.
+  MLP    — hidden widths {128x4, 256x4} (paper: {598x4, 1196x4}).
+  MoE    — 4 experts, one artifact.
+"""
+
+from . import train_step
+from .models import cn, fm, fmv2, mlp, moe
+
+# Data schema shared with the Rust generator (rust/src/data/schema.rs must
+# agree; the manifest carries these so the runtime can verify).
+N_DENSE = 8
+N_CAT = 12
+BATCH = 256
+
+_BASE = {"n_dense": N_DENSE, "n_cat": N_CAT, "bias_init": -3.0}
+
+
+def _cfg(**kw):
+    d = dict(_BASE)
+    d.update(kw)
+    return d
+
+
+VARIANTS = [
+    {
+        "name": "fm_base",
+        "family": "fm",
+        "model": fm,
+        "cfg": _cfg(vocab=2048, dim=16),
+    },
+    {
+        "name": "fmv2_hi8",
+        "family": "fmv2",
+        "model": fmv2,
+        "cfg": _cfg(n_hi=6, vocab_hi=4096, dim_hi=8, vocab_lo=512, dim_lo=32, dim=16),
+    },
+    {
+        "name": "fmv2_hi16",
+        "family": "fmv2",
+        "model": fmv2,
+        "cfg": _cfg(n_hi=6, vocab_hi=2048, dim_hi=16, vocab_lo=1024, dim_lo=16, dim=16),
+    },
+    {
+        "name": "fmv2_hi32",
+        "family": "fmv2",
+        "model": fmv2,
+        "cfg": _cfg(n_hi=6, vocab_hi=1024, dim_hi=32, vocab_lo=2048, dim_lo=8, dim=16),
+    },
+    {
+        "name": "cn_l2",
+        "family": "cn",
+        "model": cn,
+        "cfg": _cfg(vocab=2048, dim=16, n_layers=2),
+    },
+    {
+        "name": "cn_l3",
+        "family": "cn",
+        "model": cn,
+        "cfg": _cfg(vocab=2048, dim=16, n_layers=3),
+    },
+    {
+        "name": "cn_l5",
+        "family": "cn",
+        "model": cn,
+        "cfg": _cfg(vocab=2048, dim=16, n_layers=5),
+    },
+    {
+        "name": "mlp_h128",
+        "family": "mlp",
+        "model": mlp,
+        "cfg": _cfg(vocab=2048, dim=16, hidden=(128, 128, 128, 128)),
+    },
+    {
+        "name": "mlp_h256",
+        "family": "mlp",
+        "model": mlp,
+        "cfg": _cfg(vocab=2048, dim=16, hidden=(256, 256, 256, 256)),
+    },
+    {
+        "name": "moe_e4",
+        "family": "moe",
+        "model": moe,
+        "cfg": _cfg(vocab=2048, dim=16, n_experts=4, expert_hidden=(128, 64)),
+    },
+]
+
+
+def variant_by_name(name):
+    for v in VARIANTS:
+        if v["name"] == name:
+            return v
+    raise KeyError(f"unknown variant {name!r}")
+
+
+def build(variant, batch=BATCH):
+    """Return (step_fn, init_fn, meta) for a registry entry."""
+    model, cfg = variant["model"], variant["cfg"]
+    step_fn, n_params = train_step.make_step_fn(model, cfg)
+    init_fn, _ = train_step.make_init_fn(model, cfg)
+    meta = {
+        "name": variant["name"],
+        "family": variant["family"],
+        "batch": batch,
+        "n_dense": cfg["n_dense"],
+        "n_cat": cfg["n_cat"],
+        "n_params": n_params,
+        "state_size": 2 * n_params,
+        "hparam_layout": train_step.HPARAM_LAYOUT,
+        "arch": {
+            k: v for k, v in cfg.items() if k not in ("n_dense", "n_cat")
+        },
+    }
+    return step_fn, init_fn, meta

@@ -1,0 +1,5 @@
+"""L2: candidate pCTR architectures (the paper's configuration families)."""
+
+from . import cn, embeddings, fm, fmv2, mlp, moe
+
+__all__ = ["cn", "embeddings", "fm", "fmv2", "mlp", "moe"]

@@ -1,0 +1,43 @@
+"""Cross Network (DCN-v2; Wang et al., 2021) pCTR model — the paper's "CN".
+
+x0 = [flattened categorical embeddings ; dense features]
+x_{l+1} = x0 * (W_l x_l + b_l) + x_l      (the Pallas cross_layer kernel)
+logit   = w_out . x_L + b_out             (linear-mode mlp_block kernel)
+
+The paper's CN experiment varies the number of cross layers in {2, 3, 5}.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import cross_layer, mlp_block
+from . import embeddings as emb
+
+
+def x0_dim(cfg):
+    return cfg["n_cat"] * cfg["dim"] + cfg["n_dense"]
+
+
+def init(key, cfg):
+    d0 = x0_dim(cfg)
+    n_layers = cfg["n_layers"]
+    k = jax.random.split(key, n_layers + 2)
+    params = {
+        "table": emb.table_init(k[0], cfg["n_cat"] * cfg["vocab"], cfg["dim"]),
+        "head_w": emb.glorot_init(k[1], d0, 1),
+        "head_b": jnp.full((1,), cfg.get("bias_init", -3.0), jnp.float32),
+    }
+    for l in range(n_layers):
+        params[f"cross_w_{l}"] = emb.glorot_init(k[l + 2], d0, d0)
+        params[f"cross_b_{l}"] = jnp.zeros((d0,), jnp.float32)
+    return params
+
+
+def apply(params, dense, cat, cfg):
+    e = emb.embed_cat(params["table"], cat, cfg["vocab"])
+    x0 = emb.concat_input(e, dense)
+    x = x0
+    for l in range(cfg["n_layers"]):
+        x = cross_layer(x0, x, params[f"cross_w_{l}"], params[f"cross_b_{l}"])
+    logit = mlp_block(x, params["head_w"], params["head_b"], False)
+    return logit[:, 0]

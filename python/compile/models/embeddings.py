@@ -1,0 +1,60 @@
+"""Shared embedding-table helpers for the CTR models.
+
+Categorical ids arrive from the Rust data layer as raw non-negative i32
+hashes; the in-graph contract is that each model reduces them modulo its
+own vocabulary ("hashing trick"), so one data stream serves every
+architecture/vocab variant (the paper's FM-v2 experiment varies exactly
+these memory structures).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_ids(ids, vocab):
+    """Map raw i32 hashes to table rows: per-feature `id % vocab` plus the
+    feature's row offset into the shared [n_feat * vocab, d] table."""
+    n_feat = ids.shape[1]
+    ids = jnp.bitwise_and(ids, jnp.int32(0x7FFFFFFF))
+    local = jnp.mod(ids, jnp.int32(vocab))
+    offsets = (jnp.arange(n_feat, dtype=jnp.int32) * vocab)[None, :]
+    return local + offsets
+
+
+def embed_cat(table, ids, vocab):
+    """Look up [B, n_feat] raw ids in a [n_feat * vocab, d] table.
+
+    Returns [B, n_feat, d].
+    """
+    idx = hash_ids(ids, vocab)
+    return jnp.take(table, idx, axis=0)
+
+
+def linear_cat(weights, ids, vocab):
+    """First-order categorical term: sum of per-feature scalar weights.
+
+    weights: [n_feat * vocab]. Returns [B].
+    """
+    idx = hash_ids(ids, vocab)
+    return jnp.sum(jnp.take(weights, idx, axis=0), axis=1)
+
+
+def table_init(key, rows, dim, scale=0.05):
+    return scale * jax.random.normal(key, (rows, dim), dtype=jnp.float32)
+
+
+def glorot_init(key, din, dout):
+    scale = jnp.sqrt(2.0 / (din + dout))
+    return scale * jax.random.normal(key, (din, dout), dtype=jnp.float32)
+
+
+def dense_field_embeddings(dense_emb, dense):
+    """Value-scaled embeddings for continuous features: [B, n_dense, d]."""
+    return dense[:, :, None] * dense_emb[None, :, :]
+
+
+def concat_input(emb, dense):
+    """Flatten [B, F, d] field embeddings and append dense features:
+    the x0 input of the CN / MLP / MoE towers ([B, F*d + n_dense])."""
+    b = emb.shape[0]
+    return jnp.concatenate([emb.reshape(b, -1), dense], axis=1)

@@ -1,0 +1,39 @@
+"""Factorization Machine (Rendle, 2010) pCTR model — the paper's "FM".
+
+logit = b + w_dense . x_dense + sum_f w_cat[f, id_f]
+        + fm_interaction(field embeddings)
+
+Field embeddings are the concatenation of categorical table lookups and
+value-scaled dense-feature embeddings; the second-order term is the L1
+Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import fm_interaction
+from . import embeddings as emb
+
+
+def init(key, cfg):
+    k = jax.random.split(key, 4)
+    return {
+        "table": emb.table_init(k[0], cfg["n_cat"] * cfg["vocab"], cfg["dim"]),
+        "dense_emb": emb.table_init(k[1], cfg["n_dense"], cfg["dim"]),
+        "w_cat": 0.01 * jax.random.normal(k[2], (cfg["n_cat"] * cfg["vocab"],)),
+        "w_dense": 0.01 * jax.random.normal(k[3], (cfg["n_dense"],)),
+        "bias": jnp.array(cfg.get("bias_init", -3.0), dtype=jnp.float32),
+    }
+
+
+def apply(params, dense, cat, cfg):
+    e_cat = emb.embed_cat(params["table"], cat, cfg["vocab"])
+    e_dense = emb.dense_field_embeddings(params["dense_emb"], dense)
+    fields = jnp.concatenate([e_cat, e_dense], axis=1)  # [B, F, d]
+    interaction = fm_interaction(fields)
+    linear = (
+        params["bias"]
+        + dense @ params["w_dense"]
+        + emb.linear_cat(params["w_cat"], cat, cfg["vocab"])
+    )
+    return linear + interaction

@@ -1,0 +1,58 @@
+"""FM with split embedding memory structure — the paper's "FM v2".
+
+The paper's FM-v2 experiment divides features into "high" and "low"
+cardinality groups with shared hashed tables, varies each group's
+embedding dimension and hash-bucket count under a constant memory
+footprint, and projects both groups to a common dimension for the FM
+computation (Appendix A.1). The projection is the linear-mode `mlp_block`
+Pallas kernel applied per field.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import fm_interaction, mlp_block
+from . import embeddings as emb
+
+
+def init(key, cfg):
+    k = jax.random.split(key, 7)
+    n_hi, n_lo = cfg["n_hi"], cfg["n_cat"] - cfg["n_hi"]
+    return {
+        "table_hi": emb.table_init(k[0], n_hi * cfg["vocab_hi"], cfg["dim_hi"]),
+        "table_lo": emb.table_init(k[1], n_lo * cfg["vocab_lo"], cfg["dim_lo"]),
+        "proj_hi": emb.glorot_init(k[2], cfg["dim_hi"], cfg["dim"]),
+        "proj_lo": emb.glorot_init(k[3], cfg["dim_lo"], cfg["dim"]),
+        "proj_b_hi": jnp.zeros((cfg["dim"],), jnp.float32),
+        "proj_b_lo": jnp.zeros((cfg["dim"],), jnp.float32),
+        "dense_emb": emb.table_init(k[4], cfg["n_dense"], cfg["dim"]),
+        "w_cat": 0.01 * jax.random.normal(k[5], (cfg["n_cat"] * cfg["vocab_lo"],)),
+        "w_dense": 0.01 * jax.random.normal(k[6], (cfg["n_dense"],)),
+        "bias": jnp.array(cfg.get("bias_init", -3.0), dtype=jnp.float32),
+    }
+
+
+def _project(fields, w, b):
+    """[B, F, d_in] -> [B, F, d] through the linear mlp_block kernel."""
+    bsz, f, din = fields.shape
+    flat = fields.reshape(bsz * f, din)
+    out = mlp_block(flat, w, b, False)
+    return out.reshape(bsz, f, -1)
+
+
+def apply(params, dense, cat, cfg):
+    n_hi = cfg["n_hi"]
+    cat_hi, cat_lo = cat[:, :n_hi], cat[:, n_hi:]
+    e_hi = emb.embed_cat(params["table_hi"], cat_hi, cfg["vocab_hi"])
+    e_lo = emb.embed_cat(params["table_lo"], cat_lo, cfg["vocab_lo"])
+    p_hi = _project(e_hi, params["proj_hi"], params["proj_b_hi"])
+    p_lo = _project(e_lo, params["proj_lo"], params["proj_b_lo"])
+    e_dense = emb.dense_field_embeddings(params["dense_emb"], dense)
+    fields = jnp.concatenate([p_hi, p_lo, e_dense], axis=1)
+    interaction = fm_interaction(fields)
+    linear = (
+        params["bias"]
+        + dense @ params["w_dense"]
+        + emb.linear_cat(params["w_cat"], cat, cfg["vocab_lo"])
+    )
+    return linear + interaction

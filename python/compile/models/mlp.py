@@ -1,0 +1,40 @@
+"""MLP tower pCTR model — the paper's "MLP".
+
+x0 = [flattened categorical embeddings ; dense features] through a stack
+of fused mlp_block kernels (ReLU) and a linear head. The paper's MLP
+experiment varies the hidden widths (598x4 vs 1196x4 at Criteo scale;
+scaled here per DESIGN.md §5).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import mlp_block
+from . import embeddings as emb
+
+
+def x0_dim(cfg):
+    return cfg["n_cat"] * cfg["dim"] + cfg["n_dense"]
+
+
+def init(key, cfg):
+    dims = [x0_dim(cfg)] + list(cfg["hidden"])
+    k = jax.random.split(key, len(dims) + 1)
+    params = {
+        "table": emb.table_init(k[0], cfg["n_cat"] * cfg["vocab"], cfg["dim"]),
+        "head_w": emb.glorot_init(k[len(dims)], dims[-1], 1),
+        "head_b": jnp.full((1,), cfg.get("bias_init", -3.0), jnp.float32),
+    }
+    for l in range(len(dims) - 1):
+        params[f"w_{l}"] = emb.glorot_init(k[l + 1], dims[l], dims[l + 1])
+        params[f"b_{l}"] = jnp.zeros((dims[l + 1],), jnp.float32)
+    return params
+
+
+def apply(params, dense, cat, cfg):
+    e = emb.embed_cat(params["table"], cat, cfg["vocab"])
+    x = emb.concat_input(e, dense)
+    for l in range(len(cfg["hidden"])):
+        x = mlp_block(x, params[f"w_{l}"], params[f"b_{l}"], True)
+    logit = mlp_block(x, params["head_w"], params["head_b"], False)
+    return logit[:, 0]

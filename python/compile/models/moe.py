@@ -1,0 +1,56 @@
+"""Mixture-of-Experts pCTR model — the paper's "MoE".
+
+Softmax gate over E expert towers (each a 2-hidden-layer MLP of
+mlp_block kernels with a linear scalar head); the logit is the
+gate-weighted sum of expert outputs. The paper's MoE (Shazeer et al.,
+2017) uses sparse top-k gating at industrial scale; at this repo's scale
+we compute all experts densely and gate by softmax, which preserves the
+optimization landscape the hyperparameter sweep explores (documented in
+DESIGN.md §2 substitutions).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import mlp_block
+from . import embeddings as emb
+
+
+def x0_dim(cfg):
+    return cfg["n_cat"] * cfg["dim"] + cfg["n_dense"]
+
+
+def init(key, cfg):
+    d0 = x0_dim(cfg)
+    n_exp = cfg["n_experts"]
+    h1, h2 = cfg["expert_hidden"]
+    k = jax.random.split(key, 2 + 3 * n_exp)
+    params = {
+        "table": emb.table_init(k[0], cfg["n_cat"] * cfg["vocab"], cfg["dim"]),
+        "gate_w": emb.glorot_init(k[1], d0, n_exp),
+        "gate_b": jnp.zeros((n_exp,), jnp.float32),
+    }
+    for e in range(n_exp):
+        params[f"e{e}_w1"] = emb.glorot_init(k[2 + 3 * e], d0, h1)
+        params[f"e{e}_b1"] = jnp.zeros((h1,), jnp.float32)
+        params[f"e{e}_w2"] = emb.glorot_init(k[3 + 3 * e], h1, h2)
+        params[f"e{e}_b2"] = jnp.zeros((h2,), jnp.float32)
+        params[f"e{e}_w3"] = emb.glorot_init(k[4 + 3 * e], h2, 1)
+        params[f"e{e}_b3"] = jnp.full((1,), cfg.get("bias_init", -3.0), jnp.float32)
+    return params
+
+
+def apply(params, dense, cat, cfg):
+    e_tab = emb.embed_cat(params["table"], cat, cfg["vocab"])
+    x0 = emb.concat_input(e_tab, dense)
+    gate = jax.nn.softmax(
+        mlp_block(x0, params["gate_w"], params["gate_b"], False), axis=1
+    )  # [B, E]
+    outs = []
+    for e in range(cfg["n_experts"]):
+        h = mlp_block(x0, params[f"e{e}_w1"], params[f"e{e}_b1"], True)
+        h = mlp_block(h, params[f"e{e}_w2"], params[f"e{e}_b2"], True)
+        o = mlp_block(h, params[f"e{e}_w3"], params[f"e{e}_b3"], False)
+        outs.append(o[:, 0])
+    expert_logits = jnp.stack(outs, axis=1)  # [B, E]
+    return jnp.sum(gate * expert_logits, axis=1)

@@ -1,0 +1,102 @@
+"""Online training step with the flat-state ABI (see DESIGN.md §1).
+
+The Rust runtime executes a single HLO per model variant:
+
+    step(state f32[S], dense f32[B,D], cat i32[B,C], labels f32[B],
+         weights f32[B], progress f32[], hparams f32[3])
+      -> (state' f32[S], mean_loss f32[], per_example_loss f32[B])
+
+* ``state`` packs [params ; adagrad accumulator] as one flat f32 vector so
+  the runtime round-trips exactly one buffer per step.
+* ``mean_loss``/``per_example_loss`` are computed with the *pre-update*
+  parameters over *all* examples — the paper's online (progressive
+  validation) evaluation protocol: the metric at time t only depends on
+  θ_{t-1}.
+* ``weights`` implements data sub-sampling (§4.1.2): skipped examples get
+  weight 0 — they are still *evaluated* (the metric trajectory stays
+  comparable across sub-sampling rates) but contribute no gradient.
+* ``hparams = [log10(lr), log10(final_lr), weight_decay]`` and
+  ``progress = t/T`` drive the in-graph exponential learning-rate
+  schedule  lr_t = lr^(1-p) * final_lr^p,  so one artifact serves the
+  whole 27-point optimization sweep.
+* Optimizer: Adagrad (the workhorse for online CTR models; McMahan et
+  al., 2013), with decoupled L2 weight decay added to the gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+ADAGRAD_EPS = 1e-8
+HPARAM_LAYOUT = ["log10_lr", "log10_final_lr", "weight_decay"]
+
+
+def bce_with_logits(logits, labels):
+    """Numerically stable per-example binary cross-entropy (log loss)."""
+    return jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+
+
+def make_template(model, cfg, seed=0):
+    """Materialize a parameter pytree once (build time only) to obtain the
+    ravel/unravel structure and the flat parameter count."""
+    params = model.init(jax.random.PRNGKey(seed), cfg)
+    flat, unravel = ravel_pytree(params)
+    return flat.shape[0], unravel
+
+
+def make_step_fn(model, cfg):
+    """Build the jittable step function for a model variant."""
+    n_params, unravel = make_template(model, cfg)
+
+    def step(state, dense, cat, labels, weights, progress, hparams):
+        params_flat = state[:n_params]
+        acc = state[n_params:]
+        params = unravel(params_flat)
+
+        def weighted_loss(p):
+            logits = model.apply(p, dense, cat, cfg)
+            per_ex = bce_with_logits(logits, labels)
+            denom = jnp.maximum(jnp.sum(weights), 1.0)
+            return jnp.sum(per_ex * weights) / denom, per_ex
+
+        (_, per_ex), grads = jax.value_and_grad(weighted_loss, has_aux=True)(
+            params
+        )
+        g, _ = ravel_pytree(grads)
+        # Weight decay belongs to the *training* update: a batch whose
+        # examples are all sub-sampled away must be a strict no-op.
+        any_kept = (jnp.sum(weights) > 0.0).astype(jnp.float32)
+        g = (g + hparams[2] * params_flat) * any_kept
+
+        p = progress
+        lr_t = jnp.power(10.0, hparams[0] * (1.0 - p) + hparams[1] * p)
+        acc_new = acc + g * g
+        params_new = params_flat - lr_t * g / (jnp.sqrt(acc_new) + ADAGRAD_EPS)
+
+        mean_loss = jnp.mean(per_ex)  # unweighted: the online metric
+        return (
+            jnp.concatenate([params_new, acc_new]),
+            mean_loss,
+            per_ex,
+        )
+
+    return step, n_params
+
+
+def make_init_fn(model, cfg):
+    """Build the jittable state-initialization function: seed -> state.
+
+    Emitted as its own HLO artifact so the Rust runtime can materialize
+    any seed (the paper's 8-seed variance analysis) without touching
+    Python at run time.
+    """
+    n_params, _ = make_template(model, cfg)
+
+    def init(seed):
+        params = model.init(jax.random.PRNGKey(seed), cfg)
+        flat, _ = ravel_pytree(params)
+        return jnp.concatenate([flat, jnp.zeros_like(flat)])
+
+    return init, n_params

@@ -1,0 +1,175 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (including non-multiples of the batch block, so
+the padding path is exercised) and checks forward values and every
+backward gradient against jax autodiff of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cross_layer, fm_interaction, mlp_block, ref
+
+TOL = dict(rtol=2e-4, atol=1e-5)
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------------------- FM
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    f=st.integers(1, 24),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_fm_forward_matches_ref(b, f, d, seed):
+    e = _rand(seed, (b, f, d))
+    np.testing.assert_allclose(
+        fm_interaction(e), ref.fm_interaction_ref(e), **TOL
+    )
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 130), f=st.integers(1, 12), d=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+def test_fm_gradient_matches_ref(b, f, d, seed):
+    e = _rand(seed, (b, f, d))
+    w = _rand(seed + 1, (b,))
+    g = jax.grad(lambda x: jnp.sum(fm_interaction(x) * w))(e)
+    gr = jax.grad(lambda x: jnp.sum(ref.fm_interaction_ref(x) * w))(e)
+    np.testing.assert_allclose(g, gr, **TOL)
+
+
+def test_fm_zero_embedding_gives_zero():
+    e = jnp.zeros((4, 5, 6))
+    np.testing.assert_allclose(fm_interaction(e), jnp.zeros(4), atol=0)
+
+
+def test_fm_single_field_is_zero():
+    # With one field there are no pairwise interactions.
+    e = _rand(0, (7, 1, 9))
+    np.testing.assert_allclose(fm_interaction(e), jnp.zeros(7), atol=1e-6)
+
+
+def test_fm_matches_explicit_pairwise_sum():
+    e = _rand(3, (5, 6, 4))
+    explicit = 0.5 * (
+        jnp.einsum("bfd,bgd->b", e, e) - jnp.einsum("bfd,bfd->b", e, e)
+    )
+    np.testing.assert_allclose(fm_interaction(e), explicit, **TOL)
+
+
+def test_fm_respects_custom_block():
+    e = _rand(1, (100, 8, 8))
+    np.testing.assert_allclose(
+        fm_interaction(e, 32), fm_interaction(e, None), **TOL
+    )
+
+
+# ---------------------------------------------------------------- cross
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 200), d=st.integers(1, 48), seed=st.integers(0, 2**16))
+def test_cross_forward_matches_ref(b, d, seed):
+    x0 = _rand(seed, (b, d))
+    x = _rand(seed + 1, (b, d))
+    w = _rand(seed + 2, (d, d), 0.2)
+    bias = _rand(seed + 3, (d,), 0.1)
+    np.testing.assert_allclose(
+        cross_layer(x0, x, w, bias), ref.cross_layer_ref(x0, x, w, bias), **TOL
+    )
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 140), d=st.integers(1, 24), seed=st.integers(0, 2**16))
+def test_cross_gradients_match_ref(b, d, seed):
+    x0 = _rand(seed, (b, d))
+    x = _rand(seed + 1, (b, d))
+    w = _rand(seed + 2, (d, d), 0.2)
+    bias = _rand(seed + 3, (d,), 0.1)
+    f = lambda *a: jnp.sum(jnp.sin(cross_layer(*a)))
+    fr = lambda *a: jnp.sum(jnp.sin(ref.cross_layer_ref(*a)))
+    gs = jax.grad(f, argnums=(0, 1, 2, 3))(x0, x, w, bias)
+    grs = jax.grad(fr, argnums=(0, 1, 2, 3))(x0, x, w, bias)
+    for g, gr in zip(gs, grs):
+        np.testing.assert_allclose(g, gr, **TOL)
+
+
+def test_cross_identity_when_weight_zero():
+    # W=0, b=0  =>  y = x  (the residual path).
+    x0 = _rand(0, (9, 7))
+    x = _rand(1, (9, 7))
+    y = cross_layer(x0, x, jnp.zeros((7, 7)), jnp.zeros(7))
+    np.testing.assert_allclose(y, x, atol=1e-6)
+
+
+# ---------------------------------------------------------------- mlp
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    din=st.integers(1, 40),
+    dout=st.integers(1, 40),
+    activate=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_mlp_forward_matches_ref(b, din, dout, activate, seed):
+    x = _rand(seed, (b, din))
+    w = _rand(seed + 1, (din, dout), 0.3)
+    bias = _rand(seed + 2, (dout,), 0.1)
+    np.testing.assert_allclose(
+        mlp_block(x, w, bias, activate),
+        ref.mlp_block_ref(x, w, bias, activate),
+        **TOL,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 140),
+    din=st.integers(1, 24),
+    dout=st.integers(1, 24),
+    activate=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_mlp_gradients_match_ref(b, din, dout, activate, seed):
+    x = _rand(seed, (b, din))
+    w = _rand(seed + 1, (din, dout), 0.3)
+    bias = _rand(seed + 2, (dout,), 0.1)
+    f = lambda *a: jnp.sum(jnp.cos(mlp_block(*a, activate)))
+    fr = lambda *a: jnp.sum(jnp.cos(ref.mlp_block_ref(*a, activate)))
+    gs = jax.grad(f, argnums=(0, 1, 2))(x, w, bias)
+    grs = jax.grad(fr, argnums=(0, 1, 2))(x, w, bias)
+    for g, gr in zip(gs, grs):
+        np.testing.assert_allclose(g, gr, **TOL)
+
+
+def test_mlp_relu_kills_negative_preactivations():
+    x = jnp.array([[1.0, -1.0]])
+    w = jnp.eye(2)
+    b = jnp.zeros(2)
+    np.testing.assert_allclose(mlp_block(x, w, b, True), [[1.0, 0.0]])
+    np.testing.assert_allclose(mlp_block(x, w, b, False), [[1.0, -1.0]])
+
+
+def test_kernels_jit_compatible():
+    # The kernels must lower inside jit (the AOT path).
+    e = _rand(0, (16, 4, 8))
+    np.testing.assert_allclose(
+        jax.jit(fm_interaction, static_argnums=1)(e, None),
+        ref.fm_interaction_ref(e),
+        **TOL,
+    )

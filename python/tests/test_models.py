@@ -1,0 +1,147 @@
+"""L2 model tests: shapes, determinism, architecture structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as registry
+from compile.models import cn, embeddings, fm, fmv2, mlp, moe
+
+B = 32
+
+
+def _batch(seed=0, n_dense=registry.N_DENSE, n_cat=registry.N_CAT):
+    k = jax.random.split(jax.random.PRNGKey(seed), 2)
+    dense = jax.random.normal(k[0], (B, n_dense), dtype=jnp.float32)
+    cat = jax.random.randint(k[1], (B, n_cat), 0, 2**31 - 1, dtype=jnp.int32)
+    return dense, cat
+
+
+@pytest.mark.parametrize("variant", registry.VARIANTS, ids=lambda v: v["name"])
+def test_apply_shape_and_finite(variant):
+    model, cfg = variant["model"], variant["cfg"]
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    dense, cat = _batch()
+    logits = model.apply(params, dense, cat, cfg)
+    assert logits.shape == (B,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("variant", registry.VARIANTS, ids=lambda v: v["name"])
+def test_init_deterministic_per_seed(variant):
+    model, cfg = variant["model"], variant["cfg"]
+    p1 = model.init(jax.random.PRNGKey(7), cfg)
+    p2 = model.init(jax.random.PRNGKey(7), cfg)
+    p3 = model.init(jax.random.PRNGKey(8), cfg)
+    flat1 = jax.flatten_util.ravel_pytree(p1)[0]
+    flat2 = jax.flatten_util.ravel_pytree(p2)[0]
+    flat3 = jax.flatten_util.ravel_pytree(p3)[0]
+    np.testing.assert_array_equal(flat1, flat2)
+    assert not bool(jnp.all(flat1 == flat3))
+
+
+def test_hash_ids_in_range():
+    ids = jnp.array([[0, 5, 2**31 - 1], [17, 2048, 4096]], dtype=jnp.int32)
+    idx = embeddings.hash_ids(ids, 2048)
+    assert idx.shape == ids.shape
+    # feature f rows must land in [f*vocab, (f+1)*vocab)
+    for f in range(3):
+        col = np.asarray(idx[:, f])
+        assert (col >= f * 2048).all() and (col < (f + 1) * 2048).all()
+
+
+def test_embed_cat_gathers_expected_rows():
+    table = jnp.arange(3 * 4 * 2, dtype=jnp.float32).reshape(3 * 4, 2)
+    ids = jnp.array([[1, 0, 3]], dtype=jnp.int32)  # vocab=4, 3 features
+    out = embeddings.embed_cat(table, ids, 4)
+    np.testing.assert_array_equal(out[0, 0], table[1])
+    np.testing.assert_array_equal(out[0, 1], table[4 + 0])
+    np.testing.assert_array_equal(out[0, 2], table[8 + 3])
+
+
+def test_fm_interaction_contributes():
+    # With zeroed embedding tables the FM logit reduces to the linear part.
+    cfg = registry.variant_by_name("fm_base")["cfg"]
+    params = fm.init(jax.random.PRNGKey(0), cfg)
+    dense, cat = _batch()
+    full = fm.apply(params, dense, cat, cfg)
+    params0 = dict(params)
+    params0["table"] = jnp.zeros_like(params["table"])
+    params0["dense_emb"] = jnp.zeros_like(params["dense_emb"])
+    lin = fm.apply(params0, dense, cat, cfg)
+    expected_lin = (
+        params["bias"]
+        + dense @ params["w_dense"]
+        + embeddings.linear_cat(params["w_cat"], cat, cfg["vocab"])
+    )
+    np.testing.assert_allclose(lin, expected_lin, rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(full - lin))) > 1e-4
+
+
+def test_cn_layer_count_changes_params():
+    c2 = registry.variant_by_name("cn_l2")
+    c5 = registry.variant_by_name("cn_l5")
+    p2 = cn.init(jax.random.PRNGKey(0), c2["cfg"])
+    p5 = cn.init(jax.random.PRNGKey(0), c5["cfg"])
+    assert "cross_w_4" in p5 and "cross_w_4" not in p2
+    d0 = cn.x0_dim(c2["cfg"])
+    assert p2["cross_w_0"].shape == (d0, d0)
+
+
+def test_mlp_width_variants_differ():
+    m1 = registry.variant_by_name("mlp_h128")
+    m2 = registry.variant_by_name("mlp_h256")
+    p1 = mlp.init(jax.random.PRNGKey(0), m1["cfg"])
+    p2 = mlp.init(jax.random.PRNGKey(0), m2["cfg"])
+    assert p1["w_1"].shape == (128, 128)
+    assert p2["w_1"].shape == (256, 256)
+
+
+def test_moe_gate_is_convex_combination():
+    v = registry.variant_by_name("moe_e4")
+    cfg = v["cfg"]
+    params = moe.init(jax.random.PRNGKey(0), cfg)
+    dense, cat = _batch()
+    logits = moe.apply(params, dense, cat, cfg)
+    # Compute expert outputs by hand; the MoE logit must lie within the
+    # per-example [min, max] expert range (softmax gate is convex).
+    from compile.kernels import mlp_block
+
+    e_tab = embeddings.embed_cat(params["table"], cat, cfg["vocab"])
+    x0 = embeddings.concat_input(e_tab, dense)
+    outs = []
+    for e in range(cfg["n_experts"]):
+        h = mlp_block(x0, params[f"e{e}_w1"], params[f"e{e}_b1"], True)
+        h = mlp_block(h, params[f"e{e}_w2"], params[f"e{e}_b2"], True)
+        outs.append(mlp_block(h, params[f"e{e}_w3"], params[f"e{e}_b3"], False)[:, 0])
+    stack = jnp.stack(outs, axis=1)
+    lo, hi = jnp.min(stack, axis=1), jnp.max(stack, axis=1)
+    assert bool(jnp.all(logits >= lo - 1e-5)) and bool(jnp.all(logits <= hi + 1e-5))
+
+
+def test_fmv2_variants_share_memory_budget():
+    # The three FM-v2 variants are the paper's constant-footprint sweep:
+    # table sizes should be within ~10% of each other.
+    sizes = []
+    for name in ("fmv2_hi8", "fmv2_hi16", "fmv2_hi32"):
+        v = registry.variant_by_name(name)
+        cfg = v["cfg"]
+        n_hi, n_lo = cfg["n_hi"], cfg["n_cat"] - cfg["n_hi"]
+        sizes.append(
+            n_hi * cfg["vocab_hi"] * cfg["dim_hi"]
+            + n_lo * cfg["vocab_lo"] * cfg["dim_lo"]
+        )
+    assert max(sizes) / min(sizes) < 1.1
+
+
+def test_vocab_isolation_between_features():
+    # Two examples whose ids are equal mod vocab but in different features
+    # must produce different embeddings (row offsets isolate features).
+    cfg = registry.variant_by_name("fm_base")["cfg"]
+    table = jax.random.normal(
+        jax.random.PRNGKey(0), (cfg["n_cat"] * cfg["vocab"], cfg["dim"])
+    )
+    ids = jnp.zeros((1, cfg["n_cat"]), dtype=jnp.int32)
+    out = embeddings.embed_cat(table, ids, cfg["vocab"])
+    assert not bool(jnp.allclose(out[0, 0], out[0, 1]))

@@ -1,0 +1,39 @@
+"""Tiling helper tests: padding, block choice, grid arithmetic."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import tiling
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 500), blk=st.integers(1, 256))
+def test_pad_batch_multiple_and_content(b, blk):
+    x = jnp.arange(b * 3, dtype=jnp.float32).reshape(b, 3)
+    (xp,), b0 = tiling.pad_batch([x], blk)
+    assert b0 == b
+    assert xp.shape[0] % blk == 0
+    np.testing.assert_array_equal(np.asarray(xp[:b]), np.asarray(x))
+    if xp.shape[0] > b:
+        assert float(jnp.sum(jnp.abs(xp[b:]))) == 0.0
+
+
+def test_pick_block_clamps():
+    assert tiling.pick_block(1000) == tiling.BATCH_BLOCK
+    assert tiling.pick_block(7) == 7
+    assert tiling.pick_block(100, 32) == 32
+    assert tiling.pick_block(16, 64) == 16
+
+
+def test_grid_steps():
+    assert tiling.grid_steps(256, 128) == 2
+    assert tiling.grid_steps(128, 128) == 1
+
+
+def test_pad_batch_multiple_arrays_consistent():
+    a = jnp.ones((5, 2))
+    b = jnp.ones((5,))
+    (ap, bp), n = tiling.pad_batch([a, b], 4)
+    assert n == 5
+    assert ap.shape[0] == bp.shape[0] == 8

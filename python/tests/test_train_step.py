@@ -1,0 +1,153 @@
+"""Train-step semantics: progressive validation, sub-sampling weights,
+LR schedule, Adagrad update, flat-state packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as registry
+from compile import train_step
+
+B = 64
+
+
+def _setup(name="fm_base", seed=0):
+    variant = registry.variant_by_name(name)
+    step_fn, n_params = train_step.make_step_fn(variant["model"], variant["cfg"])
+    init_fn, _ = train_step.make_init_fn(variant["model"], variant["cfg"])
+    state = init_fn(jnp.int32(seed))
+    return step_fn, init_fn, state, n_params, variant
+
+
+def _learnable_batch(key, n_dense=registry.N_DENSE, n_cat=registry.N_CAT):
+    """Labels correlated with the first dense feature: learnable signal."""
+    k = jax.random.split(key, 3)
+    dense = jax.random.normal(k[0], (B, n_dense), dtype=jnp.float32)
+    cat = jax.random.randint(k[1], (B, n_cat), 0, 2**31 - 1, dtype=jnp.int32)
+    p = jax.nn.sigmoid(2.0 * dense[:, 0] - 1.0)
+    labels = (jax.random.uniform(k[2], (B,)) < p).astype(jnp.float32)
+    return dense, cat, labels
+
+
+HP = jnp.array([-2.0, -2.0, 1e-6], dtype=jnp.float32)  # lr=1e-2 flat, tiny wd
+ONES = jnp.ones((B,), jnp.float32)
+
+
+def test_state_packing_layout():
+    _, init_fn, state, n_params, _ = _setup()
+    assert state.shape == (2 * n_params,)
+    # accumulator half starts at zero, params half does not
+    assert float(jnp.sum(jnp.abs(state[n_params:]))) == 0.0
+    assert float(jnp.sum(jnp.abs(state[:n_params]))) > 0.0
+
+
+def test_loss_is_pre_update_metric():
+    """mean_loss must be computed with theta_{t-1}: two consecutive calls
+    with the same batch must report the FIRST call's loss identically
+    regardless of the learning rate used in that call."""
+    step_fn, _, state, _, _ = _setup()
+    dense, cat, labels = _learnable_batch(jax.random.PRNGKey(1))
+    hp_big = jnp.array([-0.5, -0.5, 0.0], dtype=jnp.float32)
+    _, loss_small, _ = step_fn(state, dense, cat, labels, ONES, 0.0, HP)
+    _, loss_big, _ = step_fn(state, dense, cat, labels, ONES, 0.0, hp_big)
+    np.testing.assert_allclose(float(loss_small), float(loss_big), rtol=1e-6)
+
+
+def test_zero_weights_freeze_params_but_still_evaluate():
+    step_fn, _, state, n_params, _ = _setup()
+    dense, cat, labels = _learnable_batch(jax.random.PRNGKey(2))
+    zeros = jnp.zeros((B,), jnp.float32)
+    new_state, loss, per_ex = step_fn(state, dense, cat, labels, zeros, 0.0, HP)
+    np.testing.assert_array_equal(
+        np.asarray(new_state[:n_params]), np.asarray(state[:n_params])
+    )
+    assert float(loss) > 0.0
+    assert per_ex.shape == (B,)
+
+
+def test_mean_loss_is_unweighted_mean_of_per_example():
+    step_fn, _, state, _, _ = _setup()
+    dense, cat, labels = _learnable_batch(jax.random.PRNGKey(3))
+    w = jnp.concatenate([jnp.ones(B // 2), jnp.zeros(B - B // 2)])
+    _, loss, per_ex = step_fn(state, dense, cat, labels, w, 0.0, HP)
+    np.testing.assert_allclose(float(loss), float(jnp.mean(per_ex)), rtol=1e-6)
+
+
+def test_loss_decreases_over_steps():
+    step_fn, _, state, _, _ = _setup()
+    step_fn = jax.jit(step_fn)
+    hp = jnp.array([-1.5, -1.5, 0.0], dtype=jnp.float32)
+    batches = [_learnable_batch(jax.random.PRNGKey(100 + i)) for i in range(5)]
+    losses = []
+    for t in range(40):
+        dense, cat, labels = batches[t % 5]
+        state, loss, _ = step_fn(
+            state, dense, cat, labels, ONES, jnp.float32(t / 40), hp
+        )
+        losses.append(float(loss))
+    assert np.mean(losses[-10:]) < 0.8 * np.mean(losses[:10])
+
+
+def test_lr_schedule_endpoints():
+    """lr_t = 10^(h0*(1-p) + h1*p): update magnitude at p=0 follows lr,
+    at p=1 follows final_lr."""
+    step_fn, _, state, n_params, _ = _setup()
+    dense, cat, labels = _learnable_batch(jax.random.PRNGKey(4))
+    hp = jnp.array([-1.0, -4.0, 0.0], dtype=jnp.float32)
+    s0, _, _ = step_fn(state, dense, cat, labels, ONES, jnp.float32(0.0), hp)
+    s1, _, _ = step_fn(state, dense, cat, labels, ONES, jnp.float32(1.0), hp)
+    d0 = float(jnp.max(jnp.abs(s0[:n_params] - state[:n_params])))
+    d1 = float(jnp.max(jnp.abs(s1[:n_params] - state[:n_params])))
+    # Adagrad normalizes by |g| so max |update| ~= lr exactly on step 1.
+    np.testing.assert_allclose(d0, 1e-1, rtol=1e-2)
+    np.testing.assert_allclose(d1, 1e-4, rtol=1e-2)
+
+
+def test_weight_decay_shrinks_params():
+    step_fn, _, state, n_params, _ = _setup()
+    dense, cat, labels = _learnable_batch(jax.random.PRNGKey(5))
+    hp_wd = jnp.array([-2.0, -2.0, 1e-2], dtype=jnp.float32)
+    hp_no = jnp.array([-2.0, -2.0, 0.0], dtype=jnp.float32)
+    s_wd, _, _ = step_fn(state, dense, cat, labels, ONES, 0.0, hp_wd)
+    s_no, _, _ = step_fn(state, dense, cat, labels, ONES, 0.0, hp_no)
+    norm_wd = float(jnp.linalg.norm(s_wd[:n_params]))
+    norm_no = float(jnp.linalg.norm(s_no[:n_params]))
+    assert norm_wd < norm_no
+
+
+def test_bce_matches_closed_form():
+    logits = jnp.array([-3.0, 0.0, 2.5])
+    labels = jnp.array([0.0, 1.0, 1.0])
+    expected = -(
+        labels * jnp.log(jax.nn.sigmoid(logits))
+        + (1 - labels) * jnp.log(1 - jax.nn.sigmoid(logits))
+    )
+    np.testing.assert_allclose(
+        train_step.bce_with_logits(logits, labels), expected, rtol=1e-5
+    )
+
+
+def test_bce_stable_at_extreme_logits():
+    logits = jnp.array([-80.0, 80.0])
+    labels = jnp.array([1.0, 0.0])
+    out = train_step.bce_with_logits(logits, labels)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), [80.0, 80.0], rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["fm_base", "cn_l2", "mlp_h128", "moe_e4",
+                                  "fmv2_hi16"])
+def test_one_step_finite_all_families(name):
+    step_fn, _, state, _, _ = _setup(name)
+    dense, cat, labels = _learnable_batch(jax.random.PRNGKey(6))
+    new_state, loss, per_ex = step_fn(state, dense, cat, labels, ONES, 0.5, HP)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(new_state)))
+
+
+def test_init_seed_changes_state():
+    _, init_fn, _, n_params, _ = _setup()
+    s1 = init_fn(jnp.int32(1))
+    s2 = init_fn(jnp.int32(2))
+    assert not bool(jnp.allclose(s1[:n_params], s2[:n_params]))

@@ -1,0 +1,210 @@
+//! k-means with k-means++ seeding — the clustering substrate behind
+//! stratified prediction (§4.2.3).
+//!
+//! The paper clusters Criteo examples on embeddings from a VAE+HOFM proxy
+//! model (15,000 clusters). Here we cluster on the standardized dense
+//! feature vector (the generator guarantees cluster structure is present
+//! there; tests validate recovery against the generator's latents), with
+//! K scaled down to match the reduced workload. The implementation is
+//! generic over dimension and usable by any caller.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f64>>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Lloyd's algorithm with k-means++ init.
+/// `points` is row-major [n x dim]. Deterministic in `seed`.
+pub fn fit(points: &[Vec<f64>], k: usize, seed: u64, max_iters: usize) -> KMeans {
+    assert!(!points.is_empty(), "no points");
+    let k = k.min(points.len()).max(1);
+    let mut rng = Rng::new(seed);
+    let mut centroids = plusplus_init(points, k, &mut rng);
+    let mut assign = vec![0usize; points.len()];
+    let mut iterations = 0;
+
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assignment step
+        let mut moved = false;
+        for (i, p) in points.iter().enumerate() {
+            let a = nearest(&centroids, p).0;
+            if a != assign[i] {
+                assign[i] = a;
+                moved = true;
+            }
+        }
+        // update step
+        let dim = points[0].len();
+        let mut sums = vec![vec![0.0; dim]; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, &x) in sums[assign[i]].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for (c, (sum, &count)) in centroids.iter_mut().zip(sums.iter().zip(&counts)) {
+            if count > 0 {
+                for (cc, &s) in c.iter_mut().zip(sum) {
+                    *cc = s / count as f64;
+                }
+            } else {
+                // re-seed empty cluster at a random point
+                let j = rng.below(points.len() as u64) as usize;
+                c.clone_from(&points[j]);
+            }
+        }
+        if !moved && it > 0 {
+            break;
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .map(|p| nearest(&centroids, p).1)
+        .sum::<f64>();
+    KMeans { centroids, inertia, iterations }
+}
+
+fn plusplus_init(points: &[Vec<f64>], k: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let first = rng.below(points.len() as u64) as usize;
+    let mut centroids = vec![points[first].clone()];
+    let mut d2: Vec<f64> = points
+        .iter()
+        .map(|p| dist2(p, &centroids[0]))
+        .collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(points.len() as u64) as usize
+        } else {
+            rng.categorical(&d2)
+        };
+        centroids.push(points[next].clone());
+        let c = centroids.last().unwrap();
+        for (i, p) in points.iter().enumerate() {
+            let d = dist2(p, c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Index and squared distance of the nearest centroid.
+pub fn nearest(centroids: &[Vec<f64>], p: &[f64]) -> (usize, f64) {
+    let mut best = (0usize, f64::MAX);
+    for (i, c) in centroids.iter().enumerate() {
+        let d = dist2(p, c);
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best
+}
+
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Assign a batch of f32 rows (row-major) to centroids.
+pub fn assign_rows_f32(centroids: &[Vec<f64>], rows: &[f32], dim: usize) -> Vec<u16> {
+    let mut scratch = vec![0.0f64; dim];
+    rows.chunks_exact(dim)
+        .map(|row| {
+            for (s, &x) in scratch.iter_mut().zip(row) {
+                *s = x as f64;
+            }
+            nearest(centroids, &scratch).0 as u16
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[[f64; 2]], seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::new();
+        let mut truth = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                pts.push(vec![
+                    c[0] + 0.3 * rng.normal(),
+                    c[1] + 0.3 * rng.normal(),
+                ]);
+                truth.push(ci);
+            }
+        }
+        (pts, truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let centers = [[0.0, 0.0], [8.0, 0.0], [0.0, 8.0], [8.0, 8.0]];
+        let (pts, truth) = blobs(60, &centers, 3);
+        let km = fit(&pts, 4, 1, 50);
+        // every blob maps to a single dominant cluster and clusters are distinct
+        let mut label_of_blob = Vec::new();
+        for b in 0..4 {
+            let mut counts = [0usize; 4];
+            for (p, &t) in pts.iter().zip(&truth) {
+                if t == b {
+                    counts[nearest(&km.centroids, p).0] += 1;
+                }
+            }
+            let (argmax, &max) = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();
+            assert!(max > 54, "blob {b} split: {counts:?}");
+            label_of_blob.push(argmax);
+        }
+        label_of_blob.sort_unstable();
+        label_of_blob.dedup();
+        assert_eq!(label_of_blob.len(), 4);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let (pts, _) = blobs(50, &[[0.0, 0.0], [5.0, 5.0], [9.0, 0.0]], 7);
+        let i1 = fit(&pts, 1, 2, 30).inertia;
+        let i3 = fit(&pts, 3, 2, 30).inertia;
+        let i10 = fit(&pts, 10, 2, 30).inertia;
+        assert!(i1 > i3 && i3 > i10, "{i1} {i3} {i10}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (pts, _) = blobs(40, &[[0.0, 0.0], [4.0, 4.0]], 11);
+        let a = fit(&pts, 2, 5, 30);
+        let b = fit(&pts, 2, 5, 30);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let pts = vec![vec![0.0], vec![1.0]];
+        let km = fit(&pts, 10, 0, 10);
+        assert!(km.centroids.len() <= 2);
+    }
+
+    #[test]
+    fn assign_rows_f32_matches_nearest() {
+        let centroids = vec![vec![0.0, 0.0], vec![10.0, 10.0]];
+        let rows: Vec<f32> = vec![0.1, -0.1, 9.5, 10.2, 0.4, 0.2];
+        let a = assign_rows_f32(&centroids, &rows, 2);
+        assert_eq!(a, vec![0, 1, 0]);
+    }
+}

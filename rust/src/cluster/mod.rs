@@ -1,0 +1,8 @@
+//! Clustering substrate: k-means(++) over example features and the
+//! drift-aware slice grouping used by stratified prediction.
+
+pub mod kmeans;
+pub mod slices;
+
+pub use kmeans::{assign_rows_f32, fit, KMeans};
+pub use slices::{aggregate_to_slices, slice_clusters};

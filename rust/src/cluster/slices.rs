@@ -1,0 +1,128 @@
+//! Slice construction for stratified prediction (§4.2.3 / §5.1.1).
+//!
+//! The paper groups its 15,000 k-means clusters into a handful of slices
+//! with *similar distribution shift*, re-computed at each stopping time
+//! from the cluster-size trajectories observed so far. We implement the
+//! same: featurize each cluster by its (log) size-growth between the
+//! early and late halves of the observed window, then quantile-partition
+//! clusters into L slices — late-bloomers, stable clusters, and decayers
+//! end up in different slices, which is exactly the heterogeneity the
+//! stratified predictor exploits.
+
+/// Per-step per-cluster example counts, row-major [t][k], t <= t_stop.
+pub fn slice_clusters(counts: &[Vec<u32>], n_slices: usize) -> Vec<usize> {
+    assert!(!counts.is_empty());
+    let k = counts[0].len();
+    let l = n_slices.max(1).min(k);
+    let t = counts.len();
+    let half = (t / 2).max(1);
+
+    // growth feature: late share / early share (smoothed)
+    let mut early = vec![0.0f64; k];
+    let mut late = vec![0.0f64; k];
+    for (ti, row) in counts.iter().enumerate() {
+        let dst = if ti < half { &mut early } else { &mut late };
+        for (j, &c) in row.iter().enumerate() {
+            dst[j] += c as f64;
+        }
+    }
+    let e_tot: f64 = early.iter().sum::<f64>().max(1.0);
+    let l_tot: f64 = late.iter().sum::<f64>().max(1.0);
+    let growth: Vec<f64> = (0..k)
+        .map(|j| ((late[j] / l_tot + 1e-6) / (early[j] / e_tot + 1e-6)).ln())
+        .collect();
+
+    // Equal-width bins over the growth range: clusters with *similar*
+    // shift land in the same slice (two stable clusters must not be
+    // separated just to balance bin sizes).
+    let lo = growth.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = growth.iter().cloned().fold(f64::MIN, f64::max);
+    if (hi - lo) < 1e-9 {
+        return vec![0; k];
+    }
+    growth
+        .iter()
+        .map(|&g| ((((g - lo) / (hi - lo)) * l as f64).floor() as usize).min(l - 1))
+        .collect()
+}
+
+/// Aggregate per-cluster (count, loss-sum) rows into per-slice rows.
+pub fn aggregate_to_slices(
+    cluster_counts: &[Vec<u32>],
+    cluster_loss_sums: &[Vec<f32>],
+    assignment: &[usize],
+    n_slices: usize,
+) -> (Vec<Vec<u32>>, Vec<Vec<f64>>) {
+    let t = cluster_counts.len();
+    let mut counts = vec![vec![0u32; n_slices]; t];
+    let mut sums = vec![vec![0.0f64; n_slices]; t];
+    for ti in 0..t {
+        for (k, &slice) in assignment.iter().enumerate() {
+            counts[ti][slice] += cluster_counts[ti][k];
+            sums[ti][slice] += cluster_loss_sums[ti][k] as f64;
+        }
+    }
+    (counts, sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three synthetic cluster archetypes: grower, stable, shrinker.
+    fn toy_counts() -> Vec<Vec<u32>> {
+        (0..10)
+            .map(|t| {
+                vec![
+                    (5 + 10 * t) as u32, // grower
+                    50,                  // stable
+                    (100 - 10 * t) as u32, // shrinker
+                    52,                  // stable 2
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn groups_by_growth_direction() {
+        let a = slice_clusters(&toy_counts(), 3);
+        assert_eq!(a.len(), 4);
+        // shrinker in the lowest slice, grower in the highest,
+        // the two stables share a slice.
+        assert!(a[0] > a[2], "grower {} vs shrinker {}", a[0], a[2]);
+        assert_eq!(a[1], a[3], "stables split: {a:?}");
+    }
+
+    #[test]
+    fn slice_count_respected() {
+        let a = slice_clusters(&toy_counts(), 2);
+        assert!(a.iter().all(|&s| s < 2));
+        let one = slice_clusters(&toy_counts(), 1);
+        assert!(one.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn more_slices_than_clusters_is_clamped() {
+        let a = slice_clusters(&toy_counts(), 100);
+        assert!(a.iter().all(|&s| s < 4));
+    }
+
+    #[test]
+    fn aggregation_preserves_totals() {
+        let counts = toy_counts();
+        let sums: Vec<Vec<f32>> = counts
+            .iter()
+            .map(|row| row.iter().map(|&c| c as f32 * 0.5).collect())
+            .collect();
+        let assign = slice_clusters(&counts, 2);
+        let (sc, ss) = aggregate_to_slices(&counts, &sums, &assign, 2);
+        for t in 0..counts.len() {
+            let total_c: u32 = counts[t].iter().sum();
+            let agg_c: u32 = sc[t].iter().sum();
+            assert_eq!(total_c, agg_c);
+            let total_s: f64 = sums[t].iter().map(|&x| x as f64).sum();
+            let agg_s: f64 = ss[t].iter().sum();
+            assert!((total_s - agg_s).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! L3 coordination: building the trajectory bank (the expensive training
+//! phase) and driving *live* performance-based stopping over real runs.
+
+pub mod live;
+
+use crate::data::{Plan, Stream, StreamConfig};
+use crate::search::sweep::{self, ConfigSpec};
+use crate::train::{
+    run_full, Bank, ClusterSource, ClusteredStream, LogisticProxy, OnlineModel, PjrtOnline,
+    RunKey,
+};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Debug)]
+pub struct BankOptions {
+    pub stream: StreamConfig,
+    pub eval_days: usize,
+    pub families: Vec<String>,
+    pub plans: Vec<Plan>,
+    /// Keep every n-th sweep config (1 = full paper sweep).
+    pub thin: usize,
+    /// Train with the Rust logistic proxy instead of the PJRT artifacts
+    /// (quick modes, tests; the end-to-end example uses PJRT).
+    pub use_proxy: bool,
+    pub artifacts_dir: PathBuf,
+    /// Extra seeds for the §5.1.2 variance analysis (first config of the
+    /// first family, full data).
+    pub variance_seeds: usize,
+    pub cluster_k: usize,
+    pub verbose: bool,
+}
+
+impl Default for BankOptions {
+    fn default() -> Self {
+        BankOptions {
+            stream: StreamConfig::default(),
+            eval_days: 3,
+            families: sweep::FAMILIES.iter().map(|s| s.to_string()).collect(),
+            plans: vec![Plan::Full],
+            thin: 1,
+            use_proxy: false,
+            artifacts_dir: PathBuf::from("artifacts"),
+            variance_seeds: 0,
+            cluster_k: 32,
+            verbose: true,
+        }
+    }
+}
+
+struct Job {
+    spec: ConfigSpec,
+    plan: Plan,
+    seed: i32,
+}
+
+/// Train every (config, plan, seed) combination once and collect the
+/// trajectory bank.
+pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
+    let stream = Stream::new(opts.stream.clone());
+    let cs = Arc::new(ClusteredStream::build(
+        stream,
+        ClusterSource::KMeans { k: opts.cluster_k, sample_days: 2 },
+        opts.eval_days,
+    ));
+
+    let mut jobs: Vec<Job> = Vec::new();
+    for family in &opts.families {
+        let specs = sweep::thin(sweep::family_sweep(family), opts.thin);
+        for plan in &opts.plans {
+            for spec in &specs {
+                jobs.push(Job { spec: spec.clone(), plan: *plan, seed: 0 });
+            }
+        }
+        if family == &opts.families[0] {
+            for seed in 1..=opts.variance_seeds as i32 {
+                jobs.push(Job {
+                    spec: specs[0].clone(),
+                    plan: Plan::Full,
+                    seed,
+                });
+            }
+        }
+    }
+    if opts.verbose {
+        eprintln!(
+            "bank: {} runs x {} steps ({} mode)",
+            jobs.len(),
+            opts.stream.total_steps(),
+            if opts.use_proxy { "proxy" } else { "pjrt" }
+        );
+    }
+
+    let mut bank = Bank {
+        days: opts.stream.days,
+        steps_per_day: opts.stream.steps_per_day,
+        n_clusters: cs.n_clusters,
+        eval_days: opts.eval_days,
+        stream_seed: opts.stream.seed,
+        day_cluster_counts: cs.day_cluster_counts.clone(),
+        eval_cluster_counts: cs.eval_cluster_counts.clone(),
+        runs: Vec::new(),
+    };
+
+    if opts.use_proxy {
+        // Proxy runs are cheap and independent: fan out on the pool.
+        let pool = ThreadPool::new(ThreadPool::default_workers());
+        let cs2 = Arc::clone(&cs);
+        let done = Arc::new(Mutex::new(0usize));
+        let total = jobs.len();
+        let verbose = opts.verbose;
+        let results = pool.map_indexed(jobs, move |_, job| {
+            let mut model = LogisticProxy::new(job.seed);
+            let traj = run_full(
+                &mut model,
+                &cs2,
+                job.plan,
+                job.spec.hparams(),
+                job.seed as u64,
+            )
+            .expect("proxy run failed");
+            if verbose {
+                let mut d = done.lock().unwrap();
+                *d += 1;
+                if *d % 20 == 0 {
+                    eprintln!("  proxy runs {}/{total}", *d);
+                }
+            }
+            (job, traj)
+        });
+        for (job, traj) in results {
+            bank.push(key_of(&job), traj);
+        }
+    } else {
+        // PJRT: group jobs by variant so each artifact compiles once.
+        let engine = crate::runtime::Engine::cpu()?;
+        let manifest = crate::runtime::Manifest::load(&opts.artifacts_dir)?;
+        manifest.check_schema(
+            opts.stream.batch,
+            crate::data::N_DENSE,
+            crate::data::N_CAT,
+        )?;
+        let mut by_variant: BTreeMap<String, Vec<Job>> = BTreeMap::new();
+        for job in jobs {
+            by_variant.entry(job.spec.variant.clone()).or_default().push(job);
+        }
+        let mut finished = 0usize;
+        let total: usize = by_variant.values().map(Vec::len).sum();
+        for (variant, vjobs) in by_variant {
+            let meta = manifest.variant(&variant)?;
+            let model = engine
+                .load_model(meta)
+                .with_context(|| format!("compiling {variant}"))?;
+            for job in vjobs {
+                let mut online = PjrtOnline::new(&model, job.seed)?;
+                let traj = run_full(
+                    &mut online,
+                    &cs,
+                    job.plan,
+                    job.spec.hparams(),
+                    job.seed as u64,
+                )?;
+                bank.push(key_of(&job), traj);
+                finished += 1;
+                if opts.verbose {
+                    eprintln!(
+                        "  [{finished}/{total}] {} plan={} seed={}",
+                        job.spec.label(),
+                        job.plan.tag(),
+                        job.seed
+                    );
+                }
+            }
+        }
+    }
+    Ok(bank)
+}
+
+fn key_of(job: &Job) -> RunKey {
+    RunKey {
+        family: job.spec.family.clone(),
+        variant: job.spec.variant.clone(),
+        label: job.spec.label(),
+        hparams: job.spec.hparams(),
+        plan_tag: job.plan.tag(),
+        seed: job.seed,
+    }
+}
+
+/// Model factory abstraction used by the live coordinator: produces a
+/// fresh OnlineModel per configuration (PJRT-backed or proxy).
+pub trait ModelFactory {
+    fn create<'a>(&'a self, spec: &ConfigSpec, seed: i32)
+        -> Result<Box<dyn OnlineModel + 'a>>;
+}
+
+/// Factory over compiled PJRT models (one compile per variant, cached).
+pub struct PjrtFactory {
+    models: BTreeMap<String, crate::runtime::Model>,
+}
+
+impl PjrtFactory {
+    pub fn new(
+        engine: &crate::runtime::Engine,
+        manifest: &crate::runtime::Manifest,
+        variants: &[String],
+    ) -> Result<PjrtFactory> {
+        let mut models = BTreeMap::new();
+        for v in variants {
+            if !models.contains_key(v) {
+                models.insert(v.clone(), engine.load_model(manifest.variant(v)?)?);
+            }
+        }
+        Ok(PjrtFactory { models })
+    }
+}
+
+impl ModelFactory for PjrtFactory {
+    fn create<'a>(
+        &'a self,
+        spec: &ConfigSpec,
+        seed: i32,
+    ) -> Result<Box<dyn OnlineModel + 'a>> {
+        let model = self
+            .models
+            .get(&spec.variant)
+            .ok_or_else(|| anyhow::anyhow!("variant {} not preloaded", spec.variant))?;
+        Ok(Box::new(PjrtOnline::new(model, seed)?))
+    }
+}
+
+/// Proxy factory (tests / quick modes).
+pub struct ProxyFactory;
+
+impl ModelFactory for ProxyFactory {
+    fn create<'a>(
+        &'a self,
+        _spec: &ConfigSpec,
+        seed: i32,
+    ) -> Result<Box<dyn OnlineModel + 'a>> {
+        Ok(Box::new(LogisticProxy::new(seed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> BankOptions {
+        BankOptions {
+            stream: StreamConfig {
+                seed: 21,
+                days: 6,
+                steps_per_day: 3,
+                batch: 64,
+                n_clusters: 8,
+            },
+            eval_days: 2,
+            families: vec!["fm".into()],
+            plans: vec![Plan::Full, Plan::negative_only(0.5)],
+            thin: 9, // 3 configs
+            use_proxy: true,
+            variance_seeds: 2,
+            cluster_k: 6,
+            verbose: false,
+            ..BankOptions::default()
+        }
+    }
+
+    #[test]
+    fn proxy_bank_builds_and_replays() {
+        let bank = build_bank(&quick_opts()).unwrap();
+        // 3 configs x 2 plans + 2 variance runs
+        assert_eq!(bank.runs.len(), 8);
+        let (ts, labels) = bank.trajectory_set("fm", "full", 0).unwrap();
+        assert_eq!(ts.n_configs(), 3);
+        assert_eq!(labels.len(), 3);
+        assert_eq!(ts.step_losses[0].len(), 18);
+        // search runs end-to-end over the bank
+        let out = ts.one_shot(crate::predict::Strategy::Constant, 3);
+        assert_eq!(out.ranking.len(), 3);
+        let (ts_sub, _) = bank.trajectory_set("fm", "pos1.00neg0.50", 0).unwrap();
+        assert_eq!(ts_sub.n_configs(), 3);
+    }
+
+    #[test]
+    fn variance_runs_have_distinct_seeds() {
+        let bank = build_bank(&quick_opts()).unwrap();
+        let seeds: Vec<i32> = bank
+            .runs
+            .iter()
+            .filter(|r| r.key.seed != 0)
+            .map(|r| r.key.seed)
+            .collect();
+        assert_eq!(seeds, vec![1, 2]);
+    }
+
+    #[test]
+    fn bank_roundtrips_via_disk() {
+        let bank = build_bank(&quick_opts()).unwrap();
+        let path = std::env::temp_dir().join("nshpo_coord_bank.nsbk");
+        bank.save(&path).unwrap();
+        let loaded = Bank::load(&path).unwrap();
+        assert_eq!(loaded.runs.len(), bank.runs.len());
+        let (a, _) = bank.trajectory_set("fm", "full", 0).unwrap();
+        let (b, _) = loaded.trajectory_set("fm", "full", 0).unwrap();
+        assert_eq!(a.step_losses, b.step_losses);
+    }
+}

@@ -1,0 +1,201 @@
+//! Cluster drift dynamics: the generative structure behind the paper's
+//! Figures 1 and 2.
+//!
+//! Each latent cluster follows one of four mixture-weight patterns over
+//! the 24 virtual days (stable, late bloomer, decayer, seasonal) so that
+//! cluster sizes vary strongly over time (Fig 1). A *shared* day-level
+//! hardness process (label noise level) dominates every configuration's
+//! loss trajectory identically — the paper's key observation that time
+//! variation is consistent across candidate models and larger than the
+//! separation between them (Fig 2).
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    Stable,
+    LateBloomer,
+    Decayer,
+    Seasonal,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterDynamics {
+    pub pattern: Pattern,
+    pub base_weight: f64,
+    /// Onset/offset midpoint in days for bloomers/decayers.
+    pub knee_day: f64,
+    /// Logistic steepness for bloomers/decayers (days).
+    pub tau: f64,
+    /// Seasonal period (days) and phase for Seasonal clusters.
+    pub period: f64,
+    pub phase: f64,
+    /// Base CTR logit offset of the cluster.
+    pub base_logit: f64,
+    /// Weekly CTR wobble amplitude.
+    pub logit_amp: f64,
+    pub logit_phase: f64,
+    /// Dense feature mean vector and its drift direction.
+    pub mean: Vec<f64>,
+    pub drift_dir: Vec<f64>,
+    pub drift_period: f64,
+}
+
+impl ClusterDynamics {
+    pub fn sample(rng: &mut Rng, k: usize, n_dense: usize) -> ClusterDynamics {
+        let pattern = match k % 4 {
+            0 => Pattern::Stable,
+            1 => Pattern::LateBloomer,
+            2 => Pattern::Decayer,
+            _ => Pattern::Seasonal,
+        };
+        ClusterDynamics {
+            pattern,
+            base_weight: (rng.uniform_range(0.0, 1.0) + 0.15).powi(2),
+            knee_day: rng.uniform_range(6.0, 20.0),
+            tau: rng.uniform_range(1.0, 3.5),
+            period: rng.uniform_range(4.0, 9.0),
+            phase: rng.uniform_range(0.0, std::f64::consts::TAU),
+            base_logit: rng.uniform_range(-0.9, 0.9),
+            logit_amp: rng.uniform_range(0.1, 0.35),
+            logit_phase: rng.uniform_range(0.0, std::f64::consts::TAU),
+            mean: (0..n_dense).map(|_| rng.normal_scaled(0.0, 1.0)).collect(),
+            drift_dir: (0..n_dense).map(|_| rng.normal_scaled(0.0, 0.4)).collect(),
+            drift_period: rng.uniform_range(8.0, 16.0),
+        }
+    }
+
+    /// Unnormalized mixture weight at fractional day `d`.
+    pub fn weight(&self, d: f64) -> f64 {
+        let shape = match self.pattern {
+            Pattern::Stable => 1.0,
+            Pattern::LateBloomer => logistic((d - self.knee_day) / self.tau),
+            Pattern::Decayer => logistic((self.knee_day - d) / self.tau),
+            Pattern::Seasonal => {
+                0.55 + 0.45 * (std::f64::consts::TAU * d / self.period + self.phase).sin()
+            }
+        };
+        // Floor keeps every cluster marginally present so per-slice
+        // trajectories exist (the paper's slices are built from clusters
+        // that can be near-empty early on — the floor mimics the residual
+        // mass k-means assigns).
+        self.base_weight * (0.02 + 0.98 * shape)
+    }
+
+    /// Cluster CTR logit offset at fractional day `d` (weekly wobble).
+    pub fn logit(&self, d: f64) -> f64 {
+        self.base_logit
+            + self.logit_amp * (std::f64::consts::TAU * d / 7.0 + self.logit_phase).sin()
+    }
+
+    /// Dense feature mean at fractional day `d` (slow rotation drift).
+    pub fn mean_at(&self, d: f64, out: &mut [f64]) {
+        let c = (std::f64::consts::TAU * d / self.drift_period).sin();
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.mean[i] + c * self.drift_dir[i];
+        }
+    }
+}
+
+fn logistic(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Shared "problem hardness" process: the probability at fractional day
+/// `d` that an example's label is replaced by a fair coin. This is the
+/// irreducible-error component every configuration pays identically —
+/// the source of Fig 2's consistent time variation.
+pub fn hardness(d: f64) -> f64 {
+    let weekly = (std::f64::consts::TAU * d / 7.0).sin();
+    let fast = (std::f64::consts::TAU * d / 3.3 + 1.0).sin();
+    (0.14 + 0.08 * weekly + 0.05 * fast).clamp(0.02, 0.35)
+}
+
+/// Normalized mixture over clusters at fractional day `d`.
+pub fn mixture(clusters: &[ClusterDynamics], d: f64) -> Vec<f64> {
+    let w: Vec<f64> = clusters.iter().map(|c| c.weight(d)).collect();
+    let total: f64 = w.iter().sum();
+    w.into_iter().map(|x| x / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> Vec<ClusterDynamics> {
+        let mut rng = Rng::new(7);
+        (0..n).map(|k| ClusterDynamics::sample(&mut rng, k, 8)).collect()
+    }
+
+    #[test]
+    fn mixture_is_distribution_every_day() {
+        let cs = mk(16);
+        for day in 0..24 {
+            let pi = mixture(&cs, day as f64);
+            let sum: f64 = pi.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            assert!(pi.iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn late_bloomers_grow_and_decayers_shrink() {
+        let cs = mk(32);
+        for c in &cs {
+            let early = c.weight(1.0);
+            let late = c.weight(23.0);
+            match c.pattern {
+                Pattern::LateBloomer => assert!(late > 2.0 * early, "bloomer {early} {late}"),
+                Pattern::Decayer => assert!(early > 2.0 * late, "decayer {early} {late}"),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_sizes_vary_strongly_over_time_fig1() {
+        // The Fig-1 phenomenon: per-cluster share max/min over days >= 2x
+        // for a majority of clusters.
+        let cs = mk(32);
+        let mut varying = 0;
+        for k in 0..cs.len() {
+            let shares: Vec<f64> = (0..24).map(|d| mixture(&cs, d as f64)[k]).collect();
+            let hi = shares.iter().cloned().fold(f64::MIN, f64::max);
+            let lo = shares.iter().cloned().fold(f64::MAX, f64::min);
+            if hi / lo > 2.0 {
+                varying += 1;
+            }
+        }
+        assert!(varying > cs.len() / 2, "only {varying} clusters vary");
+    }
+
+    #[test]
+    fn hardness_is_bounded_and_time_varying() {
+        let vals: Vec<f64> = (0..240).map(|i| hardness(i as f64 / 10.0)).collect();
+        assert!(vals.iter().all(|&h| (0.02..=0.35).contains(&h)));
+        let hi = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let lo = vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(hi - lo > 0.1, "hardness barely varies: {lo}..{hi}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let a = mk(8);
+        let b = mk(8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.base_weight, y.base_weight);
+            assert_eq!(x.mean, y.mean);
+        }
+    }
+
+    #[test]
+    fn mean_drifts_over_days() {
+        let cs = mk(4);
+        let mut m0 = vec![0.0; 8];
+        let mut m12 = vec![0.0; 8];
+        cs[0].mean_at(0.0, &mut m0);
+        cs[0].mean_at(6.0, &mut m12);
+        let diff: f64 = m0.iter().zip(&m12).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.01, "no drift: {diff}");
+    }
+}

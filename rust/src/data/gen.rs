@@ -1,0 +1,281 @@
+//! Non-stationary clickstream generator — the Criteo-1TB stand-in.
+//!
+//! A chronological sequence of mini-batches over `days` virtual days.
+//! Each example: draw a latent cluster from the day's drifting mixture,
+//! draw dense features around the cluster's (drifting) mean, draw
+//! categorical ids from a Zipf head whose *pointer drifts* across days
+//! (new ids appear, old ids fade — vocabulary churn), then label it from
+//! a logistic model over (cluster logit + dense signal + id signal) with
+//! the shared day-level hardness noise mixed in (see drift.rs).
+//!
+//! `batch_at(t)` is a pure function of (config, t): random access lets
+//! sub-sampled and late-started runs see byte-identical examples, which
+//! is what makes search-strategy comparisons paired rather than noisy.
+
+use super::drift::{self, ClusterDynamics};
+use super::schema::{Batch, N_CAT, N_DENSE};
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub seed: u64,
+    pub days: usize,
+    pub steps_per_day: usize,
+    pub batch: usize,
+    pub n_clusters: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            seed: 17,
+            days: 24,
+            steps_per_day: 24,
+            batch: 256,
+            n_clusters: 32,
+        }
+    }
+}
+
+impl StreamConfig {
+    pub fn total_steps(&self) -> usize {
+        self.days * self.steps_per_day
+    }
+
+    /// Fractional day of step t (midpoint of the step).
+    pub fn day_of(&self, t: usize) -> f64 {
+        (t as f64 + 0.5) / self.steps_per_day as f64
+    }
+
+    /// Steps of the evaluation window: the last `delta_days` days (the
+    /// paper uses Delta = 3 days on 24-day Criteo).
+    pub fn eval_window(&self, delta_days: usize) -> (usize, usize) {
+        let t_end = self.total_steps() - 1;
+        let t_start = self.total_steps() - delta_days * self.steps_per_day;
+        (t_start, t_end)
+    }
+}
+
+/// Effective per-feature "live vocabulary" of the zipf head at any moment.
+const LIVE_VOCAB: u64 = 500;
+/// How fast categorical pointers drift (fraction of LIVE_VOCAB per day).
+const POINTER_DRIFT_PER_DAY: f64 = 60.0;
+
+pub struct Stream {
+    pub cfg: StreamConfig,
+    clusters: Vec<ClusterDynamics>,
+    /// Global dense->label weights.
+    alpha: Vec<f64>,
+    /// Strength of the categorical id signal.
+    gamma: f64,
+}
+
+impl Stream {
+    pub fn new(cfg: StreamConfig) -> Stream {
+        let mut rng = Rng::new(cfg.seed);
+        let clusters = (0..cfg.n_clusters)
+            .map(|k| ClusterDynamics::sample(&mut rng, k, N_DENSE))
+            .collect();
+        let alpha: Vec<f64> = (0..N_DENSE)
+            .map(|_| rng.normal_scaled(0.0, 0.5 / (N_DENSE as f64).sqrt()))
+            .collect();
+        Stream { cfg, clusters, alpha, gamma: 0.35 }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.cfg.n_clusters
+    }
+
+    /// The day-d mixture over latent clusters (Fig 1 ground truth).
+    pub fn mixture_at_day(&self, d: f64) -> Vec<f64> {
+        drift::mixture(&self.clusters, d)
+    }
+
+    /// Generate batch `t`. Pure in (config, t).
+    pub fn batch_at(&self, t: usize) -> Batch {
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5EED_BA7C).fork(t as u64);
+        let d = self.cfg.day_of(t);
+        let pi = drift::mixture(&self.clusters, d);
+        let eps = drift::hardness(d);
+        let b = self.cfg.batch;
+
+        let mut dense = Vec::with_capacity(b * N_DENSE);
+        let mut cat = Vec::with_capacity(b * N_CAT);
+        let mut labels = Vec::with_capacity(b);
+        let mut latent = Vec::with_capacity(b);
+        let mut mean = vec![0.0f64; N_DENSE];
+
+        for _ in 0..b {
+            let k = rng.categorical(&pi);
+            let c = &self.clusters[k];
+            c.mean_at(d, &mut mean);
+
+            // Dense features: cluster mean + noise.
+            let mut dense_signal = 0.0;
+            for j in 0..N_DENSE {
+                let x = mean[j] + 0.6 * rng.normal();
+                dense_signal += self.alpha[j] * x;
+                dense.push(x as f32);
+            }
+
+            // Categorical ids: zipf rank + drifting per-(cluster, feature)
+            // pointer, hashed to a raw positive i32.
+            let mut id_signal = 0.0;
+            for f in 0..N_CAT {
+                let rank = rng.zipf(LIVE_VOCAB, 1.15);
+                let pointer = (d * POINTER_DRIFT_PER_DAY) as u64
+                    + (k as u64) * 7919
+                    + (f as u64) * 104_729;
+                let entity = pointer + rank;
+                let raw = mix_id(f as u64, entity);
+                id_signal += id_weight(raw);
+                cat.push(raw);
+            }
+            id_signal *= self.gamma / (N_CAT as f64).sqrt();
+
+            // Label: hardness-mixed logistic model.
+            let logit = c.logit(d) + dense_signal + id_signal - 1.2;
+            let p_model = 1.0 / (1.0 + (-logit).exp());
+            let p = (1.0 - eps) * p_model + eps * 0.5;
+            labels.push(if rng.bernoulli(p) { 1.0 } else { 0.0 });
+            latent.push(k as u16);
+        }
+
+        Batch { dense, cat, labels, latent_cluster: latent }
+    }
+}
+
+/// Stable hash of (feature, entity) to a non-negative i32 id.
+#[inline]
+fn mix_id(feature: u64, entity: u64) -> i32 {
+    let mut z = feature
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(entity)
+        .wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^= z >> 31;
+    (z & 0x7FFF_FFFF) as i32
+}
+
+/// Deterministic per-id label weight in [-1, 1]: the learnable signal an
+/// embedding table can pick up.
+#[inline]
+fn id_weight(raw: i32) -> f64 {
+    let mut z = (raw as u64).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 29;
+    (z & 0xFFFF) as f64 / 32768.0 - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Stream {
+        Stream::new(StreamConfig {
+            seed: 5,
+            days: 6,
+            steps_per_day: 4,
+            batch: 64,
+            n_clusters: 8,
+        })
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let s = small();
+        let b = s.batch_at(3);
+        assert_eq!(b.len(), 64);
+        assert_eq!(b.dense.len(), 64 * N_DENSE);
+        assert_eq!(b.cat.len(), 64 * N_CAT);
+        assert!(b.cat.iter().all(|&c| c >= 0));
+        assert!(b.labels.iter().all(|&y| y == 0.0 || y == 1.0));
+        assert!(b.latent_cluster.iter().all(|&k| (k as usize) < 8));
+    }
+
+    #[test]
+    fn pure_random_access() {
+        let s = small();
+        let a = s.batch_at(7);
+        let b = s.batch_at(7);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.cat, b.cat);
+        assert_eq!(a.labels, b.labels);
+        // different steps differ
+        let c = s.batch_at(8);
+        assert_ne!(a.labels, c.labels);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg = small().cfg;
+        cfg.seed = 6;
+        let s2 = Stream::new(cfg);
+        assert_ne!(small().batch_at(0).labels, s2.batch_at(0).labels);
+    }
+
+    #[test]
+    fn positive_rate_is_sane() {
+        let s = small();
+        let mut rate = 0.0;
+        let n = s.cfg.total_steps();
+        for t in 0..n {
+            rate += s.batch_at(t).positive_rate();
+        }
+        rate /= n as f64;
+        assert!((0.05..0.6).contains(&rate), "positive rate {rate}");
+    }
+
+    #[test]
+    fn cluster_mix_tracks_mixture() {
+        let s = small();
+        // Empirical cluster histogram at day 5 should correlate with pi.
+        let t = 5 * 4 - 2;
+        let pi = s.mixture_at_day(s.cfg.day_of(t));
+        let mut counts = vec![0.0f64; 8];
+        for rep in 0..8 {
+            // batches at nearby steps within the same day
+            let b = s.batch_at(t - (rep % 3));
+            for &k in &b.latent_cluster {
+                counts[k as usize] += 1.0;
+            }
+        }
+        let total: f64 = counts.iter().sum();
+        for c in &mut counts {
+            *c /= total;
+        }
+        let corr = crate::util::stats::pearson(&counts, &pi);
+        assert!(corr > 0.8, "corr {corr}");
+    }
+
+    #[test]
+    fn id_signal_is_learnable() {
+        // Examples sharing an id must share its weight contribution:
+        // id_weight is a pure function.
+        assert_eq!(id_weight(12345), id_weight(12345));
+        assert!(id_weight(1) != id_weight(2));
+        let w: Vec<f64> = (0..1000).map(id_weight).collect();
+        let m = crate::util::stats::mean(&w);
+        assert!(m.abs() < 0.1, "id weights biased: {m}");
+    }
+
+    #[test]
+    fn eval_window_is_last_delta_days() {
+        let cfg = StreamConfig::default();
+        let (a, b) = cfg.eval_window(3);
+        assert_eq!(b, 24 * 24 - 1);
+        assert_eq!(a, 21 * 24);
+    }
+
+    #[test]
+    fn vocabulary_churns_across_days() {
+        // Ids seen on day 0 and day 5 for the same feature overlap only
+        // partially (pointer drift) — the "new ads appear" phenomenon.
+        let s = small();
+        let ids_day = |t: usize| -> std::collections::HashSet<i32> {
+            s.batch_at(t).cat.iter().step_by(N_CAT).copied().collect()
+        };
+        let d0 = ids_day(0);
+        let d5 = ids_day(5 * 4);
+        let inter = d0.intersection(&d5).count();
+        assert!(inter < d0.len() / 2, "no churn: {inter} of {}", d0.len());
+    }
+}

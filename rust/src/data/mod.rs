@@ -1,0 +1,12 @@
+//! Non-stationary clickstream substrate (the Criteo-1TB stand-in) and
+//! data-reduction plans. See DESIGN.md §2 for the substitution argument
+//! and §5 for the workload model.
+
+pub mod drift;
+pub mod gen;
+pub mod schema;
+pub mod subsample;
+
+pub use gen::{Stream, StreamConfig};
+pub use schema::{Batch, N_CAT, N_DENSE};
+pub use subsample::Plan;

@@ -1,0 +1,68 @@
+//! Shared data schema between the stream generator and the model runtime.
+//!
+//! Must agree with `python/compile/model.py` (N_DENSE / N_CAT / BATCH);
+//! the AOT manifest carries the Python-side values and
+//! `runtime::artifact::Manifest::check_schema` verifies them at load time.
+
+/// Number of continuous features (standardized floats).
+pub const N_DENSE: usize = 8;
+/// Number of categorical features (raw non-negative i32 hashes; models
+/// reduce them modulo their own vocab — the hashing trick).
+pub const N_CAT: usize = 12;
+
+/// One mini-batch of the chronological stream. Row-major: example `i`
+/// owns `dense[i*N_DENSE..]`, `cat[i*N_CAT..]`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub dense: Vec<f32>,
+    pub cat: Vec<i32>,
+    pub labels: Vec<f32>,
+    /// Generator-side latent cluster per example. Never shown to models;
+    /// used only to validate our k-means recovers drift structure, and by
+    /// tests. The *search* pipeline clusters examples itself.
+    pub latent_cluster: Vec<u16>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        &self.dense[i * N_DENSE..(i + 1) * N_DENSE]
+    }
+
+    pub fn cat_row(&self, i: usize) -> &[i32] {
+        &self.cat[i * N_CAT..(i + 1) * N_CAT]
+    }
+
+    pub fn positive_rate(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().map(|&y| y as f64).sum::<f64>() / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_slice_correctly() {
+        let b = Batch {
+            dense: (0..2 * N_DENSE).map(|x| x as f32).collect(),
+            cat: (0..2 * N_CAT).map(|x| x as i32).collect(),
+            labels: vec![1.0, 0.0],
+            latent_cluster: vec![3, 4],
+        };
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.dense_row(1)[0], N_DENSE as f32);
+        assert_eq!(b.cat_row(1)[0], N_CAT as i32);
+        assert_eq!(b.positive_rate(), 0.5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Data sub-sampling (§4.1.2): uniform and label-dependent example
+//! skipping, expressed as 0/1 per-example training weights.
+//!
+//! Skipped examples still flow through evaluation (the train-step metric
+//! is unweighted — progressive validation stays comparable across rates);
+//! they contribute no gradient. The relative cost C(lambda) counts kept
+//! *training* examples (the paper's formula).
+
+use super::schema::Batch;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Plan {
+    /// Keep everything (lambda_y = 1 for all y).
+    Full,
+    /// Keep each example with probability `rate` regardless of label.
+    Uniform(f64),
+    /// Keep positives with prob `pos`, negatives with prob `neg` — the
+    /// paper's negative sub-sampling is `LabelDependent { pos: 1.0, neg }`.
+    LabelDependent { pos: f64, neg: f64 },
+}
+
+impl Plan {
+    pub fn negative_only(neg: f64) -> Plan {
+        Plan::LabelDependent { pos: 1.0, neg }
+    }
+
+    /// Keep-probability for a label.
+    pub fn lambda(&self, label: f32) -> f64 {
+        match *self {
+            Plan::Full => 1.0,
+            Plan::Uniform(r) => r,
+            Plan::LabelDependent { pos, neg } => {
+                if label > 0.5 {
+                    pos
+                } else {
+                    neg
+                }
+            }
+        }
+    }
+
+    /// Expected relative training cost given the stream's positive rate:
+    /// C(lambda) = sum_y frac_y * lambda_y  (§4.1.2).
+    pub fn expected_cost(&self, positive_rate: f64) -> f64 {
+        positive_rate * self.lambda(1.0) + (1.0 - positive_rate) * self.lambda(0.0)
+    }
+
+    /// 0/1 training weights for a batch. Deterministic in
+    /// (plan, seed, t, example index) so replays are exact.
+    pub fn weights(&self, batch: &Batch, seed: u64, t: usize) -> Vec<f32> {
+        if matches!(self, Plan::Full) {
+            return vec![1.0; batch.len()];
+        }
+        let mut rng = Rng::new(seed ^ 0xDA7A_5A3C_3B00_57E5).fork(t as u64);
+        batch
+            .labels
+            .iter()
+            .map(|&y| if rng.bernoulli(self.lambda(y)) { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Short id used in bank filenames and figure legends.
+    pub fn tag(&self) -> String {
+        match *self {
+            Plan::Full => "full".to_string(),
+            Plan::Uniform(r) => format!("uni{r:.4}"),
+            Plan::LabelDependent { pos, neg } => format!("pos{pos:.2}neg{neg:.2}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen::{Stream, StreamConfig};
+
+    fn batch() -> Batch {
+        Stream::new(StreamConfig {
+            seed: 9,
+            days: 2,
+            steps_per_day: 2,
+            batch: 2000,
+            n_clusters: 4,
+        })
+        .batch_at(1)
+    }
+
+    #[test]
+    fn full_keeps_everything() {
+        let b = batch();
+        let w = Plan::Full.weights(&b, 1, 0);
+        assert!(w.iter().all(|&x| x == 1.0));
+        assert_eq!(Plan::Full.expected_cost(0.2), 1.0);
+    }
+
+    #[test]
+    fn uniform_rate_is_respected() {
+        let b = batch();
+        let w = Plan::Uniform(0.25).weights(&b, 1, 3);
+        let kept = w.iter().sum::<f32>() as f64 / b.len() as f64;
+        assert!((kept - 0.25).abs() < 0.05, "kept {kept}");
+    }
+
+    #[test]
+    fn negative_only_keeps_all_positives() {
+        let b = batch();
+        let plan = Plan::negative_only(0.5);
+        let w = plan.weights(&b, 7, 5);
+        for (i, &y) in b.labels.iter().enumerate() {
+            if y > 0.5 {
+                assert_eq!(w[i], 1.0, "positive dropped at {i}");
+            }
+        }
+        let neg_kept: f64 = b
+            .labels
+            .iter()
+            .zip(&w)
+            .filter(|(&y, _)| y < 0.5)
+            .map(|(_, &w)| w as f64)
+            .sum();
+        let neg_total = b.labels.iter().filter(|&&y| y < 0.5).count() as f64;
+        assert!((neg_kept / neg_total - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn expected_cost_formula() {
+        let plan = Plan::negative_only(0.5);
+        // C = p * 1 + (1-p) * 0.5
+        assert!((plan.expected_cost(0.2) - (0.2 + 0.8 * 0.5)).abs() < 1e-12);
+        assert!((Plan::Uniform(0.1).expected_cost(0.3) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weights_deterministic_per_step_and_seed() {
+        let b = batch();
+        let p = Plan::Uniform(0.5);
+        assert_eq!(p.weights(&b, 3, 11), p.weights(&b, 3, 11));
+        assert_ne!(p.weights(&b, 3, 11), p.weights(&b, 3, 12));
+        assert_ne!(p.weights(&b, 4, 11), p.weights(&b, 3, 11));
+    }
+
+    #[test]
+    fn tags_are_unique() {
+        let tags: Vec<String> = [
+            Plan::Full,
+            Plan::Uniform(0.5),
+            Plan::Uniform(0.25),
+            Plan::negative_only(0.5),
+        ]
+        .iter()
+        .map(|p| p.tag())
+        .collect();
+        let mut dedup = tags.clone();
+        dedup.dedup();
+        assert_eq!(tags.len(), dedup.len());
+    }
+}

@@ -1,0 +1,774 @@
+//! Figure/table harness: one generator per paper exhibit (Figs 1-11,
+//! Table 1, and the §5.1.2 seed-variance analysis). Each writes
+//! `<out>/fig<id>/data.csv` + `plot.txt` and prints the plot.
+//!
+//! See DESIGN.md §6 for the experiment index mapping exhibits to modules.
+
+use super::plot::{self, Series};
+use crate::metrics;
+use crate::predict::{LawKind, Strategy};
+use crate::search::{equally_spaced_stops, TrajectorySet};
+use crate::surrogate;
+use crate::train::{variance, Bank};
+use crate::util::stats;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+pub const ALL_FIGURES: [&str; 17] = [
+    "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "t1", "seeds", "summary",
+    // extensions/ablations beyond the paper's exhibits (DESIGN.md §6):
+    "rho", "slices", "hb",
+];
+
+/// Stopping days used for one-shot cost sweeps.
+fn one_shot_days(days: usize) -> Vec<usize> {
+    let cands = [2, 3, 4, 5, 6, 8, 10, 12, 14, 16, 18, 21, days];
+    let mut v: Vec<usize> = cands.iter().copied().filter(|&d| d <= days).collect();
+    v.dedup();
+    v
+}
+
+/// Stop spacings for performance-based sweeps.
+fn spacings(days: usize) -> Vec<usize> {
+    [1, 2, 3, 4, 6, 8, 12]
+        .iter()
+        .copied()
+        .filter(|&s| s < days)
+        .collect()
+}
+
+/// Reference metric for normalization (§5.1.2): the ground-truth best
+/// config's eval metric stands in for the "previously deployed model".
+fn reference(ts: &TrajectorySet) -> f64 {
+    ts.ground_truth().iter().cloned().fold(f64::MAX, f64::min)
+}
+
+/// The acceptable normalized-regret level: the metric movement caused by
+/// seed randomness alone, measured from the bank's multi-seed runs
+/// (paper §5.1.2 — 0.1% at Criteo scale; larger at this repo's reduced
+/// scale, so the *measured* floor is what the target lines use).
+fn seed_floor(bank: &Bank) -> f64 {
+    let mut by_label: std::collections::BTreeMap<&str, Vec<Vec<f32>>> = Default::default();
+    for r in &bank.runs {
+        if r.key.plan_tag == "full" {
+            by_label.entry(&r.key.label).or_default().push(r.step_losses.clone());
+        }
+    }
+    let eval_steps = bank.eval_days * bank.steps_per_day;
+    for trs in by_label.values() {
+        if trs.len() >= 2 {
+            let evals = variance::eval_metrics(trs, eval_steps);
+            return variance::seed_relative_std(&evals);
+        }
+    }
+    metrics::TARGET_NORMALIZED_REGRET
+}
+
+struct CurvePoint {
+    cost: f64,
+    regret3: f64,
+    per: f64,
+}
+
+fn outcome_point(ts: &TrajectorySet, out: &crate::search::SearchOutcome, plan_mult: f64) -> CurvePoint {
+    let gt = ts.ground_truth();
+    let r = reference(ts);
+    CurvePoint {
+        cost: out.cost * plan_mult,
+        regret3: metrics::regret_at_k(&out.ranking, &gt, 3) / r,
+        per: metrics::per(&out.ranking, &gt),
+    }
+}
+
+fn one_shot_curve(ts: &TrajectorySet, strategy: Strategy, plan_mult: f64) -> Vec<CurvePoint> {
+    one_shot_days(ts.days)
+        .into_iter()
+        .map(|d| outcome_point(ts, &ts.one_shot(strategy, d), plan_mult))
+        .collect()
+}
+
+fn perf_curve(ts: &TrajectorySet, strategy: Strategy, plan_mult: f64, rho: f64) -> Vec<CurvePoint> {
+    spacings(ts.days)
+        .into_iter()
+        .map(|s| {
+            let stops = equally_spaced_stops(ts.days, s);
+            outcome_point(ts, &ts.performance_based(strategy, &stops, rho), plan_mult)
+        })
+        .collect()
+}
+
+fn to_series(name: &str, pts: &[CurvePoint], use_per: bool) -> Series {
+    Series {
+        name: name.to_string(),
+        points: pts
+            .iter()
+            .map(|p| (p.cost, if use_per { p.per } else { p.regret3 }))
+            .collect(),
+    }
+}
+
+/// Empirical sub-sampling cost multiplier measured from the bank's runs.
+fn plan_multiplier(bank: &Bank, family: &str, plan_tag: &str) -> f64 {
+    let (mut trained, mut seen) = (0u64, 0u64);
+    for r in &bank.runs {
+        if r.key.family == family && r.key.plan_tag == plan_tag {
+            trained += r.examples_trained;
+            seen += r.examples_seen;
+        }
+    }
+    if seen == 0 {
+        1.0
+    } else {
+        trained as f64 / seen as f64
+    }
+}
+
+fn families_in(bank: &Bank) -> Vec<String> {
+    let mut fams: Vec<String> = bank.runs.iter().map(|r| r.key.family.clone()).collect();
+    fams.sort();
+    fams.dedup();
+    fams
+}
+
+fn need(bank: &Bank, family: &str, plan: &str) -> Result<TrajectorySet> {
+    bank.trajectory_set(family, plan, 0)
+        .map(|(ts, _)| ts)
+        .ok_or_else(|| anyhow!("bank missing family={family} plan={plan} (re-run `nshpo bank`)"))
+}
+
+fn write_out(out_dir: &Path, fig: &str, text: &str, csv: &str) -> Result<()> {
+    let dir = out_dir.join(format!("fig{fig}"));
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("plot.txt"), text)?;
+    std::fs::write(dir.join("data.csv"), csv)?;
+    println!("{text}");
+    Ok(())
+}
+
+const STRAT_STRATIFIED: Strategy = Strategy::Stratified {
+    law: Some(LawKind::InversePowerLaw),
+    n_slices: 5,
+};
+const STRAT_TRAJ: Strategy = Strategy::Trajectory(LawKind::InversePowerLaw);
+const NEG05: &str = "pos1.00neg0.50";
+const RHO: f64 = 0.5; // paper Appendix A.5
+
+pub fn run_figure(id: &str, bank: Option<&Bank>, out_dir: &Path) -> Result<()> {
+    match id {
+        "6" => return fig6(out_dir),
+        "t1" => return table1(bank, out_dir),
+        _ => {}
+    }
+    let bank = bank.ok_or_else(|| anyhow!("figure {id} needs a bank (run `nshpo bank`)"))?;
+    match id {
+        "1" => fig1(bank, out_dir),
+        "2" => fig2(bank, out_dir),
+        "3" => fig3(bank, out_dir),
+        "4" => fig4_8(bank, out_dir, true),
+        "8" => fig4_8(bank, out_dir, false),
+        "5" => fig5_9(bank, out_dir, true),
+        "9" => fig5_9(bank, out_dir, false),
+        "7" => fig7(bank, out_dir),
+        "10" => fig10(bank, out_dir),
+        "11" => fig11(bank, out_dir),
+        "seeds" => seeds(bank, out_dir),
+        "summary" => summary(bank, out_dir),
+        "rho" => ablation_rho(bank, out_dir),
+        "slices" => ablation_slices(bank, out_dir),
+        "hb" => ablation_hyperband(bank, out_dir),
+        other => Err(anyhow!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
+    }
+}
+
+// ------------------------------------------------------------- figures
+
+/// Fig 1: cluster sizes vary over the training window.
+fn fig1(bank: &Bank, out: &Path) -> Result<()> {
+    let days = bank.days;
+    let k = bank.n_clusters;
+    // pick the 6 clusters with the largest share swing
+    let share = |d: usize, c: usize| -> f64 {
+        let total: u32 = bank.day_cluster_counts[d].iter().sum();
+        bank.day_cluster_counts[d][c] as f64 / total.max(1) as f64
+    };
+    let mut swings: Vec<(usize, f64)> = (0..k)
+        .map(|c| {
+            let s: Vec<f64> = (0..days).map(|d| share(d, c)).collect();
+            let hi = s.iter().cloned().fold(f64::MIN, f64::max);
+            let lo = s.iter().cloned().fold(f64::MAX, f64::min);
+            (c, hi - lo)
+        })
+        .collect();
+    swings.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let series: Vec<Series> = swings
+        .iter()
+        .take(6)
+        .map(|&(c, _)| Series {
+            name: format!("cluster {c}"),
+            points: (0..days).map(|d| (d as f64, share(d, c))).collect(),
+        })
+        .collect();
+    let text = plot::render(
+        "Figure 1: cluster sizes over the training window",
+        "day",
+        "share of examples",
+        &series,
+        false,
+    );
+    write_out(out, "1", &text, &plot::to_csv(&series, "day", "share"))
+}
+
+/// Fig 2: (left) per-config day-mean loss; (right) loss relative to a
+/// reference configuration.
+fn fig2(bank: &Bank, out: &Path) -> Result<()> {
+    // one representative config per family on full data
+    let mut series_abs = Vec::new();
+    let mut raw: Vec<(String, Vec<f64>)> = Vec::new();
+    for fam in families_in(bank) {
+        if let Some((ts, labels)) = bank.trajectory_set(&fam, "full", 0) {
+            // top-truth config as representative (post-warm-up regime:
+            // the paper's Fig 2 configurations are all near the optimum)
+            let gt = ts.ground_truth();
+            let order = metrics::ranking_from_scores(&gt);
+            let c = order[0];
+            // drop the first 2 warm-up days so the shared hardness
+            // process, not cold-start transients, dominates the series
+            let dm: Vec<f64> = ts.day_means(c, ts.days)[2..].to_vec();
+            raw.push((format!("{fam}:{}", labels[c]), dm.clone()));
+            series_abs.push(Series {
+                name: fam.clone(),
+                points: dm.iter().enumerate().map(|(d, &m)| ((d + 2) as f64, m)).collect(),
+            });
+        }
+    }
+    if raw.is_empty() {
+        return Err(anyhow!("no full-plan runs in bank"));
+    }
+    let reference = raw.last().unwrap().1.clone();
+    let series_rel: Vec<Series> = raw
+        .iter()
+        .map(|(name, dm)| Series {
+            name: name.clone(),
+            points: dm
+                .iter()
+                .zip(&reference)
+                .enumerate()
+                .map(|(d, (&m, &r))| (d as f64, m - r))
+                .collect(),
+        })
+        .collect();
+    // quantify the paper's claim
+    let time_var = {
+        let dm = &raw[0].1;
+        dm.iter().cloned().fold(f64::MIN, f64::max) - dm.iter().cloned().fold(f64::MAX, f64::min)
+    };
+    let rel_var = {
+        let r = &series_rel[0].points;
+        let v: Vec<f64> = r.iter().map(|p| p.1).collect();
+        v.iter().cloned().fold(f64::MIN, f64::max) - v.iter().cloned().fold(f64::MAX, f64::min)
+    };
+    let mut text = plot::render(
+        "Figure 2 (left): day-mean loss per configuration (time variation)",
+        "day",
+        "log loss",
+        &series_abs,
+        false,
+    );
+    text.push_str(&plot::render(
+        "Figure 2 (right): loss relative to the reference configuration",
+        "day",
+        "delta log loss",
+        &series_rel,
+        false,
+    ));
+    text.push_str(&format!(
+        "\n  time variation of one config: {time_var:.4}; residual after referencing: {rel_var:.4} ({}x reduction)\n",
+        (time_var / rel_var.max(1e-9)) as i64
+    ));
+    let mut csv = plot::to_csv(&series_abs, "day", "loss");
+    csv.push_str(&plot::to_csv(&series_rel, "day", "delta"));
+    write_out(out, "2", &text, &csv)
+}
+
+/// Fig 3: the headline — ours (perf-based + stratified + neg-0.5
+/// sub-sampling) vs basic early stopping vs basic sub-sampling, per family.
+fn fig3(bank: &Bank, out: &Path) -> Result<()> {
+    let mut text = String::new();
+    let mut csv = String::new();
+    for fam in families_in(bank) {
+        let ts_full = need(bank, &fam, "full")?;
+        let mut series = Vec::new();
+        if let Ok(ts_neg) = need(bank, &fam, NEG05) {
+            let mult = plan_multiplier(bank, &fam, NEG05);
+            series.push(to_series(
+                "ours: perf-stopping + stratified + neg0.5",
+                &perf_curve(&ts_neg, STRAT_STRATIFIED, mult, RHO),
+                false,
+            ));
+        }
+        series.push(to_series(
+            "basic early stopping",
+            &one_shot_curve(&ts_full, Strategy::Constant, 1.0),
+            false,
+        ));
+        // basic sub-sampling: full-length training on uniformly thinned data
+        let mut sub_pts = Vec::new();
+        for tag in ["full", "uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
+            if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
+                let mult = plan_multiplier(bank, &fam, tag);
+                // rank by the final (sub-sampled) metrics, evaluate
+                // against the full-data ground truth
+                let out_ss = ts_sub.one_shot(Strategy::Constant, ts_sub.days);
+                let gt = ts_full.ground_truth();
+                let r = reference(&ts_full);
+                sub_pts.push(CurvePoint {
+                    cost: mult,
+                    regret3: metrics::regret_at_k(&out_ss.ranking, &gt, 3) / r,
+                    per: metrics::per(&out_ss.ranking, &gt),
+                });
+            }
+        }
+        if !sub_pts.is_empty() {
+            series.push(to_series("basic sub-sampling", &sub_pts, false));
+        }
+        let t = plot::render(
+            &format!("Figure 3 [{fam}]: regret@3 vs relative cost C (target 1e-3)"),
+            "C",
+            "normalized regret@3",
+            &series,
+            true,
+        );
+        text.push_str(&t);
+        csv.push_str(&format!("# family={fam}\n"));
+        csv.push_str(&plot::to_csv(&series, "cost", "regret3"));
+    }
+    write_out(out, "3", &text, &csv)
+}
+
+/// Figs 4 & 8: one-shot vs performance-based per prediction strategy.
+fn fig4_8(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
+    let fams = if moe_only { vec![pick_family(bank, "moe")] } else { families_in(bank) };
+    let fig = if moe_only { "4" } else { "8" };
+    let mut text = String::new();
+    let mut csv = String::new();
+    for fam in fams {
+        let (plan, mult) = pick_plan(bank, &fam);
+        let ts = need(bank, &fam, plan)?;
+        for (sname, strat) in [
+            ("constant", Strategy::Constant),
+            ("trajectory", STRAT_TRAJ),
+            ("stratified", STRAT_STRATIFIED),
+        ] {
+            let series = vec![
+                to_series("one-shot", &one_shot_curve(&ts, strat, mult), false),
+                to_series("performance-based", &perf_curve(&ts, strat, mult, RHO), false),
+            ];
+            let t = plot::render(
+                &format!("Figure {fig} [{fam}/{sname}]: one-shot vs performance-based"),
+                "C",
+                "normalized regret@3",
+                &series,
+                true,
+            );
+            text.push_str(&t);
+            csv.push_str(&format!("# family={fam} prediction={sname}\n"));
+            csv.push_str(&plot::to_csv(&series, "cost", "regret3"));
+        }
+    }
+    write_out(out, fig, &text, &csv)
+}
+
+/// Figs 5 & 9: prediction strategies compared (under perf-based stopping).
+fn fig5_9(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
+    let fams = if moe_only { vec![pick_family(bank, "moe")] } else { families_in(bank) };
+    let fig = if moe_only { "5" } else { "9" };
+    let mut text = String::new();
+    let mut csv = String::new();
+    for fam in fams {
+        let (plan, mult) = pick_plan(bank, &fam);
+        let ts = need(bank, &fam, plan)?;
+        let series = vec![
+            to_series("constant", &perf_curve(&ts, Strategy::Constant, mult, RHO), false),
+            to_series("trajectory", &perf_curve(&ts, STRAT_TRAJ, mult, RHO), false),
+            to_series("stratified", &perf_curve(&ts, STRAT_STRATIFIED, mult, RHO), false),
+        ];
+        let t = plot::render(
+            &format!("Figure {fig} [{fam}]: prediction strategies (perf-based stopping)"),
+            "C",
+            "normalized regret@3",
+            &series,
+            true,
+        );
+        text.push_str(&t);
+        csv.push_str(&format!("# family={fam}\n"));
+        csv.push_str(&plot::to_csv(&series, "cost", "regret3"));
+    }
+    write_out(out, fig, &text, &csv)
+}
+
+/// Fig 6: industrial surrogate — cost vs regret@3 mean ± std over tasks.
+fn fig6(out: &Path) -> Result<()> {
+    let cfg = surrogate::SurrogateConfig::default();
+    let mut mean_series = Series { name: "mean regret@3".into(), points: vec![] };
+    let mut hi_series = Series { name: "mean + std".into(), points: vec![] };
+    let mut csv = String::from("stop_every_days,cost,regret3_mean,regret3_std\n");
+    for spacing in [2, 3, 4, 6, 8, 12] {
+        let (c, m, s) = surrogate::fig6_point(&cfg, spacing, RHO, 12, 777);
+        mean_series.points.push((c, m));
+        hi_series.points.push((c, m + s));
+        csv.push_str(&format!("{spacing},{c},{m},{s}\n"));
+    }
+    let text = plot::render(
+        "Figure 6: industrial surrogate — perf-based stopping + constant prediction",
+        "C",
+        "normalized regret@3",
+        &[mean_series, hi_series],
+        true,
+    );
+    write_out(out, "6", &text, &csv)
+}
+
+/// Fig 7: stratified-constant vs stratified-trajectory.
+fn fig7(bank: &Bank, out: &Path) -> Result<()> {
+    let mut text = String::new();
+    let mut csv = String::new();
+    for fam in families_in(bank) {
+        let (plan, mult) = pick_plan(bank, &fam);
+        let ts = need(bank, &fam, plan)?;
+        let strat_const = Strategy::Stratified { law: None, n_slices: 5 };
+        let series = vec![
+            to_series("stratified constant", &perf_curve(&ts, strat_const, mult, RHO), false),
+            to_series("stratified trajectory", &perf_curve(&ts, STRAT_STRATIFIED, mult, RHO), false),
+        ];
+        let t = plot::render(
+            &format!("Figure 7 [{fam}]: stratified constant vs trajectory"),
+            "C",
+            "normalized regret@3",
+            &series,
+            true,
+        );
+        text.push_str(&t);
+        csv.push_str(&format!("# family={fam}\n"));
+        csv.push_str(&plot::to_csv(&series, "cost", "regret3"));
+    }
+    write_out(out, "7", &text, &csv)
+}
+
+/// Fig 10: choice of law for trajectory prediction (regret@3 and PER).
+fn fig10(bank: &Bank, out: &Path) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let (plan, mult) = pick_plan(bank, &fam);
+    let ts = need(bank, &fam, plan)?;
+    let laws = [
+        LawKind::InversePowerLaw,
+        LawKind::VaporPressure,
+        LawKind::LogPower,
+        LawKind::ExponentialLaw,
+        LawKind::Combined,
+    ];
+    let mut reg_series = Vec::new();
+    let mut per_series = Vec::new();
+    for law in laws {
+        let pts = perf_curve(&ts, Strategy::Trajectory(law), mult, RHO);
+        reg_series.push(to_series(law.name(), &pts, false));
+        per_series.push(to_series(law.name(), &pts, true));
+    }
+    let mut text = plot::render(
+        &format!("Figure 10 [{fam}] (left): laws — regret@3"),
+        "C",
+        "normalized regret@3",
+        &reg_series,
+        true,
+    );
+    text.push_str(&plot::render(
+        &format!("Figure 10 [{fam}] (right): laws — PER"),
+        "C",
+        "PER",
+        &per_series,
+        false,
+    ));
+    let mut csv = plot::to_csv(&reg_series, "cost", "regret3");
+    csv.push_str(&plot::to_csv(&per_series, "cost", "per"));
+    write_out(out, "10", &text, &csv)
+}
+
+/// Fig 11: late starting vs early stopping (PER).
+fn fig11(bank: &Bank, out: &Path) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let ts = need(bank, &fam, "full")?;
+    let gt = ts.ground_truth();
+    let mut series = Vec::new();
+    let mut csv = String::from("start_day,stop_day,cost,per\n");
+    for start in [0usize, 3, 6, 9] {
+        let mut pts = Vec::new();
+        for stop in one_shot_days(ts.days) {
+            if stop <= start + 1 {
+                continue;
+            }
+            let o = ts.late_start(start, stop);
+            let p = metrics::per(&o.ranking, &gt);
+            pts.push((o.cost, p));
+            csv.push_str(&format!("{start},{stop},{},{p}\n", o.cost));
+        }
+        series.push(Series { name: format!("start at day {start}"), points: pts });
+    }
+    let text = plot::render(
+        &format!("Figure 11 [{fam}]: late starting vs early stopping"),
+        "C",
+        "PER",
+        &series,
+        false,
+    );
+    write_out(out, "11", &text, &csv)
+}
+
+/// Table 1: law formulations, plus fitted parameters on real day-means.
+fn table1(bank: Option<&Bank>, out: &Path) -> Result<()> {
+    let mut text = String::from(
+        "Table 1: trajectory-prediction laws (f as a function of data fraction D)\n\
+         \n\
+         | Law             | Formulation                     | #params |\n\
+         |-----------------|---------------------------------|---------|\n\
+         | InversePowerLaw | E + A / D^alpha                 | 3       |\n\
+         | VaporPressure   | exp(A + B/D + C ln D)           | 3       |\n\
+         | LogPower        | A / (1 + (D/exp(B))^alpha)      | 3       |\n\
+         | ExponentialLaw  | E - exp(-A D^alpha + B)         | 4       |\n",
+    );
+    if let Some(bank) = bank {
+        let fam = pick_family(bank, "moe");
+        if let Some((ts, labels)) = bank.trajectory_set(&fam, "full", 0) {
+            let dm = ts.day_means(0, ts.days / 2);
+            let pts: Vec<(f64, f64)> = dm
+                .iter()
+                .enumerate()
+                .map(|(d, &m)| ((d + 1) as f64 / ts.days as f64, m))
+                .collect();
+            text.push_str(&format!("\nExample fits on {}[{}], first half:\n", fam, labels[0]));
+            for law in crate::predict::laws::ALL_BASIC_LAWS {
+                let params = crate::predict::fit::fit_pairwise(law, &[pts.clone()], |_, _| {});
+                text.push_str(&format!(
+                    "  {:<16} f(1) = {:.4}  params {:?}\n",
+                    law.name(),
+                    law.eval(1.0, &params[0]),
+                    params[0].iter().map(|x| (x * 1e3).round() / 1e3).collect::<Vec<_>>()
+                ));
+            }
+        }
+    }
+    write_out(out, "_t1", &text, "see plot.txt\n")
+}
+
+/// §5.1.2 seed variance: sets the normalized-regret target.
+fn seeds(bank: &Bank, out: &Path) -> Result<()> {
+    let runs: Vec<&crate::train::RunRecord> = bank
+        .runs
+        .iter()
+        .filter(|r| r.key.plan_tag == "full")
+        .collect();
+    // group by label, keep labels with >= 2 seeds
+    let mut by_label: std::collections::BTreeMap<String, Vec<Vec<f32>>> = Default::default();
+    for r in &runs {
+        by_label.entry(r.key.label.clone()).or_default().push(r.step_losses.clone());
+    }
+    let eval_steps = bank.eval_days * bank.steps_per_day;
+    let mut text = String::from("Seed-variance analysis (paper §5.1.2)\n");
+    let mut csv = String::from("label,n_seeds,rel_std\n");
+    let mut any = false;
+    for (label, trs) in by_label {
+        if trs.len() < 2 {
+            continue;
+        }
+        any = true;
+        let evals = variance::eval_metrics(&trs, eval_steps);
+        let rel = variance::seed_relative_std(&evals);
+        text.push_str(&format!(
+            "  {label}: {} seeds, eval metrics {:?}, relative std {:.5} ({:.3}%)\n",
+            trs.len(),
+            evals.iter().map(|x| (x * 1e4).round() / 1e4).collect::<Vec<_>>(),
+            rel,
+            rel * 100.0
+        ));
+        csv.push_str(&format!("{label},{},{rel}\n", trs.len()));
+    }
+    if !any {
+        text.push_str("  (no multi-seed runs in bank; build with --variance-seeds)\n");
+    }
+    text.push_str(&format!(
+        "  paper target: normalized regret@k <= {} (the seed-noise floor)\n",
+        metrics::TARGET_NORMALIZED_REGRET
+    ));
+    write_out(out, "_seeds", &text, &csv)
+}
+
+/// Headline summary: best cost at which each method first reaches the
+/// acceptable normalized regret@3 (the measured seed floor — the
+/// paper's "10x" claim structure).
+fn summary(bank: &Bank, out: &Path) -> Result<()> {
+    let floor = seed_floor(bank);
+    let mut text = format!(
+        "Headline summary: smallest C reaching normalized regret@3 <= {floor:.4} \
+         (measured seed floor)\n\
+         family | basic early stop | basic subsample | ours (perf+strat+neg0.5)\n",
+    );
+    let mut csv = String::from("family,method,best_cost\n");
+    for fam in families_in(bank) {
+        let ts_full = need(bank, &fam, "full")?;
+        let best = |pts: &[CurvePoint]| -> f64 {
+            pts.iter()
+                .filter(|p| p.regret3 <= floor)
+                .map(|p| p.cost)
+                .fold(f64::MAX, f64::min)
+        };
+        let es = best(&one_shot_curve(&ts_full, Strategy::Constant, 1.0));
+        let ours = if let Ok(ts_neg) = need(bank, &fam, NEG05) {
+            let mult = plan_multiplier(bank, &fam, NEG05);
+            best(&perf_curve(&ts_neg, STRAT_STRATIFIED, mult, RHO))
+        } else {
+            f64::MAX
+        };
+        let mut ss_best = f64::MAX;
+        for tag in ["uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
+            if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
+                let gt = ts_full.ground_truth();
+                let r = reference(&ts_full);
+                let o = ts_sub.one_shot(Strategy::Constant, ts_sub.days);
+                if metrics::regret_at_k(&o.ranking, &gt, 3) / r <= floor {
+                    ss_best = ss_best.min(plan_multiplier(bank, &fam, tag));
+                }
+            }
+        }
+        let f = |x: f64| {
+            if x == f64::MAX { "never".to_string() } else { format!("{x:.3}") }
+        };
+        text.push_str(&format!(
+            "  {fam:<6} | {:<16} | {:<15} | {}\n",
+            f(es),
+            f(ss_best),
+            f(ours)
+        ));
+        csv.push_str(&format!("{fam},early_stop,{es}\n{fam},subsample,{ss_best}\n{fam},ours,{ours}\n"));
+    }
+    write_out(out, "_summary", &text, &csv)
+}
+
+// ---------------------------------------------------- ablations (ours)
+
+/// Ablation: the pruning ratio rho — the paper generalizes SHA's fixed
+/// eta=2 to a flexible rho (§2 "Positioning Our Work"); this quantifies
+/// the trade-off that flexibility buys on our workload.
+fn ablation_rho(bank: &Bank, out: &Path) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let (plan, mult) = pick_plan(bank, &fam);
+    let ts = need(bank, &fam, plan)?;
+    let mut series = Vec::new();
+    let mut csv = String::from("rho,cost,regret3\n");
+    for rho in [0.25, 0.5, 0.67, 0.8] {
+        let mut pts = Vec::new();
+        for s in spacings(ts.days) {
+            let stops = equally_spaced_stops(ts.days, s);
+            let p = outcome_point(&ts, &ts.performance_based(Strategy::Constant, &stops, rho), mult);
+            csv.push_str(&format!("{rho},{},{}\n", p.cost, p.regret3));
+            pts.push(p);
+        }
+        series.push(to_series(&format!("rho = {rho} (SHA eta = {:.1})", 1.0 / (1.0 - rho)), &pts, false));
+    }
+    let text = plot::render(
+        &format!("Ablation [{fam}]: pruning ratio rho in Algorithm 1"),
+        "C",
+        "normalized regret@3",
+        &series,
+        true,
+    );
+    write_out(out, "_rho", &text, &csv)
+}
+
+/// Ablation: the number of slices L in stratified prediction.
+fn ablation_slices(bank: &Bank, out: &Path) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let (plan, mult) = pick_plan(bank, &fam);
+    let ts = need(bank, &fam, plan)?;
+    let mut series = Vec::new();
+    let mut csv = String::from("n_slices,cost,regret3\n");
+    for l in [1usize, 3, 5, 10, 20] {
+        let strat = Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: l };
+        let pts = perf_curve(&ts, strat, mult, RHO);
+        for p in &pts {
+            csv.push_str(&format!("{l},{},{}\n", p.cost, p.regret3));
+        }
+        series.push(to_series(&format!("L = {l}"), &pts, false));
+    }
+    let text = plot::render(
+        &format!("Ablation [{fam}]: slice count L in stratified prediction"),
+        "C",
+        "normalized regret@3",
+        &series,
+        true,
+    );
+    write_out(out, "_slices", &text, &csv)
+}
+
+/// Extension: Hyperband brackets vs plain performance-based stopping.
+fn ablation_hyperband(bank: &Bank, out: &Path) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let (plan, mult) = pick_plan(bank, &fam);
+    let ts = need(bank, &fam, plan)?;
+    let mut hb_pts = Vec::new();
+    let mut csv = String::from("method,param,cost,regret3\n");
+    for eta in [2.0, 3.0, 4.0] {
+        let o = crate::search::hyperband::hyperband(&ts, Strategy::Constant, eta, 7);
+        let gt = ts.ground_truth();
+        let p = CurvePoint {
+            cost: o.cost * mult,
+            regret3: metrics::regret_at_k(&o.ranking, &gt, 3) / reference(&ts),
+            per: metrics::per(&o.ranking, &gt),
+        };
+        csv.push_str(&format!("hyperband,{eta},{},{}\n", p.cost, p.regret3));
+        hb_pts.push(p);
+    }
+    let pb_pts = perf_curve(&ts, Strategy::Constant, mult, RHO);
+    for p in &pb_pts {
+        csv.push_str(&format!("perf-based,0.5,{},{}\n", p.cost, p.regret3));
+    }
+    let series = vec![
+        to_series("hyperband (eta = 2,3,4)", &hb_pts, false),
+        to_series("performance-based (rho = 0.5)", &pb_pts, false),
+    ];
+    let text = plot::render(
+        &format!("Extension [{fam}]: Hyperband brackets vs Algorithm 1"),
+        "C",
+        "normalized regret@3",
+        &series,
+        true,
+    );
+    write_out(out, "_hb", &text, &csv)
+}
+
+// ------------------------------------------------------------- helpers
+
+/// Prefer the neg-0.5 sub-sampled runs when present (the paper's Figs
+/// 4/5/7-9 all use negative sub-sampling at 0.5).
+fn pick_plan<'a>(bank: &Bank, family: &str) -> (&'a str, f64) {
+    if bank.trajectory_set(family, NEG05, 0).is_some() {
+        (NEG05, plan_multiplier(bank, family, NEG05))
+    } else {
+        ("full", 1.0)
+    }
+}
+
+fn pick_family(bank: &Bank, preferred: &str) -> String {
+    let fams = families_in(bank);
+    if fams.iter().any(|f| f == preferred) {
+        preferred.to_string()
+    } else {
+        fams.first().cloned().unwrap_or_else(|| preferred.to_string())
+    }
+}
+
+pub fn stats_digest(xs: &[f64]) -> String {
+    format!(
+        "mean {:.4} median {:.4} std {:.4}",
+        stats::mean(xs),
+        stats::median(xs),
+        stats::std(xs)
+    )
+}

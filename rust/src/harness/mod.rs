@@ -1,0 +1,7 @@
+//! Figure/table harness and terminal plotting (DESIGN.md §6 experiment
+//! index: every paper exhibit maps to a generator here).
+
+pub mod figures;
+pub mod plot;
+
+pub use figures::{run_figure, ALL_FIGURES};

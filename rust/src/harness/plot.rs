@@ -1,0 +1,131 @@
+//! Terminal line/scatter plots for the figure harness (results are also
+//! written as CSV; the ASCII render is for eyeballing runs in CI logs).
+
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+const GLYPHS: &[char] = &['o', 'x', '+', '*', '#', '@', '%', '&'];
+
+/// Render series into a fixed-size ASCII grid. `log_y` plots ln(y)
+/// (regret curves span decades).
+pub fn render(title: &str, xlabel: &str, ylabel: &str, series: &[Series], log_y: bool) -> String {
+    let width = 72usize;
+    let height = 20usize;
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            let y = if log_y { y.max(1e-12).ln() } else { y };
+            if x.is_finite() && y.is_finite() {
+                pts.push((x, y));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}\n  (no finite points)\n");
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            let y = if log_y { y.max(1e-12).ln() } else { y };
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let ytop = if log_y { y1.exp() } else { y1 };
+    let ybot = if log_y { y0.exp() } else { y0 };
+    out.push_str(&format!("  {ylabel} [{ybot:.4} .. {ytop:.4}]{}\n",
+        if log_y { " (log scale)" } else { "" }));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("  +{}\n", "-".repeat(width)));
+    out.push_str(&format!("   {xlabel} [{x0:.3} .. {x1:.3}]\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out
+}
+
+/// CSV for the same data: columns series,x,y.
+pub fn to_csv(series: &[Series], xname: &str, yname: &str) -> String {
+    let mut out = format!("series,{xname},{yname}\n");
+    for s in series {
+        for &(x, y) in &s.points {
+            out.push_str(&format!("{},{x},{y}\n", s.name));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Vec<Series> {
+        vec![
+            Series {
+                name: "ours".into(),
+                points: (1..10).map(|i| (i as f64 / 10.0, 1.0 / i as f64)).collect(),
+            },
+            Series {
+                name: "baseline".into(),
+                points: (1..10).map(|i| (i as f64 / 10.0, 2.0 / i as f64)).collect(),
+            },
+        ]
+    }
+
+    #[test]
+    fn render_contains_series_and_glyphs() {
+        let text = render("Fig X", "C", "regret@3", &demo(), true);
+        assert!(text.contains("Fig X"));
+        assert!(text.contains("ours"));
+        assert!(text.contains('o'));
+        assert!(text.contains('x'));
+        assert!(text.contains("log scale"));
+    }
+
+    #[test]
+    fn empty_series_do_not_panic() {
+        let text = render("empty", "x", "y", &[], false);
+        assert!(text.contains("no finite points"));
+    }
+
+    #[test]
+    fn single_point_does_not_divide_by_zero() {
+        let s = vec![Series { name: "p".into(), points: vec![(0.5, 0.5)] }];
+        let _ = render("one", "x", "y", &s, false);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&demo(), "cost", "regret");
+        assert!(csv.starts_with("series,cost,regret\n"));
+        assert_eq!(csv.lines().count(), 1 + 9 + 9);
+    }
+}

@@ -1,0 +1,39 @@
+//! # NS-HPO
+//!
+//! Reproduction of *"Efficient Hyperparameter Search for Non-Stationary
+//! Model Training"* (Isik et al., 2025) as a three-layer Rust + JAX +
+//! Pallas system. See DESIGN.md for the architecture and the experiment
+//! index, and README.md for a quickstart.
+//!
+//! Layer map:
+//! * [`util`] — substrates (PRNG, JSON, CLI, thread pool, stats, bench,
+//!   property testing) — the offline image ships no crates for these.
+//! * [`data`] — the non-stationary clickstream generator (Criteo-1TB
+//!   stand-in) and sub-sampling plans.
+//! * [`runtime`] — PJRT executor for the AOT-lowered model artifacts.
+//! * [`train`] — online training loop (progressive validation) and the
+//!   trajectory bank.
+//! * [`cluster`] — k-means and drift-slice grouping (stratified
+//!   prediction support).
+//! * [`metrics`] — performance metrics and the paper's ranking metrics
+//!   (PER, regret, regret@k).
+//! * [`predict`] — constant / trajectory (parametric-law) / stratified
+//!   prediction strategies (§4.2).
+//! * [`search`] — one-shot early stopping, performance-based stopping
+//!   (Algorithm 1), sub-sampling, late starting, the cost model (§4.1).
+//! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6).
+//! * [`coordinator`] — experiment scheduler (bank building, live
+//!   early-stopping of real PJRT runs).
+//! * [`harness`] — per-figure/table generators (Figs 1-11, Table 1).
+
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod metrics;
+pub mod predict;
+pub mod runtime;
+pub mod search;
+pub mod surrogate;
+pub mod train;
+pub mod util;

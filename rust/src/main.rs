@@ -1,0 +1,238 @@
+//! nshpo — CLI for the NS-HPO reproduction.
+//!
+//! Subcommands:
+//!   bank    train every candidate configuration once; save the bank
+//!   figure  regenerate paper figures/tables from a bank
+//!   live    run live performance-based stopping on real models
+//!   sim     industrial surrogate sweep (Fig 6 style)
+//!   info    inspect artifacts and banks
+
+use nshpo::coordinator::{self, BankOptions};
+use nshpo::data::{Plan, StreamConfig};
+use nshpo::harness;
+use nshpo::predict::Strategy;
+use nshpo::search::{equally_spaced_stops, sweep};
+use nshpo::surrogate;
+use nshpo::train::Bank;
+use nshpo::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+nshpo — Efficient Hyperparameter Search for Non-Stationary Model Training
+
+USAGE: nshpo <subcommand> [flags]
+
+  bank      --out results/bank [--families fm,cn,...] [--days 24]
+            [--steps-per-day 24] [--batch 256] [--thin 1] [--proxy]
+            [--variance-seeds 8] [--artifacts artifacts] [--quick]
+  figure    --all | --id 3 [--bank results/bank] [--out results]
+  live      [--family fm] [--thin 3] [--stop-every 6] [--rho 0.5]
+            [--proxy] [--days 12] [--steps-per-day 12]
+  sim       [--tasks 12] [--configs 30] [--out results]
+  info      [--bank results/bank] [--artifacts artifacts]
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("bank") => cmd_bank(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("live") => cmd_live(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprint!("{USAGE}");
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn stream_from(args: &Args) -> StreamConfig {
+    StreamConfig {
+        seed: args.u64_or("seed", 17),
+        days: args.usize_or("days", 24),
+        steps_per_day: args.usize_or("steps-per-day", 24),
+        batch: args.usize_or("batch", 256),
+        n_clusters: args.usize_or("latent-clusters", 32),
+    }
+}
+
+fn cmd_bank(args: &Args) -> anyhow::Result<()> {
+    let mut opts = BankOptions {
+        stream: stream_from(args),
+        eval_days: args.usize_or("eval-days", 3),
+        thin: args.usize_or("thin", 1),
+        use_proxy: args.has("proxy"),
+        artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        variance_seeds: args.usize_or("variance-seeds", 8),
+        cluster_k: args.usize_or("clusters", 32),
+        verbose: !args.has("quiet"),
+        ..BankOptions::default()
+    };
+    let fams = args.list("families");
+    if !fams.is_empty() {
+        opts.families = fams;
+    }
+    // Plans: full + the paper's negative-0.5 (ours) + the uniform grid
+    // (basic sub-sampling baseline).
+    opts.plans = vec![
+        Plan::Full,
+        Plan::negative_only(0.5),
+        Plan::Uniform(0.5),
+        Plan::Uniform(0.25),
+        Plan::Uniform(0.125),
+        Plan::Uniform(0.0625),
+    ];
+    if args.has("quick") {
+        opts.stream.days = args.usize_or("days", 12);
+        opts.stream.steps_per_day = args.usize_or("steps-per-day", 8);
+        opts.thin = opts.thin.max(3);
+        opts.variance_seeds = opts.variance_seeds.min(3);
+        opts.plans = vec![Plan::Full, Plan::negative_only(0.5), Plan::Uniform(0.25)];
+    }
+    let t0 = std::time::Instant::now();
+    let bank = coordinator::build_bank(&opts)?;
+    let out = PathBuf::from(args.str_or("out", "results/bank"));
+    let path = out.with_extension("nsbk");
+    bank.save(&path)?;
+    eprintln!(
+        "bank: {} runs saved to {path:?} in {:.1}s",
+        bank.runs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.str_or("out", "results"));
+    let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
+    let bank = if bank_path.exists() {
+        Some(Bank::load(&bank_path).map_err(|e| anyhow::anyhow!("{e}"))?)
+    } else {
+        None
+    };
+    let ids: Vec<String> = if args.has("all") {
+        harness::ALL_FIGURES.iter().map(|s| s.to_string()).collect()
+    } else if let Some(id) = args.str_opt("id") {
+        vec![id.to_string()]
+    } else if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        anyhow::bail!("pass --all or --id <figure> (known: {:?})", harness::ALL_FIGURES);
+    };
+    for id in ids {
+        if let Err(e) = harness::run_figure(&id, bank.as_ref(), &out) {
+            eprintln!("figure {id}: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_live(args: &Args) -> anyhow::Result<()> {
+    use nshpo::coordinator::live::live_performance_based;
+    use nshpo::coordinator::{ModelFactory, PjrtFactory, ProxyFactory};
+    use nshpo::train::{ClusterSource, ClusteredStream};
+
+    let mut stream_cfg = stream_from(args);
+    if !args.has("days") {
+        stream_cfg.days = 12;
+    }
+    if !args.has("steps-per-day") {
+        stream_cfg.steps_per_day = 12;
+    }
+    let family = args.str_or("family", "fm");
+    let specs = sweep::thin(sweep::family_sweep(&family), args.usize_or("thin", 3));
+    let stops = equally_spaced_stops(stream_cfg.days, args.usize_or("stop-every", 3));
+    let rho = args.f64_or("rho", 0.5);
+
+    let cs = ClusteredStream::build(
+        nshpo::data::Stream::new(stream_cfg),
+        ClusterSource::KMeans { k: args.usize_or("clusters", 16), sample_days: 2 },
+        args.usize_or("eval-days", 3),
+    );
+
+    let run = |factory: &dyn ModelFactory| -> anyhow::Result<()> {
+        let out = live_performance_based(
+            factory,
+            &cs,
+            &specs,
+            Plan::Full,
+            Strategy::Constant,
+            &stops,
+            rho,
+            0,
+        )?;
+        println!(
+            "live search over {} configs: C = {:.3}, wall {:.1}s (full-search estimate {:.1}s, {:.1}x saved)",
+            specs.len(),
+            out.cost,
+            out.wall_seconds,
+            out.full_wall_estimate,
+            out.full_wall_estimate / out.wall_seconds.max(1e-9),
+        );
+        println!("top-3 configs:");
+        for &c in out.ranking.iter().take(3) {
+            println!("  {}", specs[c].label());
+        }
+        Ok(())
+    };
+
+    if args.has("proxy") {
+        run(&ProxyFactory)
+    } else {
+        let engine = nshpo::runtime::Engine::cpu()?;
+        let manifest =
+            nshpo::runtime::Manifest::load(Path::new(&args.str_or("artifacts", "artifacts")))?;
+        let variants: Vec<String> = specs.iter().map(|s| s.variant.clone()).collect();
+        let factory = PjrtFactory::new(&engine, &manifest, &variants)?;
+        run(&factory)
+    }
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let cfg = surrogate::SurrogateConfig {
+        n_configs: args.usize_or("configs", 30),
+        ..surrogate::SurrogateConfig::default()
+    };
+    let tasks = args.usize_or("tasks", 12);
+    println!("industrial surrogate: {} configs, {} tasks", cfg.n_configs, tasks);
+    println!("{:<18} {:>8} {:>12} {:>12}", "stop_every_days", "C", "regret@3", "std");
+    for spacing in [2, 3, 4, 6, 8, 12] {
+        let (c, m, s) = surrogate::fig6_point(&cfg, spacing, 0.5, tasks, 777);
+        println!("{spacing:<18} {c:>8.3} {m:>12.6} {s:>12.6}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let art_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    match nshpo::runtime::Manifest::load(&art_dir) {
+        Ok(m) => {
+            println!("artifacts ({:?}): batch={} dense={} cat={}", art_dir, m.batch, m.n_dense, m.n_cat);
+            for v in &m.variants {
+                println!("  {:<12} family={:<5} params={:>8} state={:>9}", v.name, v.family, v.n_params, v.state_size);
+            }
+        }
+        Err(e) => println!("artifacts: {e:#}"),
+    }
+    let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
+    if bank_path.exists() {
+        let bank = Bank::load(&bank_path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "bank {:?}: {} runs, {} days x {} steps/day, {} clusters",
+            bank_path, bank.runs.len(), bank.days, bank.steps_per_day, bank.n_clusters
+        );
+        for (fam, plan, n) in bank.inventory() {
+            println!("  {fam:<6} {plan:<16} {n} runs");
+        }
+    } else {
+        println!("bank: {bank_path:?} not found");
+    }
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Performance metrics (§3.1) and ranking metrics (§3.2).
+
+pub mod perf;
+pub mod ranking;
+
+pub use perf::{auc, eval_window_mean, logloss_from_logit, window_mean};
+pub use ranking::{
+    normalized_regret_at_k, per, ranking_from_scores, regret, regret_at_k,
+    TARGET_NORMALIZED_REGRET,
+};

@@ -1,0 +1,124 @@
+//! Performance metrics over a single model's predictions (§3.1).
+//!
+//! The online metric trajectory itself is produced by the AOT train-step
+//! (progressive validation); this module provides the same metrics for
+//! Rust-side models (the logistic proxy used in tests) plus windowed
+//! trajectory averaging, and AUC for completeness (the paper's footnote 1:
+//! PER is the negative of ROC-AUC over pairs).
+
+/// Numerically stable per-example log loss from a logit.
+pub fn logloss_from_logit(logit: f64, label: f64) -> f64 {
+    logit.max(0.0) - logit * label + (-logit.abs()).exp().ln_1p()
+}
+
+/// Mean log loss from probabilities (clipped away from 0/1).
+pub fn logloss_from_probs(probs: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    assert!(!probs.is_empty());
+    let mut sum = 0.0;
+    for (&p, &y) in probs.iter().zip(labels) {
+        let p = p.clamp(1e-12, 1.0 - 1e-12);
+        sum -= y * p.ln() + (1.0 - y) * (1.0 - p).ln();
+    }
+    sum / probs.len() as f64
+}
+
+/// ROC AUC via the rank statistic (ties get average rank).
+pub fn auc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // average ranks for ties
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            if labels[idx[k]] > 0.5 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0)
+        / (n_pos as f64 * n_neg as f64)
+}
+
+/// Average metric over the closed step interval [a, b] (the paper's
+/// \bar m_W with W = [a, b]); clamps to the trajectory length.
+pub fn window_mean(trajectory: &[f64], a: usize, b: usize) -> f64 {
+    assert!(!trajectory.is_empty());
+    let hi = b.min(trajectory.len() - 1);
+    let lo = a.min(hi);
+    let slice = &trajectory[lo..=hi];
+    slice.iter().sum::<f64>() / slice.len() as f64
+}
+
+/// The paper's headline target: \bar m over the last `delta + 1` steps.
+pub fn eval_window_mean(trajectory: &[f64], delta: usize) -> f64 {
+    let t = trajectory.len() - 1;
+    window_mean(trajectory, t.saturating_sub(delta), t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logloss_logit_matches_probs() {
+        let logits = [-2.0, 0.0, 1.5, 4.0];
+        let labels = [0.0, 1.0, 1.0, 0.0];
+        let probs: Vec<f64> = logits.iter().map(|&z| 1.0 / (1.0 + (-z as f64).exp())).collect();
+        let a: f64 = logits
+            .iter()
+            .zip(&labels)
+            .map(|(&z, &y)| logloss_from_logit(z, y))
+            .sum::<f64>()
+            / 4.0;
+        let b = logloss_from_probs(&probs, &labels);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_and_random_auc() {
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert!((auc(&[0.1, 0.2, 0.8, 0.9], &labels) - 1.0).abs() < 1e-12);
+        assert!((auc(&[0.9, 0.8, 0.2, 0.1], &labels) - 0.0).abs() < 1e-12);
+        assert!((auc(&[0.5, 0.5, 0.5, 0.5], &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_with_ties_is_symmetric() {
+        let labels = [1.0, 0.0, 1.0, 0.0, 1.0];
+        let scores = [0.9, 0.9, 0.5, 0.3, 0.3];
+        let a = auc(&scores, &labels);
+        let flipped: Vec<f64> = scores.iter().map(|s| -s).collect();
+        let inv_labels: Vec<f64> = labels.iter().map(|y| 1.0 - y).collect();
+        let b = auc(&flipped, &inv_labels);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_auc_is_half() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn window_means() {
+        let tr = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(window_mean(&tr, 0, 4), 3.0);
+        assert_eq!(window_mean(&tr, 3, 4), 4.5);
+        assert_eq!(window_mean(&tr, 3, 100), 4.5); // clamped
+        assert_eq!(eval_window_mean(&tr, 1), 4.5);
+        assert_eq!(eval_window_mean(&tr, 100), 3.0); // whole trajectory
+    }
+}

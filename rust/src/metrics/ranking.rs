@@ -1,0 +1,219 @@
+//! Ranking metrics (§3.2): PER, regret, regret@k — how well a predicted
+//! ordering of configurations matches the ground-truth ordering.
+//!
+//! Conventions: all performance metrics are losses (smaller = better); a
+//! ranking is a permutation `r` of config indices with `r[0]` the
+//! predicted-best config; `truth[i]` is config i's ground-truth
+//! \bar m over the evaluation window from full training.
+
+/// Ranking = indices sorted ascending by score (loss: best first).
+/// Deterministic tie-break by index keeps results reproducible.
+pub fn ranking_from_scores(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+fn validate(r: &[usize], truth: &[f64]) {
+    assert_eq!(r.len(), truth.len(), "ranking/truth length mismatch");
+    debug_assert!({
+        let mut seen = vec![false; r.len()];
+        r.iter().all(|&i| {
+            let fresh = !seen[i];
+            seen[i] = true;
+            fresh && i < truth.len()
+        })
+    }, "ranking is not a permutation");
+}
+
+/// Pairwise error rate: fraction of config pairs (i<j by predicted rank)
+/// whose ground-truth metrics are ordered the other way.
+/// PER(r) = (2 / n(n-1)) * sum_{i<j} 1{ truth[r(i)] > truth[r(j)] }.
+pub fn per(r: &[usize], truth: &[f64]) -> f64 {
+    validate(r, truth);
+    let n = r.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut bad = 0usize;
+    for i in 0..n {
+        for j in i + 1..n {
+            if truth[r[i]] > truth[r[j]] {
+                bad += 1;
+            }
+        }
+    }
+    bad as f64 / (n * (n - 1) / 2) as f64
+}
+
+/// regret(r) = (1/n) * sum_i max(0, truth[r(i)] - truth[r*(i)]).
+pub fn regret(r: &[usize], truth: &[f64]) -> f64 {
+    regret_at_k(r, truth, r.len())
+}
+
+/// regret@k: extra loss from using r's top-k instead of the true top-k
+/// (the paper's main metric; §3.2).
+pub fn regret_at_k(r: &[usize], truth: &[f64], k: usize) -> f64 {
+    validate(r, truth);
+    let k = k.max(1).min(r.len());
+    let r_star = ranking_from_scores(truth);
+    let mut sum = 0.0;
+    for i in 0..k {
+        sum += (truth[r[i]] - truth[r_star[i]]).max(0.0);
+    }
+    sum / k as f64
+}
+
+/// Normalized regret@k: regret@k divided by a reference model's eval
+/// metric (§5.1.2). The paper's acceptance target is 0.1% = 1e-3 of the
+/// reference loss, matching the seed-to-seed variance of \bar m.
+pub fn normalized_regret_at_k(r: &[usize], truth: &[f64], k: usize, reference: f64) -> f64 {
+    assert!(reference > 0.0, "reference metric must be positive");
+    regret_at_k(r, truth, k) / reference
+}
+
+/// The paper's acceptance threshold for normalized regret@k.
+pub const TARGET_NORMALIZED_REGRET: f64 = 1e-3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, propcheck};
+
+    const TRUTH: [f64; 4] = [0.10, 0.20, 0.30, 0.40];
+
+    #[test]
+    fn perfect_ranking_has_zero_everything() {
+        let r = [0, 1, 2, 3];
+        assert_eq!(per(&r, &TRUTH), 0.0);
+        assert_eq!(regret(&r, &TRUTH), 0.0);
+        assert_eq!(regret_at_k(&r, &TRUTH, 2), 0.0);
+    }
+
+    #[test]
+    fn reversed_ranking_has_per_one() {
+        let r = [3, 2, 1, 0];
+        assert_eq!(per(&r, &TRUTH), 1.0);
+        // regret: positions get 0.4,0.3,0.2,0.1 vs 0.1,0.2,0.3,0.4
+        // -> max(0, diff) = 0.3, 0.1, 0, 0 -> mean 0.1
+        assert!((regret(&r, &TRUTH) - 0.1).abs() < 1e-12);
+        assert!((regret_at_k(&r, &TRUTH, 1) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_swap_counts_one_pair() {
+        let r = [1, 0, 2, 3];
+        assert!((per(&r, &TRUTH) - 1.0 / 6.0).abs() < 1e-12);
+        // top-1 regret = 0.2 - 0.1 = 0.1; top-2 = (0.1 + 0)/2
+        assert!((regret_at_k(&r, &TRUTH, 1) - 0.1).abs() < 1e-12);
+        assert!((regret_at_k(&r, &TRUTH, 2) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regret_at_k_ignores_tail_mistakes() {
+        // Top-3 correct, tail scrambled: regret@3 must be 0.
+        let truth = [0.1, 0.2, 0.3, 0.9, 0.8, 0.7];
+        let r = [0, 1, 2, 3, 4, 5];
+        assert_eq!(regret_at_k(&r, &truth, 3), 0.0);
+        assert!(regret(&r, &truth) > 0.0); // full regret sees the tail
+    }
+
+    #[test]
+    fn ranking_from_scores_sorts_ascending_with_stable_ties() {
+        let scores = [0.3, 0.1, 0.3, 0.0];
+        assert_eq!(ranking_from_scores(&scores), vec![3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn normalized_regret_scales() {
+        let r = [1, 0, 2, 3];
+        let raw = regret_at_k(&r, &TRUTH, 1);
+        assert!((normalized_regret_at_k(&r, &TRUTH, 1, 0.5) - raw / 0.5).abs() < 1e-12);
+    }
+
+    // ---------------------------------------------------------- properties
+
+    #[test]
+    fn prop_per_in_unit_interval_and_zero_for_true_ranking() {
+        propcheck::check(
+            11,
+            200,
+            |rng: &mut Rng| {
+                let n = 2 + rng.below(20) as usize;
+                (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect::<Vec<f64>>()
+            },
+            |truth| {
+                let mut idx: Vec<usize> = (0..truth.len()).collect();
+                // random permutation derived from the values themselves
+                idx.sort_by(|&a, &b| {
+                    (truth[a] * 7919.0).fract().partial_cmp(&(truth[b] * 7919.0).fract()).unwrap()
+                });
+                let p = per(&idx, truth);
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("PER out of range: {p}"));
+                }
+                let r_star = ranking_from_scores(truth);
+                if per(&r_star, truth) != 0.0 {
+                    return Err("true ranking has nonzero PER".into());
+                }
+                if regret(&r_star, truth) != 0.0 {
+                    return Err("true ranking has nonzero regret".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_regret_nonnegative_and_monotone_in_truth_gap() {
+        propcheck::check(
+            12,
+            200,
+            |rng: &mut Rng| {
+                let n = 3 + rng.below(15) as usize;
+                let truth: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect();
+                let scores: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect();
+                (truth, scores)
+            },
+            |(truth, scores)| {
+                let r = ranking_from_scores(scores);
+                for k in 1..=truth.len() {
+                    let g = regret_at_k(&r, truth, k);
+                    if g < 0.0 {
+                        return Err(format!("negative regret@{k}: {g}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_regret_bounded_by_truth_range() {
+        propcheck::check(
+            13,
+            200,
+            |rng: &mut Rng| {
+                let n = 2 + rng.below(15) as usize;
+                let truth: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect();
+                let scores: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect();
+                (truth, scores)
+            },
+            |(truth, scores)| {
+                let r = ranking_from_scores(scores);
+                let max = truth.iter().cloned().fold(f64::MIN, f64::max);
+                let min = truth.iter().cloned().fold(f64::MAX, f64::min);
+                let g = regret(&r, truth);
+                if g > max - min + 1e-12 {
+                    return Err(format!("regret {g} exceeds range {}", max - min));
+                }
+                Ok(())
+            },
+        );
+    }
+}

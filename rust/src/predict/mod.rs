@@ -1,0 +1,397 @@
+//! Prediction strategies (§4.2): estimate each configuration's evaluation
+//! window metric \bar m_{[T-Delta, T]} from metrics observed up to a
+//! stopping point.
+//!
+//! * [`constant_prediction`] — §4.2.1: the recent observed average.
+//! * [`trajectory_predict`] — §4.2.2: fit a parametric law per config
+//!   jointly across configs on pairwise differences, extrapolate to the
+//!   eval window.
+//! * [`stratified_predict`] — §4.2.3: slice the data by drift clusters,
+//!   predict per slice, reweight by eval-window slice sizes (Eq. 1-2).
+//!
+//! All functions operate on *day-aggregated* metric series (the paper
+//! fits on day averages; Appendix A.3).
+
+pub mod fit;
+pub mod laws;
+
+pub use laws::LawKind;
+
+use crate::cluster::slices;
+
+/// The strategy menu of the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    Constant,
+    Trajectory(LawKind),
+    /// law = None -> stratified constant; Some(law) -> stratified
+    /// trajectory (the paper's default "stratified prediction").
+    Stratified { law: Option<LawKind>, n_slices: usize },
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Constant => "constant".into(),
+            Strategy::Trajectory(l) => format!("trajectory[{}]", l.name()),
+            Strategy::Stratified { law: None, n_slices } => {
+                format!("stratified-constant[L={n_slices}]")
+            }
+            Strategy::Stratified { law: Some(l), n_slices } => {
+                format!("stratified[{},L={n_slices}]", l.name())
+            }
+        }
+    }
+}
+
+/// Number of trailing observed days used as fit/averaging window
+/// (paper Appendix A.3: "the last 3 visited days").
+pub const FIT_DAYS: usize = 3;
+
+/// §4.2.1 constant prediction: mean of the last `window` observed days.
+pub fn constant_prediction(day_means: &[f64], window: usize) -> f64 {
+    assert!(!day_means.is_empty());
+    let w = window.max(1).min(day_means.len());
+    day_means[day_means.len() - w..].iter().sum::<f64>() / w as f64
+}
+
+/// Day fractions D_d = (d+1)/total for the trailing `fit_days` observed
+/// days, paired with their metric values; skips non-finite entries.
+fn fit_points(day_means: &[f64], total_days: usize, fit_days: usize) -> Vec<(f64, f64)> {
+    let n = day_means.len();
+    let from = n.saturating_sub(fit_days);
+    (from..n)
+        .filter(|&d| day_means[d].is_finite())
+        .map(|d| ((d + 1) as f64 / total_days as f64, day_means[d]))
+        .collect()
+}
+
+/// Eval-window day fractions (the last `eval_days` of `total_days`).
+fn eval_fracs(total_days: usize, eval_days: usize) -> Vec<f64> {
+    (total_days - eval_days..total_days)
+        .map(|d| (d + 1) as f64 / total_days as f64)
+        .collect()
+}
+
+/// §4.2.2 trajectory prediction, jointly fit across configs on pairwise
+/// differences. `day_means[c]` is config c's observed per-day metric
+/// (up to the stopping day). Returns one eval-window estimate per config.
+pub fn trajectory_predict(
+    law: LawKind,
+    day_means: &[Vec<f64>],
+    total_days: usize,
+    eval_days: usize,
+) -> Vec<f64> {
+    let pts: Vec<Vec<(f64, f64)>> = day_means
+        .iter()
+        .map(|dm| fit_points(dm, total_days, FIT_DAYS))
+        .collect();
+    // Degenerate cases (too few points) fall back to constant.
+    if pts.iter().any(|p| p.len() < 2) {
+        return day_means
+            .iter()
+            .map(|dm| constant_prediction(dm, FIT_DAYS))
+            .collect();
+    }
+    let params = fit::fit_pairwise(law, &pts, |_, _| {});
+    let evals = eval_fracs(total_days, eval_days);
+    day_means
+        .iter()
+        .zip(&params)
+        .map(|(dm, p)| {
+            let v = evals.iter().map(|&d| law.eval(d, p)).sum::<f64>() / evals.len() as f64;
+            if v.is_finite() {
+                v
+            } else {
+                constant_prediction(dm, FIT_DAYS)
+            }
+        })
+        .collect()
+}
+
+/// Per-config per-slice day-mean series from (shared) slice counts and
+/// (per-config) slice loss sums. Days with no slice examples become NaN
+/// and are skipped by the fitters.
+fn slice_day_means(counts: &[Vec<u32>], sums: &[Vec<f64>], slice: usize) -> Vec<f64> {
+    counts
+        .iter()
+        .zip(sums)
+        .map(|(c, s)| {
+            if c[slice] == 0 {
+                f64::NAN
+            } else {
+                s[slice] / c[slice] as f64
+            }
+        })
+        .collect()
+}
+
+/// §4.2.3 stratified prediction.
+///
+/// * `cluster_counts[d][k]` — examples of cluster k on observed day d
+///   (data-side: identical for every config).
+/// * `cluster_loss_sums[c][d][k]` — config c's summed per-example loss on
+///   (day d, cluster k), observed via progressive validation.
+/// * `eval_cluster_counts[k]` — cluster sizes over the evaluation window
+///   (data-side; the paper reweighs by the number of eval examples per
+///   slice, Eq. 2).
+pub fn stratified_predict(
+    law: Option<LawKind>,
+    cluster_counts: &[Vec<u32>],
+    cluster_loss_sums: &[Vec<Vec<f32>>],
+    eval_cluster_counts: &[u64],
+    n_slices: usize,
+    total_days: usize,
+    eval_days: usize,
+) -> Vec<f64> {
+    let n_cfg = cluster_loss_sums.len();
+    assert!(n_cfg > 0);
+    let assignment = slices::slice_clusters(cluster_counts, n_slices);
+    let l = assignment.iter().max().map(|m| m + 1).unwrap_or(1);
+
+    // Aggregate data-side counts and per-config sums to slices.
+    let zero_sums: Vec<Vec<f32>> =
+        cluster_counts.iter().map(|row| vec![0.0; row.len()]).collect();
+    let (slice_counts, _) =
+        slices::aggregate_to_slices(cluster_counts, &zero_sums, &assignment, l);
+    let per_config_slice_sums: Vec<Vec<Vec<f64>>> = cluster_loss_sums
+        .iter()
+        .map(|sums| slices::aggregate_to_slices(cluster_counts, sums, &assignment, l).1)
+        .collect();
+
+    // Eval-window slice weights.
+    let mut eval_slice = vec![0.0f64; l];
+    for (k, &c) in eval_cluster_counts.iter().enumerate() {
+        eval_slice[assignment[k]] += c as f64;
+    }
+    let eval_total: f64 = eval_slice.iter().sum::<f64>().max(1.0);
+
+    // Per-slice prediction for all configs, then reweight. Slices with
+    // no observed data are skipped and the weights renormalized.
+    let mut out = vec![0.0f64; n_cfg];
+    let mut used_weight = 0.0f64;
+    for s in 0..l {
+        let series: Vec<Vec<f64>> = (0..n_cfg)
+            .map(|c| slice_day_means(&slice_counts, &per_config_slice_sums[c], s))
+            .collect();
+        // A slice can be empty in the observed window; fall back to the
+        // configs' aggregate behaviour by skipping (weight re-normalized).
+        let usable = series
+            .iter()
+            .all(|dm| dm.iter().filter(|x| x.is_finite()).count() >= 1);
+        let w = eval_slice[s] / eval_total;
+        if !usable || w == 0.0 {
+            continue;
+        }
+        used_weight += w;
+        let preds: Vec<f64> = match law {
+            None => series
+                .iter()
+                .map(|dm| {
+                    let finite: Vec<f64> =
+                        dm.iter().copied().filter(|x| x.is_finite()).collect();
+                    constant_prediction(&finite, FIT_DAYS)
+                })
+                .collect(),
+            Some(l) => trajectory_predict_sliced(l, &series, total_days, eval_days),
+        };
+        for (o, p) in out.iter_mut().zip(&preds) {
+            *o += w * p;
+        }
+    }
+    if used_weight > 0.0 && (used_weight - 1.0).abs() > 1e-12 {
+        for o in &mut out {
+            *o /= used_weight;
+        }
+    }
+    out
+}
+
+/// Trajectory prediction over slice series that may contain NaN days.
+fn trajectory_predict_sliced(
+    law: LawKind,
+    series: &[Vec<f64>],
+    total_days: usize,
+    eval_days: usize,
+) -> Vec<f64> {
+    let pts: Vec<Vec<(f64, f64)>> = series
+        .iter()
+        .map(|dm| {
+            // use up to FIT_DAYS trailing *finite* observations
+            let finite: Vec<(f64, f64)> = dm
+                .iter()
+                .enumerate()
+                .filter(|(_, x)| x.is_finite())
+                .map(|(d, &m)| ((d + 1) as f64 / total_days as f64, m))
+                .collect();
+            let from = finite.len().saturating_sub(FIT_DAYS);
+            finite[from..].to_vec()
+        })
+        .collect();
+    if pts.iter().any(|p| p.len() < 2) {
+        return series
+            .iter()
+            .map(|dm| {
+                let finite: Vec<f64> = dm.iter().copied().filter(|x| x.is_finite()).collect();
+                constant_prediction(&finite, FIT_DAYS)
+            })
+            .collect();
+    }
+    let params = fit::fit_pairwise(law, &pts, |_, _| {});
+    let evals = eval_fracs(total_days, eval_days);
+    series
+        .iter()
+        .zip(&params)
+        .map(|(dm, p)| {
+            let v = evals.iter().map(|&d| law.eval(d, p)).sum::<f64>() / evals.len() as f64;
+            if v.is_finite() {
+                v
+            } else {
+                let finite: Vec<f64> = dm.iter().copied().filter(|x| x.is_finite()).collect();
+                constant_prediction(&finite, FIT_DAYS)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_prediction_is_trailing_mean() {
+        let dm = [1.0, 0.9, 0.8, 0.7, 0.6];
+        assert!((constant_prediction(&dm, 3) - 0.7).abs() < 1e-12);
+        assert!((constant_prediction(&dm, 100) - 0.8).abs() < 1e-12);
+        assert!((constant_prediction(&dm, 0) - 0.6).abs() < 1e-12); // clamps to 1
+    }
+
+    #[test]
+    fn trajectory_beats_constant_on_decaying_curves() {
+        // Two configs with clear power-law decay observed for 12 of 24
+        // days; trajectory extrapolation should land closer to the true
+        // eval value than constant prediction.
+        let total = 24;
+        let truth = |c: f64, d: usize| 0.5 + 0.1 * c + (0.3 + 0.1 * c) / (((d + 1) as f64 / total as f64) as f64).powf(0.7);
+        let day_means: Vec<Vec<f64>> = (0..2)
+            .map(|c| (0..12).map(|d| truth(c as f64, d)).collect())
+            .collect();
+        let true_eval: Vec<f64> = (0..2)
+            .map(|c| (21..24).map(|d| truth(c as f64, d)).sum::<f64>() / 3.0)
+            .collect();
+        let pred = trajectory_predict(LawKind::InversePowerLaw, &day_means, total, 3);
+        for c in 0..2 {
+            let const_err = (constant_prediction(&day_means[c], FIT_DAYS) - true_eval[c]).abs();
+            let traj_err = (pred[c] - true_eval[c]).abs();
+            assert!(
+                traj_err < const_err,
+                "config {c}: traj {traj_err:.4} vs const {const_err:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn trajectory_falls_back_with_one_point() {
+        let day_means = vec![vec![0.9], vec![0.8]];
+        let pred = trajectory_predict(LawKind::InversePowerLaw, &day_means, 24, 3);
+        assert!((pred[0] - 0.9).abs() < 1e-12);
+        assert!((pred[1] - 0.8).abs() < 1e-12);
+    }
+
+    fn toy_stratified() -> (Vec<Vec<u32>>, Vec<Vec<Vec<f32>>>, Vec<u64>) {
+        // 2 clusters, 6 observed days, 2 configs.
+        // Cluster 0: loss 1.0 (config0) / 1.2 (config1), shrinking size.
+        // Cluster 1: loss 0.4 / 0.3, growing size.
+        let days = 6;
+        let counts: Vec<Vec<u32>> = (0..days)
+            .map(|d| vec![(60 - 10 * d) as u32, (10 + 10 * d) as u32])
+            .collect();
+        let sums: Vec<Vec<Vec<f32>>> = vec![
+            counts
+                .iter()
+                .map(|row| vec![row[0] as f32 * 1.0, row[1] as f32 * 0.4])
+                .collect(),
+            counts
+                .iter()
+                .map(|row| vec![row[0] as f32 * 1.2, row[1] as f32 * 0.3])
+                .collect(),
+        ];
+        // Eval window dominated by cluster 1.
+        (counts, sums, vec![5, 95])
+    }
+
+    #[test]
+    fn stratified_constant_weights_by_eval_share() {
+        let (counts, sums, eval) = toy_stratified();
+        let pred = stratified_predict(None, &counts, &sums, &eval, 2, 24, 3);
+        // config0 ~= 0.05*1.0 + 0.95*0.4 = 0.43; config1 ~= 0.05*1.2+0.95*0.3
+        assert!((pred[0] - 0.43).abs() < 0.02, "{}", pred[0]);
+        assert!((pred[1] - 0.345).abs() < 0.02, "{}", pred[1]);
+        // Aggregate constant prediction would be far higher (cluster 0
+        // dominated the *observed* window).
+        let agg0: f64 = {
+            let dm: Vec<f64> = counts
+                .iter()
+                .zip(&sums[0])
+                .map(|(c, s)| (s[0] as f64 + s[1] as f64) / (c[0] + c[1]) as f64)
+                .collect();
+            constant_prediction(&dm, FIT_DAYS)
+        };
+        assert!((pred[0] - 0.4).abs() < (agg0 - 0.4).abs());
+    }
+
+    #[test]
+    fn stratified_preserves_config_ordering() {
+        let (counts, sums, eval) = toy_stratified();
+        let pred = stratified_predict(None, &counts, &sums, &eval, 2, 24, 3);
+        assert!(pred[1] < pred[0], "config1 should win: {pred:?}");
+    }
+
+    #[test]
+    fn stratified_trajectory_runs() {
+        let (counts, sums, eval) = toy_stratified();
+        let pred = stratified_predict(
+            Some(LawKind::InversePowerLaw),
+            &counts,
+            &sums,
+            &eval,
+            2,
+            24,
+            3,
+        );
+        assert!(pred.iter().all(|p| p.is_finite()));
+        assert!(pred[1] < pred[0]);
+    }
+
+    #[test]
+    fn one_slice_stratified_equals_aggregate_constant() {
+        let (counts, sums, eval) = toy_stratified();
+        let strat = stratified_predict(None, &counts, &sums, &eval, 1, 24, 3);
+        for (c, s) in strat.iter().enumerate() {
+            let dm: Vec<f64> = counts
+                .iter()
+                .zip(&sums[c])
+                .map(|(cc, ss)| {
+                    (ss[0] as f64 + ss[1] as f64) / (cc[0] + cc[1]) as f64
+                })
+                .collect();
+            let agg = constant_prediction(&dm, FIT_DAYS);
+            assert!((s - agg).abs() < 1e-9, "config {c}: {s} vs {agg}");
+        }
+    }
+
+    #[test]
+    fn strategy_names_unique() {
+        let strategies = [
+            Strategy::Constant,
+            Strategy::Trajectory(LawKind::InversePowerLaw),
+            Strategy::Stratified { law: None, n_slices: 4 },
+            Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 4 },
+        ];
+        let names: Vec<String> = strategies.iter().map(|s| s.name()).collect();
+        let mut d = names.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), names.len());
+    }
+}

@@ -1,0 +1,135 @@
+//! AOT artifact manifest: metadata for every HLO the Python compile path
+//! produced (`artifacts/manifest.json`), parsed with the in-tree JSON.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub family: String,
+    pub batch: usize,
+    pub n_dense: usize,
+    pub n_cat: usize,
+    pub n_params: usize,
+    pub state_size: usize,
+    pub step_hlo: PathBuf,
+    pub init_hlo: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub n_dense: usize,
+    pub n_cat: usize,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let schema = root.get("schema").ok_or_else(|| anyhow!("missing schema"))?;
+        let get = |j: &Json, k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing numeric field {k:?}"))
+        };
+        let batch = get(schema, "batch")?;
+        let n_dense = get(schema, "n_dense")?;
+        let n_cat = get(schema, "n_cat")?;
+
+        let mut variants = Vec::new();
+        for v in root
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing variants"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                v.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("variant missing {k:?}"))
+            };
+            variants.push(VariantMeta {
+                name: s("name")?,
+                family: s("family")?,
+                batch: get(v, "batch")?,
+                n_dense: get(v, "n_dense")?,
+                n_cat: get(v, "n_cat")?,
+                n_params: get(v, "n_params")?,
+                state_size: get(v, "state_size")?,
+                step_hlo: dir.join(s("step_hlo")?),
+                init_hlo: dir.join(s("init_hlo")?),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), batch, n_dense, n_cat, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))
+    }
+
+    /// Verify the Rust data schema matches what the artifacts were
+    /// compiled against.
+    pub fn check_schema(&self, batch: usize, n_dense: usize, n_cat: usize) -> Result<()> {
+        if self.batch != batch || self.n_dense != n_dense || self.n_cat != n_cat {
+            return Err(anyhow!(
+                "schema mismatch: artifacts ({}, {}, {}) vs runtime ({}, {}, {}) — \
+                 re-run `make artifacts`",
+                self.batch, self.n_dense, self.n_cat, batch, n_dense, n_cat
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "schema": {"batch": 256, "n_dense": 8, "n_cat": 12},
+              "variants": [
+                {"name": "fm_base", "family": "fm", "batch": 256,
+                 "n_dense": 8, "n_cat": 12, "n_params": 100,
+                 "state_size": 200, "step_hlo": "fm.step.hlo.txt",
+                 "init_hlo": "fm.init.hlo.txt"}
+              ]
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let dir = std::env::temp_dir().join("nshpo_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 256);
+        let v = m.variant("fm_base").unwrap();
+        assert_eq!(v.state_size, 200);
+        assert!(v.step_hlo.ends_with("fm.step.hlo.txt"));
+        assert!(m.variant("nope").is_err());
+        m.check_schema(256, 8, 12).unwrap();
+        assert!(m.check_schema(128, 8, 12).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: load and execute the AOT-compiled model artifacts from
+//! the Rust hot path (Python is build-time only).
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{Manifest, VariantMeta};
+pub use pjrt::{Engine, Model, RunState};

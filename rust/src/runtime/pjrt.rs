@@ -1,0 +1,152 @@
+//! PJRT execution of the AOT-lowered model artifacts (the hot path).
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO **text** -> HloModuleProto
+//! -> XlaComputation -> compile on the CPU PJRT client -> execute. The
+//! flat-state ABI (DESIGN.md §1) means each training step round-trips
+//! exactly one state literal plus the small batch literals:
+//!
+//!   step(state, dense, cat, labels, weights, progress, hparams)
+//!     -> (state', mean_loss, per_example_loss)
+//!
+//! The returned state literal is fed straight back in on the next step
+//! (no host-side decoding of the parameters), so the per-step overhead is
+//! the batch upload + the tuple download.
+
+use super::artifact::VariantMeta;
+use crate::data::Batch;
+use anyhow::{anyhow, Context, Result};
+
+/// Process-wide PJRT client (one per thread is fine too; the CPU client
+/// is cheap). Wraps compile + the literal plumbing.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile a variant's step + init executables.
+    pub fn load_model(&self, meta: &VariantMeta) -> Result<Model> {
+        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(wrap)
+            .with_context(|| format!("loading HLO {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(wrap)
+        };
+        Ok(Model {
+            step_exe: compile(&meta.step_hlo)?,
+            init_exe: compile(&meta.init_hlo)?,
+            meta: meta.clone(),
+        })
+    }
+}
+
+/// A compiled model variant: shared by all runs of that architecture.
+pub struct Model {
+    step_exe: xla::PjRtLoadedExecutable,
+    init_exe: xla::PjRtLoadedExecutable,
+    pub meta: VariantMeta,
+}
+
+impl Model {
+    /// Materialize the initial training state for a seed (the init HLO
+    /// embeds the jax PRNG, so any seed is available without Python).
+    pub fn init_state(&self, seed: i32) -> Result<RunState> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let seed_buf = self
+            .init_exe
+            .client()
+            .buffer_from_host_literal(None, &seed_lit)
+            .map_err(wrap)?;
+        let out = self.init_exe.execute_b(&[&seed_buf]).map_err(wrap)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap)?;
+        let state = lit.to_tuple1().map_err(wrap)?;
+        Ok(RunState { state })
+    }
+
+    /// One online training step (progressive validation): returns the
+    /// pre-update mean loss and the per-example losses; advances `run`.
+    ///
+    /// Uses `execute_b` with self-managed device buffers: the crate's
+    /// `execute(&[Literal])` path leaks every input device buffer
+    /// (xla_rs.cc `execute` releases the unique_ptr and never frees it —
+    /// ~3.4 MB/step for our state vector, an OOM after a few hundred
+    /// runs). Buffers created here are dropped (and freed) at the end of
+    /// the call.
+    pub fn step(
+        &self,
+        run: &mut RunState,
+        batch: &Batch,
+        weights: &[f32],
+        progress: f32,
+        hparams: [f32; 3],
+    ) -> Result<(f32, Vec<f32>)> {
+        let b = self.meta.batch;
+        debug_assert_eq!(batch.len(), b, "batch size mismatch");
+        debug_assert_eq!(weights.len(), b);
+
+        let dense = xla::Literal::vec1(&batch.dense)
+            .reshape(&[b as i64, self.meta.n_dense as i64])
+            .map_err(wrap)?;
+        let cat = xla::Literal::vec1(&batch.cat)
+            .reshape(&[b as i64, self.meta.n_cat as i64])
+            .map_err(wrap)?;
+        let labels = xla::Literal::vec1(&batch.labels);
+        let w = xla::Literal::vec1(weights);
+        let prog = xla::Literal::scalar(progress);
+        let hp = xla::Literal::vec1(&hparams);
+
+        let client = self.step_exe.client();
+        let upload = |lit: &xla::Literal| -> Result<xla::PjRtBuffer> {
+            client.buffer_from_host_literal(None, lit).map_err(wrap)
+        };
+        let bufs = [
+            upload(&run.state)?,
+            upload(&dense)?,
+            upload(&cat)?,
+            upload(&labels)?,
+            upload(&w)?,
+            upload(&prog)?,
+            upload(&hp)?,
+        ];
+        let out = self.step_exe.execute_b(&bufs).map_err(wrap)?;
+        let lit = out[0][0].to_literal_sync().map_err(wrap)?;
+        let (state, loss, per_ex) = lit.to_tuple3().map_err(wrap)?;
+        run.state = state;
+        let loss = loss.get_first_element::<f32>().map_err(wrap)?;
+        let per_ex = per_ex.to_vec::<f32>().map_err(wrap)?;
+        Ok((loss, per_ex))
+    }
+
+    /// Copy the current parameter half of the state to the host
+    /// (diagnostics / checkpointing).
+    pub fn params_to_host(&self, run: &RunState) -> Result<Vec<f32>> {
+        let full = run.state.to_vec::<f32>().map_err(wrap)?;
+        Ok(full[..self.meta.n_params].to_vec())
+    }
+}
+
+/// Per-run training state: one flat f32 literal [params ; accumulator].
+pub struct RunState {
+    state: xla::Literal,
+}
+
+impl RunState {
+    pub fn size_bytes(&self) -> usize {
+        self.state.size_bytes()
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

@@ -1,0 +1,126 @@
+//! The relative-cost model C (§4.1): ratio of compute spent obtaining a
+//! ranking to the compute of training every configuration on full data.
+
+/// One-shot early stopping: C(t_stop) = t_stop / T  (§4.1.1).
+pub fn one_shot(t_stop: usize, t_total: usize) -> f64 {
+    assert!(t_total > 0);
+    (t_stop.min(t_total)) as f64 / t_total as f64
+}
+
+/// Performance-based stopping (§4.1.1):
+/// C(T_stop, rho) = (1/T) * sum_i (1 - rho)^(i-1) * (t_i - t_{i-1})
+/// over T_stop ∪ {T} with t_0 = 0.
+pub fn performance_based(stop_steps: &[usize], rho: f64, t_total: usize) -> f64 {
+    assert!(t_total > 0);
+    assert!((0.0..1.0).contains(&rho));
+    let mut steps: Vec<usize> = stop_steps
+        .iter()
+        .copied()
+        .filter(|&t| t > 0 && t < t_total)
+        .collect();
+    steps.sort_unstable();
+    steps.dedup();
+    steps.push(t_total);
+    let mut c = 0.0;
+    let mut prev = 0usize;
+    for (i, &t) in steps.iter().enumerate() {
+        c += (1.0 - rho).powi(i as i32) * (t - prev) as f64;
+        prev = t;
+    }
+    c / t_total as f64
+}
+
+/// Empirical cost from the number of steps each configuration actually
+/// trained: C = sum_c steps_c / (n * T).
+pub fn empirical(steps_trained: &[usize], t_total: usize) -> f64 {
+    assert!(!steps_trained.is_empty() && t_total > 0);
+    steps_trained.iter().sum::<usize>() as f64 / (steps_trained.len() * t_total) as f64
+}
+
+/// Sub-sampling composes multiplicatively with stopping strategies
+/// (§4.1.2 is "orthogonal to the other data reduction strategies").
+pub fn with_subsampling(stopping_cost: f64, subsample_cost: f64) -> f64 {
+    stopping_cost * subsample_cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, propcheck};
+
+    #[test]
+    fn one_shot_is_fraction() {
+        assert_eq!(one_shot(120, 480), 0.25);
+        assert_eq!(one_shot(480, 480), 1.0);
+        assert_eq!(one_shot(9999, 480), 1.0); // clamped
+    }
+
+    #[test]
+    fn no_stops_means_full_cost() {
+        assert_eq!(performance_based(&[], 0.5, 480), 1.0);
+    }
+
+    #[test]
+    fn successive_halving_special_case() {
+        // rho = 1/2, stops at T/4 and T/2:
+        // C = (1/T) [ (T/4) + (1/2)(T/4) + (1/4)(T/2) ] = 1/4 + 1/8 + 1/8
+        let c = performance_based(&[120, 240], 0.5, 480);
+        assert!((c - 0.5).abs() < 1e-12, "{c}");
+    }
+
+    #[test]
+    fn earlier_stops_cost_less() {
+        let late = performance_based(&[400], 0.5, 480);
+        let early = performance_based(&[100], 0.5, 480);
+        assert!(early < late);
+    }
+
+    #[test]
+    fn higher_rho_costs_less() {
+        let gentle = performance_based(&[120, 240, 360], 0.25, 480);
+        let aggressive = performance_based(&[120, 240, 360], 0.75, 480);
+        assert!(aggressive < gentle);
+    }
+
+    #[test]
+    fn empirical_matches_uniform() {
+        assert_eq!(empirical(&[100, 100, 100], 200), 0.5);
+        assert_eq!(empirical(&[200, 0], 200), 0.5);
+    }
+
+    #[test]
+    fn subsampling_composes() {
+        assert!((with_subsampling(0.5, 0.6) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_cost_in_unit_interval_and_monotone_in_rho() {
+        propcheck::check(
+            21,
+            300,
+            |rng: &mut Rng| {
+                let t_total = 50 + rng.below(1000) as usize;
+                let n_stops = rng.below(6) as usize;
+                let stops: Vec<usize> =
+                    (0..n_stops).map(|_| 1 + rng.below(t_total as u64 - 1) as usize).collect();
+                let rho = rng.uniform_range(0.05, 0.9);
+                (stops.iter().map(|&s| s as f64).collect::<Vec<f64>>(),
+                 vec![t_total as f64, rho])
+            },
+            |(stops_f, meta)| {
+                let t_total = meta[0] as usize;
+                let rho = meta[1];
+                let stops: Vec<usize> = stops_f.iter().map(|&s| s as usize).collect();
+                let c = performance_based(&stops, rho, t_total);
+                if !(0.0..=1.0).contains(&c) {
+                    return Err(format!("cost out of range: {c}"));
+                }
+                let c_hi = performance_based(&stops, (rho + 0.05).min(0.95), t_total);
+                if !stops.is_empty() && c_hi > c + 1e-12 {
+                    return Err(format!("cost not monotone in rho: {c} -> {c_hi}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

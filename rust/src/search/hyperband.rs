@@ -1,0 +1,173 @@
+//! Hyperband (Li et al., 2018) on top of the generalized
+//! performance-based stopping — the paper's §2 positions SHA inside
+//! Hyperband's bracket structure; this module implements that
+//! meta-algorithm as an *extension* so the "n vs r" trade-off the paper
+//! discusses can be measured on the same banks (DESIGN.md §6 ablations).
+//!
+//! Each bracket s runs Algorithm 1 over a subset of n_s configurations
+//! with an initial budget r_s and the usual pruning ratio; brackets
+//! hedge between "many configs, aggressive stopping" and "few configs,
+//! long training". Replayed over a trajectory bank like everything else.
+
+use super::{equally_spaced_stops, SearchOutcome, TrajectorySet};
+use crate::metrics;
+use crate::predict::Strategy;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct HyperbandOutcome {
+    /// Final ranking over all configs (configs never touched by any
+    /// bracket rank last, in index order).
+    pub ranking: Vec<usize>,
+    pub cost: f64,
+    /// (bracket, n_configs, first_stop_day, bracket cost) diagnostics.
+    pub brackets: Vec<(usize, usize, usize, f64)>,
+}
+
+/// Replay Hyperband over a bank. `eta` is the downsampling factor
+/// (classic Hyperband: 3; SHA's rho = 1 - 1/eta). `seed` drives the
+/// random assignment of configs to brackets.
+pub fn hyperband(
+    ts: &TrajectorySet,
+    strategy: Strategy,
+    eta: f64,
+    seed: u64,
+) -> HyperbandOutcome {
+    assert!(eta > 1.0);
+    let n = ts.n_configs();
+    let rho = 1.0 - 1.0 / eta;
+    let days = ts.days;
+    // s_max brackets: bracket s starts stopping at day ~ days / eta^s.
+    let s_max = ((days as f64).ln() / eta.ln()).floor() as usize;
+    let mut rng = Rng::new(seed ^ 0x48b);
+
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+
+    // Classic Hyperband allocation: bracket s gets n_s ∝ eta^s / (s+1)
+    // configurations — the aggressive brackets explore many configs with
+    // small initial budgets, the conservative ones train few for long.
+    let weights: Vec<f64> = (0..=s_max).map(|s| eta.powi(s as i32) / (s + 1) as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let mut total_steps = 0usize;
+    let mut scored: Vec<(usize, f64)> = Vec::new(); // (config, pseudo-score)
+    let mut brackets = Vec::new();
+    let mut cursor = 0usize;
+    for s in (0..=s_max).rev() {
+        if cursor >= n {
+            break;
+        }
+        let n_s = if s == 0 {
+            n - cursor // the last bracket absorbs rounding remainders
+        } else {
+            (((n as f64) * weights[s] / wsum).round() as usize).clamp(1, n - cursor)
+        };
+        let subset: Vec<usize> =
+            order[cursor..(cursor + n_s).min(n)].to_vec();
+        cursor += subset.len();
+
+        let first_stop = (days as f64 / eta.powi(s as i32)).max(1.0) as usize;
+        let stops: Vec<usize> = equally_spaced_stops(days, first_stop.max(1));
+        let sub_ts = subset_view(ts, &subset);
+        let out = sub_ts.performance_based(strategy, &stops, rho);
+        let bracket_steps: usize = out.steps_trained.iter().sum();
+        total_steps += bracket_steps;
+        brackets.push((
+            s,
+            subset.len(),
+            first_stop,
+            bracket_steps as f64 / (n * ts.total_steps()) as f64,
+        ));
+        // score = position within bracket, scaled into [0,1); earlier
+        // brackets (longer budgets) break ties by observed truth later.
+        for (pos, &local) in out.ranking.iter().enumerate() {
+            scored.push((subset[local], pos as f64 / subset.len() as f64));
+        }
+    }
+
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut ranking: Vec<usize> = scored.iter().map(|&(c, _)| c).collect();
+    for c in 0..n {
+        if !ranking.contains(&c) {
+            ranking.push(c);
+        }
+    }
+
+    HyperbandOutcome {
+        ranking,
+        cost: total_steps as f64 / (n * ts.total_steps()) as f64,
+        brackets,
+    }
+}
+
+/// View a subset of configs as their own TrajectorySet.
+fn subset_view(ts: &TrajectorySet, subset: &[usize]) -> TrajectorySet {
+    TrajectorySet {
+        steps_per_day: ts.steps_per_day,
+        days: ts.days,
+        eval_days: ts.eval_days,
+        step_losses: subset.iter().map(|&c| ts.step_losses[c].clone()).collect(),
+        day_cluster_counts: ts.day_cluster_counts.clone(),
+        cluster_loss_sums: subset
+            .iter()
+            .map(|&c| ts.cluster_loss_sums[c].clone())
+            .collect(),
+        eval_cluster_counts: ts.eval_cluster_counts.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::{sample_task, SurrogateConfig};
+
+    fn ts() -> TrajectorySet {
+        sample_task(
+            &SurrogateConfig { n_configs: 24, days: 18, steps_per_day: 10, ..Default::default() },
+            9,
+        )
+    }
+
+    #[test]
+    fn ranking_is_permutation_and_cheaper_than_full() {
+        let ts = ts();
+        let out = hyperband(&ts, Strategy::Constant, 3.0, 1);
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..24).collect::<Vec<_>>());
+        assert!(out.cost < 1.0, "cost {}", out.cost);
+        assert!(!out.brackets.is_empty());
+    }
+
+    #[test]
+    fn brackets_hedge_budgets() {
+        let ts = ts();
+        let out = hyperband(&ts, Strategy::Constant, 3.0, 2);
+        // at least two distinct first-stop budgets across brackets
+        let mut stops: Vec<usize> = out.brackets.iter().map(|b| b.2).collect();
+        stops.sort_unstable();
+        stops.dedup();
+        assert!(stops.len() >= 2, "no hedging: {:?}", out.brackets);
+    }
+
+    #[test]
+    fn top_of_ranking_is_reasonable() {
+        let ts = ts();
+        let gt = ts.ground_truth();
+        let out = hyperband(&ts, Strategy::Constant, 3.0, 3);
+        let reg = metrics::regret_at_k(&out.ranking, &gt, 3);
+        let worst = gt.iter().cloned().fold(f64::MIN, f64::max)
+            - gt.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(reg < 0.5 * worst, "regret {reg} vs range {worst}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ts = ts();
+        let a = hyperband(&ts, Strategy::Constant, 3.0, 5);
+        let b = hyperband(&ts, Strategy::Constant, 3.0, 5);
+        assert_eq!(a.ranking, b.ranking);
+        assert_eq!(a.cost, b.cost);
+    }
+}

@@ -1,0 +1,382 @@
+//! Search strategies (§4.1): one-shot early stopping, performance-based
+//! stopping (Algorithm 1), late starting — replayed over recorded
+//! trajectories (the paper's backtesting methodology) or driven live by
+//! the coordinator.
+
+pub mod cost;
+pub mod hyperband;
+pub mod sweep;
+
+use crate::metrics;
+use crate::predict::{self, Strategy};
+
+/// Everything the search strategies need to know about a family's runs:
+/// full per-step metric trajectories plus per-day per-cluster loss
+/// decompositions (for stratified prediction). Produced by the trainer
+/// (`train::bank`), consumed here.
+#[derive(Clone, Debug)]
+pub struct TrajectorySet {
+    pub steps_per_day: usize,
+    pub days: usize,
+    /// Evaluation window in days (paper: 3).
+    pub eval_days: usize,
+    /// `[config][step]` progressive-validation loss.
+    pub step_losses: Vec<Vec<f32>>,
+    /// `[day][cluster]` example counts — data-side, config-independent.
+    pub day_cluster_counts: Vec<Vec<u32>>,
+    /// `[config][day][cluster]` summed per-example loss.
+    pub cluster_loss_sums: Vec<Vec<Vec<f32>>>,
+    /// `[cluster]` example counts over the evaluation window.
+    pub eval_cluster_counts: Vec<u64>,
+}
+
+/// Result of a search strategy: predicted-best-first ranking and its
+/// relative cost C (before any sub-sampling multiplier).
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub ranking: Vec<usize>,
+    pub cost: f64,
+    /// Steps each config actually trained (empirical-cost audit).
+    pub steps_trained: Vec<usize>,
+}
+
+impl TrajectorySet {
+    pub fn n_configs(&self) -> usize {
+        self.step_losses.len()
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.days * self.steps_per_day
+    }
+
+    /// Per-day mean of the step losses for config `c`, days `[0, day_stop)`.
+    pub fn day_means(&self, c: usize, day_stop: usize) -> Vec<f64> {
+        let spd = self.steps_per_day;
+        let days = day_stop.min(self.days);
+        (0..days)
+            .map(|d| {
+                let s = &self.step_losses[c][d * spd..(d + 1) * spd];
+                s.iter().map(|&x| x as f64).sum::<f64>() / spd as f64
+            })
+            .collect()
+    }
+
+    /// Ground-truth eval-window metric \bar m per config (full data).
+    pub fn ground_truth(&self) -> Vec<f64> {
+        (0..self.n_configs())
+            .map(|c| {
+                let dm = self.day_means(c, self.days);
+                dm[self.days - self.eval_days..].iter().sum::<f64>() / self.eval_days as f64
+            })
+            .collect()
+    }
+
+    /// Predict eval metrics for a subset of configs from data observed in
+    /// days `[0, day_stop)`. Output aligned with `subset`.
+    pub fn predict_subset(
+        &self,
+        strategy: Strategy,
+        day_stop: usize,
+        subset: &[usize],
+    ) -> Vec<f64> {
+        let day_stop = day_stop.clamp(1, self.days);
+        match strategy {
+            Strategy::Constant => subset
+                .iter()
+                .map(|&c| {
+                    predict::constant_prediction(&self.day_means(c, day_stop), predict::FIT_DAYS)
+                })
+                .collect(),
+            Strategy::Trajectory(law) => {
+                let dms: Vec<Vec<f64>> =
+                    subset.iter().map(|&c| self.day_means(c, day_stop)).collect();
+                predict::trajectory_predict(law, &dms, self.days, self.eval_days)
+            }
+            Strategy::Stratified { law, n_slices } => {
+                let counts = &self.day_cluster_counts[..day_stop];
+                let sums: Vec<Vec<Vec<f32>>> = subset
+                    .iter()
+                    .map(|&c| self.cluster_loss_sums[c][..day_stop].to_vec())
+                    .collect();
+                predict::stratified_predict(
+                    law,
+                    counts,
+                    &sums,
+                    &self.eval_cluster_counts,
+                    n_slices,
+                    self.days,
+                    self.eval_days,
+                )
+            }
+        }
+    }
+
+    // ------------------------------------------------------- strategies
+
+    /// One-shot early stopping (§4.1.1): stop everything at `day_stop`,
+    /// rank by the chosen prediction strategy.
+    pub fn one_shot(&self, strategy: Strategy, day_stop: usize) -> SearchOutcome {
+        let day_stop = day_stop.clamp(1, self.days);
+        let all: Vec<usize> = (0..self.n_configs()).collect();
+        let preds = self.predict_subset(strategy, day_stop, &all);
+        let ranking = metrics::ranking_from_scores(&preds);
+        let steps = vec![day_stop * self.steps_per_day; self.n_configs()];
+        SearchOutcome {
+            ranking,
+            cost: cost::one_shot(day_stop * self.steps_per_day, self.total_steps()),
+            steps_trained: steps,
+        }
+    }
+
+    /// Performance-based stopping — the paper's Algorithm 1. At each
+    /// stopping day, predict the remaining configs' final metrics, prune
+    /// the worst `rho` fraction, continue the rest. With constant
+    /// prediction and rho = 1/2 this is successive halving.
+    pub fn performance_based(
+        &self,
+        strategy: Strategy,
+        stop_days: &[usize],
+        rho: f64,
+    ) -> SearchOutcome {
+        assert!((0.0..1.0).contains(&rho));
+        let n = self.n_configs();
+        let mut remaining: Vec<usize> = (0..n).collect();
+        let mut tail: Vec<usize> = Vec::new(); // pruned, best-first
+        let mut steps_trained = vec![self.total_steps(); n];
+
+        let mut days: Vec<usize> = stop_days
+            .iter()
+            .copied()
+            .filter(|&d| d >= 1 && d < self.days)
+            .collect();
+        days.sort_unstable();
+        days.dedup();
+
+        for &day in &days {
+            if remaining.len() <= 1 {
+                break;
+            }
+            let preds = self.predict_subset(strategy, day, &remaining);
+            let order = metrics::ranking_from_scores(&preds); // best-first, local idx
+            let n_prune = (((remaining.len() as f64) * rho).floor() as usize)
+                .min(remaining.len() - 1);
+            if n_prune == 0 {
+                continue;
+            }
+            let cut = remaining.len() - n_prune;
+            let pruned: Vec<usize> = order[cut..].iter().map(|&i| remaining[i]).collect();
+            for &c in &pruned {
+                steps_trained[c] = day * self.steps_per_day;
+            }
+            // Algorithm 1 line 8: newly pruned go ahead of earlier-pruned.
+            let mut new_tail = pruned;
+            new_tail.extend(tail);
+            tail = new_tail;
+            remaining = order[..cut].iter().map(|&i| remaining[i]).collect();
+        }
+
+        // Line 11-12: survivors ranked by their computed (full-data)
+        // performance, ahead of everything pruned.
+        let truth = self.ground_truth();
+        let survivor_scores: Vec<f64> = remaining.iter().map(|&c| truth[c]).collect();
+        let order = metrics::ranking_from_scores(&survivor_scores);
+        let mut ranking: Vec<usize> = order.iter().map(|&i| remaining[i]).collect();
+        ranking.extend(tail);
+
+        SearchOutcome {
+            ranking,
+            cost: cost::empirical(&steps_trained, self.total_steps()),
+            steps_trained,
+        }
+    }
+
+    /// Late starting (§B.4): train only from `start_day`, stop at
+    /// `day_stop`, rank by constant prediction over the observed window.
+    pub fn late_start(&self, start_day: usize, day_stop: usize) -> SearchOutcome {
+        let day_stop = day_stop.clamp(start_day + 1, self.days);
+        let n = self.n_configs();
+        // NOTE: replaying a late start from full-data trajectories is an
+        // approximation (the real late-started model would warm up from
+        // scratch); the coordinator's live mode runs it exactly. For
+        // ranking purposes the warm-up bias is shared across configs.
+        let preds: Vec<f64> = (0..n)
+            .map(|c| {
+                let dm = self.day_means(c, day_stop);
+                let window = &dm[start_day.min(dm.len() - 1)..];
+                window.iter().sum::<f64>() / window.len() as f64
+            })
+            .collect();
+        let steps = (day_stop - start_day) * self.steps_per_day;
+        SearchOutcome {
+            ranking: metrics::ranking_from_scores(&preds),
+            cost: cost::one_shot(steps, self.total_steps()),
+            steps_trained: vec![steps; n],
+        }
+    }
+}
+
+/// Equally spaced stopping days: every `every` days starting at `every`
+/// (the paper's T_stop construction, Appendix A.5).
+pub fn equally_spaced_stops(days: usize, every: usize) -> Vec<usize> {
+    if every == 0 {
+        return Vec::new();
+    }
+    (1..)
+        .map(|i| i * every)
+        .take_while(|&d| d < days)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Synthetic trajectory set: config quality ordered by index, shared
+    /// day-level hardness wobble, 1 cluster (stratified degenerates).
+    pub fn toy(n_cfg: usize, days: usize, spd: usize, seed: u64) -> TrajectorySet {
+        let mut rng = Rng::new(seed);
+        let mut step_losses = Vec::new();
+        for c in 0..n_cfg {
+            let quality = 0.4 + 0.02 * c as f64;
+            let mut tr = Vec::new();
+            for t in 0..days * spd {
+                let d = t as f64 / spd as f64;
+                let hardness = 0.1 * (d * 0.9).sin();
+                let warmup = 0.3 / ((t + 2) as f64 / 10.0).sqrt().max(1.0);
+                tr.push((quality + hardness + warmup + 0.005 * rng.normal()) as f32);
+            }
+            step_losses.push(tr);
+        }
+        let day_cluster_counts = vec![vec![spd as u32 * 10]; days];
+        let cluster_loss_sums = (0..n_cfg)
+            .map(|c| {
+                (0..days)
+                    .map(|d| {
+                        let dm: f64 = step_losses[c][d * spd..(d + 1) * spd]
+                            .iter()
+                            .map(|&x| x as f64)
+                            .sum::<f64>()
+                            / spd as f64;
+                        vec![(dm * spd as f64 * 10.0) as f32]
+                    })
+                    .collect()
+            })
+            .collect();
+        TrajectorySet {
+            steps_per_day: spd,
+            days,
+            eval_days: 3,
+            step_losses,
+            day_cluster_counts,
+            cluster_loss_sums,
+            eval_cluster_counts: vec![1000],
+        }
+    }
+
+    #[test]
+    fn ground_truth_orders_by_quality() {
+        let ts = toy(6, 12, 8, 1);
+        let gt = ts.ground_truth();
+        let r = metrics::ranking_from_scores(&gt);
+        assert_eq!(r, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn one_shot_full_data_recovers_truth() {
+        let ts = toy(8, 12, 8, 2);
+        let out = ts.one_shot(Strategy::Constant, 12);
+        assert_eq!(out.cost, 1.0);
+        assert!(metrics::per(&out.ranking, &ts.ground_truth()) < 0.1);
+    }
+
+    #[test]
+    fn one_shot_cost_scales_with_stop_day() {
+        let ts = toy(4, 12, 8, 3);
+        assert!((ts.one_shot(Strategy::Constant, 6).cost - 0.5).abs() < 1e-12);
+        assert!((ts.one_shot(Strategy::Constant, 3).cost - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perf_stopping_cheaper_than_one_shot_at_same_final_day() {
+        let ts = toy(16, 12, 8, 4);
+        let stops = equally_spaced_stops(12, 3); // 3,6,9
+        let pb = ts.performance_based(Strategy::Constant, &stops, 0.5);
+        assert!(pb.cost < 1.0);
+        // analytic formula agrees when prunes divide evenly (16 -> 8 -> 4 -> 2)
+        let analytic = cost::performance_based(
+            &stops.iter().map(|d| d * 8).collect::<Vec<_>>(),
+            0.5,
+            96,
+        );
+        assert!((pb.cost - analytic).abs() < 1e-9, "{} vs {analytic}", pb.cost);
+    }
+
+    #[test]
+    fn perf_stopping_ranking_is_permutation_and_good_at_top() {
+        let ts = toy(12, 12, 8, 5);
+        let out = ts.performance_based(Strategy::Constant, &[4, 8], 0.5);
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..12).collect::<Vec<_>>());
+        let gt = ts.ground_truth();
+        let reg3 = metrics::regret_at_k(&out.ranking, &gt, 3);
+        assert!(reg3 < 0.02, "regret@3 {reg3}");
+    }
+
+    #[test]
+    fn survivors_outrank_pruned() {
+        let ts = toy(8, 12, 8, 6);
+        let out = ts.performance_based(Strategy::Constant, &[6], 0.5);
+        // the 4 pruned configs occupy the last 4 positions
+        let gt = ts.ground_truth();
+        let survivor_worst: f64 = out.ranking[..4]
+            .iter()
+            .map(|&c| gt[c])
+            .fold(f64::MIN, f64::max);
+        // With a clean toy signal the best config must be a survivor.
+        assert!(out.ranking[0] == 0 || survivor_worst < 0.6);
+        assert_eq!(out.steps_trained.iter().filter(|&&s| s == 96).count(), 4);
+        assert_eq!(out.steps_trained.iter().filter(|&&s| s == 48).count(), 4);
+    }
+
+    #[test]
+    fn trajectory_strategy_runs_through_search() {
+        let ts = toy(6, 12, 8, 7);
+        let out = ts.one_shot(
+            Strategy::Trajectory(crate::predict::LawKind::InversePowerLaw),
+            6,
+        );
+        let gt = ts.ground_truth();
+        assert!(metrics::regret_at_k(&out.ranking, &gt, 3) < 0.05);
+    }
+
+    #[test]
+    fn stratified_strategy_runs_through_search() {
+        let ts = toy(5, 12, 8, 8);
+        let out = ts.one_shot(
+            Strategy::Stratified {
+                law: Some(crate::predict::LawKind::InversePowerLaw),
+                n_slices: 1,
+            },
+            6,
+        );
+        assert_eq!(out.ranking.len(), 5);
+    }
+
+    #[test]
+    fn late_start_costs_window_only() {
+        let ts = toy(4, 12, 8, 9);
+        let out = ts.late_start(3, 9);
+        assert!((out.cost - 0.5).abs() < 1e-12);
+        assert_eq!(out.ranking.len(), 4);
+    }
+
+    #[test]
+    fn equally_spaced_stops_construction() {
+        assert_eq!(equally_spaced_stops(24, 6), vec![6, 12, 18]);
+        assert_eq!(equally_spaced_stops(24, 12), vec![12]);
+        assert!(equally_spaced_stops(24, 0).is_empty());
+        assert!(equally_spaced_stops(24, 24).is_empty());
+    }
+}

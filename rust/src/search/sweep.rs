@@ -1,0 +1,160 @@
+//! Candidate-configuration sweeps (paper Appendix A.1).
+//!
+//! Optimization grid (FM / MoE experiments, 27 configs):
+//!   learning rate  in {1e-4, 1e-3, 1e-2}
+//!   weight decay   in {1e-6, 2e-6, 1e-5}
+//!   final LR       in {1e-3, 1e-2, 1e-1}
+//! FM v2 / CN / MLP vary an architectural axis x a 9-point optimization
+//! sub-grid (lr x final-lr at the middle weight decay).
+
+pub const LR_GRID: [f64; 3] = [1e-4, 1e-3, 1e-2];
+pub const WD_GRID: [f64; 3] = [1e-6, 2e-6, 1e-5];
+pub const FLR_GRID: [f64; 3] = [1e-3, 1e-2, 1e-1];
+
+/// One candidate configuration: an artifact (architecture variant) plus
+/// runtime optimization hyperparameters (the flat-state ABI's `hparams`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigSpec {
+    pub family: String,
+    /// AOT artifact name (e.g. "fm_base", "cn_l3").
+    pub variant: String,
+    pub lr: f64,
+    pub final_lr: f64,
+    pub weight_decay: f64,
+}
+
+impl ConfigSpec {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/lr{:.0e}/flr{:.0e}/wd{:.0e}",
+            self.variant, self.lr, self.final_lr, self.weight_decay
+        )
+    }
+
+    /// hparams vector for the runtime: [log10 lr, log10 final lr, wd].
+    pub fn hparams(&self) -> [f32; 3] {
+        [
+            self.lr.log10() as f32,
+            self.final_lr.log10() as f32,
+            self.weight_decay as f32,
+        ]
+    }
+}
+
+fn grid27(family: &str, variant: &str) -> Vec<ConfigSpec> {
+    let mut out = Vec::with_capacity(27);
+    for &lr in &LR_GRID {
+        for &wd in &WD_GRID {
+            for &flr in &FLR_GRID {
+                out.push(ConfigSpec {
+                    family: family.into(),
+                    variant: variant.into(),
+                    lr,
+                    final_lr: flr,
+                    weight_decay: wd,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn grid9(family: &str, variant: &str) -> Vec<ConfigSpec> {
+    let mut out = Vec::with_capacity(9);
+    for &lr in &LR_GRID {
+        for &flr in &FLR_GRID {
+            out.push(ConfigSpec {
+                family: family.into(),
+                variant: variant.into(),
+                lr,
+                final_lr: flr,
+                weight_decay: WD_GRID[1],
+            });
+        }
+    }
+    out
+}
+
+/// The paper's five experiment families.
+pub const FAMILIES: [&str; 5] = ["fm", "fmv2", "cn", "mlp", "moe"];
+
+/// Sweep for one family. `scale` in (0, 1] subsamples the grid (used by
+/// tests and quick runs); 1.0 = the full paper sweep.
+pub fn family_sweep(family: &str) -> Vec<ConfigSpec> {
+    match family {
+        "fm" => grid27("fm", "fm_base"),
+        "moe" => grid27("moe", "moe_e4"),
+        "fmv2" => ["fmv2_hi8", "fmv2_hi16", "fmv2_hi32"]
+            .iter()
+            .flat_map(|v| grid9("fmv2", v))
+            .collect(),
+        "cn" => ["cn_l2", "cn_l3", "cn_l5"]
+            .iter()
+            .flat_map(|v| grid9("cn", v))
+            .collect(),
+        "mlp" => ["mlp_h128", "mlp_h256"]
+            .iter()
+            .flat_map(|v| grid9("mlp", v))
+            .collect(),
+        other => panic!("unknown family {other:?}"),
+    }
+}
+
+/// Every n-th config of a sweep (deterministic thinning for quick modes).
+pub fn thin(sweep: Vec<ConfigSpec>, keep_every: usize) -> Vec<ConfigSpec> {
+    if keep_every <= 1 {
+        return sweep;
+    }
+    sweep.into_iter().step_by(keep_every).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_sizes_match_paper() {
+        assert_eq!(family_sweep("fm").len(), 27);
+        assert_eq!(family_sweep("moe").len(), 27);
+        assert_eq!(family_sweep("fmv2").len(), 27);
+        assert_eq!(family_sweep("cn").len(), 27);
+        assert_eq!(family_sweep("mlp").len(), 18);
+    }
+
+    #[test]
+    fn labels_are_unique_within_family() {
+        for fam in FAMILIES {
+            let sweep = family_sweep(fam);
+            let mut labels: Vec<String> = sweep.iter().map(|c| c.label()).collect();
+            labels.sort();
+            let n = labels.len();
+            labels.dedup();
+            assert_eq!(labels.len(), n, "duplicate labels in {fam}");
+        }
+    }
+
+    #[test]
+    fn hparams_layout() {
+        let c = &family_sweep("fm")[0];
+        let hp = c.hparams();
+        assert!((hp[0] - (c.lr.log10() as f32)).abs() < 1e-6);
+        assert!((hp[1] - (c.final_lr.log10() as f32)).abs() < 1e-6);
+        assert!((hp[2] - (c.weight_decay as f32)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cn_covers_all_depths() {
+        let variants: std::collections::BTreeSet<String> =
+            family_sweep("cn").iter().map(|c| c.variant.clone()).collect();
+        assert_eq!(
+            variants.into_iter().collect::<Vec<_>>(),
+            vec!["cn_l2", "cn_l3", "cn_l5"]
+        );
+    }
+
+    #[test]
+    fn thinning() {
+        assert_eq!(thin(family_sweep("fm"), 3).len(), 9);
+        assert_eq!(thin(family_sweep("fm"), 1).len(), 27);
+    }
+}

@@ -1,0 +1,269 @@
+//! The trajectory bank: every candidate configuration trained once on
+//! full (or sub-sampled) data with its full metric trajectory recorded.
+//!
+//! Search strategies replay from the bank (the paper's backtesting
+//! methodology): stopping a run = truncating its trajectory, so a single
+//! expensive training phase supports every (strategy, stopping schedule,
+//! prediction) combination in the figures. Stored in the in-tree framed
+//! binary format (util::ser).
+
+use super::online::RunTrajectory;
+use crate::search::TrajectorySet;
+use crate::util::ser::{Reader, SerError, Writer};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"NSBK";
+const VERSION: u32 = 1;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunKey {
+    pub family: String,
+    pub variant: String,
+    pub label: String,
+    pub hparams: [f32; 3],
+    pub plan_tag: String,
+    pub seed: i32,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub key: RunKey,
+    pub step_losses: Vec<f32>,
+    /// `[day][cluster]`, flattened row-major.
+    pub cluster_loss_sums: Vec<f32>,
+    pub examples_trained: u64,
+    pub examples_seen: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Bank {
+    pub days: usize,
+    pub steps_per_day: usize,
+    pub n_clusters: usize,
+    pub eval_days: usize,
+    pub stream_seed: u64,
+    /// `[day][cluster]` data-side example counts.
+    pub day_cluster_counts: Vec<Vec<u32>>,
+    pub eval_cluster_counts: Vec<u64>,
+    pub runs: Vec<RunRecord>,
+}
+
+impl Bank {
+    pub fn push(&mut self, key: RunKey, traj: RunTrajectory) {
+        let mut flat = Vec::with_capacity(self.days * self.n_clusters);
+        for row in &traj.cluster_loss_sums {
+            flat.extend_from_slice(row);
+        }
+        self.runs.push(RunRecord {
+            key,
+            step_losses: traj.step_losses,
+            cluster_loss_sums: flat,
+            examples_trained: traj.examples_trained,
+            examples_seen: traj.examples_seen,
+        });
+    }
+
+    /// Select runs (family, plan, seed) and assemble the TrajectorySet
+    /// the search strategies consume. Returns config labels aligned with
+    /// the set's config indices.
+    pub fn trajectory_set(
+        &self,
+        family: &str,
+        plan_tag: &str,
+        seed: i32,
+    ) -> Option<(TrajectorySet, Vec<String>)> {
+        let runs: Vec<&RunRecord> = self
+            .runs
+            .iter()
+            .filter(|r| {
+                r.key.family == family && r.key.plan_tag == plan_tag && r.key.seed == seed
+            })
+            .collect();
+        if runs.is_empty() {
+            return None;
+        }
+        let k = self.n_clusters;
+        let set = TrajectorySet {
+            steps_per_day: self.steps_per_day,
+            days: self.days,
+            eval_days: self.eval_days,
+            step_losses: runs.iter().map(|r| r.step_losses.clone()).collect(),
+            day_cluster_counts: self.day_cluster_counts.clone(),
+            cluster_loss_sums: runs
+                .iter()
+                .map(|r| {
+                    (0..self.days)
+                        .map(|d| r.cluster_loss_sums[d * k..(d + 1) * k].to_vec())
+                        .collect()
+                })
+                .collect(),
+            eval_cluster_counts: self.eval_cluster_counts.clone(),
+        };
+        let labels = runs.iter().map(|r| r.key.label.clone()).collect();
+        Some((set, labels))
+    }
+
+    /// All (family, plan_tag) pairs present.
+    pub fn inventory(&self) -> Vec<(String, String, usize)> {
+        let mut out: Vec<(String, String, usize)> = Vec::new();
+        for r in &self.runs {
+            match out
+                .iter_mut()
+                .find(|(f, p, _)| f == &r.key.family && p == &r.key.plan_tag)
+            {
+                Some((_, _, n)) => *n += 1,
+                None => out.push((r.key.family.clone(), r.key.plan_tag.clone(), 1)),
+            }
+        }
+        out
+    }
+
+    // ---------------------------------------------------------- io
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = Writer::new(MAGIC, VERSION);
+        w.u32(self.days as u32);
+        w.u32(self.steps_per_day as u32);
+        w.u32(self.n_clusters as u32);
+        w.u32(self.eval_days as u32);
+        w.u64(self.stream_seed);
+        w.u32(self.day_cluster_counts.len() as u32);
+        for row in &self.day_cluster_counts {
+            w.u32s(row);
+        }
+        let eval_as_u32: Vec<u32> = self.eval_cluster_counts.iter().map(|&x| x as u32).collect();
+        w.u32s(&eval_as_u32);
+        w.u32(self.runs.len() as u32);
+        for r in &self.runs {
+            w.str(&r.key.family);
+            w.str(&r.key.variant);
+            w.str(&r.key.label);
+            w.f32(r.key.hparams[0]);
+            w.f32(r.key.hparams[1]);
+            w.f32(r.key.hparams[2]);
+            w.str(&r.key.plan_tag);
+            w.u32(r.key.seed as u32);
+            w.f32s(&r.step_losses);
+            w.f32s(&r.cluster_loss_sums);
+            w.u64(r.examples_trained);
+            w.u64(r.examples_seen);
+        }
+        w.write_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Bank, SerError> {
+        let buf =
+            std::fs::read(path).map_err(|e| SerError(format!("reading {path:?}: {e}")))?;
+        let mut r = Reader::new(&buf, MAGIC, VERSION)?;
+        let days = r.u32()? as usize;
+        let steps_per_day = r.u32()? as usize;
+        let n_clusters = r.u32()? as usize;
+        let eval_days = r.u32()? as usize;
+        let stream_seed = r.u64()?;
+        let n_days = r.u32()? as usize;
+        let mut day_cluster_counts = Vec::with_capacity(n_days);
+        for _ in 0..n_days {
+            day_cluster_counts.push(r.u32s()?);
+        }
+        let eval_cluster_counts: Vec<u64> =
+            r.u32s()?.into_iter().map(|x| x as u64).collect();
+        let n_runs = r.u32()? as usize;
+        let mut runs = Vec::with_capacity(n_runs);
+        for _ in 0..n_runs {
+            let family = r.str()?;
+            let variant = r.str()?;
+            let label = r.str()?;
+            let hparams = [r.f32()?, r.f32()?, r.f32()?];
+            let plan_tag = r.str()?;
+            let seed = r.u32()? as i32;
+            let step_losses = r.f32s()?;
+            let cluster_loss_sums = r.f32s()?;
+            let examples_trained = r.u64()?;
+            let examples_seen = r.u64()?;
+            runs.push(RunRecord {
+                key: RunKey { family, variant, label, hparams, plan_tag, seed },
+                step_losses,
+                cluster_loss_sums,
+                examples_trained,
+                examples_seen,
+            });
+        }
+        Ok(Bank {
+            days,
+            steps_per_day,
+            n_clusters,
+            eval_days,
+            stream_seed,
+            day_cluster_counts,
+            eval_cluster_counts,
+            runs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_bank() -> Bank {
+        let mut bank = Bank {
+            days: 4,
+            steps_per_day: 2,
+            n_clusters: 3,
+            eval_days: 2,
+            stream_seed: 9,
+            day_cluster_counts: vec![vec![10, 20, 30]; 4],
+            eval_cluster_counts: vec![20, 40, 60],
+            runs: Vec::new(),
+        };
+        for (i, fam) in [("a", "fm"), ("b", "fm"), ("c", "cn")] {
+            let key = RunKey {
+                family: fam.into(),
+                variant: format!("{fam}_v"),
+                label: i.into(),
+                hparams: [-3.0, -2.0, 1e-6],
+                plan_tag: "full".into(),
+                seed: 0,
+            };
+            let traj = RunTrajectory {
+                step_losses: vec![0.5; 8],
+                cluster_loss_sums: vec![vec![1.0, 2.0, 3.0]; 4],
+                examples_trained: 100,
+                examples_seen: 100,
+            };
+            bank.push(key, traj);
+        }
+        bank
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let bank = toy_bank();
+        let path = std::env::temp_dir().join("nshpo_bank_test.nsbk");
+        bank.save(&path).unwrap();
+        let loaded = Bank::load(&path).unwrap();
+        assert_eq!(loaded.runs.len(), 3);
+        assert_eq!(loaded.days, 4);
+        assert_eq!(loaded.runs[0].key, bank.runs[0].key);
+        assert_eq!(loaded.runs[2].step_losses, bank.runs[2].step_losses);
+        assert_eq!(loaded.eval_cluster_counts, vec![20, 40, 60]);
+    }
+
+    #[test]
+    fn trajectory_set_filters_by_family() {
+        let bank = toy_bank();
+        let (ts, labels) = bank.trajectory_set("fm", "full", 0).unwrap();
+        assert_eq!(ts.n_configs(), 2);
+        assert_eq!(labels, vec!["a", "b"]);
+        assert_eq!(ts.cluster_loss_sums[0][2], vec![1.0, 2.0, 3.0]);
+        assert!(bank.trajectory_set("mlp", "full", 0).is_none());
+        assert!(bank.trajectory_set("fm", "uni0.5000", 0).is_none());
+    }
+
+    #[test]
+    fn inventory_counts() {
+        let inv = toy_bank().inventory();
+        assert!(inv.contains(&("fm".into(), "full".into(), 2)));
+        assert!(inv.contains(&("cn".into(), "full".into(), 1)));
+    }
+}

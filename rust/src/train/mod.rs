@@ -1,0 +1,12 @@
+//! Online training: the progressive-validation loop, the model
+//! abstraction (PJRT artifact or Rust proxy), the trajectory bank, and
+//! the seed-variance analysis.
+
+pub mod bank;
+pub mod model;
+pub mod online;
+pub mod variance;
+
+pub use bank::{Bank, RunKey, RunRecord};
+pub use model::{LogisticProxy, OnlineModel, PjrtOnline};
+pub use online::{run_full, run_range, ClusterSource, ClusteredStream, RunTrajectory};

@@ -1,0 +1,251 @@
+//! Online training loop with progressive validation and per-cluster
+//! metric decomposition — produces the trajectories everything else
+//! consumes.
+
+use super::model::OnlineModel;
+use crate::cluster;
+use crate::data::{Plan, Stream, N_DENSE};
+use anyhow::Result;
+
+/// How examples are assigned to drift clusters for stratified prediction.
+#[derive(Clone, Copy, Debug)]
+pub enum ClusterSource {
+    /// Use the generator's latent cluster ids (oracle; tests only).
+    Latent,
+    /// k-means(++) on dense features, fit on the first `sample_days`
+    /// days — the honest pipeline (the paper fits a proxy-model VAE on
+    /// historical data; our proxy is the feature space itself).
+    KMeans { k: usize, sample_days: usize },
+}
+
+/// A stream plus a fixed example->cluster assignment and the data-side
+/// cluster statistics (identical for every configuration).
+pub struct ClusteredStream {
+    pub stream: Stream,
+    pub n_clusters: usize,
+    pub eval_days: usize,
+    /// `[t][i]` cluster of example i in batch t.
+    pub assignments: Vec<Vec<u16>>,
+    /// `[day][k]` example counts.
+    pub day_cluster_counts: Vec<Vec<u32>>,
+    /// `[k]` counts over the eval window (last `eval_days` days).
+    pub eval_cluster_counts: Vec<u64>,
+}
+
+impl ClusteredStream {
+    pub fn build(stream: Stream, source: ClusterSource, eval_days: usize) -> ClusteredStream {
+        let t_total = stream.cfg.total_steps();
+        let spd = stream.cfg.steps_per_day;
+        let days = stream.cfg.days;
+
+        let (assignments, n_clusters) = match source {
+            ClusterSource::Latent => {
+                let a: Vec<Vec<u16>> =
+                    (0..t_total).map(|t| stream.batch_at(t).latent_cluster.clone()).collect();
+                (a, stream.n_clusters())
+            }
+            ClusterSource::KMeans { k, sample_days } => {
+                // Fit on early-history dense rows.
+                let sample_steps = (sample_days.max(1) * spd).min(t_total);
+                let mut points: Vec<Vec<f64>> = Vec::new();
+                for t in 0..sample_steps {
+                    let b = stream.batch_at(t);
+                    for i in 0..b.len() {
+                        // thin to keep k-means fast: every 4th example
+                        if i % 4 == 0 {
+                            points.push(
+                                b.dense_row(i).iter().map(|&x| x as f64).collect(),
+                            );
+                        }
+                    }
+                }
+                let km = cluster::fit(&points, k, stream.cfg.seed ^ 0xC1A5, 25);
+                let a: Vec<Vec<u16>> = (0..t_total)
+                    .map(|t| {
+                        let b = stream.batch_at(t);
+                        cluster::assign_rows_f32(&km.centroids, &b.dense, N_DENSE)
+                    })
+                    .collect();
+                (a, km.centroids.len())
+            }
+        };
+
+        let mut day_cluster_counts = vec![vec![0u32; n_clusters]; days];
+        for (t, row) in assignments.iter().enumerate() {
+            let d = t / spd;
+            for &k in row {
+                day_cluster_counts[d][k as usize] += 1;
+            }
+        }
+        let mut eval_cluster_counts = vec![0u64; n_clusters];
+        for d in days - eval_days..days {
+            for (k, &c) in day_cluster_counts[d].iter().enumerate() {
+                eval_cluster_counts[k] += c as u64;
+            }
+        }
+        ClusteredStream {
+            stream,
+            n_clusters,
+            eval_days,
+            assignments,
+            day_cluster_counts,
+            eval_cluster_counts,
+        }
+    }
+}
+
+/// The record of one full training run.
+#[derive(Clone, Debug)]
+pub struct RunTrajectory {
+    /// Progressive-validation loss per step.
+    pub step_losses: Vec<f32>,
+    /// `[day][cluster]` summed per-example loss.
+    pub cluster_loss_sums: Vec<Vec<f32>>,
+    /// Training examples actually consumed (sub-sampling audit).
+    pub examples_trained: u64,
+    pub examples_seen: u64,
+}
+
+/// Train `model` over steps `[t_from, t_to)` of the stream, accumulating
+/// into `traj` (pass a fresh one for a full run; the live coordinator
+/// resumes runs in segments).
+pub fn run_range(
+    model: &mut dyn OnlineModel,
+    cs: &ClusteredStream,
+    plan: Plan,
+    hparams: [f32; 3],
+    subsample_seed: u64,
+    t_from: usize,
+    t_to: usize,
+    traj: &mut RunTrajectory,
+) -> Result<()> {
+    let cfg = &cs.stream.cfg;
+    let t_total = cfg.total_steps();
+    let spd = cfg.steps_per_day;
+    debug_assert!(t_to <= t_total);
+    for t in t_from..t_to {
+        let batch = cs.stream.batch_at(t);
+        let weights = plan.weights(&batch, subsample_seed, t);
+        let progress = t as f32 / t_total as f32;
+        let (loss, per_ex) = model.step(&batch, &weights, progress, hparams)?;
+        traj.step_losses.push(loss);
+        let d = t / spd;
+        let day_row = &mut traj.cluster_loss_sums[d];
+        for (i, &l) in per_ex.iter().enumerate() {
+            day_row[cs.assignments[t][i] as usize] += l;
+        }
+        traj.examples_seen += batch.len() as u64;
+        traj.examples_trained += weights.iter().map(|&w| w as u64).sum::<u64>();
+    }
+    Ok(())
+}
+
+/// Full run over the whole stream.
+pub fn run_full(
+    model: &mut dyn OnlineModel,
+    cs: &ClusteredStream,
+    plan: Plan,
+    hparams: [f32; 3],
+    subsample_seed: u64,
+) -> Result<RunTrajectory> {
+    let cfg = &cs.stream.cfg;
+    let mut traj = RunTrajectory {
+        step_losses: Vec::with_capacity(cfg.total_steps()),
+        cluster_loss_sums: vec![vec![0.0; cs.n_clusters]; cfg.days],
+        examples_trained: 0,
+        examples_seen: 0,
+    };
+    run_range(model, cs, plan, hparams, subsample_seed, 0, cfg.total_steps(), &mut traj)?;
+    Ok(traj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::StreamConfig;
+    use crate::train::model::LogisticProxy;
+
+    fn cs(latent: bool) -> ClusteredStream {
+        let stream = Stream::new(StreamConfig {
+            seed: 11,
+            days: 6,
+            steps_per_day: 4,
+            batch: 96,
+            n_clusters: 6,
+        });
+        let source = if latent {
+            ClusterSource::Latent
+        } else {
+            ClusterSource::KMeans { k: 6, sample_days: 2 }
+        };
+        ClusteredStream::build(stream, source, 2)
+    }
+
+    #[test]
+    fn cluster_counts_are_consistent() {
+        let cs = cs(true);
+        // every day's counts sum to steps_per_day * batch
+        for row in &cs.day_cluster_counts {
+            assert_eq!(row.iter().sum::<u32>(), 4 * 96);
+        }
+        let eval_total: u64 = cs.eval_cluster_counts.iter().sum();
+        assert_eq!(eval_total, 2 * 4 * 96);
+    }
+
+    #[test]
+    fn kmeans_assignment_covers_all_steps() {
+        let cs = cs(false);
+        assert_eq!(cs.assignments.len(), 24);
+        assert!(cs
+            .assignments
+            .iter()
+            .all(|row| row.iter().all(|&k| (k as usize) < cs.n_clusters)));
+    }
+
+    #[test]
+    fn full_run_records_everything() {
+        let cs = cs(true);
+        let mut m = LogisticProxy::new(0);
+        let traj =
+            run_full(&mut m, &cs, Plan::Full, [-1.5, -1.5, 0.0], 0).unwrap();
+        assert_eq!(traj.step_losses.len(), 24);
+        assert_eq!(traj.cluster_loss_sums.len(), 6);
+        assert_eq!(traj.examples_seen, 24 * 96);
+        assert_eq!(traj.examples_trained, 24 * 96);
+        // per-cluster sums on a day ~ sum of that day's step losses * batch
+        let day0_sum: f64 = traj.cluster_loss_sums[0].iter().map(|&x| x as f64).sum();
+        let day0_step: f64 = traj.step_losses[..4].iter().map(|&x| x as f64 * 96.0).sum();
+        assert!((day0_sum - day0_step).abs() / day0_step < 1e-3);
+    }
+
+    #[test]
+    fn subsampled_run_trains_fewer_examples() {
+        let cs = cs(true);
+        let mut m = LogisticProxy::new(0);
+        let traj =
+            run_full(&mut m, &cs, Plan::Uniform(0.25), [-1.5, -1.5, 0.0], 3).unwrap();
+        let frac = traj.examples_trained as f64 / traj.examples_seen as f64;
+        assert!((frac - 0.25).abs() < 0.05, "trained fraction {frac}");
+        // but evaluation still covers everything
+        assert_eq!(traj.step_losses.len(), 24);
+    }
+
+    #[test]
+    fn segmented_run_equals_full_run() {
+        let cs = cs(true);
+        let hp = [-2.0f32, -2.0, 1e-6];
+        let mut m1 = LogisticProxy::new(4);
+        let full = run_full(&mut m1, &cs, Plan::Full, hp, 0).unwrap();
+
+        let mut m2 = LogisticProxy::new(4);
+        let mut seg = RunTrajectory {
+            step_losses: Vec::new(),
+            cluster_loss_sums: vec![vec![0.0; cs.n_clusters]; 6],
+            examples_trained: 0,
+            examples_seen: 0,
+        };
+        run_range(&mut m2, &cs, Plan::Full, hp, 0, 0, 10, &mut seg).unwrap();
+        run_range(&mut m2, &cs, Plan::Full, hp, 0, 10, 24, &mut seg).unwrap();
+        assert_eq!(full.step_losses, seg.step_losses);
+    }
+}

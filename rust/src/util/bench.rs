@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (the offline cache has no criterion).
+//!
+//! `cargo bench` runs `benches/bench_main.rs` (harness = false) which uses
+//! this module: warmup, multiple timed samples, mean/median/p95/std and a
+//! throughput line, printed in a stable grep-friendly format that
+//! EXPERIMENTS.md §Perf quotes directly.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.samples_ns)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::quantile(&self.samples_ns, 0.95)
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        stats::std(&self.samples_ns)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} mean {:>12}  median {:>12}  p95 {:>12}  std {:>10}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p95_ns()),
+            fmt_ns(self.std_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample,
+        )
+    }
+
+    /// Report with an items/sec line (e.g. steps/s, points/s).
+    pub fn report_throughput(&self, items_per_iter: f64, unit: &str) -> String {
+        let per_sec = items_per_iter / (self.mean_ns() * 1e-9);
+        format!("{}  | {:.3e} {unit}/s", self.report(), per_sec)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure. Automatically chooses an iteration count so each
+/// sample lasts >= `min_sample`; runs `n_samples` timed samples after one
+/// warmup sample. The closure's return value is black-boxed.
+pub fn bench<F, R>(name: &str, n_samples: usize, min_sample: Duration, mut f: F) -> BenchResult
+where
+    F: FnMut() -> R,
+{
+    // Calibrate iterations per sample.
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        let dt = t0.elapsed();
+        if dt >= min_sample || iters >= 1 << 20 {
+            break;
+        }
+        let scale = (min_sample.as_secs_f64() / dt.as_secs_f64().max(1e-9)).ceil();
+        iters = (iters as f64 * scale.clamp(2.0, 100.0)) as u64;
+    }
+    // Timed samples.
+    let mut samples = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_ns: samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Prevent the optimizer from eliding benchmarked work (stable-rust
+/// equivalent of std::hint::black_box, which we use directly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench("noop-ish", 5, Duration::from_millis(2), || {
+            (0..100).map(black_box).sum::<u64>()
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples_ns: vec![1000.0, 2000.0, 3000.0],
+            iters_per_sample: 10,
+        };
+        let line = r.report();
+        assert!(line.contains("bench x"));
+        assert!(line.contains("2.00us"));
+        let tline = r.report_throughput(100.0, "steps");
+        assert!(tline.contains("steps/s"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(5.0), "5.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.500ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

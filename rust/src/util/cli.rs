@@ -1,0 +1,158 @@
+//! Tiny CLI argument parser (the offline cache has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters parse on access and report friendly errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+pub const FLAG_SET: &str = "\u{1}"; // sentinel for value-less flags
+
+impl Args {
+    /// Parse raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let value = if let Some(v) = inline {
+                    v
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    iter.next().unwrap()
+                } else {
+                    FLAG_SET.to_string()
+                };
+                out.present.push(key.clone());
+                out.flags.insert(key, value);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some(FLAG_SET) => None,
+            other => other,
+        }
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.str_opt(key) {
+            None => default,
+            Some(text) => text.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a value, got {text:?}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Comma-separated list flag: `--variants a,b,c`.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.str_opt(key)
+            .map(|s| {
+                s.split(',')
+                    .filter(|t| !t.is_empty())
+                    .map(|t| t.trim().to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// First positional argument = subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Flags that were present on the command line (ordered).
+    pub fn seen(&self) -> &[String] {
+        &self.present
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = parse(&["bank", "--out", "results", "--steps=720", "--quiet"]);
+        assert_eq!(a.subcommand(), Some("bank"));
+        assert_eq!(a.str_or("out", "x"), "results");
+        assert_eq!(a.usize_or("steps", 0), 720);
+        assert!(a.has("quiet"));
+        assert_eq!(a.str_opt("quiet"), None);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["--lr", "-2.5"]);
+        assert_eq!(a.f64_or("lr", 0.0), -2.5);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--families", "fm, cn,moe"]);
+        assert_eq!(a.list("families"), vec!["fm", "cn", "moe"]);
+        assert!(parse(&[]).list("families").is_empty());
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.f64_or("rho", 0.5), 0.5);
+        assert_eq!(a.str_or("out", "d"), "d");
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--all", "--bank", "results/bank"]);
+        assert!(a.has("all"));
+        assert_eq!(a.str_or("bank", ""), "results/bank");
+    }
+}

@@ -1,0 +1,16 @@
+//! Substrate layer: everything that would normally come from crates.io.
+//!
+//! The build image is offline and its crate cache only contains `xla` and
+//! its build dependencies, so the PRNG (`rand`), JSON (`serde_json`), CLI
+//! parsing (`clap`), thread pool (`tokio`/`rayon`), benchmarking
+//! (`criterion`) and property testing (`proptest`) are implemented here
+//! from scratch, with their own unit/property tests. See DESIGN.md §3.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod ser;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,234 @@
+//! Mini property-testing harness (the offline cache has no proptest).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs greedy shrinking if the
+//! generator supports it (via `Shrink`), then panics with the seed and the
+//! minimal counterexample so the run is reproducible.
+
+use super::prng::Rng;
+
+/// Types that can propose strictly-smaller candidates of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink_candidates(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.abs() > 1.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink_candidates(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink_candidates(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() <= 8 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // shrink one element
+        if let Some(first) = self.first() {
+            for cand in first.shrink_candidates() {
+                let mut v = self.clone();
+                v[0] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink_candidates(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b)),
+        );
+        out
+    }
+}
+
+/// Run a property over random inputs; panic with a (shrunk) repro on
+/// failure. `prop` returns Err(reason) or Ok(()).
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            let (min_input, min_reason) = shrink_loop(input, reason, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}): {min_reason}\n  minimal input: {min_input:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut input: T,
+    mut reason: String,
+    prop: &P,
+) -> (T, String) {
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in input.shrink_candidates() {
+            if let Err(r) = prop(&cand) {
+                input = cand;
+                reason = r;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, reason)
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::super::prng::Rng;
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.uniform_range(lo, hi)
+    }
+
+    pub fn vec_f64(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n).map(|_| rng.uniform_range(lo, hi)).collect()
+    }
+
+    pub fn vec_f64_nonempty(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = 1 + rng.below(max_len as u64) as usize;
+        (0..n).map(|_| rng.uniform_range(lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            200,
+            |rng| gen::vec_f64(rng, 20, -10.0, 10.0),
+            |xs| {
+                let s: f64 = xs.iter().sum();
+                if s.is_finite() {
+                    Ok(())
+                } else {
+                    Err("sum overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(
+            2,
+            100,
+            |rng| gen::vec_f64_nonempty(rng, 10, 0.0, 1.0),
+            |xs| {
+                if xs.len() < 3 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let failure = std::panic::catch_unwind(|| {
+            check(
+                3,
+                100,
+                |rng| gen::vec_f64_nonempty(rng, 30, 0.0, 1.0),
+                |xs| {
+                    if xs.len() < 4 {
+                        Ok(())
+                    } else {
+                        Err("len >= 4".into())
+                    }
+                },
+            )
+        })
+        .unwrap_err();
+        let msg = failure.downcast_ref::<String>().unwrap();
+        // The minimal failing vector has exactly 4 elements.
+        let count = msg.matches(", ").count() + 1;
+        assert!(msg.contains("minimal input"), "{msg}");
+        assert!(count <= 6, "not shrunk: {msg}");
+    }
+
+    #[test]
+    fn tuple_shrinking_compiles_and_runs() {
+        let r = std::panic::catch_unwind(|| {
+            check(
+                4,
+                50,
+                |rng| (gen::f64_in(rng, 0.0, 100.0), gen::f64_in(rng, 0.0, 100.0)),
+                |(a, b)| {
+                    if a + b < 150.0 {
+                        Ok(())
+                    } else {
+                        Err("sum too big".into())
+                    }
+                },
+            )
+        });
+        // Either it passes (rare) or panics with a shrunk repro; both fine.
+        let _ = r;
+    }
+}

@@ -1,0 +1,224 @@
+//! Tiny little-endian binary serialization for the trajectory bank.
+//!
+//! Banks hold per-step and per-cluster loss trajectories for hundreds of
+//! runs — JSON would be ~10x bigger and slower, so runs are stored in a
+//! simple framed binary format: magic + version header, then typed fields
+//! written/read in lockstep by the structs in `train::bank`.
+
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new(magic: &[u8; 4], version: u32) -> Writer {
+        let mut w = Writer { buf: Vec::with_capacity(4096) };
+        w.buf.extend_from_slice(magic);
+        w.u32(version);
+        w
+    }
+
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn u32s(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &self.buf)
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug)]
+pub struct SerError(pub String);
+
+impl std::fmt::Display for SerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ser error: {}", self.0)
+    }
+}
+
+impl std::error::Error for SerError {}
+
+type Result<T> = std::result::Result<T, SerError>;
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8], magic: &[u8; 4], version: u32) -> Result<Reader<'a>> {
+        let mut r = Reader { buf, pos: 0 };
+        let m = r.bytes(4)?;
+        if m != magic {
+            return Err(SerError(format!("bad magic {m:?}, expected {magic:?}")));
+        }
+        let v = r.u32()?;
+        if v != version {
+            return Err(SerError(format!("version {v}, expected {version}")));
+        }
+        Ok(r)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(SerError(format!(
+                "truncated: need {n} bytes at {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| SerError(e.to_string()))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAGIC: &[u8; 4] = b"NSHP";
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new(MAGIC, 3);
+        w.u8(7);
+        w.u32(12345);
+        w.u64(u64::MAX);
+        w.f32(1.5);
+        w.f64(-2.25e100);
+        w.str("hello nshpo");
+        w.f32s(&[1.0, 2.0, 3.0]);
+        w.f64s(&[]);
+        w.u32s(&[9, 8]);
+
+        let mut r = Reader::new(&w.buf, MAGIC, 3).unwrap();
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 12345);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25e100);
+        assert_eq!(r.str().unwrap(), "hello nshpo");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(r.f64s().unwrap().is_empty());
+        assert_eq!(r.u32s().unwrap(), vec![9, 8]);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let w = Writer::new(MAGIC, 1);
+        assert!(Reader::new(&w.buf, b"XXXX", 1).is_err());
+        assert!(Reader::new(&w.buf, MAGIC, 2).is_err());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new(MAGIC, 1);
+        w.f64s(&[1.0, 2.0, 3.0]);
+        let cut = &w.buf[..w.buf.len() - 4];
+        let mut r = Reader::new(cut, MAGIC, 1).unwrap();
+        assert!(r.f64s().is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Fixed-size worker thread pool with an ordered parallel map.
+//!
+//! The coordinator trains independent candidate configurations in
+//! parallel; the offline cache has no tokio/rayon, so this is the
+//! scheduling substrate. Work items are closures pushed onto a shared
+//! queue; `map_indexed` preserves input order in the output.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n_workers: usize) -> ThreadPool {
+        let n = n_workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("nshpo-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Number of workers to use by default: available parallelism minus
+    /// one (leave a core for the leader), at least 1.
+    pub fn default_workers() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(1)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker queue closed");
+    }
+
+    /// Run `f` over `items` on the pool; results come back in input order.
+    /// Panics in jobs are surfaced as a panic here (fail loud, not hang).
+    pub fn map_indexed<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || f(i, item),
+                ));
+                let _ = rtx.send((i, result));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, result) = rrx.recv().expect("worker died");
+            match result {
+                Ok(r) => slots[i] = Some(r),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<u64> = (0..50).collect();
+        let out = pool.map_indexed(items, |i, x| {
+            // jitter completion order
+            std::thread::sleep(std::time::Duration::from_millis((50 - i as u64) % 7));
+            x * 2
+        });
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_works_with_single_worker() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map_indexed(vec![1, 2, 3], |_, x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn job_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map_indexed(vec![0, 1], |_, x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,179 @@
+//! End-to-end integration over the pure-Rust pipeline: synthetic stream
+//! -> proxy training -> bank -> clustering -> predictors -> search
+//! strategies -> ranking metrics -> figure harness. (The PJRT path has
+//! its own integration suite in runtime_e2e.rs.)
+
+use nshpo::coordinator::{build_bank, BankOptions};
+use nshpo::data::{Plan, StreamConfig};
+use nshpo::metrics;
+use nshpo::predict::{LawKind, Strategy};
+use nshpo::search::equally_spaced_stops;
+
+fn quick_bank_opts(days: usize, spd: usize) -> BankOptions {
+    BankOptions {
+        stream: StreamConfig {
+            seed: 77,
+            days,
+            steps_per_day: spd,
+            batch: 96,
+            n_clusters: 12,
+        },
+        eval_days: 3,
+        families: vec!["fm".into()],
+        plans: vec![
+            Plan::Full,
+            Plan::negative_only(0.5),
+            Plan::Uniform(0.25),
+        ],
+        thin: 3, // 9 configs
+        use_proxy: true,
+        variance_seeds: 3,
+        cluster_k: 8,
+        verbose: false,
+        ..BankOptions::default()
+    }
+}
+
+#[test]
+fn full_pipeline_proxy_bank_to_figures() {
+    let opts = quick_bank_opts(12, 6);
+    let bank = build_bank(&opts).unwrap();
+    // 9 configs x 3 plans + 3 variance = 30 runs
+    assert_eq!(bank.runs.len(), 30);
+
+    // --- search over the bank
+    let (ts, labels) = bank.trajectory_set("fm", "full", 0).unwrap();
+    assert_eq!(labels.len(), 9);
+    let gt = ts.ground_truth();
+    assert!(gt.iter().all(|m| m.is_finite() && *m > 0.0));
+
+    // full-data one-shot is the ground truth ranking by construction
+    let full = ts.one_shot(Strategy::Constant, ts.days);
+    assert_eq!(metrics::regret_at_k(&full.ranking, &gt, 3), 0.0);
+
+    // performance-based stopping saves cost with bounded regret
+    let stops = equally_spaced_stops(ts.days, 3);
+    let pb = ts.performance_based(Strategy::Constant, &stops, 0.5);
+    assert!(pb.cost < 0.7, "cost {}", pb.cost);
+    let reg = metrics::regret_at_k(&pb.ranking, &gt, 3) / gt[0].min(1.0);
+    assert!(reg.is_finite());
+
+    // all three prediction strategies produce rankings over the bank
+    for strat in [
+        Strategy::Constant,
+        Strategy::Trajectory(LawKind::InversePowerLaw),
+        Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 4 },
+    ] {
+        let o = ts.one_shot(strat, 6);
+        let mut r = o.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..9).collect::<Vec<_>>(), "{}", strat.name());
+    }
+
+    // --- figures run end-to-end into a temp dir
+    let out = std::env::temp_dir().join("nshpo_it_figs");
+    let _ = std::fs::remove_dir_all(&out);
+    for id in ["1", "2", "3", "4", "5", "7", "10", "11", "seeds", "summary", "t1"] {
+        nshpo::harness::run_figure(id, Some(&bank), &out)
+            .unwrap_or_else(|e| panic!("figure {id}: {e:#}"));
+    }
+    // figure 6 needs no bank
+    nshpo::harness::run_figure("6", None, &out).unwrap();
+    assert!(out.join("fig3").join("data.csv").exists());
+    assert!(out.join("fig6").join("plot.txt").exists());
+    let csv = std::fs::read_to_string(out.join("fig3").join("data.csv")).unwrap();
+    assert!(csv.contains("ours: perf-stopping + stratified + neg0.5"), "{csv}");
+}
+
+#[test]
+fn subsampled_bank_is_cheaper_but_still_ranks() {
+    let opts = quick_bank_opts(10, 5);
+    let bank = build_bank(&opts).unwrap();
+    let (ts_full, _) = bank.trajectory_set("fm", "full", 0).unwrap();
+    let (ts_sub, _) = bank.trajectory_set("fm", "uni0.2500", 0).unwrap();
+    // sub-sampled runs consumed ~25% of the training examples
+    let (mut tr, mut seen) = (0u64, 0u64);
+    for r in &bank.runs {
+        if r.key.plan_tag == "uni0.2500" {
+            tr += r.examples_trained;
+            seen += r.examples_seen;
+        }
+    }
+    let frac = tr as f64 / seen as f64;
+    assert!((frac - 0.25).abs() < 0.03, "frac {frac}");
+    // ranking from the sub-sampled runs against full-data ground truth
+    let gt = ts_full.ground_truth();
+    let o = ts_sub.one_shot(Strategy::Constant, ts_sub.days);
+    let per = metrics::per(&o.ranking, &gt);
+    assert!(per < 0.5, "sub-sampled ranking no better than random: {per}");
+}
+
+#[test]
+fn bank_disk_roundtrip_preserves_search_results() {
+    let opts = quick_bank_opts(8, 4);
+    let bank = build_bank(&opts).unwrap();
+    let path = std::env::temp_dir().join("nshpo_it_bank.nsbk");
+    bank.save(&path).unwrap();
+    let loaded = nshpo::train::Bank::load(&path).unwrap();
+    let (a, _) = bank.trajectory_set("fm", "full", 0).unwrap();
+    let (b, _) = loaded.trajectory_set("fm", "full", 0).unwrap();
+    let stops = equally_spaced_stops(a.days, 2);
+    let oa = a.performance_based(Strategy::Constant, &stops, 0.5);
+    let ob = b.performance_based(Strategy::Constant, &stops, 0.5);
+    assert_eq!(oa.ranking, ob.ranking);
+    assert_eq!(oa.cost, ob.cost);
+}
+
+#[test]
+fn seed_variance_measured_on_real_runs() {
+    let opts = quick_bank_opts(10, 5);
+    let bank = build_bank(&opts).unwrap();
+    let trs: Vec<Vec<f32>> = bank
+        .runs
+        .iter()
+        .filter(|r| r.key.plan_tag == "full" && r.key.label == bank.runs[0].key.label)
+        .map(|r| r.step_losses.clone())
+        .collect();
+    assert!(trs.len() >= 3, "need variance runs, got {}", trs.len());
+    let evals = nshpo::train::variance::eval_metrics(&trs, 3 * 5);
+    let rel = nshpo::train::variance::seed_relative_std(&evals);
+    // seeds move the metric a little but not a lot
+    assert!(rel > 0.0 && rel < 0.2, "relative seed std {rel}");
+}
+
+#[test]
+fn live_search_agrees_with_bank_replay_on_cost() {
+    use nshpo::coordinator::{live::live_performance_based, ProxyFactory};
+    use nshpo::search::sweep;
+    use nshpo::train::{ClusterSource, ClusteredStream};
+
+    let stream_cfg = StreamConfig {
+        seed: 77,
+        days: 8,
+        steps_per_day: 4,
+        batch: 64,
+        n_clusters: 8,
+    };
+    let cs = ClusteredStream::build(
+        nshpo::data::Stream::new(stream_cfg),
+        ClusterSource::Latent,
+        3,
+    );
+    let specs = sweep::thin(sweep::family_sweep("fm"), 3);
+    let stops = vec![2usize, 4, 6];
+    let live = live_performance_based(
+        &ProxyFactory,
+        &cs,
+        &specs,
+        Plan::Full,
+        Strategy::Constant,
+        &stops,
+        0.5,
+        0,
+    )
+    .unwrap();
+    // cost must equal the audit over actual steps trained
+    let expected = nshpo::search::cost::empirical(&live.steps_trained, 32);
+    assert!((live.cost - expected).abs() < 1e-12);
+    assert!(live.cost < 1.0);
+}

@@ -1,0 +1,226 @@
+//! Property-based tests over the search/ranking core, using the in-tree
+//! propcheck harness with randomized trajectory sets.
+
+use nshpo::metrics;
+use nshpo::predict::Strategy;
+use nshpo::search::{cost, equally_spaced_stops, TrajectorySet};
+use nshpo::util::prng::Rng;
+use nshpo::util::propcheck;
+
+/// Random but well-formed trajectory set.
+fn random_ts(rng: &mut Rng) -> TrajectorySet {
+    let n_cfg = 2 + rng.below(12) as usize;
+    let days = 6 + rng.below(10) as usize;
+    let spd = 2 + rng.below(6) as usize;
+    let k = 1 + rng.below(4) as usize;
+    let mut step_losses = Vec::new();
+    for _ in 0..n_cfg {
+        let base = rng.uniform_range(0.3, 0.8);
+        let tr: Vec<f32> = (0..days * spd)
+            .map(|t| {
+                (base + 0.2 / ((t + 2) as f64).sqrt() + 0.02 * rng.normal()) as f32
+            })
+            .collect();
+        step_losses.push(tr);
+    }
+    let day_cluster_counts: Vec<Vec<u32>> = (0..days)
+        .map(|_| (0..k).map(|_| 10 + rng.below(100) as u32).collect())
+        .collect();
+    let cluster_loss_sums: Vec<Vec<Vec<f32>>> = (0..n_cfg)
+        .map(|c| {
+            (0..days)
+                .map(|d| {
+                    let day_mean: f64 = step_losses[c][d * spd..(d + 1) * spd]
+                        .iter()
+                        .map(|&x| x as f64)
+                        .sum::<f64>()
+                        / spd as f64;
+                    day_cluster_counts[d]
+                        .iter()
+                        .map(|&cnt| (day_mean * cnt as f64) as f32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let eval_cluster_counts: Vec<u64> =
+        (0..k).map(|_| 10 + rng.below(1000)).collect();
+    TrajectorySet {
+        steps_per_day: spd,
+        days,
+        eval_days: 3.min(days),
+        step_losses,
+        day_cluster_counts,
+        cluster_loss_sums,
+        eval_cluster_counts,
+    }
+}
+
+/// Wrapper so TrajectorySet can flow through propcheck (no shrinking).
+#[derive(Clone, Debug)]
+struct TsCase(u64);
+
+impl propcheck::Shrink for TsCase {}
+
+fn with_random_ts(seed: u64, cases: usize, prop: impl Fn(&TrajectorySet) -> Result<(), String>) {
+    propcheck::check(
+        seed,
+        cases,
+        |rng| TsCase(rng.next_u64()),
+        |case| {
+            let mut rng = Rng::new(case.0);
+            prop(&random_ts(&mut rng))
+        },
+    );
+}
+
+#[test]
+fn prop_rankings_are_permutations_for_every_strategy() {
+    with_random_ts(101, 40, |ts| {
+        let day_stop = 1 + ts.days / 2;
+        for strat in [
+            Strategy::Constant,
+            Strategy::Trajectory(nshpo::predict::LawKind::InversePowerLaw),
+            Strategy::Stratified { law: None, n_slices: 3 },
+        ] {
+            let o = ts.one_shot(strat, day_stop);
+            let mut r = o.ranking.clone();
+            r.sort_unstable();
+            if r != (0..ts.n_configs()).collect::<Vec<_>>() {
+                return Err(format!("{} not a permutation", strat.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perf_stopping_empirical_cost_matches_steps() {
+    with_random_ts(102, 40, |ts| {
+        let stops = equally_spaced_stops(ts.days, 2);
+        let o = ts.performance_based(Strategy::Constant, &stops, 0.5);
+        let expected = cost::empirical(&o.steps_trained, ts.total_steps());
+        if (o.cost - expected).abs() > 1e-12 {
+            return Err(format!("cost {} vs audit {expected}", o.cost));
+        }
+        if !(0.0 < o.cost && o.cost <= 1.0) {
+            return Err(format!("cost out of range: {}", o.cost));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perf_stopping_analytic_cost_when_divisible() {
+    // With n a power of two and rho=1/2, empirical == analytic exactly.
+    propcheck::check(
+        103,
+        30,
+        |rng| TsCase(rng.next_u64()),
+        |case| {
+            let mut rng = Rng::new(case.0);
+            let mut ts = random_ts(&mut rng);
+            // force n = 8 configs
+            while ts.n_configs() > 8 {
+                ts.step_losses.pop();
+                ts.cluster_loss_sums.pop();
+            }
+            while ts.n_configs() < 8 {
+                ts.step_losses.push(ts.step_losses[0].clone());
+                ts.cluster_loss_sums.push(ts.cluster_loss_sums[0].clone());
+            }
+            let every = 1 + (case.0 % 3) as usize;
+            let stops = equally_spaced_stops(ts.days, every);
+            let stops = stops.into_iter().take(3).collect::<Vec<_>>(); // 8->4->2->1
+            let o = ts.performance_based(Strategy::Constant, &stops, 0.5);
+            let analytic = cost::performance_based(
+                &stops.iter().map(|d| d * ts.steps_per_day).collect::<Vec<_>>(),
+                0.5,
+                ts.total_steps(),
+            );
+            if (o.cost - analytic).abs() > 1e-9 {
+                return Err(format!("empirical {} vs analytic {analytic}", o.cost));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_more_stopping_rounds_never_cost_more() {
+    with_random_ts(104, 30, |ts| {
+        let o_few = ts.performance_based(Strategy::Constant, &[ts.days - 1], 0.5);
+        let stops_many = equally_spaced_stops(ts.days, 1);
+        let o_many = ts.performance_based(Strategy::Constant, &stops_many, 0.5);
+        if o_many.cost > o_few.cost + 1e-12 {
+            return Err(format!(
+                "more rounds cost more: {} vs {}",
+                o_many.cost, o_few.cost
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_full_data_one_shot_has_zero_regret() {
+    with_random_ts(105, 40, |ts| {
+        let o = ts.one_shot(Strategy::Constant, ts.days);
+        let gt = ts.ground_truth();
+        let r3 = metrics::regret_at_k(&o.ranking, &gt, 3);
+        if r3 != 0.0 {
+            return Err(format!("regret@3 {r3} at full data"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_regret_decreases_with_later_stopping_on_clean_curves() {
+    // On noiseless monotone curves, stopping later cannot hurt constant
+    // prediction (checked in expectation over many random sets by
+    // comparing earliest vs latest stop).
+    with_random_ts(106, 25, |ts| {
+        let gt = ts.ground_truth();
+        let early = ts.one_shot(Strategy::Constant, 2);
+        let late = ts.one_shot(Strategy::Constant, ts.days - 1);
+        let r_early = metrics::per(&early.ranking, &gt);
+        let r_late = metrics::per(&late.ranking, &gt);
+        // allow noise-driven inversions but catch gross violations
+        if r_late > r_early + 0.35 {
+            return Err(format!("late stop much worse: {r_early} -> {r_late}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_against_bruteforce_definition() {
+    propcheck::check(
+        107,
+        200,
+        |rng| {
+            let n = 2 + rng.below(10) as usize;
+            (0..n).map(|_| rng.uniform_range(0.0, 1.0)).collect::<Vec<f64>>()
+        },
+        |truth| {
+            let ranking: Vec<usize> = (0..truth.len()).rev().collect(); // reversed
+            let per = metrics::per(&ranking, truth);
+            let mut bad = 0;
+            let mut total = 0;
+            for i in 0..truth.len() {
+                for j in i + 1..truth.len() {
+                    total += 1;
+                    if truth[ranking[i]] > truth[ranking[j]] {
+                        bad += 1;
+                    }
+                }
+            }
+            let expected = bad as f64 / total as f64;
+            if (per - expected).abs() > 1e-12 {
+                return Err(format!("PER {per} vs brute force {expected}"));
+            }
+            Ok(())
+        },
+    );
+}
