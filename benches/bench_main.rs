@@ -6,6 +6,7 @@
 //!   ranking metrics                   -> PER / regret@k kernels (§3.2)
 //!   law fit / predictors              -> §4.2 strategies (Figs 5, 9, 10)
 //!   search replay                     -> Alg. 1 over a bank (Figs 3, 4, 8)
+//!   replay executor                   -> serial vs parallel exhibit replay
 //!   surrogate                         -> Fig 6 generator
 //!   proxy step / pjrt step            -> L3 + L1/L2 training hot path
 //!
@@ -15,11 +16,12 @@
 use nshpo::data::{Plan, Stream, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::{self, LawKind, Strategy};
-use nshpo::search::equally_spaced_stops;
+use nshpo::search::{equally_spaced_stops, ReplayExecutor, ReplayJob};
 use nshpo::surrogate;
 use nshpo::train::{LogisticProxy, OnlineModel};
 use nshpo::util::bench::{bench, black_box, BenchResult};
 use nshpo::util::prng::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 const SAMPLES: usize = 7;
@@ -191,6 +193,85 @@ fn main() {
             black_box(nshpo::util::json::Json::parse(&text).unwrap())
         })
     });
+
+    // -------------------------------------------------- replay executor
+    // Serial vs parallel replay of a fig4/fig5-sized exhibit job set:
+    // the acceptance bar is >= 2x throughput at 4+ workers. (Placed after
+    // the `run` helper's last use so both results can be compared here.)
+    let matches = |name: &str| filter.as_ref().map_or(true, |f| name.contains(f.as_str()));
+    if matches("replay/serial") || matches("replay/parallel") {
+        let replay_ts = Arc::new(surrogate::sample_task(
+            &surrogate::SurrogateConfig { n_configs: 32, ..Default::default() },
+            21,
+        ));
+        let make_jobs = || -> Vec<ReplayJob> {
+            let mut jobs = Vec::new();
+            for strat in [
+                Strategy::Constant,
+                Strategy::Trajectory(LawKind::InversePowerLaw),
+                Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 1 },
+            ] {
+                for d in [2usize, 3, 4, 6, 8, 10, 12, 16, 20, 24] {
+                    jobs.push(ReplayJob::one_shot(&replay_ts, strat, d));
+                }
+                for s in [2usize, 4, 8] {
+                    jobs.push(ReplayJob::perf_based(
+                        &replay_ts,
+                        strat,
+                        equally_spaced_stops(replay_ts.days, s),
+                        0.5,
+                    ));
+                }
+            }
+            jobs
+        };
+        let n_jobs = make_jobs().len();
+        let serial_exec = ReplayExecutor::serial();
+        let name_s = format!("replay/serial_{n_jobs}jobs");
+        let r_serial = bench(&name_s, 3, MIN_SAMPLE, || {
+            black_box(serial_exec.run(make_jobs()))
+        });
+        println!("{}", r_serial.report_throughput(n_jobs as f64, "jobs"));
+        results.push(r_serial.report());
+
+        let workers = 4usize;
+        let par_exec = ReplayExecutor::new(workers);
+        let name_p = format!("replay/parallel_w{workers}_{n_jobs}jobs");
+        let r_par = bench(&name_p, 3, MIN_SAMPLE, || {
+            black_box(par_exec.run(make_jobs()))
+        });
+        println!("{}", r_par.report_throughput(n_jobs as f64, "jobs"));
+        results.push(r_par.report());
+
+        println!(
+            "replay speedup: {:.2}x at {workers} workers over {n_jobs} jobs \
+             (cores available: {})",
+            r_serial.mean_ns() / r_par.mean_ns(),
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        );
+    }
+
+    // chunked vs per-item queueing for many tiny work items (the
+    // amortization map_chunked exists for, DESIGN.md §3)
+    if matches("threadpool/map") {
+        let pool = nshpo::util::threadpool::ThreadPool::new(4);
+        let items: Vec<u64> = (0..20_000).collect();
+        let items_a = items.clone();
+        let r_item = bench("threadpool/map_indexed_20k_tiny", 3, MIN_SAMPLE, || {
+            black_box(pool.map_indexed(items_a.clone(), |i, x| x.wrapping_mul(3) ^ i as u64))
+        });
+        println!("{}", r_item.report());
+        results.push(r_item.report());
+        let r_chunk = bench("threadpool/map_chunked_20k_tiny", 3, MIN_SAMPLE, || {
+            black_box(pool.map_chunked(items.clone(), 512, |i, x| x.wrapping_mul(3) ^ i as u64))
+        });
+        println!("{}", r_chunk.report());
+        results.push(r_chunk.report());
+        println!(
+            "chunking amortization: map_chunked is {:.2}x the throughput of map_indexed on tiny items",
+            r_item.mean_ns() / r_chunk.mean_ns()
+        );
+    }
 
     println!("\n{} benches run", results.len());
 }

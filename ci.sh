@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 gate: build, tests, and the zero-dependency rule (DESIGN.md §3).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== zero-dependency gate =="
+# 1) No external-crate imports may reappear in source (in-tree substrates
+#    only). Matches `use <crate>` / `extern crate <crate>` for the crates
+#    the substrate layer replaces, plus xla (shimmed in runtime::xla_shim).
+banned='anyhow|serde|serde_json|rand|rayon|tokio|clap|criterion|proptest|crossbeam|itertools|xla'
+if grep -rnE "^[[:space:]]*(pub[[:space:]]+)?(use|extern[[:space:]]+crate)[[:space:]]+(::)?(${banned})(::|;|[[:space:]]|\b)" \
+    rust/src rust/tests benches examples; then
+  echo "FAIL: external-crate import found — the build must stay zero-dependency" >&2
+  exit 1
+fi
+
+# 2) [dependencies] in Cargo.toml must contain no entries.
+deps=$(awk '/^\[dependencies\]/{flag=1; next} /^\[/{flag=0} flag && NF && $0 !~ /^[[:space:]]*#/' Cargo.toml)
+if [ -n "$deps" ]; then
+  echo "FAIL: [dependencies] is not empty:" >&2
+  echo "$deps" >&2
+  exit 1
+fi
+
+echo "ci.sh: OK (build + tests + zero-dependency gate)"

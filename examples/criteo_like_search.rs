@@ -16,9 +16,10 @@ use nshpo::data::{Plan, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::{LawKind, Strategy};
 use nshpo::search::equally_spaced_stops;
+use nshpo::util::error::Result;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let opts = BankOptions {
         stream: StreamConfig {

@@ -14,8 +14,9 @@ use nshpo::metrics;
 use nshpo::predict::Strategy;
 use nshpo::search::{equally_spaced_stops, sweep};
 use nshpo::train::{ClusterSource, ClusteredStream};
+use nshpo::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let use_pjrt = std::env::args().any(|a| a == "--pjrt");
     let stream_cfg = StreamConfig {
         seed: 5,
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         3,
     );
 
-    let run = |factory: &dyn ModelFactory| -> anyhow::Result<()> {
+    let run = |factory: &dyn ModelFactory| -> Result<()> {
         let out = live_performance_based(
             factory,
             &cs,

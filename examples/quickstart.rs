@@ -11,8 +11,9 @@ use nshpo::data::{Plan, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::Strategy;
 use nshpo::search::equally_spaced_stops;
+use nshpo::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1. A 12-day synthetic clickstream with drifting clusters.
     let opts = BankOptions {
         stream: StreamConfig {

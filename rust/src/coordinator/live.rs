@@ -8,7 +8,7 @@ use crate::metrics;
 use crate::predict::Strategy;
 use crate::search::{cost, sweep::ConfigSpec};
 use crate::train::{online, ClusteredStream, RunTrajectory};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::time::Instant;
 
 pub struct LiveOutcome {

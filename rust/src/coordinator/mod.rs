@@ -9,11 +9,11 @@ use crate::train::{
     run_full, Bank, ClusterSource, ClusteredStream, LogisticProxy, OnlineModel, PjrtOnline,
     RunKey,
 };
+use crate::util::error::{Context, Result};
 use crate::util::threadpool::ThreadPool;
-use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 #[derive(Clone, Debug)]
 pub struct BankOptions {
@@ -32,6 +32,8 @@ pub struct BankOptions {
     pub variance_seeds: usize,
     pub cluster_k: usize,
     pub verbose: bool,
+    /// Worker threads for the proxy fan-out (0 = all cores minus one).
+    pub workers: usize,
 }
 
 impl Default for BankOptions {
@@ -47,6 +49,7 @@ impl Default for BankOptions {
             variance_seeds: 0,
             cluster_k: 32,
             verbose: true,
+            workers: 0,
         }
     }
 }
@@ -61,11 +64,11 @@ struct Job {
 /// trajectory bank.
 pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
     let stream = Stream::new(opts.stream.clone());
-    let cs = Arc::new(ClusteredStream::build(
+    let cs = ClusteredStream::build(
         stream,
         ClusterSource::KMeans { k: opts.cluster_k, sample_days: 2 },
         opts.eval_days,
-    ));
+    );
 
     let mut jobs: Vec<Job> = Vec::new();
     for family in &opts.families {
@@ -106,33 +109,36 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
     };
 
     if opts.use_proxy {
-        // Proxy runs are cheap and independent: fan out on the pool.
-        let pool = ThreadPool::new(ThreadPool::default_workers());
-        let cs2 = Arc::clone(&cs);
-        let done = Arc::new(Mutex::new(0usize));
+        // Proxy runs are cheap, independent, and only borrow the
+        // clustered stream: fan out on scoped worker threads
+        // (order-preserving, so the bank's run order is deterministic).
+        let workers = if opts.workers == 0 {
+            ThreadPool::default_workers()
+        } else {
+            opts.workers
+        };
+        let done = AtomicUsize::new(0);
         let total = jobs.len();
-        let verbose = opts.verbose;
-        let results = pool.map_indexed(jobs, move |_, job| {
+        let trajs = ThreadPool::scoped_map(workers, &jobs, |_, job| {
             let mut model = LogisticProxy::new(job.seed);
             let traj = run_full(
                 &mut model,
-                &cs2,
+                &cs,
                 job.plan,
                 job.spec.hparams(),
                 job.seed as u64,
             )
             .expect("proxy run failed");
-            if verbose {
-                let mut d = done.lock().unwrap();
-                *d += 1;
-                if *d % 20 == 0 {
-                    eprintln!("  proxy runs {}/{total}", *d);
+            if opts.verbose {
+                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if d % 20 == 0 {
+                    eprintln!("  proxy runs {d}/{total}");
                 }
             }
-            (job, traj)
+            traj
         });
-        for (job, traj) in results {
-            bank.push(key_of(&job), traj);
+        for (job, traj) in jobs.iter().zip(trajs) {
+            bank.push(key_of(job), traj);
         }
     } else {
         // PJRT: group jobs by variant so each artifact compiles once.
@@ -227,7 +233,7 @@ impl ModelFactory for PjrtFactory {
         let model = self
             .models
             .get(&spec.variant)
-            .ok_or_else(|| anyhow::anyhow!("variant {} not preloaded", spec.variant))?;
+            .ok_or_else(|| crate::err!("variant {} not preloaded", spec.variant))?;
         Ok(Box::new(PjrtOnline::new(model, seed)?))
     }
 }

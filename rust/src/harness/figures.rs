@@ -2,17 +2,25 @@
 //! Table 1, and the §5.1.2 seed-variance analysis). Each writes
 //! `<out>/fig<id>/data.csv` + `plot.txt` and prints the plot.
 //!
+//! Every replay-driven generator decomposes its exhibit into independent
+//! jobs (strategy × stopping schedule × law over a shared trajectory
+//! set) and submits them through the parallel replay executor
+//! (`search::executor`); the parallel output is bit-identical to the
+//! serial path. Worker count: `NSHPO_REPLAY_WORKERS` or `--workers`.
+//!
 //! See DESIGN.md §6 for the experiment index mapping exhibits to modules.
 
 use super::plot::{self, Series};
+use crate::err;
 use crate::metrics;
 use crate::predict::{LawKind, Strategy};
-use crate::search::{equally_spaced_stops, TrajectorySet};
+use crate::search::{equally_spaced_stops, ReplayExecutor, ReplayJob, ReplayKind, ReplayResult, TrajectorySet};
 use crate::surrogate;
 use crate::train::{variance, Bank};
+use crate::util::error::Result;
 use crate::util::stats;
-use anyhow::{anyhow, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 pub const ALL_FIGURES: [&str; 17] = [
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "t1", "seeds", "summary",
@@ -70,29 +78,56 @@ struct CurvePoint {
     per: f64,
 }
 
-fn outcome_point(ts: &TrajectorySet, out: &crate::search::SearchOutcome, plan_mult: f64) -> CurvePoint {
+/// Score executor results against `ts`'s ground truth. Results carry the
+/// (already sub-sampling-scaled) relative cost C.
+fn points_against(ts: &TrajectorySet, results: &[ReplayResult]) -> Vec<CurvePoint> {
     let gt = ts.ground_truth();
     let r = reference(ts);
-    CurvePoint {
-        cost: out.cost * plan_mult,
-        regret3: metrics::regret_at_k(&out.ranking, &gt, 3) / r,
-        per: metrics::per(&out.ranking, &gt),
-    }
-}
-
-fn one_shot_curve(ts: &TrajectorySet, strategy: Strategy, plan_mult: f64) -> Vec<CurvePoint> {
-    one_shot_days(ts.days)
-        .into_iter()
-        .map(|d| outcome_point(ts, &ts.one_shot(strategy, d), plan_mult))
+    results
+        .iter()
+        .map(|res| CurvePoint {
+            cost: res.outcome.cost,
+            regret3: metrics::regret_at_k(&res.outcome.ranking, &gt, 3) / r,
+            per: metrics::per(&res.outcome.ranking, &gt),
+        })
         .collect()
 }
 
-fn perf_curve(ts: &TrajectorySet, strategy: Strategy, plan_mult: f64, rho: f64) -> Vec<CurvePoint> {
+fn one_shot_curve(
+    exec: &ReplayExecutor,
+    ts: &Arc<TrajectorySet>,
+    strategy: Strategy,
+    plan_mult: f64,
+) -> Vec<CurvePoint> {
+    let jobs: Vec<ReplayJob> = one_shot_days(ts.days)
+        .into_iter()
+        .map(|d| ReplayJob::one_shot(ts, strategy, d).with_mult(plan_mult))
+        .collect();
+    points_against(ts, &exec.run(jobs))
+}
+
+fn perf_curve(
+    exec: &ReplayExecutor,
+    ts: &Arc<TrajectorySet>,
+    strategy: Strategy,
+    plan_mult: f64,
+    rho: f64,
+) -> Vec<CurvePoint> {
+    points_against(ts, &exec.run(perf_jobs(ts, strategy, plan_mult, rho)))
+}
+
+fn perf_jobs(
+    ts: &Arc<TrajectorySet>,
+    strategy: Strategy,
+    plan_mult: f64,
+    rho: f64,
+) -> Vec<ReplayJob> {
     spacings(ts.days)
         .into_iter()
         .map(|s| {
-            let stops = equally_spaced_stops(ts.days, s);
-            outcome_point(ts, &ts.performance_based(strategy, &stops, rho), plan_mult)
+            ReplayJob::perf_based(ts, strategy, equally_spaced_stops(ts.days, s), rho)
+                .with_mult(plan_mult)
+                .with_tag(format!("perf@every{s}"))
         })
         .collect()
 }
@@ -130,10 +165,10 @@ fn families_in(bank: &Bank) -> Vec<String> {
     fams
 }
 
-fn need(bank: &Bank, family: &str, plan: &str) -> Result<TrajectorySet> {
+fn need(bank: &Bank, family: &str, plan: &str) -> Result<Arc<TrajectorySet>> {
     bank.trajectory_set(family, plan, 0)
-        .map(|(ts, _)| ts)
-        .ok_or_else(|| anyhow!("bank missing family={family} plan={plan} (re-run `nshpo bank`)"))
+        .map(|(ts, _)| Arc::new(ts))
+        .ok_or_else(|| err!("bank missing family={family} plan={plan} (re-run `nshpo bank`)"))
 }
 
 fn write_out(out_dir: &Path, fig: &str, text: &str, csv: &str) -> Result<()> {
@@ -153,30 +188,46 @@ const STRAT_TRAJ: Strategy = Strategy::Trajectory(LawKind::InversePowerLaw);
 const NEG05: &str = "pos1.00neg0.50";
 const RHO: f64 = 0.5; // paper Appendix A.5
 
+/// Convenience wrapper building a fresh executor per call (pool spawn +
+/// teardown each time); callers generating several exhibits should build
+/// one `ReplayExecutor` and loop [`run_figure_with`] instead, as the CLI
+/// does.
 pub fn run_figure(id: &str, bank: Option<&Bank>, out_dir: &Path) -> Result<()> {
+    run_figure_with(id, bank, out_dir, &ReplayExecutor::from_env())
+}
+
+/// Run one exhibit's generator, submitting its replay jobs through the
+/// given executor (serial and parallel executors produce byte-identical
+/// files).
+pub fn run_figure_with(
+    id: &str,
+    bank: Option<&Bank>,
+    out_dir: &Path,
+    exec: &ReplayExecutor,
+) -> Result<()> {
     match id {
-        "6" => return fig6(out_dir),
+        "6" => return fig6(out_dir, exec),
         "t1" => return table1(bank, out_dir),
         _ => {}
     }
-    let bank = bank.ok_or_else(|| anyhow!("figure {id} needs a bank (run `nshpo bank`)"))?;
+    let bank = bank.ok_or_else(|| err!("figure {id} needs a bank (run `nshpo bank`)"))?;
     match id {
         "1" => fig1(bank, out_dir),
         "2" => fig2(bank, out_dir),
-        "3" => fig3(bank, out_dir),
-        "4" => fig4_8(bank, out_dir, true),
-        "8" => fig4_8(bank, out_dir, false),
-        "5" => fig5_9(bank, out_dir, true),
-        "9" => fig5_9(bank, out_dir, false),
-        "7" => fig7(bank, out_dir),
-        "10" => fig10(bank, out_dir),
-        "11" => fig11(bank, out_dir),
+        "3" => fig3(bank, out_dir, exec),
+        "4" => fig4_8(bank, out_dir, true, exec),
+        "8" => fig4_8(bank, out_dir, false, exec),
+        "5" => fig5_9(bank, out_dir, true, exec),
+        "9" => fig5_9(bank, out_dir, false, exec),
+        "7" => fig7(bank, out_dir, exec),
+        "10" => fig10(bank, out_dir, exec),
+        "11" => fig11(bank, out_dir, exec),
         "seeds" => seeds(bank, out_dir),
-        "summary" => summary(bank, out_dir),
-        "rho" => ablation_rho(bank, out_dir),
-        "slices" => ablation_slices(bank, out_dir),
-        "hb" => ablation_hyperband(bank, out_dir),
-        other => Err(anyhow!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
+        "summary" => summary(bank, out_dir, exec),
+        "rho" => ablation_rho(bank, out_dir, exec),
+        "slices" => ablation_slices(bank, out_dir, exec),
+        "hb" => ablation_hyperband(bank, out_dir, exec),
+        other => Err(err!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
     }
 }
 
@@ -242,7 +293,7 @@ fn fig2(bank: &Bank, out: &Path) -> Result<()> {
         }
     }
     if raw.is_empty() {
-        return Err(anyhow!("no full-plan runs in bank"));
+        return Err(err!("no full-plan runs in bank"));
     }
     let reference = raw.last().unwrap().1.clone();
     let series_rel: Vec<Series> = raw
@@ -292,7 +343,7 @@ fn fig2(bank: &Bank, out: &Path) -> Result<()> {
 
 /// Fig 3: the headline — ours (perf-based + stratified + neg-0.5
 /// sub-sampling) vs basic early stopping vs basic sub-sampling, per family.
-fn fig3(bank: &Bank, out: &Path) -> Result<()> {
+fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let mut text = String::new();
     let mut csv = String::new();
     for fam in families_in(bank) {
@@ -302,33 +353,33 @@ fn fig3(bank: &Bank, out: &Path) -> Result<()> {
             let mult = plan_multiplier(bank, &fam, NEG05);
             series.push(to_series(
                 "ours: perf-stopping + stratified + neg0.5",
-                &perf_curve(&ts_neg, STRAT_STRATIFIED, mult, RHO),
+                &perf_curve(exec, &ts_neg, STRAT_STRATIFIED, mult, RHO),
                 false,
             ));
         }
         series.push(to_series(
             "basic early stopping",
-            &one_shot_curve(&ts_full, Strategy::Constant, 1.0),
+            &one_shot_curve(exec, &ts_full, Strategy::Constant, 1.0),
             false,
         ));
-        // basic sub-sampling: full-length training on uniformly thinned data
-        let mut sub_pts = Vec::new();
+        // basic sub-sampling: full-length training on uniformly thinned
+        // data — one job per plan, ranked by the sub-sampled metrics but
+        // evaluated against the full-data ground truth
+        let mut sub_jobs: Vec<ReplayJob> = Vec::new();
         for tag in ["full", "uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
             if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
                 let mult = plan_multiplier(bank, &fam, tag);
-                // rank by the final (sub-sampled) metrics, evaluate
-                // against the full-data ground truth
-                let out_ss = ts_sub.one_shot(Strategy::Constant, ts_sub.days);
-                let gt = ts_full.ground_truth();
-                let r = reference(&ts_full);
-                sub_pts.push(CurvePoint {
-                    cost: mult,
-                    regret3: metrics::regret_at_k(&out_ss.ranking, &gt, 3) / r,
-                    per: metrics::per(&out_ss.ranking, &gt),
-                });
+                let ts_sub = Arc::new(ts_sub);
+                let days = ts_sub.days;
+                sub_jobs.push(
+                    ReplayJob::one_shot(&ts_sub, Strategy::Constant, days)
+                        .with_mult(mult)
+                        .with_tag(tag),
+                );
             }
         }
-        if !sub_pts.is_empty() {
+        if !sub_jobs.is_empty() {
+            let sub_pts = points_against(&ts_full, &exec.run(sub_jobs));
             series.push(to_series("basic sub-sampling", &sub_pts, false));
         }
         let t = plot::render(
@@ -346,7 +397,7 @@ fn fig3(bank: &Bank, out: &Path) -> Result<()> {
 }
 
 /// Figs 4 & 8: one-shot vs performance-based per prediction strategy.
-fn fig4_8(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
+fn fig4_8(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Result<()> {
     let fams = if moe_only { vec![pick_family(bank, "moe")] } else { families_in(bank) };
     let fig = if moe_only { "4" } else { "8" };
     let mut text = String::new();
@@ -360,8 +411,8 @@ fn fig4_8(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
             ("stratified", STRAT_STRATIFIED),
         ] {
             let series = vec![
-                to_series("one-shot", &one_shot_curve(&ts, strat, mult), false),
-                to_series("performance-based", &perf_curve(&ts, strat, mult, RHO), false),
+                to_series("one-shot", &one_shot_curve(exec, &ts, strat, mult), false),
+                to_series("performance-based", &perf_curve(exec, &ts, strat, mult, RHO), false),
             ];
             let t = plot::render(
                 &format!("Figure {fig} [{fam}/{sname}]: one-shot vs performance-based"),
@@ -379,7 +430,7 @@ fn fig4_8(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
 }
 
 /// Figs 5 & 9: prediction strategies compared (under perf-based stopping).
-fn fig5_9(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
+fn fig5_9(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Result<()> {
     let fams = if moe_only { vec![pick_family(bank, "moe")] } else { families_in(bank) };
     let fig = if moe_only { "5" } else { "9" };
     let mut text = String::new();
@@ -388,9 +439,9 @@ fn fig5_9(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
         let (plan, mult) = pick_plan(bank, &fam);
         let ts = need(bank, &fam, plan)?;
         let series = vec![
-            to_series("constant", &perf_curve(&ts, Strategy::Constant, mult, RHO), false),
-            to_series("trajectory", &perf_curve(&ts, STRAT_TRAJ, mult, RHO), false),
-            to_series("stratified", &perf_curve(&ts, STRAT_STRATIFIED, mult, RHO), false),
+            to_series("constant", &perf_curve(exec, &ts, Strategy::Constant, mult, RHO), false),
+            to_series("trajectory", &perf_curve(exec, &ts, STRAT_TRAJ, mult, RHO), false),
+            to_series("stratified", &perf_curve(exec, &ts, STRAT_STRATIFIED, mult, RHO), false),
         ];
         let t = plot::render(
             &format!("Figure {fig} [{fam}]: prediction strategies (perf-based stopping)"),
@@ -407,13 +458,14 @@ fn fig5_9(bank: &Bank, out: &Path, moe_only: bool) -> Result<()> {
 }
 
 /// Fig 6: industrial surrogate — cost vs regret@3 mean ± std over tasks.
-fn fig6(out: &Path) -> Result<()> {
+/// Tasks fan out on the executor inside `fig6_point_with`.
+fn fig6(out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let cfg = surrogate::SurrogateConfig::default();
     let mut mean_series = Series { name: "mean regret@3".into(), points: vec![] };
     let mut hi_series = Series { name: "mean + std".into(), points: vec![] };
     let mut csv = String::from("stop_every_days,cost,regret3_mean,regret3_std\n");
     for spacing in [2, 3, 4, 6, 8, 12] {
-        let (c, m, s) = surrogate::fig6_point(&cfg, spacing, RHO, 12, 777);
+        let (c, m, s) = surrogate::fig6_point_with(exec, &cfg, spacing, RHO, 12, 777);
         mean_series.points.push((c, m));
         hi_series.points.push((c, m + s));
         csv.push_str(&format!("{spacing},{c},{m},{s}\n"));
@@ -429,7 +481,7 @@ fn fig6(out: &Path) -> Result<()> {
 }
 
 /// Fig 7: stratified-constant vs stratified-trajectory.
-fn fig7(bank: &Bank, out: &Path) -> Result<()> {
+fn fig7(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let mut text = String::new();
     let mut csv = String::new();
     for fam in families_in(bank) {
@@ -437,8 +489,16 @@ fn fig7(bank: &Bank, out: &Path) -> Result<()> {
         let ts = need(bank, &fam, plan)?;
         let strat_const = Strategy::Stratified { law: None, n_slices: 5 };
         let series = vec![
-            to_series("stratified constant", &perf_curve(&ts, strat_const, mult, RHO), false),
-            to_series("stratified trajectory", &perf_curve(&ts, STRAT_STRATIFIED, mult, RHO), false),
+            to_series(
+                "stratified constant",
+                &perf_curve(exec, &ts, strat_const, mult, RHO),
+                false,
+            ),
+            to_series(
+                "stratified trajectory",
+                &perf_curve(exec, &ts, STRAT_STRATIFIED, mult, RHO),
+                false,
+            ),
         ];
         let t = plot::render(
             &format!("Figure 7 [{fam}]: stratified constant vs trajectory"),
@@ -455,7 +515,7 @@ fn fig7(bank: &Bank, out: &Path) -> Result<()> {
 }
 
 /// Fig 10: choice of law for trajectory prediction (regret@3 and PER).
-fn fig10(bank: &Bank, out: &Path) -> Result<()> {
+fn fig10(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let fam = pick_family(bank, "moe");
     let (plan, mult) = pick_plan(bank, &fam);
     let ts = need(bank, &fam, plan)?;
@@ -469,7 +529,7 @@ fn fig10(bank: &Bank, out: &Path) -> Result<()> {
     let mut reg_series = Vec::new();
     let mut per_series = Vec::new();
     for law in laws {
-        let pts = perf_curve(&ts, Strategy::Trajectory(law), mult, RHO);
+        let pts = perf_curve(exec, &ts, Strategy::Trajectory(law), mult, RHO);
         reg_series.push(to_series(law.name(), &pts, false));
         per_series.push(to_series(law.name(), &pts, true));
     }
@@ -493,22 +553,32 @@ fn fig10(bank: &Bank, out: &Path) -> Result<()> {
 }
 
 /// Fig 11: late starting vs early stopping (PER).
-fn fig11(bank: &Bank, out: &Path) -> Result<()> {
+fn fig11(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let fam = pick_family(bank, "moe");
     let ts = need(bank, &fam, "full")?;
     let gt = ts.ground_truth();
     let mut series = Vec::new();
     let mut csv = String::from("start_day,stop_day,cost,per\n");
     for start in [0usize, 3, 6, 9] {
+        let stops: Vec<usize> = one_shot_days(ts.days)
+            .into_iter()
+            .filter(|&stop| stop > start + 1)
+            .collect();
+        let jobs: Vec<ReplayJob> = stops
+            .iter()
+            .map(|&stop| ReplayJob {
+                ts: Arc::clone(&ts),
+                kind: ReplayKind::LateStart { start_day: start, day_stop: stop },
+                plan_mult: 1.0,
+                tag: format!("start{start}/stop{stop}"),
+            })
+            .collect();
+        let results = exec.run(jobs);
         let mut pts = Vec::new();
-        for stop in one_shot_days(ts.days) {
-            if stop <= start + 1 {
-                continue;
-            }
-            let o = ts.late_start(start, stop);
-            let p = metrics::per(&o.ranking, &gt);
-            pts.push((o.cost, p));
-            csv.push_str(&format!("{start},{stop},{},{p}\n", o.cost));
+        for (&stop, res) in stops.iter().zip(&results) {
+            let p = metrics::per(&res.outcome.ranking, &gt);
+            pts.push((res.outcome.cost, p));
+            csv.push_str(&format!("{start},{stop},{},{p}\n", res.outcome.cost));
         }
         series.push(Series { name: format!("start at day {start}"), points: pts });
     }
@@ -603,7 +673,7 @@ fn seeds(bank: &Bank, out: &Path) -> Result<()> {
 /// Headline summary: best cost at which each method first reaches the
 /// acceptable normalized regret@3 (the measured seed floor — the
 /// paper's "10x" claim structure).
-fn summary(bank: &Bank, out: &Path) -> Result<()> {
+fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let floor = seed_floor(bank);
     let mut text = format!(
         "Headline summary: smallest C reaching normalized regret@3 <= {floor:.4} \
@@ -619,22 +689,29 @@ fn summary(bank: &Bank, out: &Path) -> Result<()> {
                 .map(|p| p.cost)
                 .fold(f64::MAX, f64::min)
         };
-        let es = best(&one_shot_curve(&ts_full, Strategy::Constant, 1.0));
+        let es = best(&one_shot_curve(exec, &ts_full, Strategy::Constant, 1.0));
         let ours = if let Ok(ts_neg) = need(bank, &fam, NEG05) {
             let mult = plan_multiplier(bank, &fam, NEG05);
-            best(&perf_curve(&ts_neg, STRAT_STRATIFIED, mult, RHO))
+            best(&perf_curve(exec, &ts_neg, STRAT_STRATIFIED, mult, RHO))
         } else {
             f64::MAX
         };
         let mut ss_best = f64::MAX;
+        let mut sub_jobs: Vec<ReplayJob> = Vec::new();
+        let mut sub_mults: Vec<f64> = Vec::new();
         for tag in ["uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
             if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
-                let gt = ts_full.ground_truth();
-                let r = reference(&ts_full);
-                let o = ts_sub.one_shot(Strategy::Constant, ts_sub.days);
-                if metrics::regret_at_k(&o.ranking, &gt, 3) / r <= floor {
-                    ss_best = ss_best.min(plan_multiplier(bank, &fam, tag));
-                }
+                let ts_sub = Arc::new(ts_sub);
+                let days = ts_sub.days;
+                sub_jobs.push(
+                    ReplayJob::one_shot(&ts_sub, Strategy::Constant, days).with_tag(tag),
+                );
+                sub_mults.push(plan_multiplier(bank, &fam, tag));
+            }
+        }
+        for (pt, mult) in points_against(&ts_full, &exec.run(sub_jobs)).iter().zip(&sub_mults) {
+            if pt.regret3 <= floor {
+                ss_best = ss_best.min(*mult);
             }
         }
         let f = |x: f64| {
@@ -656,21 +733,41 @@ fn summary(bank: &Bank, out: &Path) -> Result<()> {
 /// Ablation: the pruning ratio rho — the paper generalizes SHA's fixed
 /// eta=2 to a flexible rho (§2 "Positioning Our Work"); this quantifies
 /// the trade-off that flexibility buys on our workload.
-fn ablation_rho(bank: &Bank, out: &Path) -> Result<()> {
+fn ablation_rho(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let fam = pick_family(bank, "moe");
     let (plan, mult) = pick_plan(bank, &fam);
     let ts = need(bank, &fam, plan)?;
+    let rhos = [0.25, 0.5, 0.67, 0.8];
+    let spacing_list = spacings(ts.days);
+    // all (rho x spacing) replays are one flat job set
+    let mut jobs: Vec<ReplayJob> = Vec::new();
+    for &rho in &rhos {
+        for &s in &spacing_list {
+            jobs.push(
+                ReplayJob::perf_based(
+                    &ts,
+                    Strategy::Constant,
+                    equally_spaced_stops(ts.days, s),
+                    rho,
+                )
+                .with_mult(mult)
+                .with_tag(format!("rho{rho}/every{s}")),
+            );
+        }
+    }
+    let all_pts = points_against(&ts, &exec.run(jobs));
     let mut series = Vec::new();
     let mut csv = String::from("rho,cost,regret3\n");
-    for rho in [0.25, 0.5, 0.67, 0.8] {
-        let mut pts = Vec::new();
-        for s in spacings(ts.days) {
-            let stops = equally_spaced_stops(ts.days, s);
-            let p = outcome_point(&ts, &ts.performance_based(Strategy::Constant, &stops, rho), mult);
+    for (ri, &rho) in rhos.iter().enumerate() {
+        let pts = &all_pts[ri * spacing_list.len()..(ri + 1) * spacing_list.len()];
+        for p in pts {
             csv.push_str(&format!("{rho},{},{}\n", p.cost, p.regret3));
-            pts.push(p);
         }
-        series.push(to_series(&format!("rho = {rho} (SHA eta = {:.1})", 1.0 / (1.0 - rho)), &pts, false));
+        series.push(to_series(
+            &format!("rho = {rho} (SHA eta = {:.1})", 1.0 / (1.0 - rho)),
+            pts,
+            false,
+        ));
     }
     let text = plot::render(
         &format!("Ablation [{fam}]: pruning ratio rho in Algorithm 1"),
@@ -683,19 +780,32 @@ fn ablation_rho(bank: &Bank, out: &Path) -> Result<()> {
 }
 
 /// Ablation: the number of slices L in stratified prediction.
-fn ablation_slices(bank: &Bank, out: &Path) -> Result<()> {
+fn ablation_slices(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let fam = pick_family(bank, "moe");
     let (plan, mult) = pick_plan(bank, &fam);
     let ts = need(bank, &fam, plan)?;
+    let ls = [1usize, 3, 5, 10, 20];
+    let spacing_list = spacings(ts.days);
+    let mut jobs: Vec<ReplayJob> = Vec::new();
+    for &l in &ls {
+        let strat = Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: l };
+        for &s in &spacing_list {
+            jobs.push(
+                ReplayJob::perf_based(&ts, strat, equally_spaced_stops(ts.days, s), RHO)
+                    .with_mult(mult)
+                    .with_tag(format!("L{l}/every{s}")),
+            );
+        }
+    }
+    let all_pts = points_against(&ts, &exec.run(jobs));
     let mut series = Vec::new();
     let mut csv = String::from("n_slices,cost,regret3\n");
-    for l in [1usize, 3, 5, 10, 20] {
-        let strat = Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: l };
-        let pts = perf_curve(&ts, strat, mult, RHO);
-        for p in &pts {
+    for (li, &l) in ls.iter().enumerate() {
+        let pts = &all_pts[li * spacing_list.len()..(li + 1) * spacing_list.len()];
+        for p in pts {
             csv.push_str(&format!("{l},{},{}\n", p.cost, p.regret3));
         }
-        series.push(to_series(&format!("L = {l}"), &pts, false));
+        series.push(to_series(&format!("L = {l}"), pts, false));
     }
     let text = plot::render(
         &format!("Ablation [{fam}]: slice count L in stratified prediction"),
@@ -708,24 +818,34 @@ fn ablation_slices(bank: &Bank, out: &Path) -> Result<()> {
 }
 
 /// Extension: Hyperband brackets vs plain performance-based stopping.
-fn ablation_hyperband(bank: &Bank, out: &Path) -> Result<()> {
+fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let fam = pick_family(bank, "moe");
     let (plan, mult) = pick_plan(bank, &fam);
     let ts = need(bank, &fam, plan)?;
-    let mut hb_pts = Vec::new();
+    let etas = [2.0, 3.0, 4.0];
+    // only 3 jobs: spend the executor's spare workers inside each job,
+    // on bracket-parallel evaluation (outcome is worker-count-invariant)
+    let inner_workers = (exec.workers() / etas.len()).max(1);
+    let jobs: Vec<ReplayJob> = etas
+        .iter()
+        .map(|&eta| ReplayJob {
+            ts: Arc::clone(&ts),
+            kind: ReplayKind::Hyperband {
+                strategy: Strategy::Constant,
+                eta,
+                brackets_seed: 7,
+                workers: inner_workers,
+            },
+            plan_mult: mult,
+            tag: format!("hb/eta{eta}"),
+        })
+        .collect();
+    let hb_pts = points_against(&ts, &exec.run(jobs));
     let mut csv = String::from("method,param,cost,regret3\n");
-    for eta in [2.0, 3.0, 4.0] {
-        let o = crate::search::hyperband::hyperband(&ts, Strategy::Constant, eta, 7);
-        let gt = ts.ground_truth();
-        let p = CurvePoint {
-            cost: o.cost * mult,
-            regret3: metrics::regret_at_k(&o.ranking, &gt, 3) / reference(&ts),
-            per: metrics::per(&o.ranking, &gt),
-        };
+    for (&eta, p) in etas.iter().zip(&hb_pts) {
         csv.push_str(&format!("hyperband,{eta},{},{}\n", p.cost, p.regret3));
-        hb_pts.push(p);
     }
-    let pb_pts = perf_curve(&ts, Strategy::Constant, mult, RHO);
+    let pb_pts = perf_curve(exec, &ts, Strategy::Constant, mult, RHO);
     for p in &pb_pts {
         csv.push_str(&format!("perf-based,0.5,{},{}\n", p.cost, p.regret3));
     }

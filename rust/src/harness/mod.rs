@@ -4,4 +4,4 @@
 pub mod figures;
 pub mod plot;
 
-pub use figures::{run_figure, ALL_FIGURES};
+pub use figures::{run_figure, run_figure_with, ALL_FIGURES};

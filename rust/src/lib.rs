@@ -20,7 +20,8 @@
 //! * [`predict`] — constant / trajectory (parametric-law) / stratified
 //!   prediction strategies (§4.2).
 //! * [`search`] — one-shot early stopping, performance-based stopping
-//!   (Algorithm 1), sub-sampling, late starting, the cost model (§4.1).
+//!   (Algorithm 1), sub-sampling, late starting, the cost model (§4.1),
+//!   and the parallel replay executor every exhibit runs on.
 //! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6).
 //! * [`coordinator`] — experiment scheduler (bank building, live
 //!   early-stopping of real PJRT runs).

@@ -7,14 +7,16 @@
 //!   sim     industrial surrogate sweep (Fig 6 style)
 //!   info    inspect artifacts and banks
 
+use nshpo::bail;
 use nshpo::coordinator::{self, BankOptions};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::harness;
 use nshpo::predict::Strategy;
-use nshpo::search::{equally_spaced_stops, sweep};
+use nshpo::search::{equally_spaced_stops, sweep, ReplayExecutor};
 use nshpo::surrogate;
 use nshpo::train::Bank;
 use nshpo::util::cli::Args;
+use nshpo::util::error::Result;
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
@@ -25,7 +27,10 @@ USAGE: nshpo <subcommand> [flags]
   bank      --out results/bank [--families fm,cn,...] [--days 24]
             [--steps-per-day 24] [--batch 256] [--thin 1] [--proxy]
             [--variance-seeds 8] [--artifacts artifacts] [--quick]
+            [--workers N]  (proxy fan-out; 0/unset = cores - 1)
   figure    --all | --id 3 [--bank results/bank] [--out results]
+            [--workers N]  (replay parallelism; 0/unset = cores - 1,
+            also via NSHPO_REPLAY_WORKERS)
   live      [--family fm] [--thin 3] [--stop-every 6] [--rho 0.5]
             [--proxy] [--days 12] [--steps-per-day 12]
   sim       [--tasks 12] [--configs 30] [--out results]
@@ -63,7 +68,7 @@ fn stream_from(args: &Args) -> StreamConfig {
     }
 }
 
-fn cmd_bank(args: &Args) -> anyhow::Result<()> {
+fn cmd_bank(args: &Args) -> Result<()> {
     let mut opts = BankOptions {
         stream: stream_from(args),
         eval_days: args.usize_or("eval-days", 3),
@@ -73,6 +78,7 @@ fn cmd_bank(args: &Args) -> anyhow::Result<()> {
         variance_seeds: args.usize_or("variance-seeds", 8),
         cluster_k: args.usize_or("clusters", 32),
         verbose: !args.has("quiet"),
+        workers: args.usize_or("workers", 0),
         ..BankOptions::default()
     };
     let fams = args.list("families");
@@ -109,11 +115,11 @@ fn cmd_bank(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+fn cmd_figure(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.str_or("out", "results"));
     let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
     let bank = if bank_path.exists() {
-        Some(Bank::load(&bank_path).map_err(|e| anyhow::anyhow!("{e}"))?)
+        Some(Bank::load(&bank_path)?)
     } else {
         None
     };
@@ -124,17 +130,23 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     } else if args.positional.len() > 1 {
         args.positional[1..].to_vec()
     } else {
-        anyhow::bail!("pass --all or --id <figure> (known: {:?})", harness::ALL_FIGURES);
+        bail!("pass --all or --id <figure> (known: {:?})", harness::ALL_FIGURES);
+    };
+    // One executor for every exhibit: --workers overrides the
+    // NSHPO_REPLAY_WORKERS env default.
+    let exec = match args.usize_or("workers", 0) {
+        0 => ReplayExecutor::from_env(),
+        w => ReplayExecutor::new(w),
     };
     for id in ids {
-        if let Err(e) = harness::run_figure(&id, bank.as_ref(), &out) {
+        if let Err(e) = harness::run_figure_with(&id, bank.as_ref(), &out, &exec) {
             eprintln!("figure {id}: {e:#}");
         }
     }
     Ok(())
 }
 
-fn cmd_live(args: &Args) -> anyhow::Result<()> {
+fn cmd_live(args: &Args) -> Result<()> {
     use nshpo::coordinator::live::live_performance_based;
     use nshpo::coordinator::{ModelFactory, PjrtFactory, ProxyFactory};
     use nshpo::train::{ClusterSource, ClusteredStream};
@@ -157,7 +169,7 @@ fn cmd_live(args: &Args) -> anyhow::Result<()> {
         args.usize_or("eval-days", 3),
     );
 
-    let run = |factory: &dyn ModelFactory| -> anyhow::Result<()> {
+    let run = |factory: &dyn ModelFactory| -> Result<()> {
         let out = live_performance_based(
             factory,
             &cs,
@@ -195,7 +207,7 @@ fn cmd_live(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+fn cmd_sim(args: &Args) -> Result<()> {
     let cfg = surrogate::SurrogateConfig {
         n_configs: args.usize_or("configs", 30),
         ..surrogate::SurrogateConfig::default()
@@ -210,7 +222,7 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     let art_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     match nshpo::runtime::Manifest::load(&art_dir) {
         Ok(m) => {
@@ -223,7 +235,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     }
     let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
     if bank_path.exists() {
-        let bank = Bank::load(&bank_path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let bank = Bank::load(&bank_path)?;
         println!(
             "bank {:?}: {} runs, {} days x {} steps/day, {} clusters",
             bank_path, bank.runs.len(), bank.days, bank.steps_per_day, bank.n_clusters

@@ -1,8 +1,9 @@
 //! AOT artifact manifest: metadata for every HLO the Python compile path
 //! produced (`artifacts/manifest.json`), parsed with the in-tree JSON.
 
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug)]
@@ -32,13 +33,13 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let root = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let root = Json::parse(&text).map_err(|e| err!("parsing {path:?}: {e}"))?;
 
-        let schema = root.get("schema").ok_or_else(|| anyhow!("missing schema"))?;
+        let schema = root.get("schema").ok_or_else(|| err!("missing schema"))?;
         let get = |j: &Json, k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("missing numeric field {k:?}"))
+                .ok_or_else(|| err!("missing numeric field {k:?}"))
         };
         let batch = get(schema, "batch")?;
         let n_dense = get(schema, "n_dense")?;
@@ -48,13 +49,13 @@ impl Manifest {
         for v in root
             .get("variants")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing variants"))?
+            .ok_or_else(|| err!("missing variants"))?
         {
             let s = |k: &str| -> Result<String> {
                 v.get(k)
                     .and_then(Json::as_str)
                     .map(str::to_string)
-                    .ok_or_else(|| anyhow!("variant missing {k:?}"))
+                    .ok_or_else(|| err!("variant missing {k:?}"))
             };
             variants.push(VariantMeta {
                 name: s("name")?,
@@ -75,14 +76,14 @@ impl Manifest {
         self.variants
             .iter()
             .find(|v| v.name == name)
-            .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))
+            .ok_or_else(|| err!("variant {name:?} not in manifest"))
     }
 
     /// Verify the Rust data schema matches what the artifacts were
     /// compiled against.
     pub fn check_schema(&self, batch: usize, n_dense: usize, n_cat: usize) -> Result<()> {
         if self.batch != batch || self.n_dense != n_dense || self.n_cat != n_cat {
-            return Err(anyhow!(
+            return Err(err!(
                 "schema mismatch: artifacts ({}, {}, {}) vs runtime ({}, {}, {}) — \
                  re-run `make artifacts`",
                 self.batch, self.n_dense, self.n_cat, batch, n_dense, n_cat

@@ -3,6 +3,7 @@
 
 pub mod artifact;
 pub mod pjrt;
+pub mod xla_shim;
 
 pub use artifact::{Manifest, VariantMeta};
 pub use pjrt::{Engine, Model, RunState};

@@ -13,8 +13,10 @@
 //! the batch upload + the tuple download.
 
 use super::artifact::VariantMeta;
+use super::xla_shim as xla;
 use crate::data::Batch;
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::util::error::{Context, Error, Result};
 
 /// Process-wide PJRT client (one per thread is fine too; the CPU client
 /// is cheap). Wraps compile + the literal plumbing.
@@ -36,7 +38,7 @@ impl Engine {
     pub fn load_model(&self, meta: &VariantMeta) -> Result<Model> {
         let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
             )
             .map_err(wrap)
             .with_context(|| format!("loading HLO {path:?}"))?;
@@ -147,6 +149,6 @@ impl RunState {
     }
 }
 
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
+fn wrap(e: xla::Error) -> Error {
+    err!("xla: {e}")
 }

@@ -1,0 +1,154 @@
+//! Build-time shim for the `xla` PJRT bindings.
+//!
+//! The crate ships with zero external dependencies, so the real
+//! `xla`-rs crate (PJRT CPU client + HLO loading) is not linked by
+//! default. This module mirrors the exact API surface `runtime::pjrt`
+//! consumes; every entry point fails loudly with a clear message, and
+//! `Engine::cpu()` is the first call on any PJRT path, so callers get a
+//! single actionable error instead of a link failure. The proxy trainer
+//! (`train::LogisticProxy`) covers every test/figure path without it.
+//!
+//! To run the real artifacts, add the `xla` crate to `[dependencies]`
+//! and swap `use super::xla_shim as xla;` in `runtime/pjrt.rs` for
+//! `use xla;` — no other code changes are needed.
+
+use std::fmt;
+
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla_shim::Error({})", self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT/XLA runtime not linked in this zero-dependency build \
+         (use --proxy / the LogisticProxy paths, or link the xla crate \
+         as described in runtime/xla_shim.rs)"
+            .into(),
+    )
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: Copy>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal), Error> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("zero-dependency"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::scalar(1i32).reshape(&[1]).is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_tuple1().is_err());
+        assert_eq!(Literal.size_bytes(), 0);
+    }
+}

@@ -1,0 +1,300 @@
+//! Parallel replay executor: the engine behind every figure/table
+//! generator and replay sweep.
+//!
+//! The paper's backtesting methodology makes search strategies *replays*
+//! over a recorded trajectory bank: each exhibit decomposes into a set of
+//! independent, pure jobs — (strategy × stopping schedule × law) over a
+//! shared read-only [`TrajectorySet`]. This module expresses that
+//! decomposition explicitly: a [`ReplayJob`] names one replay over an
+//! `Arc<TrajectorySet>`, and [`ReplayExecutor`] fans a job list out on
+//! the in-tree [`ThreadPool`] with order-preserving collection and
+//! per-job wall-clock timing.
+//!
+//! Every replay is a deterministic pure function of its job (no shared
+//! mutable state, RNG seeds are explicit), so the parallel path is
+//! bit-identical to the serial path — `rust/tests/replay_determinism.rs`
+//! pins this. Worker count comes from `NSHPO_REPLAY_WORKERS` (0/unset =
+//! all cores minus one; 1 = serial).
+
+use super::hyperband;
+use super::{SearchOutcome, TrajectorySet};
+use crate::predict::Strategy;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which replay to run. All variants are pure functions of the
+/// trajectory set and their parameters.
+#[derive(Clone, Debug)]
+pub enum ReplayKind {
+    /// One-shot early stopping at `day_stop` (§4.1.1).
+    OneShot { strategy: Strategy, day_stop: usize },
+    /// Performance-based stopping, Algorithm 1.
+    PerfBased { strategy: Strategy, stop_days: Vec<usize>, rho: f64 },
+    /// Late starting (§B.4).
+    LateStart { start_day: usize, day_stop: usize },
+    /// Hyperband brackets over Algorithm 1 (the §2 extension).
+    /// `workers > 1` evaluates brackets on scoped threads
+    /// (`hyperband_par`) — useful when the exhibit has fewer jobs than
+    /// the executor has workers; the outcome is worker-count-invariant.
+    Hyperband { strategy: Strategy, eta: f64, brackets_seed: u64, workers: usize },
+}
+
+/// One independent replay over a shared read-only trajectory set.
+#[derive(Clone)]
+pub struct ReplayJob {
+    pub ts: Arc<TrajectorySet>,
+    pub kind: ReplayKind,
+    /// Sub-sampling cost multiplier (§4.1.2); applied to the outcome's
+    /// relative cost C.
+    pub plan_mult: f64,
+    /// Free-form label carried through to the result (figure/series id).
+    pub tag: String,
+}
+
+/// A finished replay, in the same position as its job.
+#[derive(Clone, Debug)]
+pub struct ReplayResult {
+    pub outcome: SearchOutcome,
+    pub tag: String,
+    /// Wall-clock this job took (executor throughput accounting).
+    pub wall_seconds: f64,
+}
+
+impl ReplayJob {
+    pub fn one_shot(ts: &Arc<TrajectorySet>, strategy: Strategy, day_stop: usize) -> ReplayJob {
+        ReplayJob {
+            ts: Arc::clone(ts),
+            kind: ReplayKind::OneShot { strategy, day_stop },
+            plan_mult: 1.0,
+            tag: format!("one-shot@{day_stop}"),
+        }
+    }
+
+    pub fn perf_based(
+        ts: &Arc<TrajectorySet>,
+        strategy: Strategy,
+        stop_days: Vec<usize>,
+        rho: f64,
+    ) -> ReplayJob {
+        ReplayJob {
+            ts: Arc::clone(ts),
+            kind: ReplayKind::PerfBased { strategy, stop_days, rho },
+            plan_mult: 1.0,
+            tag: "perf-based".into(),
+        }
+    }
+
+    pub fn with_mult(mut self, plan_mult: f64) -> ReplayJob {
+        self.plan_mult = plan_mult;
+        self
+    }
+
+    pub fn with_tag(mut self, tag: impl Into<String>) -> ReplayJob {
+        self.tag = tag.into();
+        self
+    }
+
+    /// Run the replay. Pure: identical inputs give identical outputs.
+    pub fn execute(&self) -> ReplayResult {
+        let t0 = Instant::now();
+        let mut outcome = match &self.kind {
+            ReplayKind::OneShot { strategy, day_stop } => {
+                self.ts.one_shot(*strategy, *day_stop)
+            }
+            ReplayKind::PerfBased { strategy, stop_days, rho } => {
+                self.ts.performance_based(*strategy, stop_days, *rho)
+            }
+            ReplayKind::LateStart { start_day, day_stop } => {
+                self.ts.late_start(*start_day, *day_stop)
+            }
+            ReplayKind::Hyperband { strategy, eta, brackets_seed, workers } => {
+                let hb = hyperband::hyperband_par(
+                    &self.ts,
+                    *strategy,
+                    *eta,
+                    *brackets_seed,
+                    (*workers).max(1),
+                );
+                SearchOutcome {
+                    ranking: hb.ranking,
+                    cost: hb.cost,
+                    steps_trained: Vec::new(),
+                }
+            }
+        };
+        outcome.cost *= self.plan_mult;
+        ReplayResult {
+            outcome,
+            tag: self.tag.clone(),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Fans replay jobs out over a fixed worker pool; results always come
+/// back in submission order, so callers are agnostic to the worker
+/// count (including 1 = fully serial).
+pub struct ReplayExecutor {
+    pool: Option<ThreadPool>,
+    workers: usize,
+}
+
+impl ReplayExecutor {
+    /// `workers <= 1` builds a serial executor (no threads at all).
+    pub fn new(workers: usize) -> ReplayExecutor {
+        let w = workers.max(1);
+        ReplayExecutor {
+            pool: if w > 1 { Some(ThreadPool::new(w)) } else { None },
+            workers: w,
+        }
+    }
+
+    /// Strictly serial executor — the reference path for determinism
+    /// tests and the baseline for the replay throughput bench.
+    pub fn serial() -> ReplayExecutor {
+        ReplayExecutor::new(1)
+    }
+
+    /// Worker count from `NSHPO_REPLAY_WORKERS` (0/unset/unparsable =
+    /// all cores minus one).
+    pub fn from_env() -> ReplayExecutor {
+        let w = std::env::var("NSHPO_REPLAY_WORKERS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&w| w > 0)
+            .unwrap_or_else(ThreadPool::default_workers);
+        ReplayExecutor::new(w)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute a job set; the i-th result corresponds to the i-th job.
+    pub fn run(&self, jobs: Vec<ReplayJob>) -> Vec<ReplayResult> {
+        match &self.pool {
+            Some(pool) if jobs.len() > 1 => pool.map_indexed(jobs, |_, job| job.execute()),
+            _ => jobs.iter().map(ReplayJob::execute).collect(),
+        }
+    }
+
+    /// Order-preserving map for replay work that is not a [`ReplayJob`]
+    /// (e.g. the surrogate's per-task sampling + replay).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        match &self.pool {
+            Some(pool) if items.len() > 1 => pool.map_indexed(items, f),
+            _ => items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predict::LawKind;
+    use crate::search::equally_spaced_stops;
+    use crate::surrogate::{sample_task, SurrogateConfig};
+
+    fn small_ts() -> Arc<TrajectorySet> {
+        Arc::new(sample_task(
+            &SurrogateConfig {
+                n_configs: 10,
+                days: 12,
+                steps_per_day: 6,
+                ..SurrogateConfig::default()
+            },
+            3,
+        ))
+    }
+
+    fn job_set(ts: &Arc<TrajectorySet>) -> Vec<ReplayJob> {
+        let mut jobs = Vec::new();
+        for d in [2usize, 4, 6, 9, 12] {
+            jobs.push(ReplayJob::one_shot(ts, Strategy::Constant, d));
+        }
+        for s in [2usize, 3, 4] {
+            jobs.push(ReplayJob::perf_based(
+                ts,
+                Strategy::Trajectory(LawKind::InversePowerLaw),
+                equally_spaced_stops(ts.days, s),
+                0.5,
+            ));
+        }
+        jobs.push(ReplayJob {
+            ts: Arc::clone(ts),
+            kind: ReplayKind::LateStart { start_day: 3, day_stop: 9 },
+            plan_mult: 1.0,
+            tag: "late".into(),
+        });
+        jobs.push(ReplayJob {
+            ts: Arc::clone(ts),
+            kind: ReplayKind::Hyperband {
+                strategy: Strategy::Constant,
+                eta: 3.0,
+                brackets_seed: 7,
+                workers: 2,
+            },
+            plan_mult: 1.0,
+            tag: "hb".into(),
+        });
+        jobs
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let ts = small_ts();
+        let jobs = job_set(&ts);
+        let serial = ReplayExecutor::serial().run(jobs.clone());
+        let parallel = ReplayExecutor::new(4).run(jobs);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.outcome.ranking, b.outcome.ranking);
+            assert_eq!(a.outcome.cost.to_bits(), b.outcome.cost.to_bits());
+            assert_eq!(a.outcome.steps_trained, b.outcome.steps_trained);
+            assert_eq!(a.tag, b.tag);
+        }
+    }
+
+    #[test]
+    fn results_preserve_submission_order() {
+        let ts = small_ts();
+        let jobs: Vec<ReplayJob> = (2..10)
+            .map(|d| ReplayJob::one_shot(&ts, Strategy::Constant, d).with_tag(format!("d{d}")))
+            .collect();
+        let out = ReplayExecutor::new(3).run(jobs);
+        let tags: Vec<&str> = out.iter().map(|r| r.tag.as_str()).collect();
+        assert_eq!(tags, (2..10).map(|d| format!("d{d}")).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn plan_multiplier_scales_cost() {
+        let ts = small_ts();
+        let base = ReplayJob::one_shot(&ts, Strategy::Constant, 6);
+        let scaled = base.clone().with_mult(0.25);
+        let out = ReplayExecutor::serial().run(vec![base, scaled]);
+        assert!((out[0].outcome.cost * 0.25 - out[1].outcome.cost).abs() < 1e-15);
+    }
+
+    #[test]
+    fn map_serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..20).collect();
+        let f = |i: usize, x: u64| x * 2 + i as u64;
+        let a = ReplayExecutor::serial().map(items.clone(), f);
+        let b = ReplayExecutor::new(4).map(items, f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn timing_is_recorded() {
+        let ts = small_ts();
+        let out = ReplayExecutor::serial()
+            .run(vec![ReplayJob::one_shot(&ts, Strategy::Constant, 12)]);
+        assert!(out[0].wall_seconds >= 0.0);
+    }
+}

@@ -13,6 +13,7 @@ use super::{equally_spaced_stops, SearchOutcome, TrajectorySet};
 use crate::metrics;
 use crate::predict::Strategy;
 use crate::util::prng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 #[derive(Clone, Debug)]
 pub struct HyperbandOutcome {
@@ -33,6 +34,27 @@ pub fn hyperband(
     eta: f64,
     seed: u64,
 ) -> HyperbandOutcome {
+    hyperband_par(ts, strategy, eta, seed, 1)
+}
+
+/// One planned bracket: evaluation is a pure function of this plan.
+struct BracketPlan {
+    s: usize,
+    subset: Vec<usize>,
+    stops: Vec<usize>,
+    first_stop: usize,
+}
+
+/// Bracket-parallel Hyperband replay: brackets are independent replay
+/// jobs, so with `workers > 1` they are evaluated on scoped threads
+/// (order-preserving — the outcome is bit-identical to the serial path).
+pub fn hyperband_par(
+    ts: &TrajectorySet,
+    strategy: Strategy,
+    eta: f64,
+    seed: u64,
+    workers: usize,
+) -> HyperbandOutcome {
     assert!(eta > 1.0);
     let n = ts.n_configs();
     let rho = 1.0 - 1.0 / eta;
@@ -50,9 +72,8 @@ pub fn hyperband(
     let weights: Vec<f64> = (0..=s_max).map(|s| eta.powi(s as i32) / (s + 1) as f64).collect();
     let wsum: f64 = weights.iter().sum();
 
-    let mut total_steps = 0usize;
-    let mut scored: Vec<(usize, f64)> = Vec::new(); // (config, pseudo-score)
-    let mut brackets = Vec::new();
+    // Plan every bracket up front (cheap, sequential, owns the RNG)...
+    let mut plans: Vec<BracketPlan> = Vec::new();
     let mut cursor = 0usize;
     for s in (0..=s_max).rev() {
         if cursor >= n {
@@ -69,20 +90,31 @@ pub fn hyperband(
 
         let first_stop = (days as f64 / eta.powi(s as i32)).max(1.0) as usize;
         let stops: Vec<usize> = equally_spaced_stops(days, first_stop.max(1));
-        let sub_ts = subset_view(ts, &subset);
-        let out = sub_ts.performance_based(strategy, &stops, rho);
+        plans.push(BracketPlan { s, subset, stops, first_stop });
+    }
+
+    // ...then evaluate them — the replay-heavy part — possibly in
+    // parallel. scoped_map preserves plan order.
+    let outs: Vec<SearchOutcome> = ThreadPool::scoped_map(workers, &plans, |_, p| {
+        subset_view(ts, &p.subset).performance_based(strategy, &p.stops, rho)
+    });
+
+    let mut total_steps = 0usize;
+    let mut scored: Vec<(usize, f64)> = Vec::new(); // (config, pseudo-score)
+    let mut brackets = Vec::new();
+    for (p, out) in plans.iter().zip(&outs) {
         let bracket_steps: usize = out.steps_trained.iter().sum();
         total_steps += bracket_steps;
         brackets.push((
-            s,
-            subset.len(),
-            first_stop,
+            p.s,
+            p.subset.len(),
+            p.first_stop,
             bracket_steps as f64 / (n * ts.total_steps()) as f64,
         ));
         // score = position within bracket, scaled into [0,1); earlier
         // brackets (longer budgets) break ties by observed truth later.
         for (pos, &local) in out.ranking.iter().enumerate() {
-            scored.push((subset[local], pos as f64 / subset.len() as f64));
+            scored.push((p.subset[local], pos as f64 / p.subset.len() as f64));
         }
     }
 
@@ -169,5 +201,15 @@ mod tests {
         let b = hyperband(&ts, Strategy::Constant, 3.0, 5);
         assert_eq!(a.ranking, b.ranking);
         assert_eq!(a.cost, b.cost);
+    }
+
+    #[test]
+    fn bracket_parallel_matches_serial() {
+        let ts = ts();
+        let a = hyperband(&ts, Strategy::Constant, 3.0, 11);
+        let b = hyperband_par(&ts, Strategy::Constant, 3.0, 11, 4);
+        assert_eq!(a.ranking, b.ranking);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.brackets, b.brackets);
     }
 }

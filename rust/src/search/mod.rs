@@ -4,8 +4,11 @@
 //! the coordinator.
 
 pub mod cost;
+pub mod executor;
 pub mod hyperband;
 pub mod sweep;
+
+pub use executor::{ReplayExecutor, ReplayJob, ReplayKind, ReplayResult};
 
 use crate::metrics;
 use crate::predict::{self, Strategy};

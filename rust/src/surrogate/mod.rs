@@ -131,17 +131,40 @@ pub fn fig6_point(
     n_tasks: usize,
     seed: u64,
 ) -> (f64, f64, f64) {
-    let mut costs = Vec::new();
-    let mut regrets = Vec::new();
-    for task in 0..n_tasks {
-        let ts = sample_task(cfg, seed ^ (task as u64).wrapping_mul(0x9E37_79B9));
+    fig6_point_with(
+        &crate::search::ReplayExecutor::serial(),
+        cfg,
+        stop_every_days,
+        rho,
+        n_tasks,
+        seed,
+    )
+}
+
+/// [`fig6_point`] with explicit execution: tasks are independent
+/// (sample + replay), so they fan out on the replay executor; per-task
+/// results are collected in task order, making the aggregate
+/// bit-identical to the serial path.
+pub fn fig6_point_with(
+    exec: &crate::search::ReplayExecutor,
+    cfg: &SurrogateConfig,
+    stop_every_days: usize,
+    rho: f64,
+    n_tasks: usize,
+    seed: u64,
+) -> (f64, f64, f64) {
+    let cfg = cfg.clone();
+    let tasks: Vec<u64> = (0..n_tasks as u64).collect();
+    let per_task: Vec<(f64, f64)> = exec.map(tasks, move |_, task| {
+        let ts = sample_task(&cfg, seed ^ task.wrapping_mul(0x9E37_79B9));
         let stops = equally_spaced_stops(cfg.days, stop_every_days);
         let out = ts.performance_based(Strategy::Constant, &stops, rho);
         let gt = ts.ground_truth();
         let reference = gt.iter().cloned().fold(f64::MAX, f64::min);
-        costs.push(out.cost);
-        regrets.push(metrics::regret_at_k(&out.ranking, &gt, 3) / reference);
-    }
+        (out.cost, metrics::regret_at_k(&out.ranking, &gt, 3) / reference)
+    });
+    let costs: Vec<f64> = per_task.iter().map(|p| p.0).collect();
+    let regrets: Vec<f64> = per_task.iter().map(|p| p.1).collect();
     (
         crate::util::stats::mean(&costs),
         crate::util::stats::mean(&regrets),
@@ -214,5 +237,15 @@ mod tests {
         let a = sample_task(&small(), 5);
         let b = sample_task(&small(), 5);
         assert_eq!(a.step_losses[0], b.step_losses[0]);
+    }
+
+    #[test]
+    fn fig6_parallel_matches_serial() {
+        let cfg = small();
+        let serial = fig6_point(&cfg, 3, 0.5, 6, 99);
+        let par = fig6_point_with(&crate::search::ReplayExecutor::new(4), &cfg, 3, 0.5, 6, 99);
+        assert_eq!(serial.0.to_bits(), par.0.to_bits());
+        assert_eq!(serial.1.to_bits(), par.1.to_bits());
+        assert_eq!(serial.2.to_bits(), par.2.to_bits());
     }
 }

@@ -12,8 +12,8 @@
 
 use crate::data::{Batch, N_CAT, N_DENSE};
 use crate::runtime::{Model, RunState};
+use crate::util::error::Result;
 use crate::util::prng::Rng;
-use anyhow::Result;
 
 pub trait OnlineModel {
     /// Re-initialize parameters for `seed`.

@@ -5,7 +5,7 @@
 use super::model::OnlineModel;
 use crate::cluster;
 use crate::data::{Plan, Stream, N_DENSE};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// How examples are assigned to drift clusters for stratified prediction.
 #[derive(Clone, Copy, Debug)]

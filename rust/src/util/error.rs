@@ -1,0 +1,196 @@
+//! In-tree error handling (the offline cache has no `anyhow`; the crate
+//! ships zero external dependencies — DESIGN.md §3).
+//!
+//! [`Error`] is a lightweight dynamic error: a chain of human-readable
+//! messages, outermost context first. The [`Context`] extension trait
+//! layers context onto any `Result` whose error converts into [`Error`]
+//! (which includes every `std::error::Error`), and the [`err!`] /
+//! [`bail!`] macros build ad-hoc errors from format strings:
+//!
+//! ```ignore
+//! use crate::util::error::{Context, Result};
+//! fn load(path: &Path) -> Result<Config> {
+//!     let text = std::fs::read_to_string(path)
+//!         .with_context(|| format!("reading {path:?}"))?;
+//!     parse(&text).ok_or_else(|| crate::err!("bad config in {path:?}"))
+//! }
+//! ```
+//!
+//! Display mirrors `anyhow`: `{}` prints the outermost message only,
+//! `{:#}` prints the whole chain joined by `": "`.
+
+use std::fmt;
+
+/// A dynamic error: a context chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn push_context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:#}", self)
+    }
+}
+
+// Like `anyhow::Error`, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps this blanket conversion coherent, so
+// `?` lifts any std error (io, parse, ...) into the chain, source list
+// included.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, converting the error into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error) built from a
+/// format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/nshpo/err_test")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.root_cause().is_empty());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let err = io_fail()
+            .context("loading the bank")
+            .unwrap_err()
+            .push_context("regenerating figure 3");
+        let chain: Vec<&str> = err.chain().collect();
+        assert_eq!(chain[0], "regenerating figure 3");
+        assert_eq!(chain[1], "loading the bank");
+        assert!(chain.len() >= 3);
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let err = Error::msg("root").push_context("outer");
+        assert_eq!(format!("{err}"), "outer");
+        assert_eq!(format!("{err:#}"), "outer: root");
+        assert_eq!(format!("{err:?}"), "outer: root");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| -> String { unreachable!("must not evaluate on Ok") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{err}"), "missing value");
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        let x = 41;
+        let e = crate::err!("bad value {x} ({:?})", "ctx");
+        assert_eq!(format!("{e}"), "bad value 41 (\"ctx\")");
+
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                crate::bail!("flagged");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flagged");
+    }
+}

@@ -1,13 +1,15 @@
 //! Substrate layer: everything that would normally come from crates.io.
 //!
-//! The build image is offline and its crate cache only contains `xla` and
-//! its build dependencies, so the PRNG (`rand`), JSON (`serde_json`), CLI
-//! parsing (`clap`), thread pool (`tokio`/`rayon`), benchmarking
-//! (`criterion`) and property testing (`proptest`) are implemented here
-//! from scratch, with their own unit/property tests. See DESIGN.md §3.
+//! The build image is offline, so the PRNG (`rand`), JSON (`serde_json`),
+//! CLI parsing (`clap`), thread pool (`tokio`/`rayon`), benchmarking
+//! (`criterion`), property testing (`proptest`) and error handling
+//! (`anyhow`) are implemented here from scratch, with their own
+//! unit/property tests. The crate's `[dependencies]` section is empty and
+//! ci.sh keeps it that way. See DESIGN.md §3.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

@@ -1,10 +1,20 @@
-//! Fixed-size worker thread pool with an ordered parallel map.
+//! Fixed-size worker thread pool with ordered parallel maps.
 //!
 //! The coordinator trains independent candidate configurations in
-//! parallel; the offline cache has no tokio/rayon, so this is the
-//! scheduling substrate. Work items are closures pushed onto a shared
-//! queue; `map_indexed` preserves input order in the output.
+//! parallel and the replay executor (`search::executor`) fans replay
+//! jobs out over banks; the offline cache has no tokio/rayon, so this is
+//! the scheduling substrate. Work items are closures pushed onto a
+//! shared queue; every map variant preserves input order in the output:
+//!
+//! * [`ThreadPool::map_indexed`] — one queued job per item (`'static`
+//!   items and closure).
+//! * [`ThreadPool::map_chunked`] — groups items into chunks to amortize
+//!   queue overhead when jobs are small.
+//! * [`ThreadPool::scoped_map`] — scoped threads over *borrowed* items
+//!   and closure (no `'static` bound, no `Arc` plumbing); used by the
+//!   bank builder and the bracket-parallel hyperband replay.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -90,6 +100,86 @@ impl ThreadPool {
         }
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
+
+    /// Like [`map_indexed`](Self::map_indexed), but groups items into
+    /// chunks of `chunk_size` so many small work items cost one queue
+    /// round-trip per chunk instead of one per item. `f` still receives
+    /// the item's global index; output order matches input order.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, chunk_size: usize, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        let chunk = chunk_size.max(1);
+        let mut rest = items;
+        let mut chunks: Vec<(usize, Vec<T>)> = Vec::new();
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let tail = rest.split_off(take);
+            chunks.push((base, rest));
+            base += take;
+            rest = tail;
+        }
+        let f = Arc::new(f);
+        let out_chunks = self.map_indexed(chunks, move |_, (start, chunk_items)| {
+            chunk_items
+                .into_iter()
+                .enumerate()
+                .map(|(j, item)| f(start + j, item))
+                .collect::<Vec<R>>()
+        });
+        out_chunks.into_iter().flatten().collect()
+    }
+
+    /// Ordered parallel map over *borrowed* data: runs `f` on up to
+    /// `n_threads` scoped threads (std::thread::scope), so neither the
+    /// items nor the closure need `'static`. Items are claimed from a
+    /// shared atomic cursor (work stealing by index); results come back
+    /// in input order. A panic in `f` propagates when the scope joins.
+    pub fn scoped_map<T, R, F>(n_threads: usize, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = n_threads.max(1).min(n);
+        if threads == 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        thread::scope(|s| {
+            for _ in 0..threads {
+                let tx = tx.clone();
+                let next = &next;
+                let f = &f;
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if tx.send((i, f(i, &items[i]))).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("scoped_map missing result"))
+            .collect()
+    }
 }
 
 impl Drop for ThreadPool {
@@ -161,5 +251,94 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn chunked_preserves_order_and_global_indices() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<u64> = (0..37).collect();
+        for chunk in [1usize, 4, 7, 64] {
+            let out = pool.map_chunked(items.clone(), chunk, |i, x| {
+                assert_eq!(i as u64, x, "global index must match item");
+                x * 10 + 1
+            });
+            assert_eq!(out, (0..37).map(|x| x * 10 + 1).collect::<Vec<_>>());
+        }
+        assert!(pool.map_chunked(Vec::<u64>::new(), 4, |_, x| x).is_empty());
+    }
+
+    #[test]
+    fn scoped_map_borrows_non_static_data() {
+        let words: Vec<String> = (0..25).map(|i| format!("w{i}")).collect();
+        let suffix = String::from("!"); // borrowed by the closure
+        let out = ThreadPool::scoped_map(4, &words, |i, w| format!("{i}:{w}{suffix}"));
+        let expected: Vec<String> = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| format!("{i}:{w}!"))
+            .collect();
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn scoped_map_single_thread_and_empty() {
+        let xs = [5u32, 6, 7];
+        assert_eq!(ThreadPool::scoped_map(1, &xs, |_, x| x + 1), vec![6, 7, 8]);
+        assert_eq!(ThreadPool::scoped_map(0, &xs, |_, x| x + 1), vec![6, 7, 8]);
+        let empty: [u32; 0] = [];
+        assert!(ThreadPool::scoped_map(4, &empty, |_, x| *x).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn scoped_map_propagates_panics() {
+        let xs: Vec<u32> = (0..8).collect();
+        let _ = ThreadPool::scoped_map(3, &xs, |_, &x| {
+            if x == 5 {
+                panic!("scoped boom");
+            }
+            x
+        });
+    }
+
+    /// propcheck-style stress: for random item vectors, worker counts and
+    /// chunk sizes, every parallel map variant must equal the serial map.
+    #[test]
+    fn prop_all_map_variants_match_serial() {
+        use crate::util::propcheck::{self, gen};
+        propcheck::check(
+            0xB00,
+            30,
+            |rng| {
+                let workers = 1.0 + rng.below(6) as f64;
+                let chunk = 1.0 + rng.below(5) as f64;
+                let items = gen::vec_f64(rng, 40, -100.0, 100.0);
+                (items, vec![workers, chunk])
+            },
+            |(items, meta)| {
+                if meta.len() < 2 {
+                    return Ok(()); // shrunk meta: nothing to check
+                }
+                let (workers, chunk) = (meta[0].max(1.0) as usize, meta[1].max(1.0) as usize);
+                let expected: Vec<f64> = items
+                    .iter()
+                    .enumerate()
+                    .map(|(i, x)| x * 3.0 + i as f64)
+                    .collect();
+                let pool = ThreadPool::new(workers);
+                if pool.map_indexed(items.clone(), |i, x| x * 3.0 + i as f64) != expected {
+                    return Err("map_indexed diverged from serial".into());
+                }
+                if pool.map_chunked(items.clone(), chunk, |i, x| x * 3.0 + i as f64) != expected
+                {
+                    return Err("map_chunked diverged from serial".into());
+                }
+                if ThreadPool::scoped_map(workers, items, |i, x| x * 3.0 + i as f64) != expected
+                {
+                    return Err("scoped_map diverged from serial".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,0 +1,163 @@
+//! Determinism of the parallel replay executor: fanning an exhibit's
+//! replay jobs out over worker threads must produce *bit-identical*
+//! rankings/costs — and byte-identical figure files — versus the serial
+//! path. This is the contract that lets the figure harness parallelize
+//! without perturbing any paper number.
+
+use nshpo::coordinator::{build_bank, BankOptions};
+use nshpo::data::{Plan, StreamConfig};
+use nshpo::predict::{LawKind, Strategy};
+use nshpo::search::{equally_spaced_stops, ReplayExecutor, ReplayJob, ReplayKind};
+use nshpo::surrogate::{sample_task, SurrogateConfig};
+use std::sync::Arc;
+
+/// A fig4/fig5-shaped job set: one-shot and performance-based sweeps
+/// crossed with the three prediction strategies over one trajectory set.
+fn fig45_job_set(ts: &Arc<nshpo::search::TrajectorySet>) -> Vec<ReplayJob> {
+    let strategies = [
+        Strategy::Constant,
+        Strategy::Trajectory(LawKind::InversePowerLaw),
+        Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 1 },
+    ];
+    let mut jobs = Vec::new();
+    for strat in strategies {
+        for d in [2usize, 3, 4, 6, 8, 12] {
+            jobs.push(ReplayJob::one_shot(ts, strat, d).with_tag(format!("os{d}")));
+        }
+        for s in [2usize, 3, 4, 6] {
+            jobs.push(
+                ReplayJob::perf_based(ts, strat, equally_spaced_stops(ts.days, s), 0.5)
+                    .with_tag(format!("pb{s}")),
+            );
+        }
+    }
+    jobs.push(ReplayJob {
+        ts: Arc::clone(ts),
+        kind: ReplayKind::LateStart { start_day: 3, day_stop: 10 },
+        plan_mult: 1.0,
+        tag: "late".into(),
+    });
+    jobs.push(ReplayJob {
+        ts: Arc::clone(ts),
+        kind: ReplayKind::Hyperband {
+            strategy: Strategy::Constant,
+            eta: 3.0,
+            brackets_seed: 5,
+            // bracket-parallel inside an executor job: the outcome must
+            // still be worker-count-invariant
+            workers: 3,
+        },
+        plan_mult: 0.7,
+        tag: "hb".into(),
+    });
+    jobs
+}
+
+#[test]
+fn parallel_job_set_is_bit_identical_to_serial() {
+    let ts = Arc::new(sample_task(
+        &SurrogateConfig { n_configs: 16, days: 12, steps_per_day: 8, ..Default::default() },
+        41,
+    ));
+    let jobs = fig45_job_set(&ts);
+    let serial = ReplayExecutor::serial().run(jobs.clone());
+    for workers in [2usize, 4, 8] {
+        let parallel = ReplayExecutor::new(workers).run(jobs.clone());
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.tag, b.tag, "order changed at {workers} workers");
+            assert_eq!(a.outcome.ranking, b.outcome.ranking, "ranking [{}]", a.tag);
+            assert_eq!(
+                a.outcome.cost.to_bits(),
+                b.outcome.cost.to_bits(),
+                "cost not bit-identical [{}]",
+                a.tag
+            );
+            assert_eq!(a.outcome.steps_trained, b.outcome.steps_trained, "[{}]", a.tag);
+        }
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_stable() {
+    // No hidden iteration-order dependence: two parallel runs of the same
+    // job set agree with each other bit-for-bit.
+    let ts = Arc::new(sample_task(
+        &SurrogateConfig { n_configs: 12, days: 10, steps_per_day: 6, ..Default::default() },
+        17,
+    ));
+    let jobs = fig45_job_set(&ts);
+    let exec = ReplayExecutor::new(4);
+    let a = exec.run(jobs.clone());
+    let b = exec.run(jobs);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.outcome.ranking, y.outcome.ranking);
+        assert_eq!(x.outcome.cost.to_bits(), y.outcome.cost.to_bits());
+    }
+}
+
+fn quick_bank_opts() -> BankOptions {
+    BankOptions {
+        stream: StreamConfig {
+            seed: 55,
+            days: 10,
+            steps_per_day: 4,
+            batch: 64,
+            n_clusters: 8,
+        },
+        eval_days: 3,
+        families: vec!["fm".into()],
+        plans: vec![Plan::Full, Plan::negative_only(0.5)],
+        thin: 9, // 3 configs
+        use_proxy: true,
+        variance_seeds: 0,
+        cluster_k: 6,
+        verbose: false,
+        ..BankOptions::default()
+    }
+}
+
+#[test]
+fn figure_files_byte_identical_serial_vs_parallel() {
+    let bank = build_bank(&quick_bank_opts()).unwrap();
+    let base = std::env::temp_dir().join("nshpo_replay_det");
+    let dir_serial = base.join("serial");
+    let dir_parallel = base.join("parallel");
+    let _ = std::fs::remove_dir_all(&base);
+
+    let serial = ReplayExecutor::serial();
+    let parallel = ReplayExecutor::new(4);
+    assert_eq!(parallel.workers(), 4);
+    for id in ["3", "4", "5", "6"] {
+        nshpo::harness::run_figure_with(id, Some(&bank), &dir_serial, &serial)
+            .unwrap_or_else(|e| panic!("serial figure {id}: {e:#}"));
+        nshpo::harness::run_figure_with(id, Some(&bank), &dir_parallel, &parallel)
+            .unwrap_or_else(|e| panic!("parallel figure {id}: {e:#}"));
+    }
+    for id in ["3", "4", "5", "6"] {
+        for file in ["data.csv", "plot.txt"] {
+            let a = std::fs::read(dir_serial.join(format!("fig{id}")).join(file)).unwrap();
+            let b = std::fs::read(dir_parallel.join(format!("fig{id}")).join(file)).unwrap();
+            assert_eq!(a, b, "fig{id}/{file} differs between serial and parallel replay");
+        }
+    }
+}
+
+#[test]
+fn proxy_bank_is_deterministic_across_worker_counts() {
+    // The bank builder fans proxy training out on scoped threads; the
+    // recorded runs (content and order) must not depend on worker count.
+    let mut opts1 = quick_bank_opts();
+    opts1.workers = 1;
+    let mut opts4 = quick_bank_opts();
+    opts4.workers = 4;
+    let a = build_bank(&opts1).unwrap();
+    let b = build_bank(&opts4).unwrap();
+    assert_eq!(a.runs.len(), b.runs.len());
+    for (x, y) in a.runs.iter().zip(&b.runs) {
+        assert_eq!(x.key, y.key);
+        assert_eq!(x.step_losses, y.step_losses);
+        assert_eq!(x.cluster_loss_sums, y.cluster_loss_sums);
+        assert_eq!(x.examples_trained, y.examples_trained);
+    }
+}

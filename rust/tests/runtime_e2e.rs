@@ -10,7 +10,11 @@ use nshpo::runtime::{Engine, Manifest};
 use std::path::Path;
 
 fn manifest() -> Option<Manifest> {
-    match Manifest::load(Path::new("artifacts")) {
+    // Resolve against the manifest dir, not the process cwd: `cargo test`
+    // may run from the workspace root or an arbitrary directory, and a
+    // bare relative "artifacts" would silently skip every test here.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
         Ok(m) => Some(m),
         Err(e) => {
             eprintln!("SKIP runtime_e2e: {e:#}");
