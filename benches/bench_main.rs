@@ -16,7 +16,7 @@
 use nshpo::data::{Plan, Stream, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::{self, LawKind, Strategy};
-use nshpo::search::{equally_spaced_stops, ReplayExecutor, ReplayJob};
+use nshpo::search::{equally_spaced_stops, ReplayExecutor, ReplayJob, SearchPlan};
 use nshpo::surrogate;
 use nshpo::train::{LogisticProxy, OnlineModel};
 use nshpo::util::bench::{bench, black_box, BenchResult};
@@ -126,23 +126,28 @@ fn main() {
     );
     run("search/one_shot_constant", &mut || {
         bench("search/one_shot_constant", SAMPLES, MIN_SAMPLE, || {
-            black_box(ts.one_shot(Strategy::Constant, 12))
+            black_box(SearchPlan::one_shot(12).run_replay(&ts).unwrap())
         })
     });
     run("search/perf_stopping_constant", &mut || {
         let stops = equally_spaced_stops(ts.days, 3);
         bench("search/perf_stopping_constant", SAMPLES, MIN_SAMPLE, || {
-            black_box(ts.performance_based(Strategy::Constant, &stops, 0.5))
+            black_box(
+                SearchPlan::performance_based(stops.clone(), 0.5)
+                    .run_replay(&ts)
+                    .unwrap(),
+            )
         })
     });
     run("search/perf_stopping_trajectory", &mut || {
         let stops = equally_spaced_stops(ts.days, 6);
         bench("search/perf_stopping_trajectory", 3, MIN_SAMPLE, || {
-            black_box(ts.performance_based(
-                Strategy::Trajectory(LawKind::InversePowerLaw),
-                &stops,
-                0.5,
-            ))
+            black_box(
+                SearchPlan::performance_based(stops.clone(), 0.5)
+                    .strategy(Strategy::Trajectory(LawKind::InversePowerLaw))
+                    .run_replay(&ts)
+                    .unwrap(),
+            )
         })
     });
 

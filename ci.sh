@@ -9,6 +9,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== quickstart example (proxy smoke gate) =="
+# The quickstart exercises the full public path — proxy bank build +
+# the two-stage SearchSession API — in a few seconds.
+cargo run --release --example quickstart >/dev/null
+
 echo "== zero-dependency gate =="
 # 1) No external-crate imports may reappear in source (in-tree substrates
 #    only). Matches `use <crate>` / `extern crate <crate>` for the crates

@@ -15,7 +15,7 @@ use nshpo::coordinator::{build_bank, BankOptions};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::{LawKind, Strategy};
-use nshpo::search::equally_spaced_stops;
+use nshpo::search::{equally_spaced_stops, SearchPlan};
 use nshpo::util::error::Result;
 use std::time::Instant;
 
@@ -80,7 +80,7 @@ fn main() -> Result<()> {
         println!("{name:<52} {cost:>8.3} {r3:>12.6}");
     };
     for day in [ts_full.days / 4, ts_full.days / 2] {
-        let o = ts_full.one_shot(Strategy::Constant, day);
+        let o = SearchPlan::one_shot(day).run_replay(&ts_full)?;
         report(&format!("one-shot @ day {day} + constant"), o.cost, &o.ranking);
     }
     let stops = equally_spaced_stops(ts_full.days, (ts_full.days / 6).max(2));
@@ -99,8 +99,11 @@ fn main() -> Result<()> {
             neg_mult,
         ),
     ] {
-        let o = ts.performance_based(strat, &stops, 0.5);
-        report(name, o.cost * mult, &o.ranking);
+        let o = SearchPlan::performance_based(stops.clone(), 0.5)
+            .strategy(strat)
+            .plan_mult(mult)
+            .run_replay(ts)?;
+        report(name, o.cost, &o.ranking);
     }
     println!("\n(cost C is relative to training all {} configs on full data)", labels.len());
     Ok(())

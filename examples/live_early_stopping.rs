@@ -1,23 +1,29 @@
-//! Live performance-based stopping: Algorithm 1 actually pausing and
-//! pruning training runs as they happen (not a bank replay), showing the
+//! Live performance-based stopping: the same `SearchSession` core that
+//! replays banks, here actually pausing and pruning training runs as
+//! they happen (`LiveSearch` over a `LiveDriver`), showing the
 //! wall-clock savings the cost model C promises.
 //!
 //! Uses the Rust proxy trainer by default so it runs anywhere; pass
-//! --pjrt (after `make artifacts`) to drive the real AOT-compiled models.
+//! --pjrt (after `make artifacts`) to drive the real AOT-compiled
+//! models. Pass --workers N to fan per-segment config training out over
+//! worker threads (the outcome is worker-count-invariant).
 //!
-//! Run: cargo run --release --example live_early_stopping [--pjrt]
+//! Run: cargo run --release --example live_early_stopping [--pjrt] [--workers N]
 
-use nshpo::coordinator::live::live_performance_based;
+use nshpo::coordinator::live::LiveSearch;
 use nshpo::coordinator::{ModelFactory, PjrtFactory, ProxyFactory};
 use nshpo::data::{Plan, Stream, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::Strategy;
-use nshpo::search::{equally_spaced_stops, sweep};
+use nshpo::search::{equally_spaced_stops, sweep, SearchPlan};
 use nshpo::train::{ClusterSource, ClusteredStream};
+use nshpo::util::cli::Args;
 use nshpo::util::error::Result;
 
 fn main() -> Result<()> {
-    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let args = Args::from_env();
+    let use_pjrt = args.has("pjrt");
+    let workers = args.usize_or("workers", 1);
     let stream_cfg = StreamConfig {
         seed: 5,
         days: 12,
@@ -28,10 +34,13 @@ fn main() -> Result<()> {
     let specs = sweep::thin(sweep::family_sweep("fm"), 2); // 14 configs
     let stops = equally_spaced_stops(stream_cfg.days, 3);
     println!(
-        "live search: {} FM configs, stops at days {stops:?}, rho = 0.5 ({})",
+        "live search: {} FM configs, stops at days {stops:?}, rho = 0.5, {workers} worker(s) ({})",
         specs.len(),
         if use_pjrt { "PJRT models" } else { "proxy models" }
     );
+    let plan = SearchPlan::performance_based(stops, 0.5)
+        .strategy(Strategy::Constant)
+        .build()?;
 
     let cs = ClusteredStream::build(
         Stream::new(stream_cfg),
@@ -40,16 +49,15 @@ fn main() -> Result<()> {
     );
 
     let run = |factory: &dyn ModelFactory| -> Result<()> {
-        let out = live_performance_based(
+        let search = LiveSearch {
             factory,
-            &cs,
-            &specs,
-            Plan::Full,
-            Strategy::Constant,
-            &stops,
-            0.5,
-            0,
-        )?;
+            cs: &cs,
+            specs: &specs,
+            data_plan: Plan::Full,
+            seed: 0,
+            workers,
+        };
+        let out = search.run(&plan)?;
         println!(
             "\ncost C = {:.3}; wall {:.1}s vs estimated full-search {:.1}s ({:.2}x wall-clock saved)",
             out.cost,

@@ -1,16 +1,17 @@
-//! Quickstart: the NS-HPO public API in ~60 lines.
+//! Quickstart: the NS-HPO public API in ~70 lines.
 //!
 //! Builds a small non-stationary stream, trains a 9-config FM sweep with
-//! the Rust proxy trainer, then compares one-shot early stopping against
-//! performance-based stopping (Algorithm 1) on cost and regret@3.
+//! the Rust proxy trainer, then runs the unified two-stage
+//! `SearchSession` API over the recorded bank: one-shot early stopping
+//! vs performance-based stopping (Algorithm 1), plus the full two-stage
+//! paradigm (identify cheaply, finish only the finalists).
 //!
 //! Run: cargo run --release --example quickstart
 
 use nshpo::coordinator::{build_bank, BankOptions};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::metrics;
-use nshpo::predict::Strategy;
-use nshpo::search::equally_spaced_stops;
+use nshpo::search::{equally_spaced_stops, ReplayDriver, SearchPlan, SearchSession};
 use nshpo::util::error::Result;
 
 fn main() -> Result<()> {
@@ -40,14 +41,19 @@ fn main() -> Result<()> {
     let (ts, labels) = bank.trajectory_set("fm", "full", 0).unwrap();
     let truth = ts.ground_truth();
 
-    // 3. Search: one-shot early stopping at half the data...
-    let one_shot = ts.one_shot(Strategy::Constant, ts.days / 2);
-    // ...vs performance-based stopping with stops every 3 days.
-    let stops = equally_spaced_stops(ts.days, 3);
-    let perf = ts.performance_based(Strategy::Constant, &stops, 0.5);
-
+    // 3. Search: every strategy is a SearchPlan run by a SearchSession
+    //    over a driver — here the replay backend; `LiveSearch` drives the
+    //    identical core against real training runs.
+    let outcomes = [
+        ("one-shot @ T/2", SearchPlan::one_shot(ts.days / 2).run_replay(&ts)?),
+        (
+            "performance-based",
+            SearchPlan::performance_based(equally_spaced_stops(ts.days, 3), 0.5)
+                .run_replay(&ts)?,
+        ),
+    ];
     let reference = truth.iter().cloned().fold(f64::MAX, f64::min);
-    for (name, out) in [("one-shot @ T/2", &one_shot), ("performance-based", &perf)] {
+    for (name, out) in &outcomes {
         let r3 = metrics::regret_at_k(&out.ranking, &truth, 3) / reference;
         println!(
             "{name:<18} cost C = {:.3}   normalized regret@3 = {:.5}   top-3 = {:?}",
@@ -59,6 +65,17 @@ fn main() -> Result<()> {
                 .collect::<Vec<_>>()
         );
     }
+
+    // 4. The paper's full paradigm in one call: identify the top-3 with a
+    //    cheap one-shot pass, then finish only those to the full horizon.
+    let plan = SearchPlan::one_shot(ts.days / 4).top_k(3).build()?;
+    let mut driver = ReplayDriver::new(&ts);
+    let two = SearchSession::new(plan, &mut driver).run_two_stage()?;
+    println!(
+        "two-stage         stage-1 C = {:.3} + stage-2 C = {:.3} = combined C = {:.3}",
+        two.stage1.cost, two.stage2_cost, two.combined_cost
+    );
+    println!("winner (observed): {}", labels[two.final_ranking[0]]);
     println!("ground-truth best: {}", labels[metrics::ranking_from_scores(&truth)[0]]);
     Ok(())
 }

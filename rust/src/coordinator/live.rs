@@ -1,178 +1,84 @@
-//! Live performance-based stopping: Algorithm 1 driving *real* training
-//! runs, not a bank replay. This is where the cost model's savings become
-//! wall-clock savings: pruned configurations stop consuming compute.
+//! Live search: the [`SearchSession`] API driving *real* training runs
+//! through a [`LiveDriver`], not a bank replay. This is where the cost
+//! model's savings become wall-clock savings: pruned configurations stop
+//! consuming compute. The strategy logic itself lives in
+//! `search::session` — this module only adds the wall-clock accounting
+//! around it.
 
 use super::ModelFactory;
 use crate::data::Plan;
-use crate::metrics;
-use crate::predict::Strategy;
-use crate::search::{cost, sweep::ConfigSpec};
-use crate::train::{online, ClusteredStream, RunTrajectory};
+use crate::search::{
+    LiveDriver, SearchOutcome, SearchPlan, SearchSession, TwoStageOutcome, sweep::ConfigSpec,
+};
+use crate::train::ClusteredStream;
 use crate::util::error::Result;
 use std::time::Instant;
 
+/// A live search setup: which models, which data, how many workers. One
+/// setup can run any [`SearchPlan`] — stage 1 only or the full two-stage
+/// paradigm.
+pub struct LiveSearch<'a> {
+    pub factory: &'a dyn ModelFactory,
+    pub cs: &'a ClusteredStream,
+    pub specs: &'a [ConfigSpec],
+    pub data_plan: Plan,
+    pub seed: i32,
+    /// Worker threads for per-segment config fan-out (0 = cores - 1).
+    pub workers: usize,
+}
+
+#[derive(Clone, Debug)]
 pub struct LiveOutcome {
     pub ranking: Vec<usize>,
     pub cost: f64,
     pub steps_trained: Vec<usize>,
+    /// Present when the session ran the full two-stage paradigm.
+    pub two_stage: Option<TwoStageOutcome>,
     pub wall_seconds: f64,
     /// Wall-clock a full (no-stopping) search would have spent, estimated
     /// from the measured per-step time of each config's own run.
     pub full_wall_estimate: f64,
 }
 
-/// Run Algorithm 1 live over `specs`. Stops the worst `rho` fraction at
-/// each stopping day based on `strategy` predictions from the metrics
-/// observed so far.
-pub fn live_performance_based(
-    factory: &dyn ModelFactory,
-    cs: &ClusteredStream,
-    specs: &[ConfigSpec],
-    plan: Plan,
-    strategy: Strategy,
-    stop_days: &[usize],
-    rho: f64,
-    seed: i32,
-) -> Result<LiveOutcome> {
-    let cfg = &cs.stream.cfg;
-    let t_total = cfg.total_steps();
-    let spd = cfg.steps_per_day;
-    let n = specs.len();
-    let t0 = Instant::now();
-
-    // Live state per config.
-    let mut models: Vec<_> = specs
-        .iter()
-        .map(|s| factory.create(s, seed))
-        .collect::<Result<Vec<_>>>()?;
-    let mut trajs: Vec<RunTrajectory> = (0..n)
-        .map(|_| RunTrajectory {
-            step_losses: Vec::with_capacity(t_total),
-            cluster_loss_sums: vec![vec![0.0; cs.n_clusters]; cfg.days],
-            examples_trained: 0,
-            examples_seen: 0,
-        })
-        .collect();
-    let mut remaining: Vec<usize> = (0..n).collect();
-    let mut tail: Vec<usize> = Vec::new();
-    let mut steps_trained = vec![0usize; n];
-    let mut step_seconds = vec![0.0f64; n];
-
-    let mut days: Vec<usize> = stop_days
-        .iter()
-        .copied()
-        .filter(|&d| d >= 1 && d < cfg.days)
-        .collect();
-    days.sort_unstable();
-    days.dedup();
-    days.push(cfg.days); // final segment
-
-    let mut segment_start_day = 0usize;
-    for (seg, &day) in days.iter().enumerate() {
-        // Train every remaining config through this segment.
-        for &c in &remaining {
-            let t_from = segment_start_day * spd;
-            let t_to = day * spd;
-            let t_run = Instant::now();
-            online::run_range(
-                models[c].as_mut(),
-                cs,
-                plan,
-                specs[c].hparams(),
-                seed as u64,
-                t_from,
-                t_to,
-                &mut trajs[c],
-            )?;
-            steps_trained[c] = t_to;
-            step_seconds[c] += t_run.elapsed().as_secs_f64();
-        }
-        segment_start_day = day;
-        let is_final = seg == days.len() - 1;
-        if is_final || remaining.len() <= 1 {
-            continue;
-        }
-
-        // Predict + prune (Algorithm 1 lines 5-10).
-        let ts = partial_trajectory_set(cs, &trajs, &remaining, day);
-        let all_local: Vec<usize> = (0..remaining.len()).collect();
-        let preds = ts.predict_subset(strategy, day, &all_local);
-        let order = metrics::ranking_from_scores(&preds);
-        let n_prune =
-            (((remaining.len() as f64) * rho).floor() as usize).min(remaining.len() - 1);
-        if n_prune == 0 {
-            continue;
-        }
-        let cut = remaining.len() - n_prune;
-        let mut pruned: Vec<usize> = order[cut..].iter().map(|&i| remaining[i]).collect();
-        pruned.extend(tail);
-        tail = pruned;
-        remaining = order[..cut].iter().map(|&i| remaining[i]).collect();
+impl LiveSearch<'_> {
+    /// Stage 1 only: identify promising configs under `plan`.
+    pub fn run(&self, plan: &SearchPlan) -> Result<LiveOutcome> {
+        self.drive(plan, false)
     }
 
-    // Final ranking: survivors by their actual eval metric, then the tail.
-    let survivor_scores: Vec<f64> = remaining
-        .iter()
-        .map(|&c| {
-            let dm = day_means(&trajs[c], spd, cfg.days);
-            dm[cfg.days - cs.eval_days..].iter().sum::<f64>() / cs.eval_days as f64
+    /// The full two-stage paradigm: identify, then resume/finish only the
+    /// top-k finalists to the full horizon.
+    pub fn run_two_stage(&self, plan: &SearchPlan) -> Result<LiveOutcome> {
+        self.drive(plan, true)
+    }
+
+    fn drive(&self, plan: &SearchPlan, two_stage: bool) -> Result<LiveOutcome> {
+        let t0 = Instant::now();
+        let mut driver =
+            LiveDriver::new(self.factory, self.cs, self.specs, self.data_plan, self.seed)
+                .with_workers(self.workers);
+        let (outcome, two) = {
+            let mut session = SearchSession::new(plan.clone(), &mut driver);
+            if two_stage {
+                let two = session.run_two_stage()?;
+                let outcome = SearchOutcome {
+                    ranking: two.final_ranking.clone(),
+                    cost: two.combined_cost,
+                    steps_trained: two.steps_trained.clone(),
+                };
+                (outcome, Some(two))
+            } else {
+                (session.run()?, None)
+            }
+        };
+        Ok(LiveOutcome {
+            ranking: outcome.ranking,
+            cost: outcome.cost,
+            steps_trained: outcome.steps_trained,
+            two_stage: two,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            full_wall_estimate: driver.full_wall_estimate(),
         })
-        .collect();
-    let order = metrics::ranking_from_scores(&survivor_scores);
-    let mut ranking: Vec<usize> = order.iter().map(|&i| remaining[i]).collect();
-    ranking.extend(tail);
-
-    let wall = t0.elapsed().as_secs_f64();
-    // Full-search estimate: each config's measured s/step * T.
-    let full_wall_estimate: f64 = (0..n)
-        .map(|c| {
-            let per_step = step_seconds[c] / steps_trained[c].max(1) as f64;
-            per_step * t_total as f64
-        })
-        .sum();
-
-    Ok(LiveOutcome {
-        ranking,
-        cost: cost::empirical(&steps_trained, t_total),
-        steps_trained,
-        wall_seconds: wall,
-        full_wall_estimate,
-    })
-}
-
-fn day_means(traj: &RunTrajectory, spd: usize, days: usize) -> Vec<f64> {
-    let observed_days = (traj.step_losses.len() / spd).min(days);
-    (0..observed_days)
-        .map(|d| {
-            traj.step_losses[d * spd..(d + 1) * spd]
-                .iter()
-                .map(|&x| x as f64)
-                .sum::<f64>()
-                / spd as f64
-        })
-        .collect()
-}
-
-/// View the partial live trajectories of `remaining` configs as a
-/// TrajectorySet so the bank-replay predictors work unchanged.
-fn partial_trajectory_set(
-    cs: &ClusteredStream,
-    trajs: &[RunTrajectory],
-    remaining: &[usize],
-    _observed_days: usize,
-) -> crate::search::TrajectorySet {
-    let cfg = &cs.stream.cfg;
-    crate::search::TrajectorySet {
-        steps_per_day: cfg.steps_per_day,
-        days: cfg.days,
-        eval_days: cs.eval_days,
-        step_losses: remaining.iter().map(|&c| trajs[c].step_losses.clone()).collect(),
-        day_cluster_counts: cs.day_cluster_counts.clone(),
-        cluster_loss_sums: remaining
-            .iter()
-            .map(|&c| trajs[c].cluster_loss_sums.clone())
-            .collect(),
-        eval_cluster_counts: cs.eval_cluster_counts.clone(),
     }
 }
 
@@ -181,6 +87,7 @@ mod tests {
     use super::*;
     use crate::coordinator::ProxyFactory;
     use crate::data::{Stream, StreamConfig};
+    use crate::predict::Strategy;
     use crate::search::sweep;
     use crate::train::ClusterSource;
 
@@ -198,21 +105,26 @@ mod tests {
         )
     }
 
+    fn search<'a>(cs: &'a ClusteredStream, specs: &'a [sweep::ConfigSpec]) -> LiveSearch<'a> {
+        LiveSearch {
+            factory: &ProxyFactory,
+            cs,
+            specs,
+            data_plan: Plan::Full,
+            seed: 0,
+            workers: 1,
+        }
+    }
+
     #[test]
     fn live_search_prunes_and_saves_steps() {
         let cs = cs();
         let specs = sweep::thin(sweep::family_sweep("fm"), 3); // 9 configs
-        let out = live_performance_based(
-            &ProxyFactory,
-            &cs,
-            &specs,
-            Plan::Full,
-            Strategy::Constant,
-            &[2, 4, 6],
-            0.5,
-            0,
-        )
-        .unwrap();
+        let plan = SearchPlan::performance_based(vec![2, 4, 6], 0.5)
+            .strategy(Strategy::Constant)
+            .build()
+            .unwrap();
+        let out = search(&cs, &specs).run(&plan).unwrap();
         assert_eq!(out.ranking.len(), 9);
         let mut r = out.ranking.clone();
         r.sort_unstable();
@@ -232,18 +144,39 @@ mod tests {
     fn no_stops_trains_everything_fully() {
         let cs = cs();
         let specs = sweep::thin(sweep::family_sweep("fm"), 9); // 3 configs
-        let out = live_performance_based(
-            &ProxyFactory,
-            &cs,
-            &specs,
-            Plan::Full,
-            Strategy::Constant,
-            &[],
-            0.5,
-            0,
-        )
-        .unwrap();
+        let plan = SearchPlan::performance_based(vec![], 0.5).build().unwrap();
+        let out = search(&cs, &specs).run(&plan).unwrap();
         assert_eq!(out.cost, 1.0);
         assert!(out.steps_trained.iter().all(|&s| s == 24));
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_outcome() {
+        let cs = cs();
+        let specs = sweep::thin(sweep::family_sweep("fm"), 3);
+        let plan = SearchPlan::performance_based(vec![2, 4, 6], 0.5).build().unwrap();
+        let serial = search(&cs, &specs).run(&plan).unwrap();
+        let mut par = search(&cs, &specs);
+        par.workers = 4;
+        let parallel = par.run(&plan).unwrap();
+        assert_eq!(serial.ranking, parallel.ranking);
+        assert_eq!(serial.steps_trained, parallel.steps_trained);
+        assert_eq!(serial.cost.to_bits(), parallel.cost.to_bits());
+    }
+
+    #[test]
+    fn live_two_stage_finishes_finalists() {
+        let cs = cs();
+        let specs = sweep::thin(sweep::family_sweep("fm"), 3); // 9 configs
+        let plan = SearchPlan::one_shot(4).top_k(2).build().unwrap();
+        let out = search(&cs, &specs).run_two_stage(&plan).unwrap();
+        let two = out.two_stage.as_ref().unwrap();
+        assert_eq!(two.finalists.len(), 2);
+        for c in 0..9 {
+            let expect = if two.finalists.contains(&c) { 24 } else { 12 };
+            assert_eq!(out.steps_trained[c], expect, "config {c}");
+        }
+        assert!(out.cost < 1.0);
+        assert!(out.cost > two.stage1.cost);
     }
 }

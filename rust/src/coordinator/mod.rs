@@ -1,5 +1,7 @@
 //! L3 coordination: building the trajectory bank (the expensive training
-//! phase) and driving *live* performance-based stopping over real runs.
+//! phase) and the wall-clock accounting for *live* search sessions over
+//! real runs (`live::LiveSearch`, driving the shared Algorithm-1 core
+//! through `search::LiveDriver`).
 
 pub mod live;
 
@@ -196,11 +198,16 @@ fn key_of(job: &Job) -> RunKey {
     }
 }
 
-/// Model factory abstraction used by the live coordinator: produces a
-/// fresh OnlineModel per configuration (PJRT-backed or proxy).
+/// Model factory abstraction used by the live search driver: produces a
+/// fresh OnlineModel per configuration (PJRT-backed or proxy). Models
+/// must be `Send` so the `LiveDriver` can fan segment training out over
+/// worker threads.
 pub trait ModelFactory {
-    fn create<'a>(&'a self, spec: &ConfigSpec, seed: i32)
-        -> Result<Box<dyn OnlineModel + 'a>>;
+    fn create<'a>(
+        &'a self,
+        spec: &ConfigSpec,
+        seed: i32,
+    ) -> Result<Box<dyn OnlineModel + Send + 'a>>;
 }
 
 /// Factory over compiled PJRT models (one compile per variant, cached).
@@ -229,7 +236,7 @@ impl ModelFactory for PjrtFactory {
         &'a self,
         spec: &ConfigSpec,
         seed: i32,
-    ) -> Result<Box<dyn OnlineModel + 'a>> {
+    ) -> Result<Box<dyn OnlineModel + Send + 'a>> {
         let model = self
             .models
             .get(&spec.variant)
@@ -246,7 +253,7 @@ impl ModelFactory for ProxyFactory {
         &'a self,
         _spec: &ConfigSpec,
         seed: i32,
-    ) -> Result<Box<dyn OnlineModel + 'a>> {
+    ) -> Result<Box<dyn OnlineModel + Send + 'a>> {
         Ok(Box::new(LogisticProxy::new(seed)))
     }
 }
@@ -286,7 +293,7 @@ mod tests {
         assert_eq!(labels.len(), 3);
         assert_eq!(ts.step_losses[0].len(), 18);
         // search runs end-to-end over the bank
-        let out = ts.one_shot(crate::predict::Strategy::Constant, 3);
+        let out = crate::search::SearchPlan::one_shot(3).run_replay(&ts).unwrap();
         assert_eq!(out.ranking.len(), 3);
         let (ts_sub, _) = bank.trajectory_set("fm", "pos1.00neg0.50", 0).unwrap();
         assert_eq!(ts_sub.n_configs(), 3);

@@ -5,8 +5,10 @@
 //! Every replay-driven generator decomposes its exhibit into independent
 //! jobs (strategy × stopping schedule × law over a shared trajectory
 //! set) and submits them through the parallel replay executor
-//! (`search::executor`); the parallel output is bit-identical to the
-//! serial path. Worker count: `NSHPO_REPLAY_WORKERS` or `--workers`.
+//! (`search::executor`); each job executes as a `SearchSession` over a
+//! `ReplayDriver` — the same Algorithm-1 core the live coordinator
+//! drives. The parallel output is bit-identical to the serial path.
+//! Worker count: `NSHPO_REPLAY_WORKERS` or `--workers`.
 //!
 //! See DESIGN.md §6 for the experiment index mapping exhibits to modules.
 
@@ -139,22 +141,6 @@ fn to_series(name: &str, pts: &[CurvePoint], use_per: bool) -> Series {
             .iter()
             .map(|p| (p.cost, if use_per { p.per } else { p.regret3 }))
             .collect(),
-    }
-}
-
-/// Empirical sub-sampling cost multiplier measured from the bank's runs.
-fn plan_multiplier(bank: &Bank, family: &str, plan_tag: &str) -> f64 {
-    let (mut trained, mut seen) = (0u64, 0u64);
-    for r in &bank.runs {
-        if r.key.family == family && r.key.plan_tag == plan_tag {
-            trained += r.examples_trained;
-            seen += r.examples_seen;
-        }
-    }
-    if seen == 0 {
-        1.0
-    } else {
-        trained as f64 / seen as f64
     }
 }
 
@@ -350,7 +336,7 @@ fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
         let ts_full = need(bank, &fam, "full")?;
         let mut series = Vec::new();
         if let Ok(ts_neg) = need(bank, &fam, NEG05) {
-            let mult = plan_multiplier(bank, &fam, NEG05);
+            let mult = bank.plan_multiplier(&fam, NEG05);
             series.push(to_series(
                 "ours: perf-stopping + stratified + neg0.5",
                 &perf_curve(exec, &ts_neg, STRAT_STRATIFIED, mult, RHO),
@@ -368,7 +354,7 @@ fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
         let mut sub_jobs: Vec<ReplayJob> = Vec::new();
         for tag in ["full", "uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
             if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
-                let mult = plan_multiplier(bank, &fam, tag);
+                let mult = bank.plan_multiplier(&fam, tag);
                 let ts_sub = Arc::new(ts_sub);
                 let days = ts_sub.days;
                 sub_jobs.push(
@@ -691,7 +677,7 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
         };
         let es = best(&one_shot_curve(exec, &ts_full, Strategy::Constant, 1.0));
         let ours = if let Ok(ts_neg) = need(bank, &fam, NEG05) {
-            let mult = plan_multiplier(bank, &fam, NEG05);
+            let mult = bank.plan_multiplier(&fam, NEG05);
             best(&perf_curve(exec, &ts_neg, STRAT_STRATIFIED, mult, RHO))
         } else {
             f64::MAX
@@ -706,7 +692,7 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
                 sub_jobs.push(
                     ReplayJob::one_shot(&ts_sub, Strategy::Constant, days).with_tag(tag),
                 );
-                sub_mults.push(plan_multiplier(bank, &fam, tag));
+                sub_mults.push(bank.plan_multiplier(&fam, tag));
             }
         }
         for (pt, mult) in points_against(&ts_full, &exec.run(sub_jobs)).iter().zip(&sub_mults) {
@@ -869,7 +855,7 @@ fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<
 /// 4/5/7-9 all use negative sub-sampling at 0.5).
 fn pick_plan<'a>(bank: &Bank, family: &str) -> (&'a str, f64) {
     if bank.trajectory_set(family, NEG05, 0).is_some() {
-        (NEG05, plan_multiplier(bank, family, NEG05))
+        (NEG05, bank.plan_multiplier(family, NEG05))
     } else {
         ("full", 1.0)
     }

@@ -19,12 +19,14 @@
 //!   (PER, regret, regret@k).
 //! * [`predict`] — constant / trajectory (parametric-law) / stratified
 //!   prediction strategies (§4.2).
-//! * [`search`] — one-shot early stopping, performance-based stopping
-//!   (Algorithm 1), sub-sampling, late starting, the cost model (§4.1),
-//!   and the parallel replay executor every exhibit runs on.
+//! * [`search`] — the unified two-stage `SearchSession` API: every
+//!   strategy (one-shot, Algorithm 1, late starting, Hyperband) written
+//!   once against the `SearchDriver` trait, with replay and live
+//!   backends, the cost model (§4.1), and the parallel replay executor
+//!   every exhibit runs on.
 //! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6).
-//! * [`coordinator`] — experiment scheduler (bank building, live
-//!   early-stopping of real PJRT runs).
+//! * [`coordinator`] — experiment scheduler (bank building, wall-clock
+//!   accounting for live sessions over real PJRT runs).
 //! * [`harness`] — per-figure/table generators (Figs 1-11, Table 1).
 
 pub mod cluster;

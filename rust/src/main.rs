@@ -3,20 +3,26 @@
 //! Subcommands:
 //!   bank    train every candidate configuration once; save the bank
 //!   figure  regenerate paper figures/tables from a bank
-//!   live    run live performance-based stopping on real models
+//!   search  unified two-stage search (replay or live backend)
+//!   live    thin alias for `search --live`
 //!   sim     industrial surrogate sweep (Fig 6 style)
 //!   info    inspect artifacts and banks
 
 use nshpo::bail;
-use nshpo::coordinator::{self, BankOptions};
+use nshpo::coordinator::live::LiveSearch;
+use nshpo::coordinator::{self, BankOptions, ModelFactory, PjrtFactory, ProxyFactory};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::harness;
-use nshpo::predict::Strategy;
-use nshpo::search::{equally_spaced_stops, sweep, ReplayExecutor};
+use nshpo::predict::{LawKind, Strategy};
+use nshpo::search::{
+    equally_spaced_stops, sweep, ReplayDriver, ReplayExecutor, SearchOutcome, SearchPlan,
+    SearchSession,
+};
 use nshpo::surrogate;
-use nshpo::train::Bank;
+use nshpo::train::{Bank, ClusterSource, ClusteredStream};
 use nshpo::util::cli::Args;
 use nshpo::util::error::Result;
+use nshpo::util::threadpool::ThreadPool;
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
@@ -30,9 +36,21 @@ USAGE: nshpo <subcommand> [flags]
             [--workers N]  (proxy fan-out; 0/unset = cores - 1)
   figure    --all | --id 3 [--bank results/bank] [--out results]
             [--workers N]  (replay parallelism; 0/unset = cores - 1,
-            also via NSHPO_REPLAY_WORKERS)
-  live      [--family fm] [--thin 3] [--stop-every 6] [--rho 0.5]
-            [--proxy] [--days 12] [--steps-per-day 12]
+            also via NSHPO_REPLAY_WORKERS; exits nonzero if any
+            figure fails)
+  search    unified two-stage SearchSession (one Algorithm-1 core):
+            backend: [--bank results/bank [--plan full]] | --live
+            [--proxy] [--family fm] [--thin 3]
+            [--workers N]  (live backend only; replay figures
+            parallelize via `figure --workers`)
+            plan:    [--method perf|one-shot|late-start|hyperband]
+            [--strategy constant|trajectory|stratified] [--slices 5]
+            [--stop-every 3] [--rho 0.5] [--day-stop N]
+            [--start-day N] [--eta 3] [--bracket-seed 7]
+            [--budget C] [--stage 2] [--top-k 3]
+  live      thin alias for `search --live` (legacy default --stage 1)
+            [--family fm] [--thin 3] [--stop-every 3] [--rho 0.5]
+            [--proxy] [--days 12] [--steps-per-day 12] [--workers N]
   sim       [--tasks 12] [--configs 30] [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
 ";
@@ -42,7 +60,8 @@ fn main() {
     let code = match args.subcommand() {
         Some("bank") => cmd_bank(&args),
         Some("figure") => cmd_figure(&args),
-        Some("live") => cmd_live(&args),
+        Some("search") => run_search(&args, args.has("live"), 2),
+        Some("live") => run_search(&args, true, 1),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -138,19 +157,140 @@ fn cmd_figure(args: &Args) -> Result<()> {
         0 => ReplayExecutor::from_env(),
         w => ReplayExecutor::new(w),
     };
+    let mut failed: Vec<String> = Vec::new();
     for id in ids {
         if let Err(e) = harness::run_figure_with(&id, bank.as_ref(), &out, &exec) {
             eprintln!("figure {id}: {e:#}");
+            failed.push(id);
         }
+    }
+    if !failed.is_empty() {
+        bail!("{} figure(s) failed: {failed:?}", failed.len());
     }
     Ok(())
 }
 
-fn cmd_live(args: &Args) -> Result<()> {
-    use nshpo::coordinator::live::live_performance_based;
-    use nshpo::coordinator::{ModelFactory, PjrtFactory, ProxyFactory};
-    use nshpo::train::{ClusterSource, ClusteredStream};
+// -------------------------------------------------------------- search
 
+fn parse_strategy(args: &Args) -> Result<Strategy> {
+    match args.str_or("strategy", "constant").as_str() {
+        "constant" => Ok(Strategy::Constant),
+        "trajectory" => Ok(Strategy::Trajectory(LawKind::InversePowerLaw)),
+        "stratified" => Ok(Strategy::Stratified {
+            law: Some(LawKind::InversePowerLaw),
+            n_slices: args.usize_or("slices", 5),
+        }),
+        other => bail!("unknown --strategy {other:?} (constant|trajectory|stratified)"),
+    }
+}
+
+/// Build a validated SearchPlan from CLI flags. `days` is the backend's
+/// horizon (needed to place default stopping schedules); `plan_mult` is
+/// the bank plan's empirical sub-sampling cost multiplier (1.0 live).
+fn plan_from(args: &Args, days: usize, plan_mult: f64) -> Result<SearchPlan> {
+    let builder = match args.str_or("method", "perf").as_str() {
+        "perf" | "performance-based" => SearchPlan::performance_based(
+            equally_spaced_stops(days, args.usize_or("stop-every", 3)),
+            args.f64_or("rho", 0.5),
+        ),
+        "one-shot" => SearchPlan::one_shot(args.usize_or("day-stop", (days / 2).max(1))),
+        "late-start" => SearchPlan::late_start(
+            args.usize_or("start-day", days / 4),
+            args.usize_or("day-stop", days),
+        ),
+        "hyperband" => {
+            SearchPlan::hyperband(args.f64_or("eta", 3.0), args.u64_or("bracket-seed", 7))
+        }
+        other => bail!("unknown --method {other:?} (perf|one-shot|late-start|hyperband)"),
+    };
+    let mut builder = builder
+        .strategy(parse_strategy(args)?)
+        .plan_mult(plan_mult)
+        .top_k(args.usize_or("top-k", 3));
+    if args.has("budget") {
+        let text = args
+            .str_opt("budget")
+            .ok_or_else(|| nshpo::err!("--budget expects a value (a relative cost, e.g. 0.5)"))?;
+        let b: f64 = text
+            .parse()
+            .map_err(|_| nshpo::err!("--budget expects a number, got {text:?}"))?;
+        builder = builder.budget(b);
+    }
+    builder.build()
+}
+
+fn run_search(args: &Args, live: bool, default_stage: usize) -> Result<()> {
+    let stage = args.usize_or("stage", default_stage);
+    if stage != 1 && stage != 2 {
+        bail!("--stage must be 1 (identify) or 2 (identify + finish finalists)");
+    }
+    if live {
+        search_live(args, stage)
+    } else {
+        search_replay(args, stage)
+    }
+}
+
+fn report_stage1(out: &SearchOutcome, k: usize, label: impl Fn(usize) -> String) {
+    println!("stage 1: C = {:.3}", out.cost);
+    println!("predicted top-{k}:");
+    for &c in out.ranking.iter().take(k) {
+        println!("  {}", label(c));
+    }
+}
+
+fn search_replay(args: &Args, stage: usize) -> Result<()> {
+    let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
+    if !bank_path.exists() {
+        bail!("bank {bank_path:?} not found (run `nshpo bank`, or pass --live)");
+    }
+    let bank = Bank::load(&bank_path)?;
+    let family = args.str_or("family", "fm");
+    let plan_tag = args.str_or("plan", "full");
+    let (ts, labels) = bank
+        .trajectory_set(&family, &plan_tag, 0)
+        .ok_or_else(|| nshpo::err!("bank missing family={family} plan={plan_tag}"))?;
+    // Sub-sampled plans train a fraction of the examples; fold the
+    // measured multiplier into every reported cost C (§4.1.2).
+    let mult = bank.plan_multiplier(&family, &plan_tag);
+    let plan = plan_from(args, ts.days, mult)?;
+    println!(
+        "replay search: family={family} plan={plan_tag} ({} configs x {} steps, cost multiplier {mult:.3})",
+        ts.n_configs(),
+        ts.total_steps()
+    );
+
+    let gt = ts.ground_truth();
+    let reference = gt.iter().cloned().fold(f64::MAX, f64::min);
+    let top_k = plan.top_k;
+    let mut driver = ReplayDriver::new(&ts);
+    let mut session = SearchSession::new(plan, &mut driver);
+    let label = |c: usize| labels[c].clone();
+    if stage == 1 {
+        let out = session.run()?;
+        report_stage1(&out, top_k, label);
+        let r3 = nshpo::metrics::regret_at_k(&out.ranking, &gt, 3) / reference;
+        println!("normalized regret@3 vs bank ground truth: {r3:.6}");
+    } else {
+        let two = session.run_two_stage()?;
+        report_stage1(&two.stage1, top_k, label);
+        println!(
+            "stage 2: finished {} finalists; stage-2 C = {:.3}, combined C = {:.3}",
+            two.finalists.len(),
+            two.stage2_cost,
+            two.combined_cost
+        );
+        println!("final ranking (observed metric):");
+        for &c in two.final_ranking.iter().take(top_k) {
+            println!("  {}", labels[c]);
+        }
+        let r3 = nshpo::metrics::regret_at_k(&two.final_ranking, &gt, 3) / reference;
+        println!("normalized regret@3 vs bank ground truth: {r3:.6}");
+    }
+    Ok(())
+}
+
+fn search_live(args: &Args, stage: usize) -> Result<()> {
     let mut stream_cfg = stream_from(args);
     if !args.has("days") {
         stream_cfg.days = 12;
@@ -160,8 +300,12 @@ fn cmd_live(args: &Args) -> Result<()> {
     }
     let family = args.str_or("family", "fm");
     let specs = sweep::thin(sweep::family_sweep(&family), args.usize_or("thin", 3));
-    let stops = equally_spaced_stops(stream_cfg.days, args.usize_or("stop-every", 3));
-    let rho = args.f64_or("rho", 0.5);
+    let plan = plan_from(args, stream_cfg.days, 1.0)?;
+    let workers = match args.usize_or("workers", 0) {
+        0 => ThreadPool::default_workers(),
+        w => w,
+    };
+    let total_steps = stream_cfg.total_steps();
 
     let cs = ClusteredStream::build(
         nshpo::data::Stream::new(stream_cfg),
@@ -169,17 +313,32 @@ fn cmd_live(args: &Args) -> Result<()> {
         args.usize_or("eval-days", 3),
     );
 
+    let use_proxy = args.has("proxy");
+    // Mirror the bank builder's fan-out line so live and bank runs read
+    // the same way in logs.
+    eprintln!(
+        "live: {} configs x {} steps on {} workers ({} mode)",
+        specs.len(),
+        total_steps,
+        workers,
+        if use_proxy { "proxy" } else { "pjrt" }
+    );
+
     let run = |factory: &dyn ModelFactory| -> Result<()> {
-        let out = live_performance_based(
+        let search = LiveSearch {
             factory,
-            &cs,
-            &specs,
-            Plan::Full,
-            Strategy::Constant,
-            &stops,
-            rho,
-            0,
-        )?;
+            cs: &cs,
+            specs: &specs,
+            data_plan: Plan::Full,
+            seed: 0,
+            workers,
+        };
+        let top_k = plan.top_k;
+        let out = if stage == 2 {
+            search.run_two_stage(&plan)?
+        } else {
+            search.run(&plan)?
+        };
         println!(
             "live search over {} configs: C = {:.3}, wall {:.1}s (full-search estimate {:.1}s, {:.1}x saved)",
             specs.len(),
@@ -188,14 +347,22 @@ fn cmd_live(args: &Args) -> Result<()> {
             out.full_wall_estimate,
             out.full_wall_estimate / out.wall_seconds.max(1e-9),
         );
-        println!("top-3 configs:");
-        for &c in out.ranking.iter().take(3) {
+        if let Some(two) = &out.two_stage {
+            println!(
+                "stage 1 C = {:.3}; stage 2 finished {} finalists for +{:.3}",
+                two.stage1.cost,
+                two.finalists.len(),
+                two.stage2_cost
+            );
+        }
+        println!("top-{top_k} configs:");
+        for &c in out.ranking.iter().take(top_k) {
             println!("  {}", specs[c].label());
         }
         Ok(())
     };
 
-    if args.has("proxy") {
+    if use_proxy {
         run(&ProxyFactory)
     } else {
         let engine = nshpo::runtime::Engine::cpu()?;

@@ -10,7 +10,12 @@
 //!
 //! To run the real artifacts, add the `xla` crate to `[dependencies]`
 //! and swap `use super::xla_shim as xla;` in `runtime/pjrt.rs` for
-//! `use xla;` — no other code changes are needed.
+//! `use xla;`. Caveat: `coordinator::ModelFactory` requires models to be
+//! `Send` (the live search driver fans segment training out over worker
+//! threads), and this shim's unit structs satisfy that automatically. If
+//! the real crate's `Literal`/executable wrappers are not `Send`, wrap
+//! them in a `Send` newtype (PJRT CPU buffers are not thread-affine) or
+//! relax the bound alongside a serial-only `LiveDriver`.
 
 use std::fmt;
 

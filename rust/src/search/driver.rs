@@ -1,0 +1,447 @@
+//! Search backends: where a [`SearchSession`](super::SearchSession)'s
+//! metric observations come from.
+//!
+//! The [`SearchDriver`] trait is the contract between the paper's search
+//! strategies (written once, in `search::session`) and the two ways of
+//! obtaining trajectories:
+//!
+//! * [`ReplayDriver`] — the backtesting methodology: "training" a config
+//!   is truncating its recorded trajectory in a [`TrajectorySet`], so
+//!   advancing is free and a whole exhibit's worth of sessions fans out
+//!   on the [`ReplayExecutor`](super::ReplayExecutor).
+//! * [`LiveDriver`] — the real thing: each config is an actual
+//!   [`OnlineModel`] (PJRT artifact or Rust proxy) trained segment by
+//!   segment over a [`ClusteredStream`]; pruned configs stop consuming
+//!   compute. Segment training fans out over `workers` scoped threads
+//!   (per-config runs are independent, so the result is
+//!   worker-count-invariant).
+//!
+//! Both drivers feed the *same* Algorithm-1 core, which is what makes
+//! replayed and live searches comparable: with a deterministic trainer,
+//! the live search over a stream and the replay over the bank recorded
+//! from that stream produce the identical ranking and step counts
+//! (`rust/tests/session_parity.rs`).
+
+use super::sweep::ConfigSpec;
+use super::TrajectorySet;
+use crate::coordinator::ModelFactory;
+use crate::data::Plan;
+use crate::predict::Strategy;
+use crate::train::{run_range, ClusteredStream, OnlineModel, RunTrajectory};
+use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Backend abstraction the search strategies are written against. A
+/// driver owns per-config progress (how far each config has trained) and
+/// answers predictions from whatever it has observed so far.
+pub trait SearchDriver {
+    fn n_configs(&self) -> usize;
+    fn days(&self) -> usize;
+    fn steps_per_day(&self) -> usize;
+    fn eval_days(&self) -> usize;
+
+    /// Train (or replay) `configs` forward through the end of day `day`.
+    /// Configs already past `day` are untouched.
+    fn train_to(&mut self, configs: &[usize], day: usize) -> Result<()>;
+
+    /// Late starting: begin `configs` at the start of `day` (no data
+    /// before it). Must be called before any training of those configs.
+    fn start_at(&mut self, configs: &[usize], day: usize) -> Result<()>;
+
+    /// Predict final eval metrics for `subset` from the data observed
+    /// through day `day` (Algorithm 1 line 5). Output aligned with
+    /// `subset`.
+    fn predict(&self, strategy: Strategy, day: usize, subset: &[usize]) -> Vec<f64>;
+
+    /// Mean observed day-loss of config `c` over days `[from_day, to_day)`.
+    fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64;
+
+    /// Steps config `c` has actually trained (empirical-cost audit).
+    fn steps_trained(&self, c: usize) -> usize;
+
+    fn total_steps(&self) -> usize {
+        self.days() * self.steps_per_day()
+    }
+
+    /// Observed eval-window metric \bar m for `subset` (Algorithm 1 line
+    /// 11 — callers must have trained these configs to the full horizon).
+    fn final_scores(&self, subset: &[usize]) -> Vec<f64> {
+        subset
+            .iter()
+            .map(|&c| self.window_mean(c, self.days() - self.eval_days(), self.days()))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------- replay
+
+/// Replay backend over a recorded [`TrajectorySet`]: advancing a config
+/// is pure bookkeeping (the data already exists), so a session replay is
+/// a cheap deterministic function of its plan.
+pub struct ReplayDriver<'t> {
+    ts: &'t TrajectorySet,
+    /// Day each config has "trained" through.
+    cursor: Vec<usize>,
+    /// Start day per config (late starting).
+    start: Vec<usize>,
+}
+
+impl<'t> ReplayDriver<'t> {
+    pub fn new(ts: &'t TrajectorySet) -> ReplayDriver<'t> {
+        ReplayDriver {
+            cursor: vec![0; ts.n_configs()],
+            start: vec![0; ts.n_configs()],
+            ts,
+        }
+    }
+}
+
+impl SearchDriver for ReplayDriver<'_> {
+    fn n_configs(&self) -> usize {
+        self.ts.n_configs()
+    }
+
+    fn days(&self) -> usize {
+        self.ts.days
+    }
+
+    fn steps_per_day(&self) -> usize {
+        self.ts.steps_per_day
+    }
+
+    fn eval_days(&self) -> usize {
+        self.ts.eval_days
+    }
+
+    fn train_to(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        let day = day.min(self.ts.days);
+        for &c in configs {
+            if self.cursor[c] < day {
+                self.cursor[c] = day;
+            }
+        }
+        Ok(())
+    }
+
+    fn start_at(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        for &c in configs {
+            self.start[c] = day;
+            if self.cursor[c] < day {
+                self.cursor[c] = day;
+            }
+        }
+        Ok(())
+    }
+
+    fn predict(&self, strategy: Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
+        self.ts.predict_subset(strategy, day, subset)
+    }
+
+    fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64 {
+        let spd = self.ts.steps_per_day;
+        let to = to_day.min(self.ts.days);
+        let from = from_day.min(to.saturating_sub(1));
+        let mut sum = 0.0;
+        for d in from..to {
+            let s = &self.ts.step_losses[c][d * spd..(d + 1) * spd];
+            sum += s.iter().map(|&x| x as f64).sum::<f64>() / spd as f64;
+        }
+        sum / (to - from) as f64
+    }
+
+    fn steps_trained(&self, c: usize) -> usize {
+        (self.cursor[c] - self.start[c]) * self.ts.steps_per_day
+    }
+}
+
+// ------------------------------------------------------------------ live
+
+struct LiveRun<'a> {
+    model: Box<dyn OnlineModel + Send + 'a>,
+    traj: RunTrajectory,
+}
+
+/// One in-flight training segment, moved onto a worker thread and back.
+struct SegJob<'a> {
+    c: usize,
+    t_from: usize,
+    run: LiveRun<'a>,
+    seconds: f64,
+    result: Result<()>,
+}
+
+/// Live backend: Algorithm 1 driving *real* training runs. Models are
+/// created lazily (a config that is never advanced costs nothing),
+/// trained segment by segment, and pruned configs simply stop being
+/// advanced — the cost model's savings become wall-clock savings.
+pub struct LiveDriver<'a> {
+    factory: &'a dyn ModelFactory,
+    cs: &'a ClusteredStream,
+    specs: &'a [ConfigSpec],
+    data_plan: Plan,
+    seed: i32,
+    workers: usize,
+    runs: Vec<Option<LiveRun<'a>>>,
+    /// Start day per config (late starting).
+    start: Vec<usize>,
+    /// Absolute step each config has trained through.
+    cursor: Vec<usize>,
+    step_seconds: Vec<f64>,
+}
+
+impl<'a> LiveDriver<'a> {
+    pub fn new(
+        factory: &'a dyn ModelFactory,
+        cs: &'a ClusteredStream,
+        specs: &'a [ConfigSpec],
+        data_plan: Plan,
+        seed: i32,
+    ) -> LiveDriver<'a> {
+        let n = specs.len();
+        LiveDriver {
+            factory,
+            cs,
+            specs,
+            data_plan,
+            seed,
+            workers: 1,
+            runs: (0..n).map(|_| None).collect(),
+            start: vec![0; n],
+            cursor: vec![0; n],
+            step_seconds: vec![0.0; n],
+        }
+    }
+
+    /// Fan segment training out over `workers` scoped threads (0 = all
+    /// cores minus one). Per-config runs are independent, so the search
+    /// outcome is worker-count-invariant; only wall-clock changes.
+    pub fn with_workers(mut self, workers: usize) -> LiveDriver<'a> {
+        self.workers = if workers == 0 {
+            ThreadPool::default_workers()
+        } else {
+            workers
+        };
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Wall-clock spent training each config (diagnostics).
+    pub fn step_seconds(&self) -> &[f64] {
+        &self.step_seconds
+    }
+
+    /// Wall-clock a full (no-stopping) search would have spent, estimated
+    /// from the measured per-step time of each config's own run.
+    pub fn full_wall_estimate(&self) -> f64 {
+        let t_total = self.cs.stream.cfg.total_steps();
+        (0..self.specs.len())
+            .map(|c| {
+                let per_step = self.step_seconds[c] / self.steps_trained(c).max(1) as f64;
+                per_step * t_total as f64
+            })
+            .sum()
+    }
+}
+
+impl SearchDriver for LiveDriver<'_> {
+    fn n_configs(&self) -> usize {
+        self.specs.len()
+    }
+
+    fn days(&self) -> usize {
+        self.cs.stream.cfg.days
+    }
+
+    fn steps_per_day(&self) -> usize {
+        self.cs.stream.cfg.steps_per_day
+    }
+
+    fn eval_days(&self) -> usize {
+        self.cs.eval_days
+    }
+
+    fn train_to(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        let cfg = &self.cs.stream.cfg;
+        let spd = cfg.steps_per_day;
+        let t_to = day.min(cfg.days) * spd;
+
+        // Collect the segments that actually need steps, creating runs
+        // lazily; each job owns its model + trajectory for the duration.
+        let mut jobs: Vec<Mutex<SegJob>> = Vec::new();
+        for &c in configs {
+            if self.cursor[c] >= t_to {
+                continue;
+            }
+            if self.runs[c].is_none() {
+                self.cursor[c] = self.start[c] * spd;
+                self.runs[c] = Some(LiveRun {
+                    model: self.factory.create(&self.specs[c], self.seed)?,
+                    traj: RunTrajectory {
+                        step_losses: Vec::with_capacity(cfg.total_steps() - self.cursor[c]),
+                        cluster_loss_sums: vec![vec![0.0; self.cs.n_clusters]; cfg.days],
+                        examples_trained: 0,
+                        examples_seen: 0,
+                    },
+                });
+            }
+            jobs.push(Mutex::new(SegJob {
+                c,
+                t_from: self.cursor[c],
+                run: self.runs[c].take().expect("run just created"),
+                seconds: 0.0,
+                result: Ok(()),
+            }));
+        }
+        if jobs.is_empty() {
+            return Ok(());
+        }
+
+        let (cs, plan, specs, seed) = (self.cs, self.data_plan, self.specs, self.seed as u64);
+        ThreadPool::scoped_map(self.workers.min(jobs.len()), &jobs, |_, m| {
+            let mut guard = m.lock().expect("segment job mutex");
+            let j = &mut *guard;
+            let t0 = Instant::now();
+            j.result = run_range(
+                j.run.model.as_mut(),
+                cs,
+                plan,
+                specs[j.c].hparams(),
+                seed,
+                j.t_from,
+                t_to,
+                &mut j.run.traj,
+            );
+            j.seconds = t0.elapsed().as_secs_f64();
+        });
+
+        let mut first_err = None;
+        for m in jobs {
+            let j = m.into_inner().expect("segment job mutex");
+            let c = j.c;
+            self.step_seconds[c] += j.seconds;
+            match j.result {
+                Ok(()) => {
+                    self.runs[c] = Some(j.run);
+                    self.cursor[c] = t_to;
+                }
+                Err(e) => {
+                    // Drop the partially-extended run: a retry recreates
+                    // the model and trains the config from its start day
+                    // again, so a failed segment can never leave torn or
+                    // duplicated trajectory data behind.
+                    self.runs[c] = None;
+                    self.cursor[c] = self.start[c] * spd;
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn start_at(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        for &c in configs {
+            if self.runs[c].is_some() {
+                return Err(crate::err!(
+                    "config {c} already training; late start must precede training"
+                ));
+            }
+            self.start[c] = day;
+            self.cursor[c] = day * self.cs.stream.cfg.steps_per_day;
+        }
+        Ok(())
+    }
+
+    /// View the partial live trajectories of `subset` as a
+    /// [`TrajectorySet`] so the bank-replay predictors work unchanged.
+    /// (Only valid for configs started at day 0; late-started runs are
+    /// ranked via [`window_mean`](SearchDriver::window_mean).)
+    fn predict(&self, strategy: Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
+        let cfg = &self.cs.stream.cfg;
+        let traj_of = |c: usize| self.runs[c].as_ref().expect("config never trained");
+        let ts = TrajectorySet {
+            steps_per_day: cfg.steps_per_day,
+            days: cfg.days,
+            eval_days: self.cs.eval_days,
+            step_losses: subset.iter().map(|&c| traj_of(c).traj.step_losses.clone()).collect(),
+            day_cluster_counts: self.cs.day_cluster_counts.clone(),
+            cluster_loss_sums: subset
+                .iter()
+                .map(|&c| traj_of(c).traj.cluster_loss_sums.clone())
+                .collect(),
+            eval_cluster_counts: self.cs.eval_cluster_counts.clone(),
+        };
+        let all_local: Vec<usize> = (0..subset.len()).collect();
+        ts.predict_subset(strategy, day, &all_local)
+    }
+
+    fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64 {
+        let spd = self.cs.stream.cfg.steps_per_day;
+        let run = self.runs[c].as_ref().expect("config never trained");
+        let to = to_day.min(self.cs.stream.cfg.days);
+        let from = from_day.min(to.saturating_sub(1)).max(self.start[c]);
+        let mut sum = 0.0;
+        for d in from..to {
+            let ld = d - self.start[c]; // local day within this run
+            let s = &run.traj.step_losses[ld * spd..(ld + 1) * spd];
+            sum += s.iter().map(|&x| x as f64).sum::<f64>() / spd as f64;
+        }
+        sum / (to - from) as f64
+    }
+
+    fn steps_trained(&self, c: usize) -> usize {
+        self.cursor[c] - self.start[c] * self.cs.stream.cfg.steps_per_day
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testkit::toy;
+
+    #[test]
+    fn replay_driver_tracks_cursor_and_steps() {
+        let ts = toy(4, 12, 8, 1);
+        let mut d = ReplayDriver::new(&ts);
+        assert_eq!(d.n_configs(), 4);
+        assert_eq!(d.total_steps(), 96);
+        d.train_to(&[0, 1], 6).unwrap();
+        assert_eq!(d.steps_trained(0), 48);
+        assert_eq!(d.steps_trained(2), 0);
+        // advancing backwards is a no-op
+        d.train_to(&[0], 3).unwrap();
+        assert_eq!(d.steps_trained(0), 48);
+        // clamped to the horizon
+        d.train_to(&[3], 99).unwrap();
+        assert_eq!(d.steps_trained(3), 96);
+    }
+
+    #[test]
+    fn replay_window_mean_matches_day_means() {
+        let ts = toy(3, 12, 8, 2);
+        let d = ReplayDriver::new(&ts);
+        let dm = ts.day_means(1, 12);
+        let expect = dm[9..].iter().sum::<f64>() / 3.0;
+        assert_eq!(d.window_mean(1, 9, 12).to_bits(), expect.to_bits());
+        let gt = ts.ground_truth();
+        assert_eq!(d.final_scores(&[1])[0].to_bits(), gt[1].to_bits());
+    }
+
+    #[test]
+    fn replay_late_start_steps() {
+        let ts = toy(2, 12, 8, 3);
+        let mut d = ReplayDriver::new(&ts);
+        d.start_at(&[0, 1], 3).unwrap();
+        d.train_to(&[0, 1], 9).unwrap();
+        assert_eq!(d.steps_trained(0), 48);
+    }
+}

@@ -17,7 +17,8 @@
 //! all cores minus one; 1 = serial).
 
 use super::hyperband;
-use super::{SearchOutcome, TrajectorySet};
+use super::session::SearchPlanBuilder;
+use super::{SearchOutcome, SearchPlan, TrajectorySet};
 use crate::predict::Strategy;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
@@ -95,20 +96,26 @@ impl ReplayJob {
         self
     }
 
-    /// Run the replay. Pure: identical inputs give identical outputs.
+    /// Run the replay through the shared [`SearchSession`] core. Pure:
+    /// identical inputs give identical outputs.
     pub fn execute(&self) -> ReplayResult {
         let t0 = Instant::now();
-        let mut outcome = match &self.kind {
+        let outcome = match &self.kind {
             ReplayKind::OneShot { strategy, day_stop } => {
-                self.ts.one_shot(*strategy, *day_stop)
+                self.run_session(SearchPlan::one_shot(*day_stop).strategy(*strategy))
             }
-            ReplayKind::PerfBased { strategy, stop_days, rho } => {
-                self.ts.performance_based(*strategy, stop_days, *rho)
-            }
+            ReplayKind::PerfBased { strategy, stop_days, rho } => self.run_session(
+                SearchPlan::performance_based(stop_days.clone(), *rho).strategy(*strategy),
+            ),
             ReplayKind::LateStart { start_day, day_stop } => {
-                self.ts.late_start(*start_day, *day_stop)
+                // Clamp like the pre-session replay did, so degenerate
+                // windows stay a graceful result rather than a panic.
+                let stop = (*day_stop).max(*start_day + 1);
+                self.run_session(SearchPlan::late_start(*start_day, stop))
             }
             ReplayKind::Hyperband { strategy, eta, brackets_seed, workers } => {
+                // Bracket-parallel fast path: same Algorithm-1 core, one
+                // ReplayDriver per bracket on scoped threads.
                 let hb = hyperband::hyperband_par(
                     &self.ts,
                     *strategy,
@@ -116,19 +123,30 @@ impl ReplayJob {
                     *brackets_seed,
                     (*workers).max(1),
                 );
-                SearchOutcome {
+                let mut outcome = SearchOutcome {
                     ranking: hb.ranking,
                     cost: hb.cost,
                     steps_trained: Vec::new(),
-                }
+                };
+                outcome.cost *= self.plan_mult;
+                outcome
             }
         };
-        outcome.cost *= self.plan_mult;
         ReplayResult {
             outcome,
             tag: self.tag.clone(),
             wall_seconds: t0.elapsed().as_secs_f64(),
         }
+    }
+
+    /// One session over a fresh replay driver. Replay jobs are built
+    /// from trusted harness constants, so plan validation failures are
+    /// programming errors (fail loud, like the old asserts).
+    fn run_session(&self, builder: SearchPlanBuilder) -> SearchOutcome {
+        builder
+            .plan_mult(self.plan_mult)
+            .run_replay(&self.ts)
+            .expect("invalid replay job parameters")
     }
 }
 

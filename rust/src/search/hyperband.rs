@@ -7,11 +7,18 @@
 //! Each bracket s runs Algorithm 1 over a subset of n_s configurations
 //! with an initial budget r_s and the usual pruning ratio; brackets
 //! hedge between "many configs, aggressive stopping" and "few configs,
-//! long training". Replayed over a trajectory bank like everything else.
+//! long training". Bracket *planning* (subsets, schedules) lives here;
+//! bracket *evaluation* is the shared Algorithm-1 core in
+//! `search::session`, so Hyperband runs identically over any
+//! [`SearchDriver`] — replayed from a bank ([`hyperband_par`], with
+//! bracket-level parallelism) or live through
+//! [`hyperband_driver`].
 
-use super::{equally_spaced_stops, SearchOutcome, TrajectorySet};
-use crate::metrics;
+use super::driver::{ReplayDriver, SearchDriver};
+use super::session::{algorithm1, Algo1Out};
+use super::{equally_spaced_stops, TrajectorySet};
 use crate::predict::Strategy;
+use crate::util::error::Result;
 use crate::util::prng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -23,6 +30,112 @@ pub struct HyperbandOutcome {
     pub cost: f64,
     /// (bracket, n_configs, first_stop_day, bracket cost) diagnostics.
     pub brackets: Vec<(usize, usize, usize, f64)>,
+}
+
+/// One planned bracket: evaluation is a pure function of this plan.
+pub struct BracketPlan {
+    pub s: usize,
+    pub subset: Vec<usize>,
+    pub stops: Vec<usize>,
+    pub first_stop: usize,
+}
+
+/// Plan the brackets for `n` configs over `days`: subset assignment is
+/// seeded, allocation is the classic n_s ∝ eta^s / (s+1). Pure — both
+/// execution paths share it, so they agree bracket for bracket.
+pub fn plan_brackets(n: usize, days: usize, eta: f64, seed: u64) -> (Vec<BracketPlan>, f64) {
+    assert!(eta > 1.0);
+    let rho = 1.0 - 1.0 / eta;
+    // s_max brackets: bracket s starts stopping at day ~ days / eta^s.
+    let s_max = ((days as f64).ln() / eta.ln()).floor() as usize;
+    let mut rng = Rng::new(seed ^ 0x48b);
+
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+
+    // Classic Hyperband allocation: bracket s gets n_s ∝ eta^s / (s+1)
+    // configurations — the aggressive brackets explore many configs with
+    // small initial budgets, the conservative ones train few for long.
+    let weights: Vec<f64> = (0..=s_max).map(|s| eta.powi(s as i32) / (s + 1) as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+
+    let mut plans: Vec<BracketPlan> = Vec::new();
+    let mut cursor = 0usize;
+    for s in (0..=s_max).rev() {
+        if cursor >= n {
+            break;
+        }
+        let n_s = if s == 0 {
+            n - cursor // the last bracket absorbs rounding remainders
+        } else {
+            (((n as f64) * weights[s] / wsum).round() as usize).clamp(1, n - cursor)
+        };
+        let subset: Vec<usize> = order[cursor..(cursor + n_s).min(n)].to_vec();
+        cursor += subset.len();
+
+        let first_stop = (days as f64 / eta.powi(s as i32)).max(1.0) as usize;
+        let stops: Vec<usize> = equally_spaced_stops(days, first_stop.max(1));
+        plans.push(BracketPlan { s, subset, stops, first_stop });
+    }
+    (plans, rho)
+}
+
+/// Merge per-bracket Algorithm-1 outcomes into the overall ranking/cost.
+fn merge(
+    plans: &[BracketPlan],
+    outs: &[Algo1Out],
+    n: usize,
+    total_steps: usize,
+) -> HyperbandOutcome {
+    let mut total = 0usize;
+    let mut scored: Vec<(usize, f64)> = Vec::new(); // (config, pseudo-score)
+    let mut brackets = Vec::new();
+    for (p, out) in plans.iter().zip(outs) {
+        let bracket_steps: usize = out.steps_trained.iter().sum();
+        total += bracket_steps;
+        brackets.push((
+            p.s,
+            p.subset.len(),
+            p.first_stop,
+            bracket_steps as f64 / (n * total_steps) as f64,
+        ));
+        // score = position within bracket, scaled into [0,1); ties broken
+        // by config index.
+        for (pos, &cfg) in out.ranking.iter().enumerate() {
+            scored.push((cfg, pos as f64 / p.subset.len() as f64));
+        }
+    }
+
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut ranking: Vec<usize> = scored.iter().map(|&(c, _)| c).collect();
+    for c in 0..n {
+        if !ranking.contains(&c) {
+            ranking.push(c);
+        }
+    }
+
+    HyperbandOutcome {
+        ranking,
+        cost: total as f64 / (n * total_steps) as f64,
+        brackets,
+    }
+}
+
+/// Hyperband against any [`SearchDriver`]: brackets evaluated serially,
+/// each through the shared Algorithm-1 core. This is what
+/// `SearchMethod::Hyperband` runs — replay or live.
+pub fn hyperband_driver(
+    driver: &mut dyn SearchDriver,
+    strategy: Strategy,
+    eta: f64,
+    seed: u64,
+) -> Result<HyperbandOutcome> {
+    let (plans, rho) = plan_brackets(driver.n_configs(), driver.days(), eta, seed);
+    let mut outs: Vec<Algo1Out> = Vec::with_capacity(plans.len());
+    for p in &plans {
+        outs.push(algorithm1(driver, strategy, &p.stops, rho, &p.subset, None)?);
+    }
+    Ok(merge(&plans, &outs, driver.n_configs(), driver.total_steps()))
 }
 
 /// Replay Hyperband over a bank. `eta` is the downsampling factor
@@ -37,17 +150,10 @@ pub fn hyperband(
     hyperband_par(ts, strategy, eta, seed, 1)
 }
 
-/// One planned bracket: evaluation is a pure function of this plan.
-struct BracketPlan {
-    s: usize,
-    subset: Vec<usize>,
-    stops: Vec<usize>,
-    first_stop: usize,
-}
-
-/// Bracket-parallel Hyperband replay: brackets are independent replay
-/// jobs, so with `workers > 1` they are evaluated on scoped threads
-/// (order-preserving — the outcome is bit-identical to the serial path).
+/// Bracket-parallel Hyperband replay: brackets are independent (disjoint
+/// subsets, read-only trajectories), so with `workers > 1` each gets its
+/// own [`ReplayDriver`] on a scoped thread — same core, bit-identical to
+/// the serial path.
 pub fn hyperband_par(
     ts: &TrajectorySet,
     strategy: Strategy,
@@ -55,103 +161,19 @@ pub fn hyperband_par(
     seed: u64,
     workers: usize,
 ) -> HyperbandOutcome {
-    assert!(eta > 1.0);
-    let n = ts.n_configs();
-    let rho = 1.0 - 1.0 / eta;
-    let days = ts.days;
-    // s_max brackets: bracket s starts stopping at day ~ days / eta^s.
-    let s_max = ((days as f64).ln() / eta.ln()).floor() as usize;
-    let mut rng = Rng::new(seed ^ 0x48b);
-
-    let mut order: Vec<usize> = (0..n).collect();
-    rng.shuffle(&mut order);
-
-    // Classic Hyperband allocation: bracket s gets n_s ∝ eta^s / (s+1)
-    // configurations — the aggressive brackets explore many configs with
-    // small initial budgets, the conservative ones train few for long.
-    let weights: Vec<f64> = (0..=s_max).map(|s| eta.powi(s as i32) / (s + 1) as f64).collect();
-    let wsum: f64 = weights.iter().sum();
-
-    // Plan every bracket up front (cheap, sequential, owns the RNG)...
-    let mut plans: Vec<BracketPlan> = Vec::new();
-    let mut cursor = 0usize;
-    for s in (0..=s_max).rev() {
-        if cursor >= n {
-            break;
-        }
-        let n_s = if s == 0 {
-            n - cursor // the last bracket absorbs rounding remainders
-        } else {
-            (((n as f64) * weights[s] / wsum).round() as usize).clamp(1, n - cursor)
-        };
-        let subset: Vec<usize> =
-            order[cursor..(cursor + n_s).min(n)].to_vec();
-        cursor += subset.len();
-
-        let first_stop = (days as f64 / eta.powi(s as i32)).max(1.0) as usize;
-        let stops: Vec<usize> = equally_spaced_stops(days, first_stop.max(1));
-        plans.push(BracketPlan { s, subset, stops, first_stop });
-    }
-
-    // ...then evaluate them — the replay-heavy part — possibly in
-    // parallel. scoped_map preserves plan order.
-    let outs: Vec<SearchOutcome> = ThreadPool::scoped_map(workers, &plans, |_, p| {
-        subset_view(ts, &p.subset).performance_based(strategy, &p.stops, rho)
+    let (plans, rho) = plan_brackets(ts.n_configs(), ts.days, eta, seed);
+    let outs: Vec<Algo1Out> = ThreadPool::scoped_map(workers, &plans, |_, p| {
+        let mut driver = ReplayDriver::new(ts);
+        algorithm1(&mut driver, strategy, &p.stops, rho, &p.subset, None)
+            .expect("replay bracket cannot fail")
     });
-
-    let mut total_steps = 0usize;
-    let mut scored: Vec<(usize, f64)> = Vec::new(); // (config, pseudo-score)
-    let mut brackets = Vec::new();
-    for (p, out) in plans.iter().zip(&outs) {
-        let bracket_steps: usize = out.steps_trained.iter().sum();
-        total_steps += bracket_steps;
-        brackets.push((
-            p.s,
-            p.subset.len(),
-            p.first_stop,
-            bracket_steps as f64 / (n * ts.total_steps()) as f64,
-        ));
-        // score = position within bracket, scaled into [0,1); earlier
-        // brackets (longer budgets) break ties by observed truth later.
-        for (pos, &local) in out.ranking.iter().enumerate() {
-            scored.push((p.subset[local], pos as f64 / p.subset.len() as f64));
-        }
-    }
-
-    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
-    let mut ranking: Vec<usize> = scored.iter().map(|&(c, _)| c).collect();
-    for c in 0..n {
-        if !ranking.contains(&c) {
-            ranking.push(c);
-        }
-    }
-
-    HyperbandOutcome {
-        ranking,
-        cost: total_steps as f64 / (n * ts.total_steps()) as f64,
-        brackets,
-    }
-}
-
-/// View a subset of configs as their own TrajectorySet.
-fn subset_view(ts: &TrajectorySet, subset: &[usize]) -> TrajectorySet {
-    TrajectorySet {
-        steps_per_day: ts.steps_per_day,
-        days: ts.days,
-        eval_days: ts.eval_days,
-        step_losses: subset.iter().map(|&c| ts.step_losses[c].clone()).collect(),
-        day_cluster_counts: ts.day_cluster_counts.clone(),
-        cluster_loss_sums: subset
-            .iter()
-            .map(|&c| ts.cluster_loss_sums[c].clone())
-            .collect(),
-        eval_cluster_counts: ts.eval_cluster_counts.clone(),
-    }
+    merge(&plans, &outs, ts.n_configs(), ts.total_steps())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics;
     use crate::surrogate::{sample_task, SurrogateConfig};
 
     fn ts() -> TrajectorySet {
@@ -208,6 +230,20 @@ mod tests {
         let ts = ts();
         let a = hyperband(&ts, Strategy::Constant, 3.0, 11);
         let b = hyperband_par(&ts, Strategy::Constant, 3.0, 11, 4);
+        assert_eq!(a.ranking, b.ranking);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.brackets, b.brackets);
+    }
+
+    #[test]
+    fn shared_driver_matches_per_bracket_drivers() {
+        // hyperband_driver (one driver for all brackets — the live shape)
+        // and hyperband_par (one driver per bracket) share the core; the
+        // outcomes must be identical on a replay backend.
+        let ts = ts();
+        let a = hyperband_par(&ts, Strategy::Constant, 3.0, 13, 2);
+        let mut d = ReplayDriver::new(&ts);
+        let b = hyperband_driver(&mut d, Strategy::Constant, 3.0, 13).unwrap();
         assert_eq!(a.ranking, b.ranking);
         assert_eq!(a.cost.to_bits(), b.cost.to_bits());
         assert_eq!(a.brackets, b.brackets);

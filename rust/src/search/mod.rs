@@ -1,22 +1,32 @@
-//! Search strategies (§4.1): one-shot early stopping, performance-based
-//! stopping (Algorithm 1), late starting — replayed over recorded
-//! trajectories (the paper's backtesting methodology) or driven live by
-//! the coordinator.
+//! Search layer (§4.1): the unified two-stage [`SearchSession`] API.
+//!
+//! The paper's strategies — one-shot early stopping, performance-based
+//! stopping (Algorithm 1), late starting, Hyperband brackets — are each
+//! written **once** in [`session`] against the [`SearchDriver`] trait,
+//! and driven by exactly two backends ([`driver`]): replaying recorded
+//! trajectories (the paper's backtesting methodology) or training real
+//! models live through the coordinator. [`TrajectorySet`] is the recorded
+//! data a replay consumes; the strategies themselves no longer live on it.
 
 pub mod cost;
+pub mod driver;
 pub mod executor;
 pub mod hyperband;
+pub mod session;
 pub mod sweep;
 
+pub use driver::{LiveDriver, ReplayDriver, SearchDriver};
 pub use executor::{ReplayExecutor, ReplayJob, ReplayKind, ReplayResult};
+pub use session::{
+    SearchMethod, SearchPlan, SearchPlanBuilder, SearchSession, TwoStageOutcome,
+};
 
-use crate::metrics;
 use crate::predict::{self, Strategy};
 
 /// Everything the search strategies need to know about a family's runs:
 /// full per-step metric trajectories plus per-day per-cluster loss
 /// decompositions (for stratified prediction). Produced by the trainer
-/// (`train::bank`), consumed here.
+/// (`train::bank`), consumed by [`ReplayDriver`].
 #[derive(Clone, Debug)]
 pub struct TrajectorySet {
     pub steps_per_day: usize,
@@ -34,7 +44,7 @@ pub struct TrajectorySet {
 }
 
 /// Result of a search strategy: predicted-best-first ranking and its
-/// relative cost C (before any sub-sampling multiplier).
+/// relative cost C (including any sub-sampling multiplier).
 #[derive(Clone, Debug)]
 pub struct SearchOutcome {
     pub ranking: Vec<usize>,
@@ -113,109 +123,6 @@ impl TrajectorySet {
             }
         }
     }
-
-    // ------------------------------------------------------- strategies
-
-    /// One-shot early stopping (§4.1.1): stop everything at `day_stop`,
-    /// rank by the chosen prediction strategy.
-    pub fn one_shot(&self, strategy: Strategy, day_stop: usize) -> SearchOutcome {
-        let day_stop = day_stop.clamp(1, self.days);
-        let all: Vec<usize> = (0..self.n_configs()).collect();
-        let preds = self.predict_subset(strategy, day_stop, &all);
-        let ranking = metrics::ranking_from_scores(&preds);
-        let steps = vec![day_stop * self.steps_per_day; self.n_configs()];
-        SearchOutcome {
-            ranking,
-            cost: cost::one_shot(day_stop * self.steps_per_day, self.total_steps()),
-            steps_trained: steps,
-        }
-    }
-
-    /// Performance-based stopping — the paper's Algorithm 1. At each
-    /// stopping day, predict the remaining configs' final metrics, prune
-    /// the worst `rho` fraction, continue the rest. With constant
-    /// prediction and rho = 1/2 this is successive halving.
-    pub fn performance_based(
-        &self,
-        strategy: Strategy,
-        stop_days: &[usize],
-        rho: f64,
-    ) -> SearchOutcome {
-        assert!((0.0..1.0).contains(&rho));
-        let n = self.n_configs();
-        let mut remaining: Vec<usize> = (0..n).collect();
-        let mut tail: Vec<usize> = Vec::new(); // pruned, best-first
-        let mut steps_trained = vec![self.total_steps(); n];
-
-        let mut days: Vec<usize> = stop_days
-            .iter()
-            .copied()
-            .filter(|&d| d >= 1 && d < self.days)
-            .collect();
-        days.sort_unstable();
-        days.dedup();
-
-        for &day in &days {
-            if remaining.len() <= 1 {
-                break;
-            }
-            let preds = self.predict_subset(strategy, day, &remaining);
-            let order = metrics::ranking_from_scores(&preds); // best-first, local idx
-            let n_prune = (((remaining.len() as f64) * rho).floor() as usize)
-                .min(remaining.len() - 1);
-            if n_prune == 0 {
-                continue;
-            }
-            let cut = remaining.len() - n_prune;
-            let pruned: Vec<usize> = order[cut..].iter().map(|&i| remaining[i]).collect();
-            for &c in &pruned {
-                steps_trained[c] = day * self.steps_per_day;
-            }
-            // Algorithm 1 line 8: newly pruned go ahead of earlier-pruned.
-            let mut new_tail = pruned;
-            new_tail.extend(tail);
-            tail = new_tail;
-            remaining = order[..cut].iter().map(|&i| remaining[i]).collect();
-        }
-
-        // Line 11-12: survivors ranked by their computed (full-data)
-        // performance, ahead of everything pruned.
-        let truth = self.ground_truth();
-        let survivor_scores: Vec<f64> = remaining.iter().map(|&c| truth[c]).collect();
-        let order = metrics::ranking_from_scores(&survivor_scores);
-        let mut ranking: Vec<usize> = order.iter().map(|&i| remaining[i]).collect();
-        ranking.extend(tail);
-
-        SearchOutcome {
-            ranking,
-            cost: cost::empirical(&steps_trained, self.total_steps()),
-            steps_trained,
-        }
-    }
-
-    /// Late starting (§B.4): train only from `start_day`, stop at
-    /// `day_stop`, rank by constant prediction over the observed window.
-    pub fn late_start(&self, start_day: usize, day_stop: usize) -> SearchOutcome {
-        let day_stop = day_stop.clamp(start_day + 1, self.days);
-        let n = self.n_configs();
-        // NOTE: replaying a late start from full-data trajectories is an
-        // approximation (the real late-started model would warm up from
-        // scratch); the coordinator's live mode runs it exactly. For
-        // ranking purposes the warm-up bias is shared across configs.
-        let preds: Vec<f64> = (0..n)
-            .map(|c| {
-                let dm = self.day_means(c, day_stop);
-                let window = &dm[start_day.min(dm.len() - 1)..];
-                window.iter().sum::<f64>() / window.len() as f64
-            })
-            .collect();
-        let steps = (day_stop - start_day) * self.steps_per_day;
-        SearchOutcome {
-            ranking: metrics::ranking_from_scores(&preds),
-            cost: cost::one_shot(steps, self.total_steps()),
-            steps_trained: vec![steps; n],
-        }
-    }
 }
 
 /// Equally spaced stopping days: every `every` days starting at `every`
@@ -230,9 +137,10 @@ pub fn equally_spaced_stops(days: usize, every: usize) -> Vec<usize> {
         .collect()
 }
 
+/// Synthetic trajectory sets shared by the search-layer unit tests.
 #[cfg(test)]
-mod tests {
-    use super::*;
+pub(crate) mod testkit {
+    use super::TrajectorySet;
     use crate::util::prng::Rng;
 
     /// Synthetic trajectory set: config quality ordered by index, shared
@@ -276,6 +184,13 @@ mod tests {
             eval_cluster_counts: vec![1000],
         }
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testkit::toy;
+    use super::*;
+    use crate::metrics;
 
     #[test]
     fn ground_truth_orders_by_quality() {
@@ -286,93 +201,12 @@ mod tests {
     }
 
     #[test]
-    fn one_shot_full_data_recovers_truth() {
-        let ts = toy(8, 12, 8, 2);
-        let out = ts.one_shot(Strategy::Constant, 12);
-        assert_eq!(out.cost, 1.0);
-        assert!(metrics::per(&out.ranking, &ts.ground_truth()) < 0.1);
-    }
-
-    #[test]
-    fn one_shot_cost_scales_with_stop_day() {
-        let ts = toy(4, 12, 8, 3);
-        assert!((ts.one_shot(Strategy::Constant, 6).cost - 0.5).abs() < 1e-12);
-        assert!((ts.one_shot(Strategy::Constant, 3).cost - 0.25).abs() < 1e-12);
-    }
-
-    #[test]
-    fn perf_stopping_cheaper_than_one_shot_at_same_final_day() {
-        let ts = toy(16, 12, 8, 4);
-        let stops = equally_spaced_stops(12, 3); // 3,6,9
-        let pb = ts.performance_based(Strategy::Constant, &stops, 0.5);
-        assert!(pb.cost < 1.0);
-        // analytic formula agrees when prunes divide evenly (16 -> 8 -> 4 -> 2)
-        let analytic = cost::performance_based(
-            &stops.iter().map(|d| d * 8).collect::<Vec<_>>(),
-            0.5,
-            96,
-        );
-        assert!((pb.cost - analytic).abs() < 1e-9, "{} vs {analytic}", pb.cost);
-    }
-
-    #[test]
-    fn perf_stopping_ranking_is_permutation_and_good_at_top() {
-        let ts = toy(12, 12, 8, 5);
-        let out = ts.performance_based(Strategy::Constant, &[4, 8], 0.5);
-        let mut r = out.ranking.clone();
-        r.sort_unstable();
-        assert_eq!(r, (0..12).collect::<Vec<_>>());
-        let gt = ts.ground_truth();
-        let reg3 = metrics::regret_at_k(&out.ranking, &gt, 3);
-        assert!(reg3 < 0.02, "regret@3 {reg3}");
-    }
-
-    #[test]
-    fn survivors_outrank_pruned() {
-        let ts = toy(8, 12, 8, 6);
-        let out = ts.performance_based(Strategy::Constant, &[6], 0.5);
-        // the 4 pruned configs occupy the last 4 positions
-        let gt = ts.ground_truth();
-        let survivor_worst: f64 = out.ranking[..4]
-            .iter()
-            .map(|&c| gt[c])
-            .fold(f64::MIN, f64::max);
-        // With a clean toy signal the best config must be a survivor.
-        assert!(out.ranking[0] == 0 || survivor_worst < 0.6);
-        assert_eq!(out.steps_trained.iter().filter(|&&s| s == 96).count(), 4);
-        assert_eq!(out.steps_trained.iter().filter(|&&s| s == 48).count(), 4);
-    }
-
-    #[test]
-    fn trajectory_strategy_runs_through_search() {
-        let ts = toy(6, 12, 8, 7);
-        let out = ts.one_shot(
-            Strategy::Trajectory(crate::predict::LawKind::InversePowerLaw),
-            6,
-        );
-        let gt = ts.ground_truth();
-        assert!(metrics::regret_at_k(&out.ranking, &gt, 3) < 0.05);
-    }
-
-    #[test]
-    fn stratified_strategy_runs_through_search() {
-        let ts = toy(5, 12, 8, 8);
-        let out = ts.one_shot(
-            Strategy::Stratified {
-                law: Some(crate::predict::LawKind::InversePowerLaw),
-                n_slices: 1,
-            },
-            6,
-        );
-        assert_eq!(out.ranking.len(), 5);
-    }
-
-    #[test]
-    fn late_start_costs_window_only() {
-        let ts = toy(4, 12, 8, 9);
-        let out = ts.late_start(3, 9);
-        assert!((out.cost - 0.5).abs() < 1e-12);
-        assert_eq!(out.ranking.len(), 4);
+    fn predict_subset_aligns_with_subset() {
+        let ts = toy(6, 12, 8, 2);
+        let full = ts.predict_subset(Strategy::Constant, 6, &[0, 1, 2, 3, 4, 5]);
+        let sub = ts.predict_subset(Strategy::Constant, 6, &[4, 1]);
+        assert_eq!(sub[0].to_bits(), full[4].to_bits());
+        assert_eq!(sub[1].to_bits(), full[1].to_bits());
     }
 
     #[test]

@@ -1,0 +1,715 @@
+//! The unified two-stage search session: the paper's paradigm as a
+//! first-class API.
+//!
+//! A [`SearchPlan`] names *what* to search — a method (one-shot,
+//! performance-based / Algorithm 1, late starting, Hyperband), a
+//! prediction [`Strategy`], a sub-sampling cost multiplier, an optional
+//! budget cap, and the stage-2 finalist count. A
+//! [`SearchDriver`](super::SearchDriver) names *where* the observations
+//! come from — bank replay ([`ReplayDriver`](super::ReplayDriver)) or
+//! live training ([`LiveDriver`](super::LiveDriver)). Every strategy is
+//! written exactly once here against the driver trait; there are no
+//! per-backend copies of the pruning loop.
+//!
+//! [`SearchSession::run`] executes stage 1 (identify promising configs
+//! cheaply); [`SearchSession::run_two_stage`] realizes the paper's full
+//! paradigm — identify the top-k under the plan, then resume and finish
+//! *only those* to the full horizon, reporting the combined relative
+//! cost C.
+
+use super::driver::{ReplayDriver, SearchDriver};
+use super::{cost, hyperband, SearchOutcome, TrajectorySet};
+use crate::err;
+use crate::metrics;
+use crate::predict::Strategy;
+use crate::util::error::Result;
+
+/// Which search method stage 1 runs. All methods are driven through the
+/// same [`SearchDriver`] trait.
+#[derive(Clone, Debug)]
+pub enum SearchMethod {
+    /// One-shot early stopping (§4.1.1): stop everything at `day_stop`,
+    /// rank by the prediction strategy.
+    OneShot { day_stop: usize },
+    /// Performance-based stopping — the paper's Algorithm 1. With
+    /// constant prediction and rho = 1/2 this is successive halving.
+    PerformanceBased { stop_days: Vec<usize>, rho: f64 },
+    /// Late starting (§B.4): train only over `[start_day, day_stop)`,
+    /// rank by the mean observed day loss.
+    LateStart { start_day: usize, day_stop: usize },
+    /// Hyperband brackets over Algorithm 1 (the §2 extension).
+    Hyperband { eta: f64, brackets_seed: u64 },
+}
+
+/// A validated search plan: method × prediction strategy × data-reduction
+/// multiplier × budget × finalist count. Build via [`SearchPlan::one_shot`]
+/// and friends; [`SearchPlanBuilder::build`] rejects invalid parameters
+/// instead of panicking.
+#[derive(Clone, Debug)]
+pub struct SearchPlan {
+    pub method: SearchMethod,
+    pub strategy: Strategy,
+    /// Sub-sampling cost multiplier (§4.1.2), applied to every reported
+    /// relative cost C.
+    pub plan_mult: f64,
+    /// Cap on the stage-1 relative cost C (after `plan_mult`); Algorithm 1
+    /// stops advancing once the next segment would exceed it.
+    pub budget: Option<f64>,
+    /// Finalists stage 2 resumes to the full horizon.
+    pub top_k: usize,
+}
+
+impl SearchPlan {
+    pub fn one_shot(day_stop: usize) -> SearchPlanBuilder {
+        SearchPlanBuilder::new(SearchMethod::OneShot { day_stop })
+    }
+
+    pub fn performance_based(stop_days: Vec<usize>, rho: f64) -> SearchPlanBuilder {
+        SearchPlanBuilder::new(SearchMethod::PerformanceBased { stop_days, rho })
+    }
+
+    pub fn late_start(start_day: usize, day_stop: usize) -> SearchPlanBuilder {
+        SearchPlanBuilder::new(SearchMethod::LateStart { start_day, day_stop })
+    }
+
+    pub fn hyperband(eta: f64, brackets_seed: u64) -> SearchPlanBuilder {
+        SearchPlanBuilder::new(SearchMethod::Hyperband { eta, brackets_seed })
+    }
+}
+
+pub struct SearchPlanBuilder {
+    method: SearchMethod,
+    strategy: Strategy,
+    plan_mult: f64,
+    budget: Option<f64>,
+    top_k: usize,
+}
+
+impl SearchPlanBuilder {
+    fn new(method: SearchMethod) -> SearchPlanBuilder {
+        SearchPlanBuilder {
+            method,
+            strategy: Strategy::Constant,
+            plan_mult: 1.0,
+            budget: None,
+            top_k: 3,
+        }
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn plan_mult(mut self, mult: f64) -> Self {
+        self.plan_mult = mult;
+        self
+    }
+
+    pub fn budget(mut self, cost_cap: f64) -> Self {
+        self.budget = Some(cost_cap);
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    /// Validate and build. Every rejection is an error, not a panic —
+    /// CLI and live callers feed user input straight in.
+    pub fn build(self) -> Result<SearchPlan> {
+        if !(self.plan_mult.is_finite() && self.plan_mult > 0.0) {
+            return Err(err!("plan_mult must be finite and > 0, got {}", self.plan_mult));
+        }
+        if let Some(b) = self.budget {
+            if !(b.is_finite() && b > 0.0) {
+                return Err(err!("budget must be finite and > 0, got {b}"));
+            }
+        }
+        if self.top_k == 0 {
+            return Err(err!("top_k must be >= 1"));
+        }
+        match &self.method {
+            SearchMethod::OneShot { day_stop } => {
+                if *day_stop == 0 {
+                    return Err(err!("one-shot day_stop must be >= 1"));
+                }
+            }
+            SearchMethod::PerformanceBased { stop_days, rho } => {
+                if !(rho.is_finite() && (0.0..1.0).contains(rho)) {
+                    return Err(err!("rho must be in [0, 1), got {rho}"));
+                }
+                if stop_days.contains(&0) {
+                    return Err(err!("stopping days must be >= 1 (got day 0)"));
+                }
+            }
+            SearchMethod::LateStart { start_day, day_stop } => {
+                if day_stop <= start_day {
+                    return Err(err!(
+                        "late start needs day_stop > start_day, got [{start_day}, {day_stop})"
+                    ));
+                }
+            }
+            SearchMethod::Hyperband { eta, .. } => {
+                if !(eta.is_finite() && *eta > 1.0) {
+                    return Err(err!("hyperband eta must be > 1, got {eta}"));
+                }
+                if self.budget.is_some() {
+                    return Err(err!("budget caps are not supported for hyperband brackets"));
+                }
+            }
+        }
+        Ok(SearchPlan {
+            method: self.method,
+            strategy: self.strategy,
+            plan_mult: self.plan_mult,
+            budget: self.budget,
+            top_k: self.top_k,
+        })
+    }
+
+    /// Build the plan and run stage 1 once over a fresh replay driver —
+    /// the one-line form for banks and recorded trajectory sets.
+    pub fn run_replay(self, ts: &TrajectorySet) -> Result<SearchOutcome> {
+        let plan = self.build()?;
+        let mut driver = ReplayDriver::new(ts);
+        SearchSession::new(plan, &mut driver).run()
+    }
+}
+
+/// Result of [`SearchSession::run_two_stage`]: the paper's full paradigm.
+#[derive(Clone, Debug)]
+pub struct TwoStageOutcome {
+    /// Stage 1: the cheap identification pass under the plan.
+    pub stage1: SearchOutcome,
+    /// The top-k configs stage 2 resumed to the full horizon.
+    pub finalists: Vec<usize>,
+    /// Finalists ranked by their *observed* final metric, then everything
+    /// else in stage-1 order.
+    pub final_ranking: Vec<usize>,
+    /// Relative cost of the stage-2 finishing runs alone.
+    pub stage2_cost: f64,
+    /// Combined relative cost C of both stages.
+    pub combined_cost: f64,
+    /// Steps each config trained across both stages.
+    pub steps_trained: Vec<usize>,
+}
+
+/// One search over one driver: the only entry point to the strategy
+/// implementations, shared verbatim between replay and live backends.
+pub struct SearchSession<'d> {
+    plan: SearchPlan,
+    driver: &'d mut dyn SearchDriver,
+}
+
+impl<'d> SearchSession<'d> {
+    pub fn new(plan: SearchPlan, driver: &'d mut dyn SearchDriver) -> SearchSession<'d> {
+        SearchSession { plan, driver }
+    }
+
+    pub fn plan(&self) -> &SearchPlan {
+        &self.plan
+    }
+
+    /// Stage 1: identify promising configs under the plan. The reported
+    /// cost includes the plan's sub-sampling multiplier.
+    pub fn run(&mut self) -> Result<SearchOutcome> {
+        // Budget is specified post-multiplier; the core works pre-multiplier.
+        let budget = self.plan.budget.map(|b| b / self.plan.plan_mult);
+        let strategy = self.plan.strategy;
+        let mut out = match &self.plan.method {
+            SearchMethod::OneShot { day_stop } => {
+                run_one_shot(self.driver, strategy, *day_stop, budget)?
+            }
+            SearchMethod::PerformanceBased { stop_days, rho } => {
+                let subset: Vec<usize> = (0..self.driver.n_configs()).collect();
+                let core =
+                    algorithm1(self.driver, strategy, stop_days, *rho, &subset, budget)?;
+                SearchOutcome {
+                    ranking: core.ranking,
+                    cost: cost::empirical(&core.steps_trained, self.driver.total_steps()),
+                    steps_trained: core.steps_trained,
+                }
+            }
+            SearchMethod::LateStart { start_day, day_stop } => {
+                run_late_start(self.driver, *start_day, *day_stop, budget)?
+            }
+            SearchMethod::Hyperband { eta, brackets_seed } => {
+                let hb = hyperband::hyperband_driver(
+                    self.driver,
+                    strategy,
+                    *eta,
+                    *brackets_seed,
+                )?;
+                // The driver tracked every bracket's training, so the
+                // empirical-cost audit holds: empirical(steps) == hb.cost.
+                let steps_trained: Vec<usize> = (0..self.driver.n_configs())
+                    .map(|c| self.driver.steps_trained(c))
+                    .collect();
+                SearchOutcome { ranking: hb.ranking, cost: hb.cost, steps_trained }
+            }
+        };
+        out.cost *= self.plan.plan_mult;
+        Ok(out)
+    }
+
+    /// The full two-stage paradigm: stage 1 identifies the top-k under
+    /// the plan, stage 2 resumes/finishes *only those* to the full
+    /// horizon and ranks them by observed performance, reporting the
+    /// combined cost C.
+    pub fn run_two_stage(&mut self) -> Result<TwoStageOutcome> {
+        let stage1 = self.run()?;
+        let n = self.driver.n_configs();
+        let k = self.plan.top_k.min(n);
+        let finalists: Vec<usize> = stage1.ranking[..k].to_vec();
+
+        let days = self.driver.days();
+        self.driver.train_to(&finalists, days)?;
+
+        let scores = self.driver.final_scores(&finalists);
+        let order = metrics::ranking_from_scores(&scores);
+        let mut final_ranking: Vec<usize> = order.iter().map(|&i| finalists[i]).collect();
+        final_ranking.extend(stage1.ranking[k..].iter().copied());
+
+        let steps_trained: Vec<usize> =
+            (0..n).map(|c| self.driver.steps_trained(c)).collect();
+        let combined_cost = cost::empirical(&steps_trained, self.driver.total_steps())
+            * self.plan.plan_mult;
+        let stage2_cost = (combined_cost - stage1.cost).max(0.0);
+        Ok(TwoStageOutcome {
+            stage1,
+            finalists,
+            final_ranking,
+            stage2_cost,
+            combined_cost,
+            steps_trained,
+        })
+    }
+}
+
+// ------------------------------------------------------ the shared cores
+
+/// Whole days of single-config training a relative-cost budget can pay
+/// for; an error if it cannot cover even one.
+fn affordable_days(budget: f64, days: usize) -> Result<usize> {
+    let afford = (budget * days as f64).floor() as usize;
+    if afford == 0 {
+        return Err(err!("budget {budget} cannot cover even one day of {days}"));
+    }
+    Ok(afford)
+}
+
+fn run_one_shot(
+    driver: &mut dyn SearchDriver,
+    strategy: Strategy,
+    day_stop: usize,
+    budget: Option<f64>,
+) -> Result<SearchOutcome> {
+    let days = driver.days();
+    let mut day_stop = day_stop.clamp(1, days);
+    if let Some(b) = budget {
+        day_stop = day_stop.min(affordable_days(b, days)?);
+    }
+    let all: Vec<usize> = (0..driver.n_configs()).collect();
+    driver.train_to(&all, day_stop)?;
+    let preds = driver.predict(strategy, day_stop, &all);
+    let steps_trained: Vec<usize> = all.iter().map(|&c| driver.steps_trained(c)).collect();
+    Ok(SearchOutcome {
+        ranking: metrics::ranking_from_scores(&preds),
+        cost: cost::one_shot(day_stop * driver.steps_per_day(), driver.total_steps()),
+        steps_trained,
+    })
+}
+
+fn run_late_start(
+    driver: &mut dyn SearchDriver,
+    start_day: usize,
+    day_stop: usize,
+    budget: Option<f64>,
+) -> Result<SearchOutcome> {
+    let days = driver.days();
+    let start = start_day.min(days - 1);
+    let mut stop = day_stop.clamp(start + 1, days);
+    if let Some(b) = budget {
+        stop = stop.min(start + affordable_days(b, days)?);
+    }
+    let all: Vec<usize> = (0..driver.n_configs()).collect();
+    driver.start_at(&all, start)?;
+    driver.train_to(&all, stop)?;
+    // NOTE: replaying a late start from full-data trajectories is an
+    // approximation (the real late-started model would warm up from
+    // scratch); the live driver runs it exactly. For ranking purposes
+    // the warm-up bias is shared across configs.
+    let from = start.min(stop - 1);
+    let preds: Vec<f64> = all.iter().map(|&c| driver.window_mean(c, from, stop)).collect();
+    let steps_trained: Vec<usize> = all.iter().map(|&c| driver.steps_trained(c)).collect();
+    Ok(SearchOutcome {
+        ranking: metrics::ranking_from_scores(&preds),
+        cost: cost::one_shot((stop - start) * driver.steps_per_day(), driver.total_steps()),
+        steps_trained,
+    })
+}
+
+/// Outcome of the Algorithm-1 core over a subset of configs.
+pub(crate) struct Algo1Out {
+    /// Global config ids, best first (subset members only).
+    pub ranking: Vec<usize>,
+    /// Steps trained, aligned with the input subset.
+    pub steps_trained: Vec<usize>,
+}
+
+/// The paper's Algorithm 1, written once against the driver trait: at
+/// each stopping day, predict the remaining configs' final metrics,
+/// prune the worst `rho` fraction, train the rest onward. Survivors are
+/// ranked by their observed (full-horizon) performance ahead of the
+/// pruned tail (lines 8, 11-12). `budget` (pre-multiplier, measured over
+/// `subset`) stops advancing once the next segment would exceed it;
+/// remaining configs are then ranked by prediction at the last observed
+/// day.
+pub(crate) fn algorithm1(
+    driver: &mut dyn SearchDriver,
+    strategy: Strategy,
+    stop_days: &[usize],
+    rho: f64,
+    subset: &[usize],
+    budget: Option<f64>,
+) -> Result<Algo1Out> {
+    let days_total = driver.days();
+    let spd = driver.steps_per_day();
+    let mut days: Vec<usize> = stop_days
+        .iter()
+        .copied()
+        .filter(|&d| d >= 1 && d < days_total)
+        .collect();
+    days.sort_unstable();
+    days.dedup();
+    days.push(days_total); // final segment
+
+    let budget_steps =
+        budget.map(|b| (b * (subset.len() * days_total * spd) as f64).floor() as usize);
+
+    let mut remaining: Vec<usize> = subset.to_vec();
+    let mut tail: Vec<usize> = Vec::new(); // pruned, best-first
+    let mut spent = 0usize;
+    let mut seg_start = 0usize;
+    let mut truncated = false;
+
+    for (seg, &day) in days.iter().enumerate() {
+        if let Some(cap) = budget_steps {
+            let seg_cost = remaining.len() * (day - seg_start) * spd;
+            if spent + seg_cost > cap {
+                truncated = true;
+                break;
+            }
+        }
+        driver.train_to(&remaining, day)?;
+        spent += remaining.len() * (day - seg_start) * spd;
+        seg_start = day;
+        let is_final = seg == days.len() - 1;
+        if is_final || remaining.len() <= 1 {
+            continue;
+        }
+
+        // Predict + prune (Algorithm 1 lines 5-10).
+        let preds = driver.predict(strategy, day, &remaining);
+        let order = metrics::ranking_from_scores(&preds); // best-first, local idx
+        let n_prune =
+            (((remaining.len() as f64) * rho).floor() as usize).min(remaining.len() - 1);
+        if n_prune == 0 {
+            continue;
+        }
+        let cut = remaining.len() - n_prune;
+        // Line 8: newly pruned go ahead of earlier-pruned.
+        let mut pruned: Vec<usize> = order[cut..].iter().map(|&i| remaining[i]).collect();
+        pruned.extend(tail);
+        tail = pruned;
+        remaining = order[..cut].iter().map(|&i| remaining[i]).collect();
+    }
+
+    // Lines 11-12: survivors ranked by observed performance, ahead of
+    // everything pruned. Under a truncating budget the survivors never
+    // reached the horizon, so they rank by prediction instead.
+    let scores: Vec<f64> = if truncated {
+        if seg_start == 0 {
+            return Err(err!(
+                "budget {:?} too small to train {} configs through one stopping day",
+                budget,
+                subset.len()
+            ));
+        }
+        driver.predict(strategy, seg_start, &remaining)
+    } else {
+        driver.final_scores(&remaining)
+    };
+    let order = metrics::ranking_from_scores(&scores);
+    let mut ranking: Vec<usize> = order.iter().map(|&i| remaining[i]).collect();
+    ranking.extend(tail);
+
+    let steps_trained: Vec<usize> =
+        subset.iter().map(|&c| driver.steps_trained(c)).collect();
+    Ok(Algo1Out { ranking, steps_trained })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::driver::ReplayDriver;
+    use crate::search::testkit::toy;
+    use crate::search::{equally_spaced_stops, TrajectorySet};
+
+    fn replay(ts: &TrajectorySet, builder: SearchPlanBuilder) -> SearchOutcome {
+        builder.run_replay(ts).unwrap()
+    }
+
+    #[test]
+    fn one_shot_full_data_recovers_truth() {
+        let ts = toy(8, 12, 8, 2);
+        let out = replay(&ts, SearchPlan::one_shot(12));
+        assert_eq!(out.cost, 1.0);
+        assert!(metrics::per(&out.ranking, &ts.ground_truth()) < 0.1);
+    }
+
+    #[test]
+    fn one_shot_cost_scales_with_stop_day() {
+        let ts = toy(4, 12, 8, 3);
+        assert!((replay(&ts, SearchPlan::one_shot(6)).cost - 0.5).abs() < 1e-12);
+        assert!((replay(&ts, SearchPlan::one_shot(3)).cost - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perf_stopping_cheaper_than_one_shot_at_same_final_day() {
+        let ts = toy(16, 12, 8, 4);
+        let stops = equally_spaced_stops(12, 3); // 3,6,9
+        let pb = replay(&ts, SearchPlan::performance_based(stops.clone(), 0.5));
+        assert!(pb.cost < 1.0);
+        // analytic formula agrees when prunes divide evenly (16 -> 8 -> 4 -> 2)
+        let analytic = cost::performance_based(
+            &stops.iter().map(|d| d * 8).collect::<Vec<_>>(),
+            0.5,
+            96,
+        );
+        assert!((pb.cost - analytic).abs() < 1e-9, "{} vs {analytic}", pb.cost);
+    }
+
+    #[test]
+    fn perf_stopping_ranking_is_permutation_and_good_at_top() {
+        let ts = toy(12, 12, 8, 5);
+        let out = replay(&ts, SearchPlan::performance_based(vec![4, 8], 0.5));
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..12).collect::<Vec<_>>());
+        let gt = ts.ground_truth();
+        let reg3 = metrics::regret_at_k(&out.ranking, &gt, 3);
+        assert!(reg3 < 0.02, "regret@3 {reg3}");
+    }
+
+    #[test]
+    fn survivors_outrank_pruned() {
+        let ts = toy(8, 12, 8, 6);
+        let out = replay(&ts, SearchPlan::performance_based(vec![6], 0.5));
+        let gt = ts.ground_truth();
+        let survivor_worst: f64 = out.ranking[..4]
+            .iter()
+            .map(|&c| gt[c])
+            .fold(f64::MIN, f64::max);
+        // With a clean toy signal the best config must be a survivor.
+        assert!(out.ranking[0] == 0 || survivor_worst < 0.6);
+        assert_eq!(out.steps_trained.iter().filter(|&&s| s == 96).count(), 4);
+        assert_eq!(out.steps_trained.iter().filter(|&&s| s == 48).count(), 4);
+    }
+
+    #[test]
+    fn trajectory_strategy_runs_through_search() {
+        let ts = toy(6, 12, 8, 7);
+        let out = replay(
+            &ts,
+            SearchPlan::one_shot(6)
+                .strategy(Strategy::Trajectory(crate::predict::LawKind::InversePowerLaw)),
+        );
+        let gt = ts.ground_truth();
+        assert!(metrics::regret_at_k(&out.ranking, &gt, 3) < 0.05);
+    }
+
+    #[test]
+    fn stratified_strategy_runs_through_search() {
+        let ts = toy(5, 12, 8, 8);
+        let out = replay(
+            &ts,
+            SearchPlan::one_shot(6).strategy(Strategy::Stratified {
+                law: Some(crate::predict::LawKind::InversePowerLaw),
+                n_slices: 1,
+            }),
+        );
+        assert_eq!(out.ranking.len(), 5);
+    }
+
+    #[test]
+    fn late_start_costs_window_only() {
+        let ts = toy(4, 12, 8, 9);
+        let out = replay(&ts, SearchPlan::late_start(3, 9));
+        assert!((out.cost - 0.5).abs() < 1e-12);
+        assert_eq!(out.ranking.len(), 4);
+    }
+
+    #[test]
+    fn hyperband_runs_through_session() {
+        let ts = toy(12, 12, 8, 10);
+        let out = replay(&ts, SearchPlan::hyperband(3.0, 7));
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..12).collect::<Vec<_>>());
+        assert!(out.cost < 1.0);
+    }
+
+    #[test]
+    fn plan_mult_scales_cost() {
+        let ts = toy(4, 12, 8, 11);
+        let base = replay(&ts, SearchPlan::one_shot(6));
+        let scaled = replay(&ts, SearchPlan::one_shot(6).plan_mult(0.25));
+        assert!((base.cost * 0.25 - scaled.cost).abs() < 1e-15);
+    }
+
+    // ------------------------------------------------- plan validation
+
+    #[test]
+    fn build_rejects_bad_rho() {
+        assert!(SearchPlan::performance_based(vec![3], -0.1).build().is_err());
+        assert!(SearchPlan::performance_based(vec![3], 1.0).build().is_err());
+        assert!(SearchPlan::performance_based(vec![3], f64::NAN).build().is_err());
+        assert!(SearchPlan::performance_based(vec![3], 0.0).build().is_ok());
+    }
+
+    #[test]
+    fn build_rejects_bad_stop_days() {
+        assert!(SearchPlan::performance_based(vec![0, 3], 0.5).build().is_err());
+        assert!(SearchPlan::performance_based(vec![], 0.5).build().is_ok());
+    }
+
+    #[test]
+    fn build_rejects_bad_budget() {
+        assert!(SearchPlan::one_shot(6).budget(0.0).build().is_err());
+        assert!(SearchPlan::one_shot(6).budget(-0.5).build().is_err());
+        assert!(SearchPlan::one_shot(6).budget(f64::NAN).build().is_err());
+        assert!(SearchPlan::one_shot(6).budget(0.5).build().is_ok());
+    }
+
+    #[test]
+    fn build_rejects_bad_one_shot_and_late_start() {
+        assert!(SearchPlan::one_shot(0).build().is_err());
+        assert!(SearchPlan::late_start(6, 6).build().is_err());
+        assert!(SearchPlan::late_start(7, 6).build().is_err());
+        assert!(SearchPlan::late_start(3, 9).build().is_ok());
+    }
+
+    #[test]
+    fn build_rejects_bad_eta_top_k_and_mult() {
+        assert!(SearchPlan::hyperband(1.0, 7).build().is_err());
+        assert!(SearchPlan::hyperband(3.0, 7).budget(0.5).build().is_err());
+        assert!(SearchPlan::one_shot(6).top_k(0).build().is_err());
+        assert!(SearchPlan::one_shot(6).plan_mult(0.0).build().is_err());
+        assert!(SearchPlan::one_shot(6).plan_mult(f64::INFINITY).build().is_err());
+    }
+
+    // ---------------------------------------------------------- budget
+
+    #[test]
+    fn budget_caps_one_shot_day() {
+        let ts = toy(4, 12, 8, 12);
+        let out = replay(&ts, SearchPlan::one_shot(12).budget(0.25));
+        // 25% of 12 days = 3 days
+        assert!((out.cost - 0.25).abs() < 1e-12);
+        assert!(out.steps_trained.iter().all(|&s| s == 24));
+    }
+
+    #[test]
+    fn budget_truncates_algorithm1() {
+        let ts = toy(8, 12, 8, 13);
+        let stops = equally_spaced_stops(12, 3);
+        let full = replay(&ts, SearchPlan::performance_based(stops.clone(), 0.5));
+        let capped = replay(
+            &ts,
+            SearchPlan::performance_based(stops, 0.5).budget(full.cost * 0.6),
+        );
+        assert!(capped.cost <= full.cost * 0.6 + 1e-12, "{} vs {}", capped.cost, full.cost);
+        let mut r = capped.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn budget_too_small_errors() {
+        let ts = toy(8, 12, 8, 14);
+        for plan in [
+            SearchPlan::performance_based(vec![3, 6, 9], 0.5).budget(1e-6),
+            // one-shot and late-start must error too, not silently
+            // overrun the cap by training a whole day
+            SearchPlan::one_shot(6).budget(0.05),
+            SearchPlan::late_start(3, 9).budget(0.05),
+        ] {
+            let mut d = ReplayDriver::new(&ts);
+            assert!(SearchSession::new(plan.build().unwrap(), &mut d).run().is_err());
+        }
+    }
+
+    #[test]
+    fn budget_is_a_hard_cap_for_every_method() {
+        let ts = toy(8, 12, 8, 14);
+        for (b, plan) in [
+            (0.25, SearchPlan::one_shot(12).budget(0.25)),
+            (0.30, SearchPlan::late_start(2, 12).budget(0.30)),
+            (0.40, SearchPlan::performance_based(vec![3, 6, 9], 0.5).budget(0.40)),
+        ] {
+            let mut d = ReplayDriver::new(&ts);
+            let out = SearchSession::new(plan.build().unwrap(), &mut d).run().unwrap();
+            assert!(out.cost <= b + 1e-12, "cost {} exceeds budget {b}", out.cost);
+        }
+    }
+
+    #[test]
+    fn hyperband_session_steps_audit_matches_cost() {
+        let ts = toy(12, 12, 8, 17);
+        let out = replay(&ts, SearchPlan::hyperband(3.0, 7));
+        assert_eq!(out.steps_trained.len(), 12);
+        let audit = cost::empirical(&out.steps_trained, ts.total_steps());
+        assert_eq!(audit.to_bits(), out.cost.to_bits());
+    }
+
+    // ------------------------------------------------------- two-stage
+
+    #[test]
+    fn two_stage_finishes_only_finalists() {
+        let ts = toy(10, 12, 8, 15);
+        let plan = SearchPlan::one_shot(4).top_k(3).build().unwrap();
+        let mut d = ReplayDriver::new(&ts);
+        let two = SearchSession::new(plan, &mut d).run_two_stage().unwrap();
+        assert_eq!(two.finalists.len(), 3);
+        // finalists trained to the horizon, everyone else stopped at day 4
+        for c in 0..10 {
+            let expect = if two.finalists.contains(&c) { 96 } else { 32 };
+            assert_eq!(two.steps_trained[c], expect, "config {c}");
+        }
+        // combined cost = stage1 + the finishing runs
+        let expect_cost = (7.0 * 32.0 + 3.0 * 96.0) / (10.0 * 96.0);
+        assert!((two.combined_cost - expect_cost).abs() < 1e-12);
+        assert!(two.stage2_cost > 0.0);
+        // final ranking is a permutation with finalists first
+        let mut r = two.final_ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..10).collect::<Vec<_>>());
+        for c in &two.final_ranking[..3] {
+            assert!(two.finalists.contains(c));
+        }
+    }
+
+    #[test]
+    fn two_stage_after_perf_based_adds_no_cost_when_survivors_finish() {
+        let ts = toy(8, 12, 8, 16);
+        let plan = SearchPlan::performance_based(vec![6], 0.5).top_k(2).build().unwrap();
+        let mut d = ReplayDriver::new(&ts);
+        let two = SearchSession::new(plan, &mut d).run_two_stage().unwrap();
+        // the 4 survivors already reached the horizon in stage 1
+        assert!((two.stage2_cost).abs() < 1e-12);
+        assert_eq!(two.combined_cost, two.stage1.cost);
+    }
+}

@@ -20,7 +20,7 @@
 
 use crate::metrics;
 use crate::predict::Strategy;
-use crate::search::{equally_spaced_stops, TrajectorySet};
+use crate::search::{equally_spaced_stops, SearchPlan, TrajectorySet};
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
@@ -158,7 +158,10 @@ pub fn fig6_point_with(
     let per_task: Vec<(f64, f64)> = exec.map(tasks, move |_, task| {
         let ts = sample_task(&cfg, seed ^ task.wrapping_mul(0x9E37_79B9));
         let stops = equally_spaced_stops(cfg.days, stop_every_days);
-        let out = ts.performance_based(Strategy::Constant, &stops, rho);
+        let out = SearchPlan::performance_based(stops, rho)
+            .strategy(Strategy::Constant)
+            .run_replay(&ts)
+            .expect("invalid surrogate search parameters");
         let gt = ts.ground_truth();
         let reference = gt.iter().cloned().fold(f64::MAX, f64::min);
         (out.cost, metrics::regret_at_k(&out.ranking, &gt, 3) / reference)
@@ -224,7 +227,7 @@ mod tests {
         // With no stopping at all the ranking is ground truth: regret 0.
         let cfg = small();
         let ts = sample_task(&cfg, 7);
-        let out = ts.performance_based(Strategy::Constant, &[], 0.5);
+        let out = SearchPlan::performance_based(vec![], 0.5).run_replay(&ts).unwrap();
         assert_eq!(out.cost, 1.0);
         assert_eq!(
             metrics::regret_at_k(&out.ranking, &ts.ground_truth(), 3),

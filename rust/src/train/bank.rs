@@ -103,6 +103,24 @@ impl Bank {
         Some((set, labels))
     }
 
+    /// Empirical sub-sampling cost multiplier (§4.1.2) measured from the
+    /// (family, plan_tag) runs: examples trained / examples seen. 1.0
+    /// when the bank has no such runs (or for the full plan).
+    pub fn plan_multiplier(&self, family: &str, plan_tag: &str) -> f64 {
+        let (mut trained, mut seen) = (0u64, 0u64);
+        for r in &self.runs {
+            if r.key.family == family && r.key.plan_tag == plan_tag {
+                trained += r.examples_trained;
+                seen += r.examples_seen;
+            }
+        }
+        if seen == 0 {
+            1.0
+        } else {
+            trained as f64 / seen as f64
+        }
+    }
+
     /// All (family, plan_tag) pairs present.
     pub fn inventory(&self) -> Vec<(String, String, usize)> {
         let mut out: Vec<(String, String, usize)> = Vec::new();

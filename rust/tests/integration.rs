@@ -7,7 +7,14 @@ use nshpo::coordinator::{build_bank, BankOptions};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::metrics;
 use nshpo::predict::{LawKind, Strategy};
-use nshpo::search::equally_spaced_stops;
+use nshpo::search::{
+    equally_spaced_stops, SearchOutcome, SearchPlan, SearchPlanBuilder, TrajectorySet,
+};
+
+/// Run one plan through a fresh replay session over `ts`.
+fn replay(ts: &TrajectorySet, builder: SearchPlanBuilder) -> SearchOutcome {
+    builder.run_replay(ts).unwrap()
+}
 
 fn quick_bank_opts(days: usize, spd: usize) -> BankOptions {
     BankOptions {
@@ -48,12 +55,12 @@ fn full_pipeline_proxy_bank_to_figures() {
     assert!(gt.iter().all(|m| m.is_finite() && *m > 0.0));
 
     // full-data one-shot is the ground truth ranking by construction
-    let full = ts.one_shot(Strategy::Constant, ts.days);
+    let full = replay(&ts, SearchPlan::one_shot(ts.days));
     assert_eq!(metrics::regret_at_k(&full.ranking, &gt, 3), 0.0);
 
     // performance-based stopping saves cost with bounded regret
     let stops = equally_spaced_stops(ts.days, 3);
-    let pb = ts.performance_based(Strategy::Constant, &stops, 0.5);
+    let pb = replay(&ts, SearchPlan::performance_based(stops, 0.5));
     assert!(pb.cost < 0.7, "cost {}", pb.cost);
     let reg = metrics::regret_at_k(&pb.ranking, &gt, 3) / gt[0].min(1.0);
     assert!(reg.is_finite());
@@ -64,7 +71,7 @@ fn full_pipeline_proxy_bank_to_figures() {
         Strategy::Trajectory(LawKind::InversePowerLaw),
         Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 4 },
     ] {
-        let o = ts.one_shot(strat, 6);
+        let o = replay(&ts, SearchPlan::one_shot(6).strategy(strat));
         let mut r = o.ranking.clone();
         r.sort_unstable();
         assert_eq!(r, (0..9).collect::<Vec<_>>(), "{}", strat.name());
@@ -103,7 +110,8 @@ fn subsampled_bank_is_cheaper_but_still_ranks() {
     assert!((frac - 0.25).abs() < 0.03, "frac {frac}");
     // ranking from the sub-sampled runs against full-data ground truth
     let gt = ts_full.ground_truth();
-    let o = ts_sub.one_shot(Strategy::Constant, ts_sub.days);
+    let days = ts_sub.days;
+    let o = replay(&ts_sub, SearchPlan::one_shot(days));
     let per = metrics::per(&o.ranking, &gt);
     assert!(per < 0.5, "sub-sampled ranking no better than random: {per}");
 }
@@ -118,8 +126,8 @@ fn bank_disk_roundtrip_preserves_search_results() {
     let (a, _) = bank.trajectory_set("fm", "full", 0).unwrap();
     let (b, _) = loaded.trajectory_set("fm", "full", 0).unwrap();
     let stops = equally_spaced_stops(a.days, 2);
-    let oa = a.performance_based(Strategy::Constant, &stops, 0.5);
-    let ob = b.performance_based(Strategy::Constant, &stops, 0.5);
+    let oa = replay(&a, SearchPlan::performance_based(stops.clone(), 0.5));
+    let ob = replay(&b, SearchPlan::performance_based(stops, 0.5));
     assert_eq!(oa.ranking, ob.ranking);
     assert_eq!(oa.cost, ob.cost);
 }
@@ -143,7 +151,7 @@ fn seed_variance_measured_on_real_runs() {
 
 #[test]
 fn live_search_agrees_with_bank_replay_on_cost() {
-    use nshpo::coordinator::{live::live_performance_based, ProxyFactory};
+    use nshpo::coordinator::{live::LiveSearch, ProxyFactory};
     use nshpo::search::sweep;
     use nshpo::train::{ClusterSource, ClusteredStream};
 
@@ -160,17 +168,19 @@ fn live_search_agrees_with_bank_replay_on_cost() {
         3,
     );
     let specs = sweep::thin(sweep::family_sweep("fm"), 3);
-    let stops = vec![2usize, 4, 6];
-    let live = live_performance_based(
-        &ProxyFactory,
-        &cs,
-        &specs,
-        Plan::Full,
-        Strategy::Constant,
-        &stops,
-        0.5,
-        0,
-    )
+    let plan = SearchPlan::performance_based(vec![2, 4, 6], 0.5)
+        .strategy(Strategy::Constant)
+        .build()
+        .unwrap();
+    let live = LiveSearch {
+        factory: &ProxyFactory,
+        cs: &cs,
+        specs: &specs,
+        data_plan: Plan::Full,
+        seed: 0,
+        workers: 1,
+    }
+    .run(&plan)
     .unwrap();
     // cost must equal the audit over actual steps trained
     let expected = nshpo::search::cost::empirical(&live.steps_trained, 32);

@@ -3,9 +3,16 @@
 
 use nshpo::metrics;
 use nshpo::predict::Strategy;
-use nshpo::search::{cost, equally_spaced_stops, TrajectorySet};
+use nshpo::search::{
+    cost, equally_spaced_stops, SearchOutcome, SearchPlan, SearchPlanBuilder, TrajectorySet,
+};
 use nshpo::util::prng::Rng;
 use nshpo::util::propcheck;
+
+/// Run one plan through a fresh replay session over `ts`.
+fn replay(ts: &TrajectorySet, builder: SearchPlanBuilder) -> SearchOutcome {
+    builder.run_replay(ts).unwrap()
+}
 
 /// Random but well-formed trajectory set.
 fn random_ts(rng: &mut Rng) -> TrajectorySet {
@@ -83,7 +90,7 @@ fn prop_rankings_are_permutations_for_every_strategy() {
             Strategy::Trajectory(nshpo::predict::LawKind::InversePowerLaw),
             Strategy::Stratified { law: None, n_slices: 3 },
         ] {
-            let o = ts.one_shot(strat, day_stop);
+            let o = replay(ts, SearchPlan::one_shot(day_stop).strategy(strat));
             let mut r = o.ranking.clone();
             r.sort_unstable();
             if r != (0..ts.n_configs()).collect::<Vec<_>>() {
@@ -98,7 +105,7 @@ fn prop_rankings_are_permutations_for_every_strategy() {
 fn prop_perf_stopping_empirical_cost_matches_steps() {
     with_random_ts(102, 40, |ts| {
         let stops = equally_spaced_stops(ts.days, 2);
-        let o = ts.performance_based(Strategy::Constant, &stops, 0.5);
+        let o = replay(ts, SearchPlan::performance_based(stops, 0.5));
         let expected = cost::empirical(&o.steps_trained, ts.total_steps());
         if (o.cost - expected).abs() > 1e-12 {
             return Err(format!("cost {} vs audit {expected}", o.cost));
@@ -132,7 +139,7 @@ fn prop_perf_stopping_analytic_cost_when_divisible() {
             let every = 1 + (case.0 % 3) as usize;
             let stops = equally_spaced_stops(ts.days, every);
             let stops = stops.into_iter().take(3).collect::<Vec<_>>(); // 8->4->2->1
-            let o = ts.performance_based(Strategy::Constant, &stops, 0.5);
+            let o = replay(&ts, SearchPlan::performance_based(stops.clone(), 0.5));
             let analytic = cost::performance_based(
                 &stops.iter().map(|d| d * ts.steps_per_day).collect::<Vec<_>>(),
                 0.5,
@@ -149,9 +156,9 @@ fn prop_perf_stopping_analytic_cost_when_divisible() {
 #[test]
 fn prop_more_stopping_rounds_never_cost_more() {
     with_random_ts(104, 30, |ts| {
-        let o_few = ts.performance_based(Strategy::Constant, &[ts.days - 1], 0.5);
+        let o_few = replay(ts, SearchPlan::performance_based(vec![ts.days - 1], 0.5));
         let stops_many = equally_spaced_stops(ts.days, 1);
-        let o_many = ts.performance_based(Strategy::Constant, &stops_many, 0.5);
+        let o_many = replay(ts, SearchPlan::performance_based(stops_many, 0.5));
         if o_many.cost > o_few.cost + 1e-12 {
             return Err(format!(
                 "more rounds cost more: {} vs {}",
@@ -165,7 +172,7 @@ fn prop_more_stopping_rounds_never_cost_more() {
 #[test]
 fn prop_full_data_one_shot_has_zero_regret() {
     with_random_ts(105, 40, |ts| {
-        let o = ts.one_shot(Strategy::Constant, ts.days);
+        let o = replay(ts, SearchPlan::one_shot(ts.days));
         let gt = ts.ground_truth();
         let r3 = metrics::regret_at_k(&o.ranking, &gt, 3);
         if r3 != 0.0 {
@@ -182,8 +189,8 @@ fn prop_regret_decreases_with_later_stopping_on_clean_curves() {
     // comparing earliest vs latest stop).
     with_random_ts(106, 25, |ts| {
         let gt = ts.ground_truth();
-        let early = ts.one_shot(Strategy::Constant, 2);
-        let late = ts.one_shot(Strategy::Constant, ts.days - 1);
+        let early = replay(ts, SearchPlan::one_shot(2));
+        let late = replay(ts, SearchPlan::one_shot(ts.days - 1));
         let r_early = metrics::per(&early.ranking, &gt);
         let r_late = metrics::per(&late.ranking, &gt);
         // allow noise-driven inversions but catch gross violations

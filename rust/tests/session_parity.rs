@@ -1,0 +1,134 @@
+//! Replay-vs-live parity: the acceptance gate for the unified
+//! `SearchSession` API. A `LiveDriver` over the deterministic proxy
+//! trainer and a `ReplayDriver` over the bank recorded from the *same*
+//! stream/seed must produce the identical ranking and steps_trained —
+//! which pins that the Algorithm-1 core really is shared, not two
+//! divergent copies.
+
+use nshpo::coordinator::ProxyFactory;
+use nshpo::data::{Plan, Stream, StreamConfig};
+use nshpo::predict::{LawKind, Strategy};
+use nshpo::search::sweep::{self, ConfigSpec};
+use nshpo::search::{
+    LiveDriver, ReplayDriver, SearchPlan, SearchPlanBuilder, SearchSession, TrajectorySet,
+};
+use nshpo::train::{run_full, ClusterSource, ClusteredStream, LogisticProxy};
+
+fn clustered_stream() -> ClusteredStream {
+    ClusteredStream::build(
+        Stream::new(StreamConfig {
+            seed: 91,
+            days: 8,
+            steps_per_day: 3,
+            batch: 64,
+            n_clusters: 6,
+        }),
+        ClusterSource::Latent,
+        2,
+    )
+}
+
+/// Record the bank the paper's backtesting methodology would build: one
+/// full proxy run per config over the same stream and seed the live
+/// driver uses.
+fn bank_from(cs: &ClusteredStream, specs: &[ConfigSpec], seed: i32) -> TrajectorySet {
+    let cfg = &cs.stream.cfg;
+    let trajs: Vec<_> = specs
+        .iter()
+        .map(|s| {
+            let mut model = LogisticProxy::new(seed);
+            run_full(&mut model, cs, Plan::Full, s.hparams(), seed as u64).unwrap()
+        })
+        .collect();
+    TrajectorySet {
+        steps_per_day: cfg.steps_per_day,
+        days: cfg.days,
+        eval_days: cs.eval_days,
+        step_losses: trajs.iter().map(|t| t.step_losses.clone()).collect(),
+        day_cluster_counts: cs.day_cluster_counts.clone(),
+        cluster_loss_sums: trajs.iter().map(|t| t.cluster_loss_sums.clone()).collect(),
+        eval_cluster_counts: cs.eval_cluster_counts.clone(),
+    }
+}
+
+/// Run the same plan through both backends and demand identical results.
+fn assert_parity(builder: impl Fn() -> SearchPlanBuilder, live_workers: usize) {
+    let cs = clustered_stream();
+    let specs = sweep::thin(sweep::family_sweep("fm"), 3); // 9 configs
+    let seed = 0;
+
+    let live = {
+        let mut driver = LiveDriver::new(&ProxyFactory, &cs, &specs, Plan::Full, seed)
+            .with_workers(live_workers);
+        SearchSession::new(builder().build().unwrap(), &mut driver).run().unwrap()
+    };
+
+    let ts = bank_from(&cs, &specs, seed);
+    let replayed = {
+        let mut driver = ReplayDriver::new(&ts);
+        SearchSession::new(builder().build().unwrap(), &mut driver).run().unwrap()
+    };
+
+    assert_eq!(live.ranking, replayed.ranking, "ranking diverged");
+    assert_eq!(live.steps_trained, replayed.steps_trained, "steps diverged");
+    assert_eq!(
+        live.cost.to_bits(),
+        replayed.cost.to_bits(),
+        "cost diverged: {} vs {}",
+        live.cost,
+        replayed.cost
+    );
+}
+
+#[test]
+fn perf_based_constant_live_matches_replay() {
+    assert_parity(|| SearchPlan::performance_based(vec![2, 4, 6], 0.5), 1);
+}
+
+#[test]
+fn perf_based_parity_is_worker_count_invariant() {
+    assert_parity(|| SearchPlan::performance_based(vec![2, 4, 6], 0.5), 4);
+}
+
+#[test]
+fn perf_based_stratified_live_matches_replay() {
+    // Stratified prediction exercises the per-cluster loss decomposition
+    // through both backends.
+    assert_parity(
+        || {
+            SearchPlan::performance_based(vec![2, 4], 0.5).strategy(Strategy::Stratified {
+                law: Some(LawKind::InversePowerLaw),
+                n_slices: 3,
+            })
+        },
+        2,
+    );
+}
+
+#[test]
+fn one_shot_live_matches_replay() {
+    assert_parity(|| SearchPlan::one_shot(4), 2);
+}
+
+#[test]
+fn two_stage_live_matches_replay() {
+    let cs = clustered_stream();
+    let specs = sweep::thin(sweep::family_sweep("fm"), 3);
+    let plan = || SearchPlan::one_shot(3).top_k(3).build().unwrap();
+
+    let live = {
+        let mut driver = LiveDriver::new(&ProxyFactory, &cs, &specs, Plan::Full, 0)
+            .with_workers(2);
+        SearchSession::new(plan(), &mut driver).run_two_stage().unwrap()
+    };
+    let ts = bank_from(&cs, &specs, 0);
+    let replayed = {
+        let mut driver = ReplayDriver::new(&ts);
+        SearchSession::new(plan(), &mut driver).run_two_stage().unwrap()
+    };
+
+    assert_eq!(live.finalists, replayed.finalists);
+    assert_eq!(live.final_ranking, replayed.final_ranking);
+    assert_eq!(live.steps_trained, replayed.steps_trained);
+    assert_eq!(live.combined_cost.to_bits(), replayed.combined_cost.to_bits());
+}
