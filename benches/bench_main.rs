@@ -256,6 +256,82 @@ fn main() {
         );
     }
 
+    // ------------------------------------------------ live batch cache
+    // A 4-candidate live sweep with the shared batch cache on vs off:
+    // cached runs generate each batch once per sweep instead of once per
+    // candidate (content bit-identical; session_parity pins that). The
+    // acceptance bar is a measurable wall-clock win plus the hit rate.
+    if matches("live/sweep") {
+        use nshpo::coordinator::{live::LiveSearch, ProxyFactory};
+        use nshpo::search::sweep;
+        use nshpo::train::{ClusterSource, ClusteredStream};
+
+        let sweep_cfg = StreamConfig {
+            seed: 13,
+            days: 6,
+            steps_per_day: 6,
+            batch: 256,
+            n_clusters: 8,
+            ..StreamConfig::default()
+        };
+        let total = sweep_cfg.total_steps();
+        let mk_cs = |cache: usize| {
+            ClusteredStream::build(
+                Stream::new(sweep_cfg.clone()).with_cache(cache),
+                ClusterSource::Latent,
+                2,
+            )
+        };
+        let specs = sweep::thin(sweep::family_sweep("fm"), 7); // 4 configs
+        // no stops: every candidate trains the full horizon, the
+        // worst case the cache exists for
+        let plan = SearchPlan::performance_based(vec![], 0.5).build().unwrap();
+        let run_sweep = |cs: &ClusteredStream| {
+            LiveSearch {
+                factory: &ProxyFactory,
+                cs,
+                specs: &specs,
+                data_plan: Plan::Full,
+                seed: 0,
+                workers: 2,
+            }
+            .run(&plan)
+            .unwrap()
+        };
+
+        // Each iteration builds a *fresh* clustered stream (cold cache),
+        // then sweeps: cache-off pays clustering + 4x sweep generation,
+        // cache-on pays clustering (which warms the cache) + zero sweep
+        // generation — exactly the once-per-sweep vs once-per-candidate
+        // contrast, never a pre-warmed steady state.
+        let r_off = bench("live/sweep_4cfg_cache_off", 3, MIN_SAMPLE, || {
+            black_box(run_sweep(&mk_cs(0)))
+        });
+        println!("{}", r_off.report());
+        results.push(r_off.report());
+
+        let mut last_on: Option<ClusteredStream> = None;
+        let r_on = bench("live/sweep_4cfg_cache_on", 3, MIN_SAMPLE, || {
+            let cs = mk_cs(total);
+            let out = run_sweep(&cs);
+            last_on = Some(cs);
+            black_box(out)
+        });
+        println!("{}", r_on.report());
+        results.push(r_on.report());
+
+        // hit rate of one cold build+sweep (the last timed iteration)
+        let last_on = last_on.expect("at least one cache-on iteration");
+        let cache = last_on.stream.cache().expect("cached stream");
+        println!(
+            "batch cache: {:.2}x speedup at 4 candidates (cold sweep), hit rate {:.1}% ({} hits / {} misses)",
+            r_off.mean_ns() / r_on.mean_ns(),
+            cache.hit_rate() * 100.0,
+            cache.hits(),
+            cache.misses(),
+        );
+    }
+
     // chunked vs per-item queueing for many tiny work items (the
     // amortization map_chunked exists for, DESIGN.md §3)
     if matches("threadpool/map") {

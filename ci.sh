@@ -14,6 +14,19 @@ echo "== quickstart example (proxy smoke gate) =="
 # the two-stage SearchSession API — in a few seconds.
 cargo run --release --example quickstart >/dev/null
 
+echo "== scenario gate =="
+# The registry must list, and a non-default scenario must drive a real
+# (tiny) live search end to end — new scenarios can't silently rot.
+cargo run --release -- scenarios | grep -q abrupt_shift
+cargo run --release -- search --live --proxy --scenario abrupt_shift \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+# unknown tags must fail loudly
+if cargo run --release -- search --live --proxy --scenario no_such_regime \
+    --days 4 --steps-per-day 4 --batch 64 --thin 9 >/dev/null 2>&1; then
+  echo "FAIL: unknown scenario tag was accepted" >&2
+  exit 1
+fi
+
 echo "== zero-dependency gate =="
 # 1) No external-crate imports may reappear in source (in-tree substrates
 #    only). Matches `use <crate>` / `extern crate <crate>` for the crates

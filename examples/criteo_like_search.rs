@@ -28,6 +28,7 @@ fn main() -> Result<()> {
             steps_per_day: if quick { 3 } else { 4 },
             batch: 256, // must match `make artifacts`
             n_clusters: 32,
+            ..StreamConfig::default()
         },
         eval_days: 3,
         families: vec!["fm".into()],

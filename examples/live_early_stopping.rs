@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         steps_per_day: if use_pjrt { 4 } else { 12 },
         batch: if use_pjrt { 256 } else { 128 },
         n_clusters: 16,
+        scenario: args.str_or("scenario", "criteo_like"),
     };
     let specs = sweep::thin(sweep::family_sweep("fm"), 2); // 14 configs
     let stops = equally_spaced_stops(stream_cfg.days, 3);
@@ -42,8 +43,11 @@ fn main() -> Result<()> {
         .strategy(Strategy::Constant)
         .build()?;
 
+    // Shared batch cache: the worker pool generates each batch once per
+    // sweep instead of once per candidate (bit-identical either way).
+    let total_steps = stream_cfg.total_steps();
     let cs = ClusteredStream::build(
-        Stream::new(stream_cfg),
+        Stream::try_new(stream_cfg)?.with_cache(total_steps),
         ClusterSource::KMeans { k: 16, sample_days: 2 },
         3,
     );
@@ -65,6 +69,9 @@ fn main() -> Result<()> {
             out.full_wall_estimate,
             out.full_wall_estimate / out.wall_seconds.max(1e-9)
         );
+        if let Some(rate) = out.cache_hit_rate {
+            println!("batch cache hit rate: {:.1}%", rate * 100.0);
+        }
         println!("steps trained per config: {:?}", out.steps_trained);
         println!("predicted top-3:");
         for &c in out.ranking.iter().take(3) {

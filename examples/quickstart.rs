@@ -23,6 +23,9 @@ fn main() -> Result<()> {
             steps_per_day: 8,
             batch: 128,
             n_clusters: 16,
+            // swap in "abrupt_shift", "churn_storm", "cold_start", or
+            // "stationary_control" to search under a different regime
+            scenario: "criteo_like".into(),
         },
         eval_days: 3,
         families: vec!["fm".into()],

@@ -38,6 +38,9 @@ pub struct LiveOutcome {
     /// Wall-clock a full (no-stopping) search would have spent, estimated
     /// from the measured per-step time of each config's own run.
     pub full_wall_estimate: f64,
+    /// Hit rate of the stream's shared batch cache over the stream's
+    /// lifetime (None when the stream runs uncached).
+    pub cache_hit_rate: Option<f64>,
 }
 
 impl LiveSearch<'_> {
@@ -78,6 +81,7 @@ impl LiveSearch<'_> {
             two_stage: two,
             wall_seconds: t0.elapsed().as_secs_f64(),
             full_wall_estimate: driver.full_wall_estimate(),
+            cache_hit_rate: self.cs.stream.cache().map(|c| c.hit_rate()),
         })
     }
 }
@@ -99,6 +103,7 @@ mod tests {
                 steps_per_day: 3,
                 batch: 64,
                 n_clusters: 6,
+                ..StreamConfig::default()
             }),
             ClusterSource::Latent,
             2,
@@ -162,6 +167,36 @@ mod tests {
         assert_eq!(serial.ranking, parallel.ranking);
         assert_eq!(serial.steps_trained, parallel.steps_trained);
         assert_eq!(serial.cost.to_bits(), parallel.cost.to_bits());
+    }
+
+    #[test]
+    fn batch_cache_changes_wall_clock_not_the_outcome() {
+        let specs = sweep::thin(sweep::family_sweep("fm"), 7); // 4 configs
+        let plan = SearchPlan::performance_based(vec![2, 4, 6], 0.5).build().unwrap();
+        let uncached = {
+            let cs = cs();
+            search(&cs, &specs).run(&plan).unwrap()
+        };
+        let cached = {
+            let stream = Stream::new(StreamConfig {
+                seed: 31,
+                days: 8,
+                steps_per_day: 3,
+                batch: 64,
+                n_clusters: 6,
+                ..StreamConfig::default()
+            })
+            .with_cache(64);
+            let cs = ClusteredStream::build(stream, ClusterSource::Latent, 2);
+            search(&cs, &specs).run(&plan).unwrap()
+        };
+        assert_eq!(uncached.ranking, cached.ranking);
+        assert_eq!(uncached.steps_trained, cached.steps_trained);
+        assert_eq!(uncached.cost.to_bits(), cached.cost.to_bits());
+        assert!(uncached.cache_hit_rate.is_none());
+        // 4 configs sweeping shared steps: the cache must actually share
+        let rate = cached.cache_hit_rate.unwrap();
+        assert!(rate > 0.5, "hit rate {rate}");
     }
 
     #[test]

@@ -36,6 +36,9 @@ pub struct BankOptions {
     pub verbose: bool,
     /// Worker threads for the proxy fan-out (0 = all cores minus one).
     pub workers: usize,
+    /// Share generated batches across runs via `data::cache::BatchCache`
+    /// (bit-identical to regeneration; off = regenerate per run).
+    pub batch_cache: bool,
 }
 
 impl Default for BankOptions {
@@ -52,6 +55,7 @@ impl Default for BankOptions {
             cluster_k: 32,
             verbose: true,
             workers: 0,
+            batch_cache: true,
         }
     }
 }
@@ -65,7 +69,13 @@ struct Job {
 /// Train every (config, plan, seed) combination once and collect the
 /// trajectory bank.
 pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
-    let stream = Stream::new(opts.stream.clone());
+    let mut stream = Stream::try_new(opts.stream.clone())?;
+    if opts.batch_cache {
+        // One generation per step for the whole bank build: the
+        // clustering pass warms the cache, every run replays from it.
+        stream = stream.with_cache(opts.stream.total_steps());
+    }
+    let scenario_tag = stream.scenario_tag();
     let cs = ClusteredStream::build(
         stream,
         ClusterSource::KMeans { k: opts.cluster_k, sample_days: 2 },
@@ -92,7 +102,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
     }
     if opts.verbose {
         eprintln!(
-            "bank: {} runs x {} steps ({} mode)",
+            "bank[{scenario_tag}]: {} runs x {} steps ({} mode)",
             jobs.len(),
             opts.stream.total_steps(),
             if opts.use_proxy { "proxy" } else { "pjrt" }
@@ -105,6 +115,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
         n_clusters: cs.n_clusters,
         eval_days: opts.eval_days,
         stream_seed: opts.stream.seed,
+        scenario: scenario_tag.clone(),
         day_cluster_counts: cs.day_cluster_counts.clone(),
         eval_cluster_counts: cs.eval_cluster_counts.clone(),
         runs: Vec::new(),
@@ -140,7 +151,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
             traj
         });
         for (job, traj) in jobs.iter().zip(trajs) {
-            bank.push(key_of(job), traj);
+            bank.push(key_of(job, &scenario_tag), traj);
         }
     } else {
         // PJRT: group jobs by variant so each artifact compiles once.
@@ -171,7 +182,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
                     job.spec.hparams(),
                     job.seed as u64,
                 )?;
-                bank.push(key_of(&job), traj);
+                bank.push(key_of(&job, &scenario_tag), traj);
                 finished += 1;
                 if opts.verbose {
                     eprintln!(
@@ -187,7 +198,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
     Ok(bank)
 }
 
-fn key_of(job: &Job) -> RunKey {
+fn key_of(job: &Job, scenario: &str) -> RunKey {
     RunKey {
         family: job.spec.family.clone(),
         variant: job.spec.variant.clone(),
@@ -195,6 +206,7 @@ fn key_of(job: &Job) -> RunKey {
         hparams: job.spec.hparams(),
         plan_tag: job.plan.tag(),
         seed: job.seed,
+        scenario: scenario.to_string(),
     }
 }
 
@@ -270,6 +282,7 @@ mod tests {
                 steps_per_day: 3,
                 batch: 64,
                 n_clusters: 8,
+                ..StreamConfig::default()
             },
             eval_days: 2,
             families: vec!["fm".into()],
@@ -297,6 +310,44 @@ mod tests {
         assert_eq!(out.ranking.len(), 3);
         let (ts_sub, _) = bank.trajectory_set("fm", "pos1.00neg0.50", 0).unwrap();
         assert_eq!(ts_sub.n_configs(), 3);
+    }
+
+    #[test]
+    fn bank_records_scenario_provenance() {
+        let mut opts = quick_opts();
+        opts.stream.scenario = "churn_storm".into();
+        let bank = build_bank(&opts).unwrap();
+        assert_eq!(bank.scenario, "churn_storm");
+        assert!(bank.runs.iter().all(|r| r.key.scenario == "churn_storm"));
+        // and parameterized tags are canonicalized
+        opts.stream.scenario = "abrupt_shift".into();
+        let bank2 = build_bank(&opts).unwrap();
+        assert_eq!(bank2.scenario, "abrupt_shift@3"); // days 6 -> default shift day 3
+    }
+
+    #[test]
+    fn cached_bank_is_bit_identical_to_uncached() {
+        let mut cached = quick_opts();
+        cached.batch_cache = true;
+        let mut uncached = quick_opts();
+        uncached.batch_cache = false;
+        let a = build_bank(&cached).unwrap();
+        let b = build_bank(&uncached).unwrap();
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.step_losses, y.step_losses);
+            assert_eq!(x.cluster_loss_sums, y.cluster_loss_sums);
+            assert_eq!(x.examples_trained, y.examples_trained);
+        }
+        assert_eq!(a.day_cluster_counts, b.day_cluster_counts);
+    }
+
+    #[test]
+    fn unknown_scenario_fails_bank_build() {
+        let mut opts = quick_opts();
+        opts.stream.scenario = "not_a_regime".into();
+        assert!(build_bank(&opts).is_err());
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Sharded, capacity-bounded batch cache shared across the live search
+//! path.
+//!
+//! `Stream::batch_at(t)` is a pure function of `(StreamConfig, t)`, so
+//! when N candidate configurations train over the same steps — the
+//! `LiveDriver` worker pool, the proxy bank fan-out — regenerating each
+//! batch per candidate is O(candidates x steps) wasted work. The cache
+//! turns that into O(steps): the first consumer of step `t` generates
+//! the batch (holding only its shard's lock, so other steps proceed),
+//! every later consumer gets the same `Arc<Batch>`.
+//!
+//! Cached and uncached reads are bit-identical by construction (the
+//! cache stores exactly the generator's output, keyed by `t`);
+//! `rust/tests/scenario_props.rs` pins this per scenario, and the
+//! per-scenario parity suite pins it end-to-end through a live search.
+//! Capacity is bounded with per-shard FIFO eviction, so a cache over a
+//! long stream cannot grow without limit.
+
+use super::schema::Batch;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shard count: adjacent steps land on different shards (`t % N_SHARDS`),
+/// so lock-holding generation of step t never blocks step t+1.
+const N_SHARDS: usize = 16;
+
+#[derive(Default)]
+struct Shard {
+    slots: HashMap<usize, Arc<Batch>>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<usize>,
+}
+
+pub struct BatchCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Max entries per shard (total capacity rounded up to a multiple of
+    /// `N_SHARDS`).
+    shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BatchCache {
+    /// A cache holding at least `capacity` batches (rounded up to a
+    /// multiple of the shard count; `capacity` 0 is treated as 1).
+    pub fn new(capacity: usize) -> BatchCache {
+        let capacity = capacity.max(1);
+        BatchCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_cap: (capacity + N_SHARDS - 1) / N_SHARDS,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The batch for step `t`, generating it with `gen` on a miss. The
+    /// shard lock is held across generation so concurrent consumers of
+    /// the same step wait for one generation instead of duplicating it.
+    pub fn get_or_insert_with<F: FnOnce() -> Batch>(&self, t: usize, gen: F) -> Arc<Batch> {
+        let mut shard = self.shards[t % N_SHARDS].lock().expect("batch cache shard");
+        if let Some(b) = shard.slots.get(&t) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(b);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let b = Arc::new(gen());
+        while shard.order.len() >= self.shard_cap {
+            if let Some(old) = shard.order.pop_front() {
+                shard.slots.remove(&old);
+            } else {
+                break;
+            }
+        }
+        shard.order.push_back(t);
+        shard.slots.insert(t, Arc::clone(&b));
+        b
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups served from the cache (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let total = h + self.misses() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            h / total
+        }
+    }
+
+    /// Batches currently resident.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().expect("batch cache shard").slots.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total capacity across shards.
+    pub fn capacity(&self) -> usize {
+        self.shard_cap * N_SHARDS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::N_CAT;
+
+    fn toy_batch(t: usize) -> Batch {
+        Batch {
+            dense: vec![t as f32; 8],
+            cat: vec![t as i32; N_CAT],
+            labels: vec![if t % 2 == 0 { 1.0 } else { 0.0 }],
+            latent_cluster: vec![t as u16],
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let c = BatchCache::new(64);
+        let a = c.get_or_insert_with(3, || toy_batch(3));
+        let b = c.get_or_insert_with(3, || panic!("must not regenerate"));
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded_with_fifo_eviction() {
+        let c = BatchCache::new(16); // 1 slot per shard
+        assert_eq!(c.capacity(), 16);
+        // two steps on the same shard: the second evicts the first
+        let _ = c.get_or_insert_with(0, || toy_batch(0));
+        let _ = c.get_or_insert_with(16, || toy_batch(16));
+        assert_eq!(c.len(), 1);
+        // step 0 must regenerate (evicted), step 16 is resident
+        let mut regenerated = false;
+        let _ = c.get_or_insert_with(0, || {
+            regenerated = true;
+            toy_batch(0)
+        });
+        assert!(regenerated, "evicted entry served stale");
+        let _ = c.get_or_insert_with(16, || panic!("resident entry regenerated"));
+    }
+
+    #[test]
+    fn cached_content_is_identical_to_generated() {
+        let c = BatchCache::new(256);
+        for t in 0..40 {
+            let got = c.get_or_insert_with(t, || toy_batch(t));
+            let fresh = toy_batch(t);
+            assert_eq!(got.dense, fresh.dense);
+            assert_eq!(got.cat, fresh.cat);
+            assert_eq!(got.labels, fresh.labels);
+            assert_eq!(got.latent_cluster, fresh.latent_cluster);
+        }
+        assert_eq!(c.misses(), 40);
+        assert_eq!(c.hits(), 0);
+    }
+
+    #[test]
+    fn concurrent_consumers_share_one_generation() {
+        let c = std::sync::Arc::new(BatchCache::new(128));
+        let gens = std::sync::Arc::new(AtomicU64::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = std::sync::Arc::clone(&c);
+                let gens = std::sync::Arc::clone(&gens);
+                scope.spawn(move || {
+                    for t in 0..32 {
+                        let b = c.get_or_insert_with(t, || {
+                            gens.fetch_add(1, Ordering::Relaxed);
+                            toy_batch(t)
+                        });
+                        assert_eq!(b.latent_cluster[0], t as u16);
+                    }
+                });
+            }
+        });
+        // each step generated exactly once across all threads
+        assert_eq!(gens.load(Ordering::Relaxed), 32);
+        assert_eq!(c.misses(), 32);
+        assert_eq!(c.hits(), 4 * 32 - 32);
+    }
+}

@@ -1,20 +1,32 @@
-//! Non-stationary clickstream generator — the Criteo-1TB stand-in.
+//! Non-stationary clickstream generator — the scenario-agnostic shell.
 //!
 //! A chronological sequence of mini-batches over `days` virtual days.
-//! Each example: draw a latent cluster from the day's drifting mixture,
-//! draw dense features around the cluster's (drifting) mean, draw
-//! categorical ids from a Zipf head whose *pointer drifts* across days
-//! (new ids appear, old ids fade — vocabulary churn), then label it from
-//! a logistic model over (cluster logit + dense signal + id signal) with
-//! the shared day-level hardness noise mixed in (see drift.rs).
+//! Each example: draw a latent cluster from the day's mixture, draw
+//! dense features around the cluster's mean, draw categorical ids from a
+//! Zipf head whose *pointer drifts* across days (new ids appear, old ids
+//! fade — vocabulary churn), then label it from a logistic model over
+//! (cluster logit + dense signal + id signal) with the day-level
+//! hardness noise mixed in.
+//!
+//! *How the world moves* — mixture weights, hardness process, CTR
+//! logits, dense drift, and the vocab-churn schedule — is owned by the
+//! pluggable [`Scenario`](super::scenario::Scenario) named in
+//! `StreamConfig::scenario` (default `criteo_like`, the Criteo-1TB
+//! stand-in).
 //!
 //! `batch_at(t)` is a pure function of (config, t): random access lets
 //! sub-sampled and late-started runs see byte-identical examples, which
 //! is what makes search-strategy comparisons paired rather than noisy.
+//! `batch_arc(t)` is the shared-cache path (`data::cache::BatchCache`):
+//! bit-identical content, generated once per sweep instead of once per
+//! candidate.
 
-use super::drift::{self, ClusterDynamics};
+use super::cache::BatchCache;
+use super::scenario::{self, Scenario};
 use super::schema::{Batch, N_CAT, N_DENSE};
+use crate::util::error::Result;
 use crate::util::prng::Rng;
+use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct StreamConfig {
@@ -23,6 +35,10 @@ pub struct StreamConfig {
     pub steps_per_day: usize,
     pub batch: usize,
     pub n_clusters: usize,
+    /// Registry tag of the scenario owning the day-level dynamics
+    /// (`data::scenario`): `criteo_like`, `abrupt_shift[@day]`,
+    /// `churn_storm`, `cold_start`, `stationary_control`.
+    pub scenario: String,
 }
 
 impl Default for StreamConfig {
@@ -33,6 +49,7 @@ impl Default for StreamConfig {
             steps_per_day: 24,
             batch: 256,
             n_clusters: 32,
+            scenario: "criteo_like".to_string(),
         }
     }
 }
@@ -48,38 +65,74 @@ impl StreamConfig {
     }
 
     /// Steps of the evaluation window: the last `delta_days` days (the
-    /// paper uses Delta = 3 days on 24-day Criteo).
+    /// paper uses Delta = 3 days on 24-day Criteo). The window is
+    /// clamped to the stream — a `delta_days` longer than the horizon
+    /// yields the whole stream instead of underflowing, and `delta_days`
+    /// of 0 yields the final step.
     pub fn eval_window(&self, delta_days: usize) -> (usize, usize) {
-        let t_end = self.total_steps() - 1;
-        let t_start = self.total_steps() - delta_days * self.steps_per_day;
-        (t_start, t_end)
+        let total = self.total_steps();
+        if total == 0 {
+            return (0, 0);
+        }
+        let span = delta_days.saturating_mul(self.steps_per_day).clamp(1, total);
+        (total - span, total - 1)
     }
 }
 
 /// Effective per-feature "live vocabulary" of the zipf head at any moment.
 const LIVE_VOCAB: u64 = 500;
-/// How fast categorical pointers drift (fraction of LIVE_VOCAB per day).
-const POINTER_DRIFT_PER_DAY: f64 = 60.0;
 
 pub struct Stream {
     pub cfg: StreamConfig,
-    clusters: Vec<ClusterDynamics>,
+    scenario: Box<dyn Scenario>,
     /// Global dense->label weights.
     alpha: Vec<f64>,
     /// Strength of the categorical id signal.
     gamma: f64,
+    /// Shared batch cache (`with_cache`); `None` = always regenerate.
+    cache: Option<Arc<BatchCache>>,
 }
 
 impl Stream {
+    /// Build a stream, panicking on an unknown scenario tag (the
+    /// config-validating path is [`Stream::try_new`]).
     pub fn new(cfg: StreamConfig) -> Stream {
+        Stream::try_new(cfg).expect("invalid stream config")
+    }
+
+    pub fn try_new(cfg: StreamConfig) -> Result<Stream> {
         let mut rng = Rng::new(cfg.seed);
-        let clusters = (0..cfg.n_clusters)
-            .map(|k| ClusterDynamics::sample(&mut rng, k, N_DENSE))
-            .collect();
+        // Scenario construction consumes the head of the seed stream —
+        // for `criteo_like` exactly the draws the pre-scenario generator
+        // made, keeping historic banks bit-identical.
+        let scenario = scenario::build(&cfg, &mut rng)?;
         let alpha: Vec<f64> = (0..N_DENSE)
             .map(|_| rng.normal_scaled(0.0, 0.5 / (N_DENSE as f64).sqrt()))
             .collect();
-        Stream { cfg, clusters, alpha, gamma: 0.35 }
+        Ok(Stream { cfg, scenario, alpha, gamma: 0.35, cache: None })
+    }
+
+    /// Attach a shared batch cache holding up to `capacity` batches
+    /// (0 disables). The cache only changes *when* batches are
+    /// generated, never their content.
+    pub fn with_cache(mut self, capacity: usize) -> Stream {
+        self.cache = if capacity == 0 {
+            None
+        } else {
+            Some(Arc::new(BatchCache::new(capacity)))
+        };
+        self
+    }
+
+    /// The attached batch cache, if any (hit-rate diagnostics).
+    pub fn cache(&self) -> Option<&BatchCache> {
+        self.cache.as_deref()
+    }
+
+    /// Canonical tag of the scenario driving this stream's dynamics
+    /// (bank provenance records this).
+    pub fn scenario_tag(&self) -> String {
+        self.scenario.tag()
     }
 
     pub fn n_clusters(&self) -> usize {
@@ -88,15 +141,17 @@ impl Stream {
 
     /// The day-d mixture over latent clusters (Fig 1 ground truth).
     pub fn mixture_at_day(&self, d: f64) -> Vec<f64> {
-        drift::mixture(&self.clusters, d)
+        self.scenario.mixture(d)
     }
 
-    /// Generate batch `t`. Pure in (config, t).
+    /// Generate batch `t`. Pure in (config, t); always regenerates —
+    /// [`batch_arc`](Stream::batch_arc) is the cached path and returns
+    /// bit-identical content.
     pub fn batch_at(&self, t: usize) -> Batch {
         let mut rng = Rng::new(self.cfg.seed ^ 0x5EED_BA7C).fork(t as u64);
         let d = self.cfg.day_of(t);
-        let pi = drift::mixture(&self.clusters, d);
-        let eps = drift::hardness(d);
+        let pi = self.scenario.mixture(d);
+        let eps = self.scenario.hardness(d);
         let b = self.cfg.batch;
 
         let mut dense = Vec::with_capacity(b * N_DENSE);
@@ -107,8 +162,7 @@ impl Stream {
 
         for _ in 0..b {
             let k = rng.categorical(&pi);
-            let c = &self.clusters[k];
-            c.mean_at(d, &mut mean);
+            self.scenario.mean_at(k, d, &mut mean);
 
             // Dense features: cluster mean + noise.
             let mut dense_signal = 0.0;
@@ -118,15 +172,12 @@ impl Stream {
                 dense.push(x as f32);
             }
 
-            // Categorical ids: zipf rank + drifting per-(cluster, feature)
-            // pointer, hashed to a raw positive i32.
+            // Categorical ids: zipf rank + the scenario's drifting
+            // per-(cluster, feature) pointer, hashed to a raw positive i32.
             let mut id_signal = 0.0;
             for f in 0..N_CAT {
                 let rank = rng.zipf(LIVE_VOCAB, 1.15);
-                let pointer = (d * POINTER_DRIFT_PER_DAY) as u64
-                    + (k as u64) * 7919
-                    + (f as u64) * 104_729;
-                let entity = pointer + rank;
+                let entity = self.scenario.vocab_pointer(k, f, d) + rank;
                 let raw = mix_id(f as u64, entity);
                 id_signal += id_weight(raw);
                 cat.push(raw);
@@ -134,7 +185,7 @@ impl Stream {
             id_signal *= self.gamma / (N_CAT as f64).sqrt();
 
             // Label: hardness-mixed logistic model.
-            let logit = c.logit(d) + dense_signal + id_signal - 1.2;
+            let logit = self.scenario.logit(k, d) + dense_signal + id_signal - 1.2;
             let p_model = 1.0 / (1.0 + (-logit).exp());
             let p = (1.0 - eps) * p_model + eps * 0.5;
             labels.push(if rng.bernoulli(p) { 1.0 } else { 0.0 });
@@ -142,6 +193,16 @@ impl Stream {
         }
 
         Batch { dense, cat, labels, latent_cluster: latent }
+    }
+
+    /// Batch `t` through the shared cache (generated at most once per
+    /// cache residency, bit-identical to [`batch_at`](Stream::batch_at)).
+    /// Without an attached cache this is a plain generation.
+    pub fn batch_arc(&self, t: usize) -> Arc<Batch> {
+        match &self.cache {
+            Some(c) => c.get_or_insert_with(t, || self.batch_at(t)),
+            None => Arc::new(self.batch_at(t)),
+        }
     }
 }
 
@@ -176,6 +237,7 @@ mod tests {
             steps_per_day: 4,
             batch: 64,
             n_clusters: 8,
+            ..StreamConfig::default()
         })
     }
 
@@ -210,6 +272,40 @@ mod tests {
         cfg.seed = 6;
         let s2 = Stream::new(cfg);
         assert_ne!(small().batch_at(0).labels, s2.batch_at(0).labels);
+    }
+
+    #[test]
+    fn unknown_scenario_is_a_config_error() {
+        let cfg = StreamConfig { scenario: "wibble".into(), ..StreamConfig::default() };
+        assert!(Stream::try_new(cfg).is_err());
+    }
+
+    #[test]
+    fn cached_batches_are_bit_identical_to_uncached() {
+        let cached = small().with_cache(64);
+        let fresh = small();
+        for t in 0..fresh.cfg.total_steps() {
+            let a = cached.batch_arc(t); // miss: generates + stores
+            let b = cached.batch_arc(t); // hit: same Arc
+            let c = fresh.batch_at(t);
+            assert!(Arc::ptr_eq(&a, &b), "second read missed at t={t}");
+            assert_eq!(a.dense, c.dense, "t={t}");
+            assert_eq!(a.cat, c.cat, "t={t}");
+            assert_eq!(a.labels, c.labels, "t={t}");
+            assert_eq!(a.latent_cluster, c.latent_cluster, "t={t}");
+        }
+        let stats = cached.cache().unwrap();
+        assert_eq!(stats.misses() as usize, fresh.cfg.total_steps());
+        assert_eq!(stats.hits() as usize, fresh.cfg.total_steps());
+    }
+
+    #[test]
+    fn uncached_stream_has_no_cache() {
+        let s = small();
+        assert!(s.cache().is_none());
+        let _ = s.batch_arc(0); // still works: plain generation
+        let disabled = small().with_cache(0);
+        assert!(disabled.cache().is_none());
     }
 
     #[test]
@@ -266,6 +362,18 @@ mod tests {
     }
 
     #[test]
+    fn eval_window_clamps_instead_of_underflowing() {
+        let cfg = StreamConfig { days: 4, steps_per_day: 6, ..StreamConfig::default() };
+        // delta longer than the horizon: the whole stream, no panic
+        assert_eq!(cfg.eval_window(9), (0, 23));
+        assert_eq!(cfg.eval_window(4), (0, 23));
+        // delta of zero: the final step
+        assert_eq!(cfg.eval_window(0), (23, 23));
+        // a huge delta must not overflow the multiplication either
+        assert_eq!(cfg.eval_window(usize::MAX), (0, 23));
+    }
+
+    #[test]
     fn vocabulary_churns_across_days() {
         // Ids seen on day 0 and day 5 for the same feature overlap only
         // partially (pointer drift) — the "new ads appear" phenomenon.
@@ -277,5 +385,26 @@ mod tests {
         let d5 = ids_day(5 * 4);
         let inter = d0.intersection(&d5).count();
         assert!(inter < d0.len() / 2, "no churn: {inter} of {}", d0.len());
+    }
+
+    #[test]
+    fn stationary_scenario_does_not_churn_vocabulary() {
+        let s = Stream::new(StreamConfig {
+            seed: 5,
+            days: 6,
+            steps_per_day: 4,
+            batch: 64,
+            n_clusters: 8,
+            scenario: "stationary_control".into(),
+        });
+        assert_eq!(s.scenario_tag(), "stationary_control");
+        let ids_day = |t: usize| -> std::collections::HashSet<i32> {
+            s.batch_at(t).cat.iter().step_by(N_CAT).copied().collect()
+        };
+        let d0 = ids_day(0);
+        let d5 = ids_day(5 * 4);
+        let inter = d0.intersection(&d5).count();
+        // frozen pointer: the day-5 head is largely the day-0 head
+        assert!(inter * 2 > d0.len(), "stationary vocab churned: {inter} of {}", d0.len());
     }
 }

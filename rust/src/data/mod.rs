@@ -1,12 +1,19 @@
-//! Non-stationary clickstream substrate (the Criteo-1TB stand-in) and
-//! data-reduction plans. See DESIGN.md §2 for the substitution argument
-//! and §5 for the workload model.
+//! Non-stationary clickstream substrate and data-reduction plans. The
+//! day-level dynamics are scenario-pluggable (`scenario`), generated
+//! batches can be shared across the live search path (`cache`), and
+//! sub-sampling plans are per-example training weights (`subsample`).
+//! See DESIGN.md §2 for the substitution argument and §5 for the
+//! workload model.
 
+pub mod cache;
 pub mod drift;
 pub mod gen;
+pub mod scenario;
 pub mod schema;
 pub mod subsample;
 
+pub use cache::BatchCache;
 pub use gen::{Stream, StreamConfig};
+pub use scenario::Scenario;
 pub use schema::{Batch, N_CAT, N_DENSE};
 pub use subsample::Plan;

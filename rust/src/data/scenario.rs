@@ -1,0 +1,561 @@
+//! Scenario-pluggable stream dynamics.
+//!
+//! A [`Scenario`] owns everything day-level about the synthetic
+//! clickstream: the mixture weights over latent clusters, the shared
+//! hardness (label-noise) process, per-cluster CTR logits, dense-feature
+//! drift, and the vocabulary-churn schedule (the zipf-head pointer).
+//! `data::gen::Stream` is the scenario-agnostic generator shell — it
+//! draws examples, the scenario decides *how the world moves*.
+//!
+//! The registry ships five regimes (see [`REGISTRY`]):
+//!
+//! * `criteo_like` — the original Criteo-1TB stand-in (four mixture
+//!   patterns, weekly hardness wobble, steady pointer drift).
+//! * `abrupt_shift[@day]` — identical to `criteo_like` until a
+//!   configurable day, then a step change: cluster identities reshuffle
+//!   and the entire id vocabulary is replaced at once.
+//! * `churn_storm` — `criteo_like` with 8x faster vocabulary pointer
+//!   drift (new ids flood in, embeddings churn).
+//! * `cold_start` — clusters bloom from near-zero mass at staggered
+//!   onset days (unseen segments appearing mid-stream).
+//! * `stationary_control` — frozen mixture/hardness/logits/vocab; the
+//!   drift-free baseline under which prediction strategies should tie.
+//!
+//! Every scenario is a deterministic function of (tag, stream seed), so
+//! `batch_at(t)` stays a pure function of `(StreamConfig, t)` and
+//! replay-vs-live parity holds per scenario
+//! (`rust/tests/session_parity.rs`).
+
+use super::drift::{self, ClusterDynamics};
+use super::gen::StreamConfig;
+use crate::err;
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+
+/// Day-level dynamics of the non-stationary stream. Implementations must
+/// be deterministic functions of their construction inputs.
+pub trait Scenario: Send + Sync {
+    /// Canonical registry tag, including parameters (`abrupt_shift@8`).
+    fn tag(&self) -> String;
+
+    /// Normalized mixture over latent clusters at fractional day `d`.
+    fn mixture(&self, d: f64) -> Vec<f64>;
+
+    /// Shared label-noise level at fractional day `d` (the probability an
+    /// example's label is replaced by a fair coin).
+    fn hardness(&self, d: f64) -> f64;
+
+    /// CTR logit offset of cluster `k` at fractional day `d`.
+    fn logit(&self, k: usize, d: f64) -> f64;
+
+    /// Dense feature mean of cluster `k` at fractional day `d`.
+    fn mean_at(&self, k: usize, d: f64, out: &mut [f64]);
+
+    /// Zipf-head pointer for (cluster `k`, categorical feature `f`) at
+    /// fractional day `d` — the vocabulary-churn schedule. Ids are drawn
+    /// as `pointer + zipf_rank`, so moving the pointer retires old ids
+    /// and introduces new ones.
+    fn vocab_pointer(&self, k: usize, f: usize, d: f64) -> u64;
+}
+
+/// How fast categorical pointers drift under the default dynamics
+/// (ids per day; the live zipf head is 500 ids wide).
+pub const POINTER_DRIFT_PER_DAY: f64 = 60.0;
+
+/// Vocabulary churn multiplier of the `churn_storm` scenario.
+const CHURN_STORM_MULT: f64 = 8.0;
+
+/// Pointer offset applied at and after an abrupt shift: larger than the
+/// live vocabulary plus the whole-horizon drift, so no pre-shift id
+/// survives the shift.
+const ABRUPT_VOCAB_JUMP: u64 = 1_000_000;
+
+#[inline]
+fn base_pointer(k: usize, f: usize) -> u64 {
+    (k as u64) * 7919 + (f as u64) * 104_729
+}
+
+#[inline]
+fn logistic(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn normalized(mut w: Vec<f64>) -> Vec<f64> {
+    let total: f64 = w.iter().sum();
+    debug_assert!(total > 0.0, "zero-mass mixture");
+    for x in &mut w {
+        *x /= total;
+    }
+    w
+}
+
+// ---------------------------------------------------------- criteo_like
+
+/// The original generator dynamics: four mixture-weight patterns, weekly
+/// hardness wobble, steady vocabulary pointer drift (drift.rs).
+pub struct CriteoLike {
+    clusters: Vec<ClusterDynamics>,
+}
+
+impl CriteoLike {
+    pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize) -> CriteoLike {
+        let clusters =
+            (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
+        CriteoLike { clusters }
+    }
+}
+
+impl Scenario for CriteoLike {
+    fn tag(&self) -> String {
+        "criteo_like".to_string()
+    }
+
+    fn mixture(&self, d: f64) -> Vec<f64> {
+        drift::mixture(&self.clusters, d)
+    }
+
+    fn hardness(&self, d: f64) -> f64 {
+        drift::hardness(d)
+    }
+
+    fn logit(&self, k: usize, d: f64) -> f64 {
+        self.clusters[k].logit(d)
+    }
+
+    fn mean_at(&self, k: usize, d: f64, out: &mut [f64]) {
+        self.clusters[k].mean_at(d, out)
+    }
+
+    fn vocab_pointer(&self, k: usize, f: usize, d: f64) -> u64 {
+        (d * POINTER_DRIFT_PER_DAY) as u64 + base_pointer(k, f)
+    }
+}
+
+// --------------------------------------------------------- abrupt_shift
+
+/// Criteo-like until `shift_day`, then a step change: cluster identities
+/// reshuffle (the mixture weight of cluster `k` jumps to that of cluster
+/// `n-1-k`) and the id vocabulary is replaced wholesale.
+pub struct AbruptShift {
+    clusters: Vec<ClusterDynamics>,
+    shift_day: usize,
+}
+
+impl AbruptShift {
+    pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize, shift_day: usize) -> AbruptShift {
+        let clusters =
+            (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
+        AbruptShift { clusters, shift_day }
+    }
+}
+
+impl Scenario for AbruptShift {
+    fn tag(&self) -> String {
+        format!("abrupt_shift@{}", self.shift_day)
+    }
+
+    fn mixture(&self, d: f64) -> Vec<f64> {
+        if d < self.shift_day as f64 {
+            return drift::mixture(&self.clusters, d);
+        }
+        let n = self.clusters.len();
+        normalized((0..n).map(|k| self.clusters[n - 1 - k].weight(d)).collect())
+    }
+
+    fn hardness(&self, d: f64) -> f64 {
+        drift::hardness(d)
+    }
+
+    fn logit(&self, k: usize, d: f64) -> f64 {
+        self.clusters[k].logit(d)
+    }
+
+    fn mean_at(&self, k: usize, d: f64, out: &mut [f64]) {
+        self.clusters[k].mean_at(d, out)
+    }
+
+    fn vocab_pointer(&self, k: usize, f: usize, d: f64) -> u64 {
+        let jump = if d < self.shift_day as f64 { 0 } else { ABRUPT_VOCAB_JUMP };
+        (d * POINTER_DRIFT_PER_DAY) as u64 + base_pointer(k, f) + jump
+    }
+}
+
+// ---------------------------------------------------------- churn_storm
+
+/// Criteo-like cluster dynamics with 8x faster vocabulary pointer drift:
+/// the id head rolls over multiple times per day, stressing anything
+/// that banks on embedding stability.
+pub struct ChurnStorm {
+    clusters: Vec<ClusterDynamics>,
+}
+
+impl ChurnStorm {
+    pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize) -> ChurnStorm {
+        let clusters =
+            (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
+        ChurnStorm { clusters }
+    }
+}
+
+impl Scenario for ChurnStorm {
+    fn tag(&self) -> String {
+        "churn_storm".to_string()
+    }
+
+    fn mixture(&self, d: f64) -> Vec<f64> {
+        drift::mixture(&self.clusters, d)
+    }
+
+    fn hardness(&self, d: f64) -> f64 {
+        drift::hardness(d)
+    }
+
+    fn logit(&self, k: usize, d: f64) -> f64 {
+        self.clusters[k].logit(d)
+    }
+
+    fn mean_at(&self, k: usize, d: f64, out: &mut [f64]) {
+        self.clusters[k].mean_at(d, out)
+    }
+
+    fn vocab_pointer(&self, k: usize, f: usize, d: f64) -> u64 {
+        (d * POINTER_DRIFT_PER_DAY * CHURN_STORM_MULT) as u64 + base_pointer(k, f)
+    }
+}
+
+// ------------------------------------------------------------ cold_start
+
+/// Clusters appear from near-zero mass at staggered onset days. The
+/// first two clusters are always on so the early mixture is never
+/// degenerate; everything else blooms logistically at its onset.
+pub struct ColdStart {
+    clusters: Vec<ClusterDynamics>,
+    onset: Vec<f64>,
+    tau: f64,
+}
+
+impl ColdStart {
+    pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize, days: usize) -> ColdStart {
+        let clusters: Vec<ClusterDynamics> =
+            (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
+        // Stagger onsets over the first 80% of the horizon with jitter.
+        let span = days as f64 * 0.8;
+        let onset = (0..n_clusters)
+            .map(|k| {
+                if k < 2 {
+                    -1e9 // always on
+                } else {
+                    span * (k as f64 / n_clusters as f64) + rng.uniform_range(-0.5, 0.5)
+                }
+            })
+            .collect();
+        ColdStart { clusters, onset, tau: 0.8 }
+    }
+}
+
+impl Scenario for ColdStart {
+    fn tag(&self) -> String {
+        "cold_start".to_string()
+    }
+
+    fn mixture(&self, d: f64) -> Vec<f64> {
+        normalized(
+            self.clusters
+                .iter()
+                .zip(&self.onset)
+                .map(|(c, &o)| c.base_weight * (1e-3 + logistic((d - o) / self.tau)))
+                .collect(),
+        )
+    }
+
+    fn hardness(&self, d: f64) -> f64 {
+        drift::hardness(d)
+    }
+
+    fn logit(&self, k: usize, d: f64) -> f64 {
+        self.clusters[k].logit(d)
+    }
+
+    fn mean_at(&self, k: usize, d: f64, out: &mut [f64]) {
+        self.clusters[k].mean_at(d, out)
+    }
+
+    fn vocab_pointer(&self, k: usize, f: usize, d: f64) -> u64 {
+        (d * POINTER_DRIFT_PER_DAY) as u64 + base_pointer(k, f)
+    }
+}
+
+// --------------------------------------------------- stationary_control
+
+/// Drift-free control: the mixture, hardness level, CTR logits, dense
+/// means, and vocabulary are all frozen at their day-0 values. Every
+/// prediction strategy should tie here (up to seed noise) — if one
+/// doesn't, it is exploiting drift that does not exist.
+pub struct StationaryControl {
+    weights: Vec<f64>,
+    logits: Vec<f64>,
+    means: Vec<Vec<f64>>,
+    eps: f64,
+}
+
+impl StationaryControl {
+    pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize) -> StationaryControl {
+        let clusters: Vec<ClusterDynamics> =
+            (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
+        // Freeze the criteo_like dynamics exactly at day 0 — not at their
+        // baseline parameters — so this control differs from criteo_like
+        // only by the absence of drift.
+        let means = clusters
+            .iter()
+            .map(|c| {
+                let mut m = vec![0.0; n_dense];
+                c.mean_at(0.0, &mut m);
+                m
+            })
+            .collect();
+        StationaryControl {
+            weights: normalized(clusters.iter().map(|c| c.weight(0.0)).collect()),
+            logits: clusters.iter().map(|c| c.logit(0.0)).collect(),
+            means,
+            eps: drift::hardness(0.0),
+        }
+    }
+}
+
+impl Scenario for StationaryControl {
+    fn tag(&self) -> String {
+        "stationary_control".to_string()
+    }
+
+    fn mixture(&self, _d: f64) -> Vec<f64> {
+        self.weights.clone()
+    }
+
+    fn hardness(&self, _d: f64) -> f64 {
+        self.eps
+    }
+
+    fn logit(&self, k: usize, _d: f64) -> f64 {
+        self.logits[k]
+    }
+
+    fn mean_at(&self, k: usize, _d: f64, out: &mut [f64]) {
+        out.copy_from_slice(&self.means[k])
+    }
+
+    fn vocab_pointer(&self, k: usize, f: usize, _d: f64) -> u64 {
+        base_pointer(k, f)
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// One registry row: the base tag plus the human-readable description
+/// shown by `nshpo scenarios`.
+pub struct ScenarioInfo {
+    pub tag: &'static str,
+    pub dynamics: &'static str,
+    pub stresses: &'static str,
+}
+
+/// Every registered scenario. Base tags only — `abrupt_shift` also
+/// accepts a `@<day>` parameter (default: half the horizon).
+pub const REGISTRY: [ScenarioInfo; 5] = [
+    ScenarioInfo {
+        tag: "criteo_like",
+        dynamics: "4 mixture patterns, weekly hardness wobble, steady vocab drift",
+        stresses: "the paper's default non-stationary regime",
+    },
+    ScenarioInfo {
+        tag: "abrupt_shift",
+        dynamics: "step change in mixture + full vocab replacement at @day (default T/2)",
+        stresses: "regime changes: does identification survive a cliff?",
+    },
+    ScenarioInfo {
+        tag: "churn_storm",
+        dynamics: "8x vocabulary pointer drift, otherwise criteo_like",
+        stresses: "id churn: embeddings never see a stable vocabulary",
+    },
+    ScenarioInfo {
+        tag: "cold_start",
+        dynamics: "clusters bloom from ~zero mass at staggered onset days",
+        stresses: "unseen segments appearing mid-stream (stratified slices)",
+    },
+    ScenarioInfo {
+        tag: "stationary_control",
+        dynamics: "mixture/hardness/logits/vocab frozen at day 0",
+        stresses: "drift-free baseline: prediction strategies should tie",
+    },
+];
+
+/// Base tags of every registered scenario, registry order.
+pub fn tags() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.tag).collect()
+}
+
+/// Split `abrupt_shift@8` into (`abrupt_shift`, Some(`8`)).
+fn split_tag(tag: &str) -> (&str, Option<&str>) {
+    match tag.split_once('@') {
+        Some((base, param)) => (base, Some(param)),
+        None => (tag, None),
+    }
+}
+
+/// True when a requested tag names the same scenario as a recorded
+/// canonical tag (`abrupt_shift` matches `abrupt_shift@8`; a
+/// parameterized request must match exactly).
+pub fn tags_match(requested: &str, recorded: &str) -> bool {
+    if requested == recorded {
+        return true;
+    }
+    let (req_base, req_param) = split_tag(requested);
+    let (rec_base, _) = split_tag(recorded);
+    req_base == rec_base && req_param.is_none()
+}
+
+/// Build the scenario named by `cfg.scenario`, drawing its parameters
+/// from `rng` (the stream's seed-derived generator — construction *is*
+/// part of the deterministic seed contract).
+pub fn build(cfg: &StreamConfig, rng: &mut Rng) -> Result<Box<dyn Scenario>> {
+    let (base, param) = split_tag(cfg.scenario.as_str());
+    let n = cfg.n_clusters;
+    let n_dense = super::schema::N_DENSE;
+    match base {
+        "criteo_like" => Ok(Box::new(CriteoLike::new(rng, n, n_dense))),
+        "abrupt_shift" => {
+            let day = match param {
+                Some(p) => p.parse::<usize>().map_err(|_| {
+                    err!("bad abrupt_shift day {p:?} (want e.g. abrupt_shift@8)")
+                })?,
+                None => (cfg.days / 2).max(1),
+            };
+            Ok(Box::new(AbruptShift::new(rng, n, n_dense, day)))
+        }
+        "churn_storm" => Ok(Box::new(ChurnStorm::new(rng, n, n_dense))),
+        "cold_start" => Ok(Box::new(ColdStart::new(rng, n, n_dense, cfg.days))),
+        "stationary_control" => Ok(Box::new(StationaryControl::new(rng, n, n_dense))),
+        other => Err(err!(
+            "unknown scenario {other:?} (registered: {})",
+            tags().join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(tag: &str) -> StreamConfig {
+        StreamConfig {
+            seed: 3,
+            days: 10,
+            steps_per_day: 4,
+            batch: 32,
+            n_clusters: 8,
+            scenario: tag.to_string(),
+        }
+    }
+
+    fn mk(tag: &str) -> Box<dyn Scenario> {
+        let c = cfg(tag);
+        let mut rng = Rng::new(c.seed);
+        build(&c, &mut rng).unwrap()
+    }
+
+    #[test]
+    fn registry_builds_every_tag() {
+        for info in &REGISTRY {
+            let s = mk(info.tag);
+            let canonical = s.tag();
+            let (base, _) = split_tag(&canonical);
+            assert_eq!(base, info.tag);
+            // mixture is a distribution every day
+            for d in 0..10 {
+                let pi = s.mixture(d as f64);
+                assert_eq!(pi.len(), 8);
+                let sum: f64 = pi.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "{}: sum {sum}", info.tag);
+                assert!(pi.iter().all(|&p| p > 0.0), "{}", info.tag);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let c = cfg("no_such_regime");
+        let mut rng = Rng::new(1);
+        assert!(build(&c, &mut rng).is_err());
+        let c2 = cfg("abrupt_shift@notaday");
+        assert!(build(&c2, &mut Rng::new(1)).is_err());
+    }
+
+    #[test]
+    fn abrupt_shift_steps_at_the_configured_day() {
+        let s = mk("abrupt_shift@5");
+        assert_eq!(s.tag(), "abrupt_shift@5");
+        let before = s.mixture(4.9);
+        let after = s.mixture(5.0);
+        // the reshuffle swaps cluster identities: mixtures differ sharply
+        let l1: f64 = before.iter().zip(&after).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 > 0.1, "no mixture step: {l1}");
+        // within a regime there is no step: adjacent days stay close
+        let pre2 = s.mixture(4.6);
+        let drift_l1: f64 =
+            before.iter().zip(&pre2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(drift_l1 < l1, "shift not larger than in-regime drift");
+        // the vocabulary jumps wholesale
+        let p_before = s.vocab_pointer(0, 0, 4.9);
+        let p_after = s.vocab_pointer(0, 0, 5.0);
+        assert!(p_after > p_before + 500_000, "{p_before} -> {p_after}");
+    }
+
+    #[test]
+    fn churn_storm_drifts_faster_than_criteo() {
+        let storm = mk("churn_storm");
+        let base = mk("criteo_like");
+        let storm_daily = storm.vocab_pointer(0, 0, 1.0) - storm.vocab_pointer(0, 0, 0.0);
+        let base_daily = base.vocab_pointer(0, 0, 1.0) - base.vocab_pointer(0, 0, 0.0);
+        assert!(storm_daily >= 4 * base_daily, "{storm_daily} vs {base_daily}");
+    }
+
+    #[test]
+    fn cold_start_clusters_bloom_from_near_zero() {
+        let s = mk("cold_start");
+        let early = s.mixture(0.5);
+        let late = s.mixture(9.5);
+        // some cluster is near-zero early but material late
+        let blooms = (0..8).any(|k| early[k] < 0.01 && late[k] > 5.0 * early[k]);
+        assert!(blooms, "no cold-start bloom: {early:?} -> {late:?}");
+    }
+
+    #[test]
+    fn stationary_control_is_frozen() {
+        let s = mk("stationary_control");
+        assert_eq!(s.mixture(0.0), s.mixture(9.0));
+        assert_eq!(s.hardness(0.0), s.hardness(7.3));
+        assert_eq!(s.logit(3, 0.0), s.logit(3, 8.0));
+        assert_eq!(s.vocab_pointer(2, 5, 0.0), s.vocab_pointer(2, 5, 9.0));
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        s.mean_at(1, 0.0, &mut a);
+        s.mean_at(1, 6.0, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn construction_is_deterministic_per_seed() {
+        let a = mk("cold_start");
+        let b = mk("cold_start");
+        assert_eq!(a.mixture(3.0), b.mixture(3.0));
+        assert_eq!(a.vocab_pointer(1, 2, 3.0), b.vocab_pointer(1, 2, 3.0));
+    }
+
+    #[test]
+    fn tag_matching_rules() {
+        assert!(tags_match("abrupt_shift", "abrupt_shift@8"));
+        assert!(tags_match("abrupt_shift@8", "abrupt_shift@8"));
+        assert!(!tags_match("abrupt_shift@4", "abrupt_shift@8"));
+        assert!(!tags_match("churn_storm", "criteo_like"));
+        assert!(tags_match("criteo_like", "criteo_like"));
+    }
+}

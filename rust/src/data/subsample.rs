@@ -82,6 +82,7 @@ mod tests {
             steps_per_day: 2,
             batch: 2000,
             n_clusters: 4,
+            ..StreamConfig::default()
         })
         .batch_at(1)
     }

@@ -246,7 +246,7 @@ fn fig1(bank: &Bank, out: &Path) -> Result<()> {
         })
         .collect();
     let text = plot::render(
-        "Figure 1: cluster sizes over the training window",
+        &format!("Figure 1: cluster sizes over the training window [{}]", bank.scenario),
         "day",
         "share of examples",
         &series,
@@ -662,9 +662,10 @@ fn seeds(bank: &Bank, out: &Path) -> Result<()> {
 fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let floor = seed_floor(bank);
     let mut text = format!(
-        "Headline summary: smallest C reaching normalized regret@3 <= {floor:.4} \
-         (measured seed floor)\n\
+        "Headline summary [scenario {}]: smallest C reaching normalized \
+         regret@3 <= {floor:.4} (measured seed floor)\n\
          family | basic early stop | basic subsample | ours (perf+strat+neg0.5)\n",
+        bank.scenario,
     );
     let mut csv = String::from("family,method,best_cost\n");
     for fam in families_in(bank) {

@@ -8,8 +8,10 @@
 //! Layer map:
 //! * [`util`] — substrates (PRNG, JSON, CLI, thread pool, stats, bench,
 //!   property testing) — the offline image ships no crates for these.
-//! * [`data`] — the non-stationary clickstream generator (Criteo-1TB
-//!   stand-in) and sub-sampling plans.
+//! * [`data`] — the non-stationary clickstream generator with
+//!   scenario-pluggable dynamics (`data::scenario`: criteo_like,
+//!   abrupt_shift, churn_storm, cold_start, stationary_control), the
+//!   shared batch cache (`data::cache`), and sub-sampling plans.
 //! * [`runtime`] — PJRT executor for the AOT-lowered model artifacts.
 //! * [`train`] — online training loop (progressive validation) and the
 //!   trajectory bank.

@@ -1,12 +1,13 @@
 //! nshpo — CLI for the NS-HPO reproduction.
 //!
 //! Subcommands:
-//!   bank    train every candidate configuration once; save the bank
-//!   figure  regenerate paper figures/tables from a bank
-//!   search  unified two-stage search (replay or live backend)
-//!   live    thin alias for `search --live`
-//!   sim     industrial surrogate sweep (Fig 6 style)
-//!   info    inspect artifacts and banks
+//!   bank      train every candidate configuration once; save the bank
+//!   figure    regenerate paper figures/tables from a bank
+//!   search    unified two-stage search (replay or live backend)
+//!   live      thin alias for `search --live`
+//!   scenarios list the registered data scenarios (data::scenario)
+//!   sim       industrial surrogate sweep (Fig 6 style)
+//!   info      inspect artifacts and banks
 
 use nshpo::bail;
 use nshpo::coordinator::live::LiveSearch;
@@ -33,14 +34,23 @@ USAGE: nshpo <subcommand> [flags]
   bank      --out results/bank [--families fm,cn,...] [--days 24]
             [--steps-per-day 24] [--batch 256] [--thin 1] [--proxy]
             [--variance-seeds 8] [--artifacts artifacts] [--quick]
+            [--scenario criteo_like]  (see `nshpo scenarios`)
+            [--no-batch-cache]  (regenerate batches per run)
             [--workers N]  (proxy fan-out; 0/unset = cores - 1)
   figure    --all | --id 3 [--bank results/bank] [--out results]
+            [--scenario TAG]  (guard: fail unless the bank was built
+            on this scenario)
             [--workers N]  (replay parallelism; 0/unset = cores - 1,
             also via NSHPO_REPLAY_WORKERS; exits nonzero if any
             figure fails)
   search    unified two-stage SearchSession (one Algorithm-1 core):
             backend: [--bank results/bank [--plan full]] | --live
             [--proxy] [--family fm] [--thin 3]
+            [--scenario criteo_like]  (live: pick the regime; replay:
+            provenance guard against the bank; e.g. abrupt_shift,
+            abrupt_shift@8, churn_storm, cold_start,
+            stationary_control)
+            [--no-batch-cache]  (live: regenerate batches per config)
             [--workers N]  (live backend only; replay figures
             parallelize via `figure --workers`)
             plan:    [--method perf|one-shot|late-start|hyperband]
@@ -51,6 +61,7 @@ USAGE: nshpo <subcommand> [flags]
   live      thin alias for `search --live` (legacy default --stage 1)
             [--family fm] [--thin 3] [--stop-every 3] [--rho 0.5]
             [--proxy] [--days 12] [--steps-per-day 12] [--workers N]
+  scenarios list registered data scenarios (tag, dynamics, stresses)
   sim       [--tasks 12] [--configs 30] [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
 ";
@@ -62,6 +73,7 @@ fn main() {
         Some("figure") => cmd_figure(&args),
         Some("search") => run_search(&args, args.has("live"), 2),
         Some("live") => run_search(&args, true, 1),
+        Some("scenarios") => cmd_scenarios(),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -84,7 +96,17 @@ fn stream_from(args: &Args) -> StreamConfig {
         steps_per_day: args.usize_or("steps-per-day", 24),
         batch: args.usize_or("batch", 256),
         n_clusters: args.usize_or("latent-clusters", 32),
+        scenario: args.str_or("scenario", "criteo_like"),
     }
+}
+
+fn cmd_scenarios() -> Result<()> {
+    println!("{:<20} {:<66} stresses", "tag", "dynamics");
+    for info in &nshpo::data::scenario::REGISTRY {
+        println!("{:<20} {:<66} {}", info.tag, info.dynamics, info.stresses);
+    }
+    println!("\nuse with: nshpo bank|search --scenario <tag>  (abrupt_shift takes @<day>)");
+    Ok(())
 }
 
 fn cmd_bank(args: &Args) -> Result<()> {
@@ -98,6 +120,7 @@ fn cmd_bank(args: &Args) -> Result<()> {
         cluster_k: args.usize_or("clusters", 32),
         verbose: !args.has("quiet"),
         workers: args.usize_or("workers", 0),
+        batch_cache: !args.has("no-batch-cache"),
         ..BankOptions::default()
     };
     let fams = args.list("families");
@@ -142,6 +165,20 @@ fn cmd_figure(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // --scenario is a provenance guard here: exhibits replay the bank's
+    // recorded trajectories, so the scenario is whatever the bank was
+    // built on — fail loudly rather than mislabel a figure.
+    if let Some(want) = args.str_opt("scenario") {
+        match &bank {
+            Some(b) if nshpo::data::scenario::tags_match(want, &b.scenario) => {}
+            Some(b) => bail!(
+                "bank {bank_path:?} was built on scenario {:?}, not {want:?} \
+                 (rebuild with `nshpo bank --scenario {want}`)",
+                b.scenario
+            ),
+            None => bail!("--scenario needs a bank (none at {bank_path:?})"),
+        }
+    }
     let ids: Vec<String> = if args.has("all") {
         harness::ALL_FIGURES.iter().map(|s| s.to_string()).collect()
     } else if let Some(id) = args.str_opt("id") {
@@ -245,6 +282,18 @@ fn search_replay(args: &Args, stage: usize) -> Result<()> {
         bail!("bank {bank_path:?} not found (run `nshpo bank`, or pass --live)");
     }
     let bank = Bank::load(&bank_path)?;
+    // Provenance guard (same contract as `figure --scenario`): a replay
+    // search runs on whatever scenario the bank was built on, so a
+    // mismatched request must fail loudly, not mislabel the results.
+    if let Some(want) = args.str_opt("scenario") {
+        if !nshpo::data::scenario::tags_match(want, &bank.scenario) {
+            bail!(
+                "bank {bank_path:?} was built on scenario {:?}, not {want:?} \
+                 (rebuild with `nshpo bank --scenario {want}`, or use --live)",
+                bank.scenario
+            );
+        }
+    }
     let family = args.str_or("family", "fm");
     let plan_tag = args.str_or("plan", "full");
     let (ts, labels) = bank
@@ -255,7 +304,8 @@ fn search_replay(args: &Args, stage: usize) -> Result<()> {
     let mult = bank.plan_multiplier(&family, &plan_tag);
     let plan = plan_from(args, ts.days, mult)?;
     println!(
-        "replay search: family={family} plan={plan_tag} ({} configs x {} steps, cost multiplier {mult:.3})",
+        "replay search: family={family} plan={plan_tag} scenario={} ({} configs x {} steps, cost multiplier {mult:.3})",
+        bank.scenario,
         ts.n_configs(),
         ts.total_steps()
     );
@@ -307,8 +357,14 @@ fn search_live(args: &Args, stage: usize) -> Result<()> {
     };
     let total_steps = stream_cfg.total_steps();
 
+    // Shared batch cache: the worker pool generates each step's batch
+    // once per sweep instead of once per candidate (bit-identical).
+    let mut stream = nshpo::data::Stream::try_new(stream_cfg)?;
+    if !args.has("no-batch-cache") {
+        stream = stream.with_cache(total_steps);
+    }
     let cs = ClusteredStream::build(
-        nshpo::data::Stream::new(stream_cfg),
+        stream,
         ClusterSource::KMeans { k: args.usize_or("clusters", 16), sample_days: 2 },
         args.usize_or("eval-days", 3),
     );
@@ -317,7 +373,8 @@ fn search_live(args: &Args, stage: usize) -> Result<()> {
     // Mirror the bank builder's fan-out line so live and bank runs read
     // the same way in logs.
     eprintln!(
-        "live: {} configs x {} steps on {} workers ({} mode)",
+        "live[{}]: {} configs x {} steps on {} workers ({} mode)",
+        cs.stream.scenario_tag(),
         specs.len(),
         total_steps,
         workers,
@@ -347,6 +404,9 @@ fn search_live(args: &Args, stage: usize) -> Result<()> {
             out.full_wall_estimate,
             out.full_wall_estimate / out.wall_seconds.max(1e-9),
         );
+        if let Some(rate) = out.cache_hit_rate {
+            println!("batch cache hit rate: {:.1}%", rate * 100.0);
+        }
         if let Some(two) = &out.two_stage {
             println!(
                 "stage 1 C = {:.3}; stage 2 finished {} finalists for +{:.3}",
@@ -404,8 +464,9 @@ fn cmd_info(args: &Args) -> Result<()> {
     if bank_path.exists() {
         let bank = Bank::load(&bank_path)?;
         println!(
-            "bank {:?}: {} runs, {} days x {} steps/day, {} clusters",
-            bank_path, bank.runs.len(), bank.days, bank.steps_per_day, bank.n_clusters
+            "bank {:?}: {} runs, {} days x {} steps/day, {} clusters, scenario {}",
+            bank_path, bank.runs.len(), bank.days, bank.steps_per_day, bank.n_clusters,
+            bank.scenario
         );
         for (fam, plan, n) in bank.inventory() {
             println!("  {fam:<6} {plan:<16} {n} runs");

@@ -13,7 +13,8 @@ use crate::util::ser::{Reader, SerError, Writer};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"NSBK";
-const VERSION: u32 = 1;
+// v2: scenario provenance on the bank header and every RunKey.
+const VERSION: u32 = 2;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunKey {
@@ -23,6 +24,10 @@ pub struct RunKey {
     pub hparams: [f32; 3],
     pub plan_tag: String,
     pub seed: i32,
+    /// Canonical tag of the data scenario the run was trained on
+    /// (`data::scenario`) — trajectories from different regimes must
+    /// never be compared as if they shared a stream.
+    pub scenario: String,
 }
 
 #[derive(Clone, Debug)]
@@ -42,6 +47,8 @@ pub struct Bank {
     pub n_clusters: usize,
     pub eval_days: usize,
     pub stream_seed: u64,
+    /// Canonical scenario tag of the stream every run trained on.
+    pub scenario: String,
     /// `[day][cluster]` data-side example counts.
     pub day_cluster_counts: Vec<Vec<u32>>,
     pub eval_cluster_counts: Vec<u64>,
@@ -145,6 +152,7 @@ impl Bank {
         w.u32(self.n_clusters as u32);
         w.u32(self.eval_days as u32);
         w.u64(self.stream_seed);
+        w.str(&self.scenario);
         w.u32(self.day_cluster_counts.len() as u32);
         for row in &self.day_cluster_counts {
             w.u32s(row);
@@ -161,6 +169,7 @@ impl Bank {
             w.f32(r.key.hparams[2]);
             w.str(&r.key.plan_tag);
             w.u32(r.key.seed as u32);
+            w.str(&r.key.scenario);
             w.f32s(&r.step_losses);
             w.f32s(&r.cluster_loss_sums);
             w.u64(r.examples_trained);
@@ -178,6 +187,7 @@ impl Bank {
         let n_clusters = r.u32()? as usize;
         let eval_days = r.u32()? as usize;
         let stream_seed = r.u64()?;
+        let scenario = r.str()?;
         let n_days = r.u32()? as usize;
         let mut day_cluster_counts = Vec::with_capacity(n_days);
         for _ in 0..n_days {
@@ -194,12 +204,21 @@ impl Bank {
             let hparams = [r.f32()?, r.f32()?, r.f32()?];
             let plan_tag = r.str()?;
             let seed = r.u32()? as i32;
+            let run_scenario = r.str()?;
             let step_losses = r.f32s()?;
             let cluster_loss_sums = r.f32s()?;
             let examples_trained = r.u64()?;
             let examples_seen = r.u64()?;
             runs.push(RunRecord {
-                key: RunKey { family, variant, label, hparams, plan_tag, seed },
+                key: RunKey {
+                    family,
+                    variant,
+                    label,
+                    hparams,
+                    plan_tag,
+                    seed,
+                    scenario: run_scenario,
+                },
                 step_losses,
                 cluster_loss_sums,
                 examples_trained,
@@ -212,6 +231,7 @@ impl Bank {
             n_clusters,
             eval_days,
             stream_seed,
+            scenario,
             day_cluster_counts,
             eval_cluster_counts,
             runs,
@@ -230,6 +250,7 @@ mod tests {
             n_clusters: 3,
             eval_days: 2,
             stream_seed: 9,
+            scenario: "criteo_like".into(),
             day_cluster_counts: vec![vec![10, 20, 30]; 4],
             eval_cluster_counts: vec![20, 40, 60],
             runs: Vec::new(),
@@ -242,6 +263,7 @@ mod tests {
                 hparams: [-3.0, -2.0, 1e-6],
                 plan_tag: "full".into(),
                 seed: 0,
+                scenario: "criteo_like".into(),
             };
             let traj = RunTrajectory {
                 step_losses: vec![0.5; 8],
@@ -262,6 +284,7 @@ mod tests {
         let loaded = Bank::load(&path).unwrap();
         assert_eq!(loaded.runs.len(), 3);
         assert_eq!(loaded.days, 4);
+        assert_eq!(loaded.scenario, "criteo_like");
         assert_eq!(loaded.runs[0].key, bank.runs[0].key);
         assert_eq!(loaded.runs[2].step_losses, bank.runs[2].step_losses);
         assert_eq!(loaded.eval_cluster_counts, vec![20, 40, 60]);

@@ -205,6 +205,7 @@ mod tests {
             steps_per_day: 8,
             batch: 128,
             n_clusters: 8,
+            ..StreamConfig::default()
         })
     }
 

@@ -41,7 +41,7 @@ impl ClusteredStream {
         let (assignments, n_clusters) = match source {
             ClusterSource::Latent => {
                 let a: Vec<Vec<u16>> =
-                    (0..t_total).map(|t| stream.batch_at(t).latent_cluster.clone()).collect();
+                    (0..t_total).map(|t| stream.batch_arc(t).latent_cluster.clone()).collect();
                 (a, stream.n_clusters())
             }
             ClusterSource::KMeans { k, sample_days } => {
@@ -49,7 +49,7 @@ impl ClusteredStream {
                 let sample_steps = (sample_days.max(1) * spd).min(t_total);
                 let mut points: Vec<Vec<f64>> = Vec::new();
                 for t in 0..sample_steps {
-                    let b = stream.batch_at(t);
+                    let b = stream.batch_arc(t);
                     for i in 0..b.len() {
                         // thin to keep k-means fast: every 4th example
                         if i % 4 == 0 {
@@ -62,7 +62,7 @@ impl ClusteredStream {
                 let km = cluster::fit(&points, k, stream.cfg.seed ^ 0xC1A5, 25);
                 let a: Vec<Vec<u16>> = (0..t_total)
                     .map(|t| {
-                        let b = stream.batch_at(t);
+                        let b = stream.batch_arc(t);
                         cluster::assign_rows_f32(&km.centroids, &b.dense, N_DENSE)
                     })
                     .collect();
@@ -124,7 +124,9 @@ pub fn run_range(
     let spd = cfg.steps_per_day;
     debug_assert!(t_to <= t_total);
     for t in t_from..t_to {
-        let batch = cs.stream.batch_at(t);
+        // Cached path: with a shared BatchCache, N candidates sweeping
+        // the same steps generate each batch once instead of N times.
+        let batch = cs.stream.batch_arc(t);
         let weights = plan.weights(&batch, subsample_seed, t);
         let progress = t as f32 / t_total as f32;
         let (loss, per_ex) = model.step(&batch, &weights, progress, hparams)?;
@@ -172,6 +174,7 @@ mod tests {
             steps_per_day: 4,
             batch: 96,
             n_clusters: 6,
+            ..StreamConfig::default()
         });
         let source = if latent {
             ClusterSource::Latent
@@ -228,6 +231,34 @@ mod tests {
         assert!((frac - 0.25).abs() < 0.05, "trained fraction {frac}");
         // but evaluation still covers everything
         assert_eq!(traj.step_losses.len(), 24);
+    }
+
+    #[test]
+    fn cached_run_is_bit_identical_to_uncached() {
+        let hp = [-2.0f32, -2.0, 1e-6];
+        let uncached = {
+            let mut m = LogisticProxy::new(0);
+            run_full(&mut m, &cs(true), Plan::negative_only(0.5), hp, 1).unwrap()
+        };
+        let cached = {
+            let stream = Stream::new(StreamConfig {
+                seed: 11,
+                days: 6,
+                steps_per_day: 4,
+                batch: 96,
+                n_clusters: 6,
+                ..StreamConfig::default()
+            })
+            .with_cache(32);
+            let cs = ClusteredStream::build(stream, ClusterSource::Latent, 2);
+            let mut m = LogisticProxy::new(0);
+            let traj = run_full(&mut m, &cs, Plan::negative_only(0.5), hp, 1).unwrap();
+            assert!(cs.stream.cache().unwrap().hits() > 0, "cache never hit");
+            traj
+        };
+        assert_eq!(uncached.step_losses, cached.step_losses);
+        assert_eq!(uncached.cluster_loss_sums, cached.cluster_loss_sums);
+        assert_eq!(uncached.examples_trained, cached.examples_trained);
     }
 
     #[test]

@@ -24,6 +24,7 @@ fn quick_bank_opts(days: usize, spd: usize) -> BankOptions {
             steps_per_day: spd,
             batch: 96,
             n_clusters: 12,
+            ..StreamConfig::default()
         },
         eval_days: 3,
         families: vec!["fm".into()],
@@ -150,6 +151,30 @@ fn seed_variance_measured_on_real_runs() {
 }
 
 #[test]
+fn every_scenario_banks_and_searches_end_to_end() {
+    // A tiny proxy bank + replay search per registered scenario: new
+    // scenarios cannot rot without failing tier-1.
+    for tag in nshpo::data::scenario::tags() {
+        let mut opts = quick_bank_opts(8, 3);
+        opts.stream.scenario = tag.to_string();
+        opts.plans = vec![Plan::Full];
+        opts.variance_seeds = 0;
+        let bank = build_bank(&opts).unwrap_or_else(|e| panic!("[{tag}] bank: {e:#}"));
+        assert!(
+            nshpo::data::scenario::tags_match(tag, &bank.scenario),
+            "[{tag}] provenance {}",
+            bank.scenario
+        );
+        let (ts, _) = bank.trajectory_set("fm", "full", 0).unwrap();
+        let out = replay(&ts, SearchPlan::performance_based(vec![2, 4, 6], 0.5));
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..9).collect::<Vec<_>>(), "[{tag}] ranking not a permutation");
+        assert!(out.cost < 1.0, "[{tag}] no savings: {}", out.cost);
+    }
+}
+
+#[test]
 fn live_search_agrees_with_bank_replay_on_cost() {
     use nshpo::coordinator::{live::LiveSearch, ProxyFactory};
     use nshpo::search::sweep;
@@ -161,6 +186,7 @@ fn live_search_agrees_with_bank_replay_on_cost() {
         steps_per_day: 4,
         batch: 64,
         n_clusters: 8,
+        ..StreamConfig::default()
     };
     let cs = ClusteredStream::build(
         nshpo::data::Stream::new(stream_cfg),

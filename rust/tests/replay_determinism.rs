@@ -104,6 +104,7 @@ fn quick_bank_opts() -> BankOptions {
             steps_per_day: 4,
             batch: 64,
             n_clusters: 8,
+            ..StreamConfig::default()
         },
         eval_days: 3,
         families: vec!["fm".into()],

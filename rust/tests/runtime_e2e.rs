@@ -30,6 +30,7 @@ fn stream(batch: usize) -> Stream {
         steps_per_day: 4,
         batch,
         n_clusters: 8,
+        ..StreamConfig::default()
     })
 }
 

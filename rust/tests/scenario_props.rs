@@ -1,0 +1,125 @@
+//! Property tests (util::propcheck) over every registered data scenario:
+//!
+//! * `batch_at(t)` is deterministic — across repeated calls, across
+//!   fresh `Stream` instances, and across the cache hit/miss boundary
+//!   (`batch_arc` under a deliberately tiny, eviction-heavy cache).
+//! * Sub-sampling plans are *paired*: every plan sees byte-identical
+//!   examples, only the 0/1 training weights differ, and the weights
+//!   themselves are deterministic in (plan, seed, t).
+
+use nshpo::data::{scenario, Batch, Plan, Stream, StreamConfig};
+use nshpo::util::propcheck::check;
+
+fn cfg(tag: &str) -> StreamConfig {
+    StreamConfig {
+        seed: 29,
+        days: 5,
+        steps_per_day: 4,
+        batch: 48,
+        n_clusters: 6,
+        scenario: tag.to_string(),
+    }
+}
+
+fn batches_equal(a: &Batch, b: &Batch) -> Result<(), String> {
+    if a.dense != b.dense {
+        return Err("dense differs".into());
+    }
+    if a.cat != b.cat {
+        return Err("cat ids differ".into());
+    }
+    if a.labels != b.labels {
+        return Err("labels differ".into());
+    }
+    if a.latent_cluster != b.latent_cluster {
+        return Err("latent clusters differ".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn batch_at_is_deterministic_and_cache_transparent_for_every_scenario() {
+    for tag in scenario::tags() {
+        let fresh_a = Stream::new(cfg(tag));
+        let fresh_b = Stream::new(cfg(tag));
+        // capacity far below total_steps: hits, misses, *and* evictions
+        // all happen inside the sampled window
+        let cached = Stream::new(cfg(tag)).with_cache(4);
+        let total = fresh_a.cfg.total_steps();
+        check(
+            0xD0_0D + tag.len() as u64,
+            40,
+            |rng| rng.below(total as u64) as usize,
+            |&t| {
+                let a = fresh_a.batch_at(t);
+                batches_equal(&a, &fresh_a.batch_at(t))
+                    .map_err(|e| format!("[{tag}] repeated call: {e}"))?;
+                batches_equal(&a, &fresh_b.batch_at(t))
+                    .map_err(|e| format!("[{tag}] fresh stream: {e}"))?;
+                // miss-or-hit, then guaranteed hit: both bit-identical
+                batches_equal(&a, &cached.batch_arc(t))
+                    .map_err(|e| format!("[{tag}] cached (1st): {e}"))?;
+                batches_equal(&a, &cached.batch_arc(t))
+                    .map_err(|e| format!("[{tag}] cached (2nd): {e}"))?;
+                Ok(())
+            },
+        );
+        let c = cached.cache().unwrap();
+        assert!(c.hits() > 0, "[{tag}] no cache hits exercised");
+        assert!(c.misses() > 0, "[{tag}] no cache misses exercised");
+        assert!(c.len() <= c.capacity(), "[{tag}] cache over capacity");
+    }
+}
+
+#[test]
+fn subsampling_plans_stay_paired_for_every_scenario() {
+    let plans = [
+        Plan::Full,
+        Plan::Uniform(0.5),
+        Plan::Uniform(0.25),
+        Plan::negative_only(0.5),
+    ];
+    for tag in scenario::tags() {
+        let stream = Stream::new(cfg(tag));
+        let total = stream.cfg.total_steps();
+        check(
+            0xBEEF + tag.len() as u64,
+            30,
+            |rng| (rng.below(total as u64) as usize, rng.below(1 << 20) as usize),
+            |&(t, seed)| {
+                let seed = seed as u64;
+                let batch = stream.batch_at(t);
+                for plan in &plans {
+                    let w = plan.weights(&batch, seed, t);
+                    if w.len() != batch.len() {
+                        return Err(format!("[{tag}] {} weight len", plan.tag()));
+                    }
+                    if w.iter().any(|&x| x != 0.0 && x != 1.0) {
+                        return Err(format!("[{tag}] {} non-0/1 weight", plan.tag()));
+                    }
+                    if w != plan.weights(&batch, seed, t) {
+                        return Err(format!("[{tag}] {} weights not deterministic", plan.tag()));
+                    }
+                    // a plan must never drop a positive under neg-only
+                    if let Plan::LabelDependent { pos, .. } = plan {
+                        if *pos == 1.0 {
+                            for (i, &y) in batch.labels.iter().enumerate() {
+                                if y > 0.5 && w[i] != 1.0 {
+                                    return Err(format!("[{tag}] positive dropped at {i}"));
+                                }
+                            }
+                        }
+                    }
+                }
+                // paired: the examples the plans saw are the stream's
+                // examples — weighting never perturbs the batch
+                batches_equal(&batch, &stream.batch_at(t))
+                    .map_err(|e| format!("[{tag}] batch changed by weighting: {e}"))?;
+                if Plan::Full.weights(&batch, seed, t).iter().any(|&x| x != 1.0) {
+                    return Err(format!("[{tag}] full plan dropped an example"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

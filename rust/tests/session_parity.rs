@@ -6,7 +6,7 @@
 //! divergent copies.
 
 use nshpo::coordinator::ProxyFactory;
-use nshpo::data::{Plan, Stream, StreamConfig};
+use nshpo::data::{scenario, Plan, Stream, StreamConfig};
 use nshpo::predict::{LawKind, Strategy};
 use nshpo::search::sweep::{self, ConfigSpec};
 use nshpo::search::{
@@ -14,18 +14,25 @@ use nshpo::search::{
 };
 use nshpo::train::{run_full, ClusterSource, ClusteredStream, LogisticProxy};
 
+/// `cached` attaches the shared batch cache, so scenario parity also
+/// pins that the cached and uncached data paths are bit-identical.
+fn clustered_stream_on(tag: &str, cached: bool) -> ClusteredStream {
+    let mut stream = Stream::new(StreamConfig {
+        seed: 91,
+        days: 8,
+        steps_per_day: 3,
+        batch: 64,
+        n_clusters: 6,
+        scenario: tag.to_string(),
+    });
+    if cached {
+        stream = stream.with_cache(64);
+    }
+    ClusteredStream::build(stream, ClusterSource::Latent, 2)
+}
+
 fn clustered_stream() -> ClusteredStream {
-    ClusteredStream::build(
-        Stream::new(StreamConfig {
-            seed: 91,
-            days: 8,
-            steps_per_day: 3,
-            batch: 64,
-            n_clusters: 6,
-        }),
-        ClusterSource::Latent,
-        2,
-    )
+    clustered_stream_on("criteo_like", false)
 }
 
 /// Record the bank the paper's backtesting methodology would build: one
@@ -108,6 +115,48 @@ fn perf_based_stratified_live_matches_replay() {
 #[test]
 fn one_shot_live_matches_replay() {
     assert_parity(|| SearchPlan::one_shot(4), 2);
+}
+
+/// Replay-vs-live ranking/cost parity must hold on *every* registered
+/// scenario, not just the default stream — and the live side runs over
+/// the shared batch cache while the recorded bank is built uncached, so
+/// this also pins cache/no-cache bit-identity end to end.
+#[test]
+fn parity_holds_for_every_scenario() {
+    for tag in scenario::tags() {
+        let cs_live = clustered_stream_on(tag, true);
+        let cs_bank = clustered_stream_on(tag, false);
+        let specs = sweep::thin(sweep::family_sweep("fm"), 9); // 3 configs
+        let plan = || {
+            SearchPlan::performance_based(vec![2, 4, 6], 0.5)
+                .build()
+                .unwrap()
+        };
+
+        let live = {
+            let mut driver = LiveDriver::new(&ProxyFactory, &cs_live, &specs, Plan::Full, 0)
+                .with_workers(2);
+            SearchSession::new(plan(), &mut driver).run().unwrap()
+        };
+        let ts = bank_from(&cs_bank, &specs, 0);
+        let replayed = {
+            let mut driver = ReplayDriver::new(&ts);
+            SearchSession::new(plan(), &mut driver).run().unwrap()
+        };
+
+        assert_eq!(live.ranking, replayed.ranking, "[{tag}] ranking diverged");
+        assert_eq!(live.steps_trained, replayed.steps_trained, "[{tag}] steps diverged");
+        assert_eq!(
+            live.cost.to_bits(),
+            replayed.cost.to_bits(),
+            "[{tag}] cost diverged: {} vs {}",
+            live.cost,
+            replayed.cost
+        );
+        // the cached live path really shared batches across configs
+        let cache = cs_live.stream.cache().expect("live stream is cached");
+        assert!(cache.hits() > 0, "[{tag}] cache never hit");
+    }
 }
 
 #[test]
