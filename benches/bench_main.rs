@@ -144,7 +144,7 @@ fn main() {
         bench("search/perf_stopping_trajectory", 3, MIN_SAMPLE, || {
             black_box(
                 SearchPlan::performance_based(stops.clone(), 0.5)
-                    .strategy(Strategy::Trajectory(LawKind::InversePowerLaw))
+                    .strategy(Strategy::trajectory(LawKind::InversePowerLaw))
                     .run_replay(&ts)
                     .unwrap(),
             )
@@ -212,17 +212,17 @@ fn main() {
         let make_jobs = || -> Vec<ReplayJob> {
             let mut jobs = Vec::new();
             for strat in [
-                Strategy::Constant,
-                Strategy::Trajectory(LawKind::InversePowerLaw),
-                Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 1 },
+                Strategy::constant(),
+                Strategy::trajectory(LawKind::InversePowerLaw),
+                Strategy::stratified(Some(LawKind::InversePowerLaw), 1),
             ] {
                 for d in [2usize, 3, 4, 6, 8, 10, 12, 16, 20, 24] {
-                    jobs.push(ReplayJob::one_shot(&replay_ts, strat, d));
+                    jobs.push(ReplayJob::one_shot(&replay_ts, &strat, d));
                 }
                 for s in [2usize, 4, 8] {
                     jobs.push(ReplayJob::perf_based(
                         &replay_ts,
-                        strat,
+                        &strat,
                         equally_spaced_stops(replay_ts.days, s),
                         0.5,
                     ));

@@ -27,6 +27,26 @@ if cargo run --release -- search --live --proxy --scenario no_such_regime \
   exit 1
 fi
 
+echo "== strategy gate =="
+# Same contract on the prediction axis: the registry must list, a
+# non-default registered strategy must drive a (tiny) live search end to
+# end, and unknown tags must be rejected with the valid-tag list.
+cargo run --release -- strategies | grep -q switching
+cargo run --release -- search --live --proxy --strategy switching@2 \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+cargo run --release -- search --live --proxy --strategy recency@1.5 \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+if cargo run --release -- search --live --proxy --strategy no_such_predictor \
+    --days 4 --steps-per-day 4 --batch 64 --thin 9 >/dev/null 2>&1; then
+  echo "FAIL: unknown strategy tag was accepted" >&2
+  exit 1
+fi
+
+echo "== rustdoc gate =="
+# The crate carries #![warn(missing_docs)]; the public API must document
+# cleanly (docs/API.md is the committed markdown rendering of it).
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== zero-dependency gate =="
 # 1) No external-crate imports may reappear in source (in-tree substrates
 #    only). Matches `use <crate>` / `extern crate <crate>` for the crates

@@ -86,16 +86,16 @@ fn main() -> Result<()> {
     }
     let stops = equally_spaced_stops(ts_full.days, (ts_full.days / 6).max(2));
     for (name, strat, ts, mult) in [
-        ("perf-based + constant", Strategy::Constant, &ts_full, 1.0),
+        ("perf-based + constant", Strategy::constant(), &ts_full, 1.0),
         (
             "perf-based + trajectory(IPL)",
-            Strategy::Trajectory(LawKind::InversePowerLaw),
+            Strategy::trajectory(LawKind::InversePowerLaw),
             &ts_full,
             1.0,
         ),
         (
             "perf-based + stratified + neg0.5 (ours)",
-            Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 5 },
+            Strategy::stratified(Some(LawKind::InversePowerLaw), 5),
             &ts_neg,
             neg_mult,
         ),

@@ -40,7 +40,7 @@ fn main() -> Result<()> {
         if use_pjrt { "PJRT models" } else { "proxy models" }
     );
     let plan = SearchPlan::performance_based(stops, 0.5)
-        .strategy(Strategy::Constant)
+        .strategy(Strategy::constant())
         .build()?;
 
     // Shared batch cache: the worker pool generates each batch once per

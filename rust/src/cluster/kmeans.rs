@@ -10,10 +10,14 @@
 
 use crate::util::prng::Rng;
 
+/// A fitted k-means model.
 #[derive(Clone, Debug)]
 pub struct KMeans {
+    /// Cluster centers, `[k][dim]`.
     pub centroids: Vec<Vec<f64>>,
+    /// Sum of squared distances to the nearest centroid.
     pub inertia: f64,
+    /// Lloyd iterations actually run.
     pub iterations: usize,
 }
 
@@ -109,6 +113,7 @@ pub fn nearest(centroids: &[Vec<f64>], p: &[f64]) -> (usize, f64) {
     best
 }
 
+/// Squared Euclidean distance.
 #[inline]
 pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());

@@ -18,22 +18,32 @@ use std::time::Instant;
 /// setup can run any [`SearchPlan`] — stage 1 only or the full two-stage
 /// paradigm.
 pub struct LiveSearch<'a> {
+    /// Produces a fresh model per configuration (PJRT-backed or proxy).
     pub factory: &'a dyn ModelFactory,
+    /// The clustered stream every configuration trains over.
     pub cs: &'a ClusteredStream,
+    /// The candidate configurations.
     pub specs: &'a [ConfigSpec],
+    /// Sub-sampling plan applied as per-example training weights.
     pub data_plan: Plan,
+    /// Model initialization seed shared by every run.
     pub seed: i32,
     /// Worker threads for per-segment config fan-out (0 = cores - 1).
     pub workers: usize,
 }
 
+/// Result of a live search plus its wall-clock accounting.
 #[derive(Clone, Debug)]
 pub struct LiveOutcome {
+    /// Config indices, predicted-best first (stage 2: observed-best).
     pub ranking: Vec<usize>,
+    /// Relative cost C of the search (§4.1).
     pub cost: f64,
+    /// Steps each config actually trained (empirical-cost audit).
     pub steps_trained: Vec<usize>,
     /// Present when the session ran the full two-stage paradigm.
     pub two_stage: Option<TwoStageOutcome>,
+    /// Wall-clock seconds the whole session took.
     pub wall_seconds: f64,
     /// Wall-clock a full (no-stopping) search would have spent, estimated
     /// from the measured per-step time of each config's own run.
@@ -126,7 +136,7 @@ mod tests {
         let cs = cs();
         let specs = sweep::thin(sweep::family_sweep("fm"), 3); // 9 configs
         let plan = SearchPlan::performance_based(vec![2, 4, 6], 0.5)
-            .strategy(Strategy::Constant)
+            .strategy(Strategy::constant())
             .build()
             .unwrap();
         let out = search(&cs, &specs).run(&plan).unwrap();

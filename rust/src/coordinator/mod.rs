@@ -17,22 +17,30 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Everything `build_bank` needs to train one bank.
 #[derive(Clone, Debug)]
 pub struct BankOptions {
+    /// Stream shape, seed, and scenario every run trains on.
     pub stream: StreamConfig,
+    /// Evaluation window in days.
     pub eval_days: usize,
+    /// Experiment families to sweep (`fm`, `moe`, ...).
     pub families: Vec<String>,
+    /// Sub-sampling plans to train each config under.
     pub plans: Vec<Plan>,
     /// Keep every n-th sweep config (1 = full paper sweep).
     pub thin: usize,
     /// Train with the Rust logistic proxy instead of the PJRT artifacts
     /// (quick modes, tests; the end-to-end example uses PJRT).
     pub use_proxy: bool,
+    /// Where the AOT artifacts live (PJRT mode).
     pub artifacts_dir: PathBuf,
     /// Extra seeds for the §5.1.2 variance analysis (first config of the
     /// first family, full data).
     pub variance_seeds: usize,
+    /// k-means cluster count for the stratified decomposition.
     pub cluster_k: usize,
+    /// Log per-run progress to stderr.
     pub verbose: bool,
     /// Worker threads for the proxy fan-out (0 = all cores minus one).
     pub workers: usize,
@@ -215,6 +223,7 @@ fn key_of(job: &Job, scenario: &str) -> RunKey {
 /// must be `Send` so the `LiveDriver` can fan segment training out over
 /// worker threads.
 pub trait ModelFactory {
+    /// A fresh model for `spec`, initialized from `seed`.
     fn create<'a>(
         &'a self,
         spec: &ConfigSpec,
@@ -228,6 +237,7 @@ pub struct PjrtFactory {
 }
 
 impl PjrtFactory {
+    /// Compile each distinct variant once and cache the executables.
     pub fn new(
         engine: &crate::runtime::Engine,
         manifest: &crate::runtime::Manifest,

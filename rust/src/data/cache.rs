@@ -32,6 +32,7 @@ struct Shard {
     order: VecDeque<usize>,
 }
 
+/// The sharded batch cache (see module docs).
 pub struct BatchCache {
     shards: Vec<Mutex<Shard>>,
     /// Max entries per shard (total capacity rounded up to a multiple of
@@ -77,10 +78,12 @@ impl BatchCache {
         b
     }
 
+    /// Lookups served from the cache.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Lookups that had to generate.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -101,6 +104,7 @@ impl BatchCache {
         self.shards.iter().map(|s| s.lock().expect("batch cache shard").slots.len()).sum()
     }
 
+    /// True when no batch is resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -11,37 +11,51 @@
 
 use crate::util::prng::Rng;
 
+/// Mixture-weight pattern of one cluster over the horizon.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pattern {
+    /// Roughly constant share.
     Stable,
+    /// Near-zero early, grows through a logistic knee.
     LateBloomer,
+    /// Large early, shrinks through a logistic knee.
     Decayer,
+    /// Sinusoidal share with a sampled period and phase.
     Seasonal,
 }
 
+/// Sampled per-cluster dynamics: mixture shape, CTR wobble, dense drift.
 #[derive(Clone, Debug)]
 pub struct ClusterDynamics {
+    /// Which mixture-weight pattern the cluster follows.
     pub pattern: Pattern,
+    /// Baseline (pattern-independent) mixture mass.
     pub base_weight: f64,
     /// Onset/offset midpoint in days for bloomers/decayers.
     pub knee_day: f64,
     /// Logistic steepness for bloomers/decayers (days).
     pub tau: f64,
-    /// Seasonal period (days) and phase for Seasonal clusters.
+    /// Seasonal period (days) for Seasonal clusters.
     pub period: f64,
+    /// Seasonal phase offset (radians).
     pub phase: f64,
     /// Base CTR logit offset of the cluster.
     pub base_logit: f64,
     /// Weekly CTR wobble amplitude.
     pub logit_amp: f64,
+    /// Weekly CTR wobble phase (radians).
     pub logit_phase: f64,
-    /// Dense feature mean vector and its drift direction.
+    /// Dense feature mean vector.
     pub mean: Vec<f64>,
+    /// Direction the dense mean rotates along.
     pub drift_dir: Vec<f64>,
+    /// Period (days) of the dense-mean rotation.
     pub drift_period: f64,
 }
 
 impl ClusterDynamics {
+    /// Sample cluster `k`'s dynamics (pattern chosen round-robin so all
+    /// four patterns are always represented).
     pub fn sample(rng: &mut Rng, k: usize, n_dense: usize) -> ClusterDynamics {
         let pattern = match k % 4 {
             0 => Pattern::Stable,

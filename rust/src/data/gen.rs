@@ -28,12 +28,18 @@ use crate::util::error::Result;
 use crate::util::prng::Rng;
 use std::sync::Arc;
 
+/// Shape and seed of one synthetic clickstream.
 #[derive(Clone, Debug)]
 pub struct StreamConfig {
+    /// Stream seed: scenario construction and every batch derive from it.
     pub seed: u64,
+    /// Training horizon in virtual days.
     pub days: usize,
+    /// Mini-batches per virtual day.
     pub steps_per_day: usize,
+    /// Examples per mini-batch.
     pub batch: usize,
+    /// Latent clusters the scenario mixes over.
     pub n_clusters: usize,
     /// Registry tag of the scenario owning the day-level dynamics
     /// (`data::scenario`): `criteo_like`, `abrupt_shift[@day]`,
@@ -55,6 +61,7 @@ impl Default for StreamConfig {
 }
 
 impl StreamConfig {
+    /// Steps of one full pass over the stream (`days * steps_per_day`).
     pub fn total_steps(&self) -> usize {
         self.days * self.steps_per_day
     }
@@ -82,7 +89,9 @@ impl StreamConfig {
 /// Effective per-feature "live vocabulary" of the zipf head at any moment.
 const LIVE_VOCAB: u64 = 500;
 
+/// The scenario-agnostic batch generator (see the module docs).
 pub struct Stream {
+    /// The stream's shape and seed.
     pub cfg: StreamConfig,
     scenario: Box<dyn Scenario>,
     /// Global dense->label weights.
@@ -100,6 +109,7 @@ impl Stream {
         Stream::try_new(cfg).expect("invalid stream config")
     }
 
+    /// Build a stream, rejecting unknown scenario tags as an error.
     pub fn try_new(cfg: StreamConfig) -> Result<Stream> {
         let mut rng = Rng::new(cfg.seed);
         // Scenario construction consumes the head of the seed stream —
@@ -135,6 +145,7 @@ impl Stream {
         self.scenario.tag()
     }
 
+    /// Latent clusters the scenario mixes over.
     pub fn n_clusters(&self) -> usize {
         self.cfg.n_clusters
     }

@@ -98,6 +98,7 @@ pub struct CriteoLike {
 }
 
 impl CriteoLike {
+    /// Sample the regime's cluster dynamics from the stream's seeded RNG.
     pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize) -> CriteoLike {
         let clusters =
             (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
@@ -142,6 +143,7 @@ pub struct AbruptShift {
 }
 
 impl AbruptShift {
+    /// Criteo-like dynamics that step-change at `shift_day`.
     pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize, shift_day: usize) -> AbruptShift {
         let clusters =
             (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
@@ -190,6 +192,7 @@ pub struct ChurnStorm {
 }
 
 impl ChurnStorm {
+    /// Criteo-like dynamics with 8x vocabulary pointer drift.
     pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize) -> ChurnStorm {
         let clusters =
             (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
@@ -235,6 +238,7 @@ pub struct ColdStart {
 }
 
 impl ColdStart {
+    /// Clusters bloom at staggered onsets over the first 80% of `days`.
     pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize, days: usize) -> ColdStart {
         let clusters: Vec<ClusterDynamics> =
             (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
@@ -299,6 +303,7 @@ pub struct StationaryControl {
 }
 
 impl StationaryControl {
+    /// Freeze the criteo_like dynamics at their day-0 values.
     pub fn new(rng: &mut Rng, n_clusters: usize, n_dense: usize) -> StationaryControl {
         let clusters: Vec<ClusterDynamics> =
             (0..n_clusters).map(|k| ClusterDynamics::sample(rng, k, n_dense)).collect();
@@ -353,8 +358,11 @@ impl Scenario for StationaryControl {
 /// One registry row: the base tag plus the human-readable description
 /// shown by `nshpo scenarios`.
 pub struct ScenarioInfo {
+    /// Base registry tag (parameters attach as `@<param>`).
     pub tag: &'static str,
+    /// What the regime's day-level dynamics do.
     pub dynamics: &'static str,
+    /// What the regime stresses in the search system.
     pub stresses: &'static str,
 }
 
@@ -391,6 +399,20 @@ pub const REGISTRY: [ScenarioInfo; 5] = [
 /// Base tags of every registered scenario, registry order.
 pub fn tags() -> Vec<&'static str> {
     REGISTRY.iter().map(|s| s.tag).collect()
+}
+
+/// The `nshpo scenarios` table: one row per registered tag. Tests pin
+/// that every registered tag appears here, so the CLI listing cannot
+/// silently drop one.
+pub fn registry_table() -> String {
+    let mut out = format!("{:<20} {:<66} stresses\n", "tag", "dynamics");
+    for info in &REGISTRY {
+        out.push_str(&format!(
+            "{:<20} {:<66} {}\n",
+            info.tag, info.dynamics, info.stresses
+        ));
+    }
+    out
 }
 
 /// Split `abrupt_shift@8` into (`abrupt_shift`, Some(`8`)).

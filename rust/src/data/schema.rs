@@ -14,8 +14,11 @@ pub const N_CAT: usize = 12;
 /// owns `dense[i*N_DENSE..]`, `cat[i*N_CAT..]`.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Row-major `[len x N_DENSE]` continuous features.
     pub dense: Vec<f32>,
+    /// Row-major `[len x N_CAT]` non-negative hashed categorical ids.
     pub cat: Vec<i32>,
+    /// Binary click labels (0.0 / 1.0), one per example.
     pub labels: Vec<f32>,
     /// Generator-side latent cluster per example. Never shown to models;
     /// used only to validate our k-means recovers drift structure, and by
@@ -24,22 +27,27 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the batch has no examples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Dense feature row of example `i`.
     pub fn dense_row(&self, i: usize) -> &[f32] {
         &self.dense[i * N_DENSE..(i + 1) * N_DENSE]
     }
 
+    /// Categorical id row of example `i`.
     pub fn cat_row(&self, i: usize) -> &[i32] {
         &self.cat[i * N_CAT..(i + 1) * N_CAT]
     }
 
+    /// Fraction of positive labels (0 for an empty batch).
     pub fn positive_rate(&self) -> f64 {
         if self.is_empty() {
             return 0.0;

@@ -9,6 +9,7 @@
 use super::schema::Batch;
 use crate::util::prng::Rng;
 
+/// A data sub-sampling plan (§4.1.2).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Plan {
     /// Keep everything (lambda_y = 1 for all y).
@@ -21,6 +22,8 @@ pub enum Plan {
 }
 
 impl Plan {
+    /// The paper's negative sub-sampling: keep every positive, keep
+    /// negatives with probability `neg`.
     pub fn negative_only(neg: f64) -> Plan {
         Plan::LabelDependent { pos: 1.0, neg }
     }

@@ -24,10 +24,11 @@ use crate::util::stats;
 use std::path::Path;
 use std::sync::Arc;
 
-pub const ALL_FIGURES: [&str; 17] = [
+/// Every exhibit id `nshpo figure --all` regenerates.
+pub const ALL_FIGURES: [&str; 18] = [
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "t1", "seeds", "summary",
     // extensions/ablations beyond the paper's exhibits (DESIGN.md §6):
-    "rho", "slices", "hb",
+    "rho", "slices", "hb", "strat",
 ];
 
 /// Stopping days used for one-shot cost sweeps.
@@ -98,7 +99,7 @@ fn points_against(ts: &TrajectorySet, results: &[ReplayResult]) -> Vec<CurvePoin
 fn one_shot_curve(
     exec: &ReplayExecutor,
     ts: &Arc<TrajectorySet>,
-    strategy: Strategy,
+    strategy: &Strategy,
     plan_mult: f64,
 ) -> Vec<CurvePoint> {
     let jobs: Vec<ReplayJob> = one_shot_days(ts.days)
@@ -111,7 +112,7 @@ fn one_shot_curve(
 fn perf_curve(
     exec: &ReplayExecutor,
     ts: &Arc<TrajectorySet>,
-    strategy: Strategy,
+    strategy: &Strategy,
     plan_mult: f64,
     rho: f64,
 ) -> Vec<CurvePoint> {
@@ -120,7 +121,7 @@ fn perf_curve(
 
 fn perf_jobs(
     ts: &Arc<TrajectorySet>,
-    strategy: Strategy,
+    strategy: &Strategy,
     plan_mult: f64,
     rho: f64,
 ) -> Vec<ReplayJob> {
@@ -166,11 +167,16 @@ fn write_out(out_dir: &Path, fig: &str, text: &str, csv: &str) -> Result<()> {
     Ok(())
 }
 
-const STRAT_STRATIFIED: Strategy = Strategy::Stratified {
-    law: Some(LawKind::InversePowerLaw),
-    n_slices: 5,
-};
-const STRAT_TRAJ: Strategy = Strategy::Trajectory(LawKind::InversePowerLaw);
+/// The paper's default stratified strategy (IPL law, 5 slices).
+fn strat_stratified() -> Strategy {
+    Strategy::stratified(Some(LawKind::InversePowerLaw), 5)
+}
+
+/// The paper's default trajectory strategy (inverse power law).
+fn strat_trajectory() -> Strategy {
+    Strategy::trajectory(LawKind::InversePowerLaw)
+}
+
 const NEG05: &str = "pos1.00neg0.50";
 const RHO: f64 = 0.5; // paper Appendix A.5
 
@@ -213,6 +219,7 @@ pub fn run_figure_with(
         "rho" => ablation_rho(bank, out_dir, exec),
         "slices" => ablation_slices(bank, out_dir, exec),
         "hb" => ablation_hyperband(bank, out_dir, exec),
+        "strat" => ablation_strategies(bank, out_dir, exec),
         other => Err(err!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
     }
 }
@@ -339,13 +346,13 @@ fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
             let mult = bank.plan_multiplier(&fam, NEG05);
             series.push(to_series(
                 "ours: perf-stopping + stratified + neg0.5",
-                &perf_curve(exec, &ts_neg, STRAT_STRATIFIED, mult, RHO),
+                &perf_curve(exec, &ts_neg, &strat_stratified(), mult, RHO),
                 false,
             ));
         }
         series.push(to_series(
             "basic early stopping",
-            &one_shot_curve(exec, &ts_full, Strategy::Constant, 1.0),
+            &one_shot_curve(exec, &ts_full, &Strategy::constant(), 1.0),
             false,
         ));
         // basic sub-sampling: full-length training on uniformly thinned
@@ -358,7 +365,7 @@ fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
                 let ts_sub = Arc::new(ts_sub);
                 let days = ts_sub.days;
                 sub_jobs.push(
-                    ReplayJob::one_shot(&ts_sub, Strategy::Constant, days)
+                    ReplayJob::one_shot(&ts_sub, &Strategy::constant(), days)
                         .with_mult(mult)
                         .with_tag(tag),
                 );
@@ -392,13 +399,13 @@ fn fig4_8(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Res
         let (plan, mult) = pick_plan(bank, &fam);
         let ts = need(bank, &fam, plan)?;
         for (sname, strat) in [
-            ("constant", Strategy::Constant),
-            ("trajectory", STRAT_TRAJ),
-            ("stratified", STRAT_STRATIFIED),
+            ("constant", Strategy::constant()),
+            ("trajectory", strat_trajectory()),
+            ("stratified", strat_stratified()),
         ] {
             let series = vec![
-                to_series("one-shot", &one_shot_curve(exec, &ts, strat, mult), false),
-                to_series("performance-based", &perf_curve(exec, &ts, strat, mult, RHO), false),
+                to_series("one-shot", &one_shot_curve(exec, &ts, &strat, mult), false),
+                to_series("performance-based", &perf_curve(exec, &ts, &strat, mult, RHO), false),
             ];
             let t = plot::render(
                 &format!("Figure {fig} [{fam}/{sname}]: one-shot vs performance-based"),
@@ -425,9 +432,9 @@ fn fig5_9(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Res
         let (plan, mult) = pick_plan(bank, &fam);
         let ts = need(bank, &fam, plan)?;
         let series = vec![
-            to_series("constant", &perf_curve(exec, &ts, Strategy::Constant, mult, RHO), false),
-            to_series("trajectory", &perf_curve(exec, &ts, STRAT_TRAJ, mult, RHO), false),
-            to_series("stratified", &perf_curve(exec, &ts, STRAT_STRATIFIED, mult, RHO), false),
+            to_series("constant", &perf_curve(exec, &ts, &Strategy::constant(), mult, RHO), false),
+            to_series("trajectory", &perf_curve(exec, &ts, &strat_trajectory(), mult, RHO), false),
+            to_series("stratified", &perf_curve(exec, &ts, &strat_stratified(), mult, RHO), false),
         ];
         let t = plot::render(
             &format!("Figure {fig} [{fam}]: prediction strategies (perf-based stopping)"),
@@ -473,16 +480,16 @@ fn fig7(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     for fam in families_in(bank) {
         let (plan, mult) = pick_plan(bank, &fam);
         let ts = need(bank, &fam, plan)?;
-        let strat_const = Strategy::Stratified { law: None, n_slices: 5 };
+        let strat_const = Strategy::stratified(None, 5);
         let series = vec![
             to_series(
                 "stratified constant",
-                &perf_curve(exec, &ts, strat_const, mult, RHO),
+                &perf_curve(exec, &ts, &strat_const, mult, RHO),
                 false,
             ),
             to_series(
                 "stratified trajectory",
-                &perf_curve(exec, &ts, STRAT_STRATIFIED, mult, RHO),
+                &perf_curve(exec, &ts, &strat_stratified(), mult, RHO),
                 false,
             ),
         ];
@@ -515,7 +522,7 @@ fn fig10(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let mut reg_series = Vec::new();
     let mut per_series = Vec::new();
     for law in laws {
-        let pts = perf_curve(exec, &ts, Strategy::Trajectory(law), mult, RHO);
+        let pts = perf_curve(exec, &ts, &Strategy::trajectory(law), mult, RHO);
         reg_series.push(to_series(law.name(), &pts, false));
         per_series.push(to_series(law.name(), &pts, true));
     }
@@ -676,10 +683,10 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
                 .map(|p| p.cost)
                 .fold(f64::MAX, f64::min)
         };
-        let es = best(&one_shot_curve(exec, &ts_full, Strategy::Constant, 1.0));
+        let es = best(&one_shot_curve(exec, &ts_full, &Strategy::constant(), 1.0));
         let ours = if let Ok(ts_neg) = need(bank, &fam, NEG05) {
             let mult = bank.plan_multiplier(&fam, NEG05);
-            best(&perf_curve(exec, &ts_neg, STRAT_STRATIFIED, mult, RHO))
+            best(&perf_curve(exec, &ts_neg, &strat_stratified(), mult, RHO))
         } else {
             f64::MAX
         };
@@ -691,7 +698,7 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
                 let ts_sub = Arc::new(ts_sub);
                 let days = ts_sub.days;
                 sub_jobs.push(
-                    ReplayJob::one_shot(&ts_sub, Strategy::Constant, days).with_tag(tag),
+                    ReplayJob::one_shot(&ts_sub, &Strategy::constant(), days).with_tag(tag),
                 );
                 sub_mults.push(bank.plan_multiplier(&fam, tag));
             }
@@ -733,7 +740,7 @@ fn ablation_rho(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
             jobs.push(
                 ReplayJob::perf_based(
                     &ts,
-                    Strategy::Constant,
+                    &Strategy::constant(),
                     equally_spaced_stops(ts.days, s),
                     rho,
                 )
@@ -775,10 +782,10 @@ fn ablation_slices(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()>
     let spacing_list = spacings(ts.days);
     let mut jobs: Vec<ReplayJob> = Vec::new();
     for &l in &ls {
-        let strat = Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: l };
+        let strat = Strategy::stratified(Some(LawKind::InversePowerLaw), l);
         for &s in &spacing_list {
             jobs.push(
-                ReplayJob::perf_based(&ts, strat, equally_spaced_stops(ts.days, s), RHO)
+                ReplayJob::perf_based(&ts, &strat, equally_spaced_stops(ts.days, s), RHO)
                     .with_mult(mult)
                     .with_tag(format!("L{l}/every{s}")),
             );
@@ -818,7 +825,7 @@ fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<
         .map(|&eta| ReplayJob {
             ts: Arc::clone(&ts),
             kind: ReplayKind::Hyperband {
-                strategy: Strategy::Constant,
+                strategy: Strategy::constant(),
                 eta,
                 brackets_seed: 7,
                 workers: inner_workers,
@@ -832,7 +839,7 @@ fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<
     for (&eta, p) in etas.iter().zip(&hb_pts) {
         csv.push_str(&format!("hyperband,{eta},{},{}\n", p.cost, p.regret3));
     }
-    let pb_pts = perf_curve(exec, &ts, Strategy::Constant, mult, RHO);
+    let pb_pts = perf_curve(exec, &ts, &Strategy::constant(), mult, RHO);
     for p in &pb_pts {
         csv.push_str(&format!("perf-based,0.5,{},{}\n", p.cost, p.regret3));
     }
@@ -848,6 +855,50 @@ fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<
         true,
     );
     write_out(out, "_hb", &text, &csv)
+}
+
+/// Extension: every *registered* prediction strategy under Algorithm 1 —
+/// the registry's own exhibit. One series per `nshpo strategies` tag, so
+/// a newly registered strategy shows up here (and in the CSV) without
+/// touching the harness.
+fn ablation_strategies(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let (plan, mult) = pick_plan(bank, &fam);
+    let ts = need(bank, &fam, plan)?;
+    let spacing_list = spacings(ts.days);
+    let strategies: Vec<Strategy> = crate::predict::strategy::tags()
+        .iter()
+        .map(|t| Strategy::parse(t).expect("registry tag must parse"))
+        .collect();
+    // all (strategy x spacing) replays are one flat job set
+    let mut jobs: Vec<ReplayJob> = Vec::new();
+    for strat in &strategies {
+        for &s in &spacing_list {
+            jobs.push(
+                ReplayJob::perf_based(&ts, strat, equally_spaced_stops(ts.days, s), RHO)
+                    .with_mult(mult)
+                    .with_tag(format!("{}/every{s}", strat.tag())),
+            );
+        }
+    }
+    let all_pts = points_against(&ts, &exec.run(jobs));
+    let mut series = Vec::new();
+    let mut csv = String::from("strategy,cost,regret3\n");
+    for (si, strat) in strategies.iter().enumerate() {
+        let pts = &all_pts[si * spacing_list.len()..(si + 1) * spacing_list.len()];
+        for p in pts {
+            csv.push_str(&format!("{},{},{}\n", strat.tag(), p.cost, p.regret3));
+        }
+        series.push(to_series(&strat.tag(), pts, false));
+    }
+    let text = plot::render(
+        &format!("Extension [{fam}]: registered prediction strategies (perf-based)"),
+        "C",
+        "normalized regret@3",
+        &series,
+        true,
+    );
+    write_out(out, "_strat", &text, &csv)
 }
 
 // ------------------------------------------------------------- helpers
@@ -871,6 +922,7 @@ fn pick_family(bank: &Bank, preferred: &str) -> String {
     }
 }
 
+/// One-line mean/median/std digest (log lines, EXPERIMENTS notes).
 pub fn stats_digest(xs: &[f64]) -> String {
     format!(
         "mean {:.4} median {:.4} std {:.4}",

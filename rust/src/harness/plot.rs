@@ -1,8 +1,11 @@
 //! Terminal line/scatter plots for the figure harness (results are also
 //! written as CSV; the ASCII render is for eyeballing runs in CI logs).
 
+/// One named (x, y) series of a plot.
 pub struct Series {
+    /// Legend name.
     pub name: String,
+    /// The series' points, plot order.
     pub points: Vec<(f64, f64)>,
 }
 

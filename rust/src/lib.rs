@@ -19,8 +19,10 @@
 //!   prediction support).
 //! * [`metrics`] — performance metrics and the paper's ranking metrics
 //!   (PER, regret, regret@k).
-//! * [`predict`] — constant / trajectory (parametric-law) / stratified
-//!   prediction strategies (§4.2).
+//! * [`predict`] — the §4.2 prediction estimators (constant / recency /
+//!   trajectory / stratified) behind the pluggable
+//!   `predict::strategy` registry (`PredictionStrategy` trait,
+//!   `Strategy::parse` tags, `nshpo strategies`).
 //! * [`search`] — the unified two-stage `SearchSession` API: every
 //!   strategy (one-shot, Algorithm 1, late starting, Hyperband) written
 //!   once against the `SearchDriver` trait, with replay and live
@@ -30,6 +32,11 @@
 //! * [`coordinator`] — experiment scheduler (bank building, wall-clock
 //!   accounting for live sessions over real PJRT runs).
 //! * [`harness`] — per-figure/table generators (Figs 1-11, Table 1).
+//!
+//! A markdown rendering of this API surface is committed at
+//! `docs/API.md`; `ci.sh` keeps `cargo doc --no-deps` warning-free.
+
+#![warn(missing_docs)]
 
 pub mod cluster;
 pub mod coordinator;

@@ -1,20 +1,21 @@
 //! nshpo — CLI for the NS-HPO reproduction.
 //!
 //! Subcommands:
-//!   bank      train every candidate configuration once; save the bank
-//!   figure    regenerate paper figures/tables from a bank
-//!   search    unified two-stage search (replay or live backend)
-//!   live      thin alias for `search --live`
-//!   scenarios list the registered data scenarios (data::scenario)
-//!   sim       industrial surrogate sweep (Fig 6 style)
-//!   info      inspect artifacts and banks
+//!   bank       train every candidate configuration once; save the bank
+//!   figure     regenerate paper figures/tables from a bank
+//!   search     unified two-stage search (replay or live backend)
+//!   live       thin alias for `search --live`
+//!   scenarios  list the registered data scenarios (data::scenario)
+//!   strategies list the registered prediction strategies (predict::strategy)
+//!   sim        industrial surrogate sweep (Fig 6 style)
+//!   info       inspect artifacts and banks
 
 use nshpo::bail;
 use nshpo::coordinator::live::LiveSearch;
 use nshpo::coordinator::{self, BankOptions, ModelFactory, PjrtFactory, ProxyFactory};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::harness;
-use nshpo::predict::{LawKind, Strategy};
+use nshpo::predict::Strategy;
 use nshpo::search::{
     equally_spaced_stops, sweep, ReplayDriver, ReplayExecutor, SearchOutcome, SearchPlan,
     SearchSession,
@@ -54,14 +55,18 @@ USAGE: nshpo <subcommand> [flags]
             [--workers N]  (live backend only; replay figures
             parallelize via `figure --workers`)
             plan:    [--method perf|one-shot|late-start|hyperband]
-            [--strategy constant|trajectory|stratified] [--slices 5]
+            [--strategy <tag>]  (registry tag, see `nshpo strategies`;
+            e.g. constant, recency@1.5, trajectory@VaporPressure,
+            stratified@8, stratified-constant, switching@4)
+            [--slices 5]  (sugar: parameterizes a bare stratified tag)
             [--stop-every 3] [--rho 0.5] [--day-stop N]
             [--start-day N] [--eta 3] [--bracket-seed 7]
             [--budget C] [--stage 2] [--top-k 3]
   live      thin alias for `search --live` (legacy default --stage 1)
             [--family fm] [--thin 3] [--stop-every 3] [--rho 0.5]
             [--proxy] [--days 12] [--steps-per-day 12] [--workers N]
-  scenarios list registered data scenarios (tag, dynamics, stresses)
+  scenarios  list registered data scenarios (tag, dynamics, stresses)
+  strategies list registered prediction strategies (tag, reference, use)
   sim       [--tasks 12] [--configs 30] [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
 ";
@@ -74,6 +79,7 @@ fn main() {
         Some("search") => run_search(&args, args.has("live"), 2),
         Some("live") => run_search(&args, true, 1),
         Some("scenarios") => cmd_scenarios(),
+        Some("strategies") => cmd_strategies(),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -101,11 +107,17 @@ fn stream_from(args: &Args) -> StreamConfig {
 }
 
 fn cmd_scenarios() -> Result<()> {
-    println!("{:<20} {:<66} stresses", "tag", "dynamics");
-    for info in &nshpo::data::scenario::REGISTRY {
-        println!("{:<20} {:<66} {}", info.tag, info.dynamics, info.stresses);
-    }
+    print!("{}", nshpo::data::scenario::registry_table());
     println!("\nuse with: nshpo bank|search --scenario <tag>  (abrupt_shift takes @<day>)");
+    Ok(())
+}
+
+fn cmd_strategies() -> Result<()> {
+    print!("{}", nshpo::predict::strategy::registry_table());
+    println!(
+        "\nuse with: nshpo search --strategy <tag>  (parameters attach as @<param>, \
+         e.g. recency@1.5, trajectory@VaporPressure, stratified@8, switching@4)"
+    );
     Ok(())
 }
 
@@ -209,16 +221,28 @@ fn cmd_figure(args: &Args) -> Result<()> {
 
 // -------------------------------------------------------------- search
 
+/// Resolve `--strategy` through the prediction-strategy registry
+/// (`nshpo strategies` lists the tags). `--slices N` is legacy sugar for
+/// parameterizing a bare stratified tag (`--strategy stratified --slices
+/// 8` == `--strategy stratified@8`).
 fn parse_strategy(args: &Args) -> Result<Strategy> {
-    match args.str_or("strategy", "constant").as_str() {
-        "constant" => Ok(Strategy::Constant),
-        "trajectory" => Ok(Strategy::Trajectory(LawKind::InversePowerLaw)),
-        "stratified" => Ok(Strategy::Stratified {
-            law: Some(LawKind::InversePowerLaw),
-            n_slices: args.usize_or("slices", 5),
-        }),
-        other => bail!("unknown --strategy {other:?} (constant|trajectory|stratified)"),
+    let mut tag = args.str_or("strategy", "constant");
+    if let Some(slices) = args.str_opt("slices") {
+        if tag == "stratified" || tag == "stratified-constant" {
+            tag = format!("{tag}@{slices}");
+        } else {
+            // `--slices` must never be silently ignored: with a
+            // parameterized tag (`stratified@5`), a nested tag
+            // (`switching@4[stratified]`), or a non-stratified tag,
+            // pass the slice count inside the tag itself.
+            bail!(
+                "--slices {slices} only parameterizes the bare tags \
+                 'stratified'/'stratified-constant'; with {tag:?}, put the \
+                 slice count in the tag (e.g. stratified@{slices})"
+            );
+        }
     }
+    Strategy::parse(&tag)
 }
 
 /// Build a validated SearchPlan from CLI flags. `days` is the backend's
@@ -304,8 +328,9 @@ fn search_replay(args: &Args, stage: usize) -> Result<()> {
     let mult = bank.plan_multiplier(&family, &plan_tag);
     let plan = plan_from(args, ts.days, mult)?;
     println!(
-        "replay search: family={family} plan={plan_tag} scenario={} ({} configs x {} steps, cost multiplier {mult:.3})",
+        "replay search: family={family} plan={plan_tag} scenario={} strategy={} ({} configs x {} steps, cost multiplier {mult:.3})",
         bank.scenario,
+        plan.strategy.tag(),
         ts.n_configs(),
         ts.total_steps()
     );
@@ -373,12 +398,13 @@ fn search_live(args: &Args, stage: usize) -> Result<()> {
     // Mirror the bank builder's fan-out line so live and bank runs read
     // the same way in logs.
     eprintln!(
-        "live[{}]: {} configs x {} steps on {} workers ({} mode)",
+        "live[{}]: {} configs x {} steps on {} workers ({} mode, strategy {})",
         cs.stream.scenario_tag(),
         specs.len(),
         total_steps,
         workers,
-        if use_proxy { "proxy" } else { "pjrt" }
+        if use_proxy { "proxy" } else { "pjrt" },
+        plan.strategy.tag()
     );
 
     let run = |factory: &dyn ModelFactory| -> Result<()> {

@@ -11,15 +11,23 @@
 //! `Combined` is the paper's §B.3 weighted mixture: softmax-weighted sum
 //! of all four laws with weights and per-law parameters fit jointly.
 
+/// One parametric learning-curve law (paper Table 1). All laws are
+/// functions of the data fraction D = t/T with a small parameter vector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LawKind {
+    /// E + A / D^alpha — the paper's default law.
     InversePowerLaw,
+    /// exp(A + B/D + C ln D).
     VaporPressure,
+    /// A / (1 + (D/exp(B))^alpha).
     LogPower,
+    /// E - exp(-A D^alpha + B).
     ExponentialLaw,
+    /// §B.3 softmax-weighted mixture of the four basic laws, fit jointly.
     Combined,
 }
 
+/// The four basic (non-mixture) laws, Table-1 order.
 pub const ALL_BASIC_LAWS: [LawKind; 4] = [
     LawKind::InversePowerLaw,
     LawKind::VaporPressure,
@@ -27,7 +35,17 @@ pub const ALL_BASIC_LAWS: [LawKind; 4] = [
     LawKind::ExponentialLaw,
 ];
 
+/// Every law, including the `Combined` mixture.
+pub const ALL_LAWS: [LawKind; 5] = [
+    LawKind::InversePowerLaw,
+    LawKind::VaporPressure,
+    LawKind::LogPower,
+    LawKind::ExponentialLaw,
+    LawKind::Combined,
+];
+
 impl LawKind {
+    /// Canonical law name (also accepted by [`LawKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             LawKind::InversePowerLaw => "InversePowerLaw",
@@ -38,6 +56,27 @@ impl LawKind {
         }
     }
 
+    /// Resolve a law from its name, case-insensitively; short aliases
+    /// (`ipl`, `vp`, `lp`, `exp`, `mix`) are accepted for CLI ergonomics.
+    /// Returns `None` for unknown names (strategy-tag parsing turns that
+    /// into a listed error).
+    pub fn parse(name: &str) -> Option<LawKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "inversepowerlaw" | "ipl" => Some(LawKind::InversePowerLaw),
+            "vaporpressure" | "vp" => Some(LawKind::VaporPressure),
+            "logpower" | "lp" => Some(LawKind::LogPower),
+            "exponentiallaw" | "exp" => Some(LawKind::ExponentialLaw),
+            "combined" | "mix" => Some(LawKind::Combined),
+            _ => None,
+        }
+    }
+
+    /// Canonical names of every law (error messages, `nshpo strategies`).
+    pub fn all_names() -> Vec<&'static str> {
+        ALL_LAWS.iter().map(|l| l.name()).collect()
+    }
+
+    /// Length of the law's parameter vector.
     pub fn n_params(&self) -> usize {
         match self {
             LawKind::InversePowerLaw => 3,
@@ -226,6 +265,18 @@ mod tests {
                 g[i]
             );
         }
+    }
+
+    #[test]
+    fn parse_accepts_names_and_aliases() {
+        for law in ALL_LAWS {
+            assert_eq!(LawKind::parse(law.name()), Some(law));
+            assert_eq!(LawKind::parse(&law.name().to_lowercase()), Some(law));
+        }
+        assert_eq!(LawKind::parse("ipl"), Some(LawKind::InversePowerLaw));
+        assert_eq!(LawKind::parse("mix"), Some(LawKind::Combined));
+        assert_eq!(LawKind::parse("zipf"), None);
+        assert_eq!(LawKind::all_names().len(), 5);
     }
 
     #[test]

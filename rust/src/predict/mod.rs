@@ -1,48 +1,32 @@
 //! Prediction strategies (§4.2): estimate each configuration's evaluation
-//! window metric \bar m_{[T-Delta, T]} from metrics observed up to a
-//! stopping point.
+//! window metric \bar m from metrics observed up to a stopping point.
 //!
-//! * [`constant_prediction`] — §4.2.1: the recent observed average.
-//! * [`trajectory_predict`] — §4.2.2: fit a parametric law per config
-//!   jointly across configs on pairwise differences, extrapolate to the
-//!   eval window.
-//! * [`stratified_predict`] — §4.2.3: slice the data by drift clusters,
-//!   predict per slice, reweight by eval-window slice sizes (Eq. 1-2).
+//! The module has two layers:
 //!
-//! All functions operate on *day-aggregated* metric series (the paper
-//! fits on day averages; Appendix A.3).
+//! * **Core estimators** — pure functions over day-aggregated metric
+//!   series (the paper fits on day averages; Appendix A.3):
+//!   [`constant_prediction`] (§4.2.1), [`recency_prediction`]
+//!   (exponential-decay constant), [`trajectory_predict`] (§4.2.2:
+//!   parametric-law fit on pairwise differences), and
+//!   [`stratified_predict`] (§4.2.3: per-slice prediction reweighted by
+//!   eval-window slice sizes, Eq. 1-2).
+//! * **The strategy registry** ([`strategy`]) — the pluggable trait
+//!   boundary the search layer consumes: a
+//!   [`PredictionStrategy`](strategy::PredictionStrategy) implementation
+//!   per estimator, resolved from CLI tags via [`Strategy::parse`], with
+//!   room for external implementations ([`Strategy::custom`]).
+//!
+//! [`fit`] holds the Levenberg-Marquardt pairwise fitter and [`laws`]
+//! the parametric learning-curve laws (paper Table 1).
 
 pub mod fit;
 pub mod laws;
+pub mod strategy;
 
 pub use laws::LawKind;
+pub use strategy::{PredictContext, PredictionStrategy, Strategy};
 
 use crate::cluster::slices;
-
-/// The strategy menu of the paper's experiments.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Strategy {
-    Constant,
-    Trajectory(LawKind),
-    /// law = None -> stratified constant; Some(law) -> stratified
-    /// trajectory (the paper's default "stratified prediction").
-    Stratified { law: Option<LawKind>, n_slices: usize },
-}
-
-impl Strategy {
-    pub fn name(&self) -> String {
-        match self {
-            Strategy::Constant => "constant".into(),
-            Strategy::Trajectory(l) => format!("trajectory[{}]", l.name()),
-            Strategy::Stratified { law: None, n_slices } => {
-                format!("stratified-constant[L={n_slices}]")
-            }
-            Strategy::Stratified { law: Some(l), n_slices } => {
-                format!("stratified[{},L={n_slices}]", l.name())
-            }
-        }
-    }
-}
 
 /// Number of trailing observed days used as fit/averaging window
 /// (paper Appendix A.3: "the last 3 visited days").
@@ -53,6 +37,32 @@ pub fn constant_prediction(day_means: &[f64], window: usize) -> f64 {
     assert!(!day_means.is_empty());
     let w = window.max(1).min(day_means.len());
     day_means[day_means.len() - w..].iter().sum::<f64>() / w as f64
+}
+
+/// Recency-weighted constant prediction: exponential-decay weighted mean
+/// of the whole observed series, where a day that is `a` days old weighs
+/// `0.5^(a / half_life_days)`. Non-finite entries are skipped; with no
+/// finite entry at all this falls back to the plain constant rule.
+pub fn recency_prediction(day_means: &[f64], half_life_days: f64) -> f64 {
+    assert!(!day_means.is_empty());
+    debug_assert!(half_life_days.is_finite() && half_life_days > 0.0);
+    let n = day_means.len();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (d, &m) in day_means.iter().enumerate() {
+        if !m.is_finite() {
+            continue;
+        }
+        let age = (n - 1 - d) as f64;
+        let w = (-std::f64::consts::LN_2 * age / half_life_days).exp();
+        num += w * m;
+        den += w;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        constant_prediction(day_means, FIT_DAYS)
+    }
 }
 
 /// Day fractions D_d = (d+1)/total for the trailing `fit_days` observed
@@ -130,15 +140,16 @@ fn slice_day_means(counts: &[Vec<u32>], sums: &[Vec<f64>], slice: usize) -> Vec<
 ///
 /// * `cluster_counts[d][k]` — examples of cluster k on observed day d
 ///   (data-side: identical for every config).
-/// * `cluster_loss_sums[c][d][k]` — config c's summed per-example loss on
-///   (day d, cluster k), observed via progressive validation.
+/// * `cluster_loss_sums[c]` — config c's per-day per-cluster summed
+///   per-example loss over the observed days (borrowed, so callers can
+///   hand out truncated views of full-horizon records without copying).
 /// * `eval_cluster_counts[k]` — cluster sizes over the evaluation window
 ///   (data-side; the paper reweighs by the number of eval examples per
 ///   slice, Eq. 2).
 pub fn stratified_predict(
     law: Option<LawKind>,
     cluster_counts: &[Vec<u32>],
-    cluster_loss_sums: &[Vec<Vec<f32>>],
+    cluster_loss_sums: &[&[Vec<f32>]],
     eval_cluster_counts: &[u64],
     n_slices: usize,
     total_days: usize,
@@ -258,12 +269,35 @@ fn trajectory_predict_sliced(
 mod tests {
     use super::*;
 
+    fn as_refs(sums: &[Vec<Vec<f32>>]) -> Vec<&[Vec<f32>]> {
+        sums.iter().map(|s| s.as_slice()).collect()
+    }
+
     #[test]
     fn constant_prediction_is_trailing_mean() {
         let dm = [1.0, 0.9, 0.8, 0.7, 0.6];
         assert!((constant_prediction(&dm, 3) - 0.7).abs() < 1e-12);
         assert!((constant_prediction(&dm, 100) - 0.8).abs() < 1e-12);
         assert!((constant_prediction(&dm, 0) - 0.6).abs() < 1e-12); // clamps to 1
+    }
+
+    #[test]
+    fn recency_prediction_interpolates_last_and_mean() {
+        let dm = [1.0, 1.0, 1.0, 0.4];
+        let fast = recency_prediction(&dm, 0.25); // ~last day
+        let slow = recency_prediction(&dm, 1e6); // ~plain mean
+        let mean = dm.iter().sum::<f64>() / dm.len() as f64;
+        assert!((fast - 0.4).abs() < 0.01, "{fast}");
+        assert!((slow - mean).abs() < 1e-6, "{slow} vs {mean}");
+        let mid = recency_prediction(&dm, 1.5);
+        assert!(mid > fast && mid < slow, "{fast} < {mid} < {slow}");
+    }
+
+    #[test]
+    fn recency_skips_non_finite_days() {
+        let dm = [f64::NAN, 0.8, f64::INFINITY, 0.6];
+        let r = recency_prediction(&dm, 1e6);
+        assert!((r - 0.7).abs() < 1e-6, "{r}");
     }
 
     #[test]
@@ -323,7 +357,7 @@ mod tests {
     #[test]
     fn stratified_constant_weights_by_eval_share() {
         let (counts, sums, eval) = toy_stratified();
-        let pred = stratified_predict(None, &counts, &sums, &eval, 2, 24, 3);
+        let pred = stratified_predict(None, &counts, &as_refs(&sums), &eval, 2, 24, 3);
         // config0 ~= 0.05*1.0 + 0.95*0.4 = 0.43; config1 ~= 0.05*1.2+0.95*0.3
         assert!((pred[0] - 0.43).abs() < 0.02, "{}", pred[0]);
         assert!((pred[1] - 0.345).abs() < 0.02, "{}", pred[1]);
@@ -343,7 +377,7 @@ mod tests {
     #[test]
     fn stratified_preserves_config_ordering() {
         let (counts, sums, eval) = toy_stratified();
-        let pred = stratified_predict(None, &counts, &sums, &eval, 2, 24, 3);
+        let pred = stratified_predict(None, &counts, &as_refs(&sums), &eval, 2, 24, 3);
         assert!(pred[1] < pred[0], "config1 should win: {pred:?}");
     }
 
@@ -353,7 +387,7 @@ mod tests {
         let pred = stratified_predict(
             Some(LawKind::InversePowerLaw),
             &counts,
-            &sums,
+            &as_refs(&sums),
             &eval,
             2,
             24,
@@ -366,7 +400,7 @@ mod tests {
     #[test]
     fn one_slice_stratified_equals_aggregate_constant() {
         let (counts, sums, eval) = toy_stratified();
-        let strat = stratified_predict(None, &counts, &sums, &eval, 1, 24, 3);
+        let strat = stratified_predict(None, &counts, &as_refs(&sums), &eval, 1, 24, 3);
         for (c, s) in strat.iter().enumerate() {
             let dm: Vec<f64> = counts
                 .iter()
@@ -378,20 +412,5 @@ mod tests {
             let agg = constant_prediction(&dm, FIT_DAYS);
             assert!((s - agg).abs() < 1e-9, "config {c}: {s} vs {agg}");
         }
-    }
-
-    #[test]
-    fn strategy_names_unique() {
-        let strategies = [
-            Strategy::Constant,
-            Strategy::Trajectory(LawKind::InversePowerLaw),
-            Strategy::Stratified { law: None, n_slices: 4 },
-            Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 4 },
-        ];
-        let names: Vec<String> = strategies.iter().map(|s| s.name()).collect();
-        let mut d = names.clone();
-        d.sort();
-        d.dedup();
-        assert_eq!(d.len(), names.len());
     }
 }

@@ -1,0 +1,751 @@
+//! Pluggable prediction strategies: the open registry behind `--strategy`.
+//!
+//! This module mirrors the `data::scenario` design on the prediction axis
+//! (§4.2): a [`PredictionStrategy`] is a trait object that estimates each
+//! configuration's evaluation-window metric from a truncated trajectory,
+//! and a [`Strategy`] is the cheap clonable handle the search layer
+//! threads through plans, drivers, replay jobs, and the CLI. Strategies
+//! are resolved from registry tags ([`Strategy::parse`], `nshpo
+//! strategies`), so adding a predictor is: implement the trait, register
+//! a tag, and every search method / backend / figure can use it.
+//!
+//! Registered tags (see [`REGISTRY`]):
+//!
+//! * `constant` — §4.2.1: mean of the last 3 observed days.
+//! * `recency[@half_life]` — exponential-decay weighted constant; recent
+//!   days dominate (Wang et al., 2021: cost-efficient online HPO).
+//! * `trajectory[@law]` — §4.2.2: joint parametric-law fit on pairwise
+//!   differences, extrapolated to the eval window.
+//! * `stratified[@L]` — §4.2.3: per-slice trajectory prediction,
+//!   reweighted by eval-window slice sizes.
+//! * `stratified-constant[@L]` — §4.2.3 with constant per-slice
+//!   prediction (no law fit).
+//! * `switching[@day]` — starts constant, hands off to trajectory once
+//!   `day` days are observed (Škrlj et al., 2022: dynamic surrogate
+//!   switching, tuned for non-stationary fits that need warm-up).
+//!
+//! The three paper strategies are the exact functions from
+//! [`predict`](crate::predict) behind the trait — bit-identical to the
+//! pre-registry implementations (`rust/tests/strategy_registry.rs` pins
+//! this), and replay-vs-live session parity holds per registered tag
+//! (`rust/tests/session_parity.rs`).
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::laws::LawKind;
+use super::{
+    constant_prediction, recency_prediction, stratified_predict, trajectory_predict, FIT_DAYS,
+};
+use crate::err;
+use crate::util::error::Result;
+
+/// Default half-life (days) of the `recency` strategy.
+pub const DEFAULT_RECENCY_HALF_LIFE: f64 = 2.0;
+/// Default slice count L of the stratified strategies (paper §5.1.1).
+pub const DEFAULT_SLICES: usize = 5;
+/// Default handoff day of the `switching` strategy: constant prediction
+/// before it, trajectory prediction from it on (the trajectory fitter
+/// uses the trailing [`FIT_DAYS`] days, so it needs a few days of
+/// observations before extrapolation beats the recent average).
+pub const DEFAULT_SWITCH_DAY: usize = 6;
+
+/// Everything a strategy may observe at a stopping day, assembled by
+/// [`TrajectorySet::predict_context`](crate::search::TrajectorySet::predict_context).
+/// All series cover the *observed* days `[0, day_stop)` of a horizon of
+/// `total_days`; predictions target the final `eval_days` days.
+pub struct PredictContext<'a> {
+    /// Days observed so far (series below are truncated to this).
+    pub day_stop: usize,
+    /// Full training horizon in days.
+    pub total_days: usize,
+    /// Evaluation window in days (the last `eval_days` of the horizon).
+    pub eval_days: usize,
+    /// Per-config observed day-mean metric series, `day_stop` entries
+    /// each, aligned with the predicted subset.
+    pub day_means: Vec<Vec<f64>>,
+    /// `[day][cluster]` data-side example counts over the observed days
+    /// (identical for every config).
+    pub day_cluster_counts: &'a [Vec<u32>],
+    /// Per-config `[day][cluster]` summed per-example loss over the
+    /// observed days, aligned with the predicted subset.
+    pub cluster_loss_sums: Vec<&'a [Vec<f32>]>,
+    /// `[cluster]` example counts over the evaluation window (data-side;
+    /// the stratified reweighting of Eq. 2).
+    pub eval_cluster_counts: &'a [u64],
+}
+
+/// One prediction strategy (§4.2): estimates each configuration's
+/// eval-window metric from the truncated observations in a
+/// [`PredictContext`]. Implementations must be deterministic pure
+/// functions of the context (replay-vs-live parity and the bit-identical
+/// parallel replay both depend on it) and cheap to call at every
+/// stopping day.
+pub trait PredictionStrategy: Send + Sync {
+    /// Canonical registry tag, including parameters (`stratified@5`).
+    /// Used for CLI round-trips, figure series names, and bank labels.
+    fn tag(&self) -> String;
+
+    /// Where the strategy comes from (paper section or citation) — shown
+    /// by `nshpo strategies` and usable as figure-caption provenance.
+    fn provenance(&self) -> &'static str;
+
+    /// Predicted eval-window metric per config, aligned with the
+    /// context's series (smaller = better, like every metric here).
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64>;
+}
+
+/// A cheap clonable handle to a [`PredictionStrategy`] — this is what
+/// [`SearchPlan`](crate::search::SearchPlan)s store and the
+/// [`SearchDriver`](crate::search::SearchDriver)s receive. Build one via
+/// the constructors ([`Strategy::constant`], [`Strategy::trajectory`],
+/// ...), from a registry tag ([`Strategy::parse`]), or from any custom
+/// trait implementation ([`Strategy::custom`]).
+#[derive(Clone)]
+pub struct Strategy(Arc<dyn PredictionStrategy>);
+
+impl Strategy {
+    /// §4.2.1 constant prediction: mean of the trailing
+    /// [`FIT_DAYS`] observed days.
+    pub fn constant() -> Strategy {
+        Strategy(Arc::new(Constant))
+    }
+
+    /// Recency-weighted constant: exponential-decay weighted mean of all
+    /// observed days with the given half-life (days, must be positive).
+    pub fn recency(half_life_days: f64) -> Strategy {
+        assert!(
+            half_life_days.is_finite() && half_life_days > 0.0,
+            "recency half-life must be a positive number of days"
+        );
+        Strategy(Arc::new(Recency { half_life_days }))
+    }
+
+    /// §4.2.2 trajectory prediction under a parametric law.
+    pub fn trajectory(law: LawKind) -> Strategy {
+        Strategy(Arc::new(Trajectory { law }))
+    }
+
+    /// §4.2.3 stratified prediction over `n_slices` drift slices;
+    /// `law` of `None` predicts each slice with the constant rule.
+    pub fn stratified(law: Option<LawKind>, n_slices: usize) -> Strategy {
+        assert!(n_slices >= 1, "stratified needs at least one slice");
+        Strategy(Arc::new(Stratified { law, n_slices }))
+    }
+
+    /// Switching strategy: constant prediction while fewer than
+    /// `after_days` days are observed, then the `inner` strategy.
+    pub fn switching(after_days: usize, inner: Strategy) -> Strategy {
+        assert!(after_days >= 1, "switching needs a handoff day >= 1");
+        Strategy(Arc::new(Switching { after_days, inner }))
+    }
+
+    /// Wrap a custom [`PredictionStrategy`] implementation — the open
+    /// end of the registry (external strategies plug in here).
+    pub fn custom(implementation: Arc<dyn PredictionStrategy>) -> Strategy {
+        Strategy(implementation)
+    }
+
+    /// Resolve a registry tag (`constant`, `recency@1.5`,
+    /// `trajectory@VaporPressure`, `stratified@8`,
+    /// `stratified-constant@3`, `switching@4`) into a strategy. The
+    /// bracketed canonical forms also parse, so every `tag()` a strategy
+    /// prints round-trips: `stratified@5[VaporPressure]` picks the
+    /// per-slice law, and `switching@6[<inner tag>]` nests any
+    /// registered tag as the post-handoff strategy.
+    ///
+    /// Every rejection is a [`util::error`](crate::util::error) `Result`
+    /// naming the registered tags — CLI input feeds straight in.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nshpo::predict::Strategy;
+    ///
+    /// assert_eq!(Strategy::parse("constant").unwrap().tag(), "constant");
+    /// assert_eq!(
+    ///     Strategy::parse("trajectory").unwrap().tag(),
+    ///     "trajectory@InversePowerLaw"
+    /// );
+    /// assert_eq!(Strategy::parse("stratified@8").unwrap().tag(), "stratified@8");
+    /// assert_eq!(
+    ///     Strategy::parse("switching@4[stratified@8]").unwrap().tag(),
+    ///     "switching@4[stratified@8]"
+    /// );
+    ///
+    /// // Unknown tags are errors (no panics), listing the valid tags.
+    /// let err = Strategy::parse("no_such_predictor").unwrap_err();
+    /// assert!(format!("{err:#}").contains("constant"));
+    /// ```
+    pub fn parse(tag: &str) -> Result<Strategy> {
+        let (base, param) = match tag.split_once('@') {
+            Some((b, p)) => (b, Some(p)),
+            None => (tag, None),
+        };
+        let listed = || tags().join(", ");
+        // Split an `@` parameter like `5[VaporPressure]` into its head
+        // and optional bracketed part.
+        let split_bracket = |p: &'_ str| -> (String, Option<String>) {
+            match p.find('[') {
+                Some(i) if p.ends_with(']') => {
+                    (p[..i].to_string(), Some(p[i + 1..p.len() - 1].to_string()))
+                }
+                _ => (p.to_string(), None),
+            }
+        };
+        match base {
+            "constant" => match param {
+                None => Ok(Strategy::constant()),
+                Some(_) => Err(err!(
+                    "strategy 'constant' takes no @parameter, got {tag:?} \
+                     (registered: {})",
+                    listed()
+                )),
+            },
+            "recency" => {
+                let hl = match param {
+                    None => DEFAULT_RECENCY_HALF_LIFE,
+                    Some(p) => p
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|h| h.is_finite() && *h > 0.0)
+                        .ok_or_else(|| {
+                            err!(
+                                "recency half-life must be a positive number of days, \
+                                 got {tag:?} (registered: {})",
+                                listed()
+                            )
+                        })?,
+                };
+                Ok(Strategy::recency(hl))
+            }
+            "trajectory" => {
+                let law = match param {
+                    None => LawKind::InversePowerLaw,
+                    Some(p) => LawKind::parse(p).ok_or_else(|| {
+                        err!(
+                            "unknown trajectory law in {tag:?} (laws: {}; registered \
+                             strategies: {})",
+                            LawKind::all_names().join(", "),
+                            listed()
+                        )
+                    })?,
+                };
+                Ok(Strategy::trajectory(law))
+            }
+            "stratified" | "stratified-constant" => {
+                let (head, bracket) = match param {
+                    None => (String::new(), None),
+                    Some(p) => split_bracket(p),
+                };
+                let n_slices = if head.is_empty() && param.is_none() {
+                    DEFAULT_SLICES
+                } else {
+                    head.parse::<usize>().ok().filter(|&l| l >= 1).ok_or_else(|| {
+                        err!(
+                            "stratified slice count must be an integer >= 1, \
+                             got {tag:?} (registered: {})",
+                            listed()
+                        )
+                    })?
+                };
+                let law = match (base, bracket) {
+                    ("stratified", None) => Some(LawKind::InversePowerLaw),
+                    ("stratified", Some(l)) => {
+                        Some(LawKind::parse(&l).ok_or_else(|| {
+                            err!(
+                                "unknown stratified law in {tag:?} (laws: {}; \
+                                 registered: {})",
+                                LawKind::all_names().join(", "),
+                                listed()
+                            )
+                        })?)
+                    }
+                    (_, None) => None,
+                    (_, Some(_)) => {
+                        return Err(err!(
+                            "stratified-constant takes no [law], got {tag:?} \
+                             (registered: {})",
+                            listed()
+                        ))
+                    }
+                };
+                Ok(Strategy::stratified(law, n_slices))
+            }
+            "switching" => {
+                let (head, bracket) = match param {
+                    None => (String::new(), None),
+                    Some(p) => split_bracket(p),
+                };
+                let day = if head.is_empty() && param.is_none() {
+                    DEFAULT_SWITCH_DAY
+                } else {
+                    head.parse::<usize>().ok().filter(|&d| d >= 1).ok_or_else(|| {
+                        err!(
+                            "switching handoff day must be an integer >= 1, \
+                             got {tag:?} (registered: {})",
+                            listed()
+                        )
+                    })?
+                };
+                let inner = match bracket {
+                    None => Strategy::trajectory(LawKind::InversePowerLaw),
+                    Some(inner_tag) => Strategy::parse(&inner_tag)?,
+                };
+                Ok(Strategy::switching(day, inner))
+            }
+            other => Err(err!(
+                "unknown strategy {other:?} (registered: {})",
+                listed()
+            )),
+        }
+    }
+
+    /// Canonical registry tag of this strategy (round-trips through
+    /// [`Strategy::parse`] for registry-built strategies).
+    pub fn tag(&self) -> String {
+        self.0.tag()
+    }
+
+    /// Alias of [`tag`](Strategy::tag) — the label banks and figure
+    /// series use.
+    pub fn name(&self) -> String {
+        self.0.tag()
+    }
+
+    /// Paper-section / citation provenance of the strategy.
+    pub fn provenance(&self) -> &'static str {
+        self.0.provenance()
+    }
+
+    /// Predict eval-window metrics for the context's config subset.
+    pub fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        self.0.predict(ctx)
+    }
+}
+
+impl fmt::Debug for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Strategy({})", self.tag())
+    }
+}
+
+impl PartialEq for Strategy {
+    fn eq(&self, other: &Strategy) -> bool {
+        self.tag() == other.tag()
+    }
+}
+
+// ------------------------------------------------- the paper strategies
+
+/// §4.2.1: mean of the trailing [`FIT_DAYS`] observed days.
+struct Constant;
+
+impl PredictionStrategy for Constant {
+    fn tag(&self) -> String {
+        "constant".to_string()
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.2.1"
+    }
+
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        ctx.day_means
+            .iter()
+            .map(|dm| constant_prediction(dm, FIT_DAYS))
+            .collect()
+    }
+}
+
+/// §4.2.2: joint parametric-law fit on pairwise differences.
+struct Trajectory {
+    law: LawKind,
+}
+
+impl PredictionStrategy for Trajectory {
+    fn tag(&self) -> String {
+        format!("trajectory@{}", self.law.name())
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.2.2"
+    }
+
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        trajectory_predict(self.law, &ctx.day_means, ctx.total_days, ctx.eval_days)
+    }
+}
+
+/// §4.2.3: per-slice prediction reweighted by eval-window slice sizes.
+struct Stratified {
+    law: Option<LawKind>,
+    n_slices: usize,
+}
+
+impl PredictionStrategy for Stratified {
+    fn tag(&self) -> String {
+        match self.law {
+            None => format!("stratified-constant@{}", self.n_slices),
+            Some(LawKind::InversePowerLaw) => format!("stratified@{}", self.n_slices),
+            Some(l) => format!("stratified@{}[{}]", self.n_slices, l.name()),
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.2.3"
+    }
+
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        stratified_predict(
+            self.law,
+            ctx.day_cluster_counts,
+            &ctx.cluster_loss_sums,
+            ctx.eval_cluster_counts,
+            self.n_slices,
+            ctx.total_days,
+            ctx.eval_days,
+        )
+    }
+}
+
+// --------------------------------------------------- the new strategies
+
+/// Exponential-decay weighted constant: all observed days contribute,
+/// discounted by age with the configured half-life. A drift-robust
+/// middle ground between "last 3 days" and "everything equally".
+struct Recency {
+    half_life_days: f64,
+}
+
+impl PredictionStrategy for Recency {
+    fn tag(&self) -> String {
+        format!("recency@{}", self.half_life_days)
+    }
+
+    fn provenance(&self) -> &'static str {
+        "Wang et al., 2021 (cost-efficient online HPO)"
+    }
+
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        ctx.day_means
+            .iter()
+            .map(|dm| recency_prediction(dm, self.half_life_days))
+            .collect()
+    }
+}
+
+/// Constant prediction while fewer than `after_days` days are observed,
+/// then the inner strategy — the dynamic-surrogate-switching pattern:
+/// extrapolating fitters need warm-up before they beat the recent
+/// average, especially under non-stationarity.
+struct Switching {
+    after_days: usize,
+    inner: Strategy,
+}
+
+impl PredictionStrategy for Switching {
+    fn tag(&self) -> String {
+        // The registry default hands off to trajectory@InversePowerLaw;
+        // a custom inner is surfaced in the tag so labels stay unique.
+        if self.inner.tag() == "trajectory@InversePowerLaw" {
+            format!("switching@{}", self.after_days)
+        } else {
+            format!("switching@{}[{}]", self.after_days, self.inner.tag())
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "Škrlj et al., 2022 (dynamic surrogate switching)"
+    }
+
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        if ctx.day_stop < self.after_days {
+            Constant.predict(ctx)
+        } else {
+            self.inner.predict(ctx)
+        }
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// One registry row: base tag, provenance, and the one-line guidance
+/// shown by `nshpo strategies`.
+pub struct StrategyInfo {
+    /// Base registry tag (parameters attach as `@<param>`).
+    pub tag: &'static str,
+    /// Paper section or citation the strategy implements.
+    pub reference: &'static str,
+    /// When to reach for this strategy.
+    pub when_to_use: &'static str,
+}
+
+/// Every registered strategy, base tags only — `recency`, `trajectory`,
+/// `stratified`, `stratified-constant`, and `switching` also accept an
+/// `@<param>` (half-life days / law name / slice count / handoff day).
+pub const REGISTRY: [StrategyInfo; 6] = [
+    StrategyInfo {
+        tag: "constant",
+        reference: "paper §4.2.1",
+        when_to_use: "robust default: very early stops, heavy day-level noise",
+    },
+    StrategyInfo {
+        tag: "recency",
+        reference: "Wang et al., 2021",
+        when_to_use: "fast drift: the last day matters more than the last three",
+    },
+    StrategyInfo {
+        tag: "trajectory",
+        reference: "paper §4.2.2",
+        when_to_use: "smooth decaying curves observed for several days",
+    },
+    StrategyInfo {
+        tag: "stratified",
+        reference: "paper §4.2.3",
+        when_to_use: "mixture shift between the observed and eval windows",
+    },
+    StrategyInfo {
+        tag: "stratified-constant",
+        reference: "paper §4.2.3",
+        when_to_use: "mixture shift with too few observed days to fit laws",
+    },
+    StrategyInfo {
+        tag: "switching",
+        reference: "Škrlj et al., 2022",
+        when_to_use: "long searches: constant early, trajectory once fits stabilize",
+    },
+];
+
+/// Base tags of every registered strategy, registry order.
+pub fn tags() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.tag).collect()
+}
+
+/// The `nshpo strategies` table: one row per registered tag with its
+/// provenance and usage guidance. Tests pin that every registered tag
+/// appears here, so the CLI listing cannot silently drop one.
+pub fn registry_table() -> String {
+    let mut out = format!("{:<20} {:<34} when to use\n", "tag", "reference");
+    for info in &REGISTRY {
+        out.push_str(&format!(
+            "{:<20} {:<34} {}\n",
+            info.tag, info.reference, info.when_to_use
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny 2-config, 1-cluster context over 8 of 12 days.
+    fn toy_ctx(
+        day_stop: usize,
+    ) -> (Vec<Vec<u32>>, Vec<Vec<Vec<f32>>>, Vec<u64>, Vec<Vec<f64>>) {
+        let counts: Vec<Vec<u32>> = (0..day_stop).map(|_| vec![10u32]).collect();
+        let day_means: Vec<Vec<f64>> = (0..2)
+            .map(|c| {
+                (0..day_stop)
+                    .map(|d| 0.5 + 0.1 * c as f64 + 0.3 / (d + 1) as f64)
+                    .collect()
+            })
+            .collect();
+        let sums: Vec<Vec<Vec<f32>>> = day_means
+            .iter()
+            .map(|dm| dm.iter().map(|&m| vec![(m * 10.0) as f32]).collect())
+            .collect();
+        (counts, sums, vec![100], day_means)
+    }
+
+    fn ctx_of<'a>(
+        day_stop: usize,
+        counts: &'a [Vec<u32>],
+        sums: &'a [Vec<Vec<f32>>],
+        eval: &'a [u64],
+        day_means: &[Vec<f64>],
+    ) -> PredictContext<'a> {
+        PredictContext {
+            day_stop,
+            total_days: 12,
+            eval_days: 3,
+            day_means: day_means.to_vec(),
+            day_cluster_counts: counts,
+            cluster_loss_sums: sums.iter().map(|s| s.as_slice()).collect(),
+            eval_cluster_counts: eval,
+        }
+    }
+
+    #[test]
+    fn registry_tags_parse_and_roundtrip() {
+        for info in &REGISTRY {
+            let s = Strategy::parse(info.tag).unwrap();
+            let canonical = s.tag();
+            assert!(
+                canonical == info.tag || canonical.starts_with(&format!("{}@", info.tag)),
+                "{} -> {canonical}",
+                info.tag
+            );
+            // the canonical tag parses back to the same strategy
+            let again = Strategy::parse(&canonical).unwrap();
+            assert_eq!(again.tag(), canonical);
+            assert!(!s.provenance().is_empty());
+        }
+        assert!(tags().len() >= 5);
+    }
+
+    #[test]
+    fn tags_are_unique() {
+        let strategies = [
+            Strategy::constant(),
+            Strategy::recency(2.0),
+            Strategy::trajectory(LawKind::InversePowerLaw),
+            Strategy::trajectory(LawKind::VaporPressure),
+            Strategy::stratified(None, 4),
+            Strategy::stratified(Some(LawKind::InversePowerLaw), 4),
+            Strategy::stratified(Some(LawKind::LogPower), 4),
+            Strategy::switching(6, Strategy::trajectory(LawKind::InversePowerLaw)),
+            Strategy::switching(6, Strategy::constant()),
+        ];
+        let mut names: Vec<String> = strategies.iter().map(|s| s.tag()).collect();
+        names.sort();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate strategy tags");
+    }
+
+    #[test]
+    fn bracketed_canonical_tags_roundtrip() {
+        // Every tag() a strategy can print must parse back to itself —
+        // including the bracketed law / nested-inner forms.
+        for strat in [
+            Strategy::stratified(Some(LawKind::VaporPressure), 5),
+            Strategy::stratified(Some(LawKind::LogPower), 2),
+            Strategy::switching(6, Strategy::constant()),
+            Strategy::switching(4, Strategy::stratified(None, 3)),
+            Strategy::switching(2, Strategy::switching(5, Strategy::constant())),
+        ] {
+            let tag = strat.tag();
+            let reparsed = Strategy::parse(&tag)
+                .unwrap_or_else(|e| panic!("{tag:?} did not parse: {e:#}"));
+            assert_eq!(reparsed.tag(), tag);
+        }
+        // and the bracketed grammar is reachable straight from the CLI
+        assert_eq!(
+            Strategy::parse("stratified@5[vp]").unwrap().tag(),
+            "stratified@5[VaporPressure]"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_tags_with_the_tag_list() {
+        for bad in [
+            "no_such_predictor",
+            "constant@3",
+            "recency@zero",
+            "recency@-1",
+            "recency@",
+            "trajectory@NotALaw",
+            "stratified@0",
+            "stratified@many",
+            "stratified@5[NotALaw]",
+            "stratified-constant@0",
+            "stratified-constant@3[VaporPressure]",
+            "switching@0",
+            "switching@later",
+            "switching@4[no_such_inner]",
+            "",
+        ] {
+            let err = Strategy::parse(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("constant") && msg.contains("switching"),
+                "error for {bad:?} does not list the registry: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_and_recency_agree_on_flat_series() {
+        let (counts, sums, eval, _) = toy_ctx(6);
+        let flat = vec![vec![0.7; 6], vec![0.9; 6]];
+        let ctx = ctx_of(6, &counts, &sums, &eval, &flat);
+        let c = Strategy::constant().predict(&ctx);
+        let r = Strategy::recency(2.0).predict(&ctx);
+        for (a, b) in c.iter().zip(&r) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn recency_tracks_the_latest_day_harder_than_constant() {
+        let (counts, sums, eval, _) = toy_ctx(6);
+        // series that jumps on the final observed day
+        let jump = vec![vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.4]];
+        let ctx = ctx_of(6, &counts, &sums, &eval, &jump);
+        let c = Strategy::constant().predict(&ctx)[0];
+        let fast = Strategy::recency(0.5).predict(&ctx)[0];
+        let slow = Strategy::recency(50.0).predict(&ctx)[0];
+        assert!(fast < c, "fast recency {fast} not below constant {c}");
+        // a huge half-life approaches the all-days mean
+        let mean = (5.0 * 1.0 + 0.4) / 6.0;
+        assert!((slow - mean).abs() < 0.01, "{slow} vs {mean}");
+    }
+
+    #[test]
+    fn switching_hands_off_at_the_configured_day() {
+        let (counts, sums, eval, day_means) = toy_ctx(8);
+        let sw = Strategy::switching(6, Strategy::trajectory(LawKind::InversePowerLaw));
+
+        // before the handoff: identical to constant
+        let dm4: Vec<Vec<f64>> = day_means.iter().map(|dm| dm[..4].to_vec()).collect();
+        let pre = ctx_of(4, &counts[..4], &sums, &eval, &dm4);
+        let a = sw.predict(&pre);
+        let b = Strategy::constant().predict(&pre);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+
+        // at/after the handoff: identical to the inner strategy
+        let post = ctx_of(8, &counts, &sums, &eval, &day_means);
+        let c = sw.predict(&post);
+        let d = Strategy::trajectory(LawKind::InversePowerLaw).predict(&post);
+        for (x, y) in c.iter().zip(&d) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn stratified_through_the_trait_runs() {
+        let (counts, sums, eval, day_means) = toy_ctx(8);
+        let ctx = ctx_of(8, &counts, &sums, &eval, &day_means);
+        for s in [
+            Strategy::stratified(None, 2),
+            Strategy::stratified(Some(LawKind::InversePowerLaw), 2),
+        ] {
+            let p = s.predict(&ctx);
+            assert_eq!(p.len(), 2);
+            assert!(p.iter().all(|x| x.is_finite()), "{}: {p:?}", s.tag());
+            assert!(p[0] < p[1], "{}: ordering lost {p:?}", s.tag());
+        }
+    }
+
+    #[test]
+    fn registry_table_lists_every_tag() {
+        let table = registry_table();
+        for t in tags() {
+            assert!(table.contains(t), "{t} missing from table:\n{table}");
+        }
+    }
+
+    #[test]
+    fn debug_and_eq_use_tags() {
+        let a = Strategy::parse("stratified@3").unwrap();
+        let b = Strategy::stratified(Some(LawKind::InversePowerLaw), 3);
+        assert_eq!(a, b);
+        assert_eq!(format!("{a:?}"), "Strategy(stratified@3)");
+        assert_ne!(a, Strategy::constant());
+    }
+}

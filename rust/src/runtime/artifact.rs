@@ -6,29 +6,46 @@ use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
+/// Metadata of one AOT-compiled model variant.
 #[derive(Clone, Debug)]
 pub struct VariantMeta {
+    /// Variant name (`fm_base`, `cn_l3`, ...).
     pub name: String,
+    /// Experiment family the variant belongs to.
     pub family: String,
+    /// Batch size the variant was compiled for.
     pub batch: usize,
+    /// Dense feature count compiled in.
     pub n_dense: usize,
+    /// Categorical feature count compiled in.
     pub n_cat: usize,
+    /// Trainable parameter count.
     pub n_params: usize,
+    /// Flat-state length (params + optimizer accumulator).
     pub state_size: usize,
+    /// Path to the train-step HLO text.
     pub step_hlo: PathBuf,
+    /// Path to the state-init HLO text.
     pub init_hlo: PathBuf,
 }
 
+/// The artifact directory's parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifact directory itself.
     pub dir: PathBuf,
+    /// Batch size shared by every variant.
     pub batch: usize,
+    /// Dense feature count shared by every variant.
     pub n_dense: usize,
+    /// Categorical feature count shared by every variant.
     pub n_cat: usize,
+    /// Every compiled variant.
     pub variants: Vec<VariantMeta>,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -72,6 +89,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), batch, n_dense, n_cat, variants })
     }
 
+    /// Look up a variant by name.
     pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
         self.variants
             .iter()

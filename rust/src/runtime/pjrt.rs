@@ -25,11 +25,14 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Create the CPU PJRT client (fails loudly in the zero-dependency
+    /// build — see `runtime::xla_shim`).
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(wrap)?;
         Ok(Engine { client })
     }
 
+    /// PJRT platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -57,6 +60,7 @@ impl Engine {
 pub struct Model {
     step_exe: xla::PjRtLoadedExecutable,
     init_exe: xla::PjRtLoadedExecutable,
+    /// The variant this model was compiled from.
     pub meta: VariantMeta,
 }
 
@@ -144,6 +148,7 @@ pub struct RunState {
 }
 
 impl RunState {
+    /// Size of the state literal in bytes.
     pub fn size_bytes(&self) -> usize {
         self.state.size_bytes()
     }

@@ -19,6 +19,7 @@
 
 use std::fmt;
 
+/// Mirror of the real crate's error type (a message string).
 pub struct Error(pub String);
 
 impl fmt::Display for Error {
@@ -42,21 +43,26 @@ fn unavailable() -> Error {
     )
 }
 
+/// Shim of the PJRT client; construction always fails.
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Always fails in the zero-dependency build.
     pub fn cpu() -> Result<PjRtClient, Error> {
         Err(unavailable())
     }
 
+    /// Placeholder platform name.
     pub fn platform_name(&self) -> String {
         "unavailable".into()
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn buffer_from_host_literal(
         &self,
         _device: Option<usize>,
@@ -66,31 +72,38 @@ impl PjRtClient {
     }
 }
 
+/// Shim of a parsed HLO module.
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Always fails in the zero-dependency build.
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
         Err(unavailable())
     }
 }
 
+/// Shim of an XLA computation.
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a module proto (trivially constructible; compiling fails).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
 }
 
+/// Shim of a compiled executable.
 pub struct PjRtLoadedExecutable {
     client: PjRtClient,
 }
 
 impl PjRtLoadedExecutable {
+    /// The owning client.
     pub fn client(&self) -> &PjRtClient {
         &self.client
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
         &self,
         _args: &[B],
@@ -99,45 +112,56 @@ impl PjRtLoadedExecutable {
     }
 }
 
+/// Shim of a device buffer.
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Always fails in the zero-dependency build.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         Err(unavailable())
     }
 }
 
+/// Shim of a host literal.
 pub struct Literal;
 
 impl Literal {
+    /// A scalar literal (constructible; every use fails).
     pub fn scalar<T: Copy>(_v: T) -> Literal {
         Literal
     }
 
+    /// A rank-1 literal (constructible; every use fails).
     pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
         Literal
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn to_tuple1(self) -> Result<Literal, Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal), Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn get_first_element<T>(&self) -> Result<T, Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the zero-dependency build.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         Err(unavailable())
     }
 
+    /// Placeholder size (0 bytes).
     pub fn size_bytes(&self) -> usize {
         0
     }

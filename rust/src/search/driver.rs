@@ -26,7 +26,7 @@ use super::sweep::ConfigSpec;
 use super::TrajectorySet;
 use crate::coordinator::ModelFactory;
 use crate::data::Plan;
-use crate::predict::Strategy;
+use crate::predict::{PredictContext, Strategy};
 use crate::train::{run_range, ClusteredStream, OnlineModel, RunTrajectory};
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
@@ -37,9 +37,13 @@ use std::time::Instant;
 /// driver owns per-config progress (how far each config has trained) and
 /// answers predictions from whatever it has observed so far.
 pub trait SearchDriver {
+    /// Number of candidate configurations this driver manages.
     fn n_configs(&self) -> usize;
+    /// Training horizon in days.
     fn days(&self) -> usize;
+    /// Training steps per virtual day.
     fn steps_per_day(&self) -> usize;
+    /// Evaluation window in days (the last `eval_days` of the horizon).
     fn eval_days(&self) -> usize;
 
     /// Train (or replay) `configs` forward through the end of day `day`.
@@ -53,7 +57,7 @@ pub trait SearchDriver {
     /// Predict final eval metrics for `subset` from the data observed
     /// through day `day` (Algorithm 1 line 5). Output aligned with
     /// `subset`.
-    fn predict(&self, strategy: Strategy, day: usize, subset: &[usize]) -> Vec<f64>;
+    fn predict(&self, strategy: &Strategy, day: usize, subset: &[usize]) -> Vec<f64>;
 
     /// Mean observed day-loss of config `c` over days `[from_day, to_day)`.
     fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64;
@@ -61,6 +65,7 @@ pub trait SearchDriver {
     /// Steps config `c` has actually trained (empirical-cost audit).
     fn steps_trained(&self, c: usize) -> usize;
 
+    /// Steps of one full-horizon run (`days * steps_per_day`).
     fn total_steps(&self) -> usize {
         self.days() * self.steps_per_day()
     }
@@ -89,6 +94,7 @@ pub struct ReplayDriver<'t> {
 }
 
 impl<'t> ReplayDriver<'t> {
+    /// A fresh replay over `ts`: every config starts untrained at day 0.
     pub fn new(ts: &'t TrajectorySet) -> ReplayDriver<'t> {
         ReplayDriver {
             cursor: vec![0; ts.n_configs()],
@@ -135,7 +141,7 @@ impl SearchDriver for ReplayDriver<'_> {
         Ok(())
     }
 
-    fn predict(&self, strategy: Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
+    fn predict(&self, strategy: &Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
         self.ts.predict_subset(strategy, day, subset)
     }
 
@@ -192,6 +198,9 @@ pub struct LiveDriver<'a> {
 }
 
 impl<'a> LiveDriver<'a> {
+    /// A live search backend over `specs`: models are created lazily by
+    /// `factory` (a config that is never advanced costs nothing) and
+    /// trained over `cs` under the `data_plan` sub-sampling weights.
     pub fn new(
         factory: &'a dyn ModelFactory,
         cs: &'a ClusteredStream,
@@ -226,6 +235,7 @@ impl<'a> LiveDriver<'a> {
         self
     }
 
+    /// Worker threads the segment fan-out uses.
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -361,27 +371,45 @@ impl SearchDriver for LiveDriver<'_> {
         Ok(())
     }
 
-    /// View the partial live trajectories of `subset` as a
-    /// [`TrajectorySet`] so the bank-replay predictors work unchanged.
+    /// Assemble the partial live trajectories of `subset` into the same
+    /// [`PredictContext`] a bank replay feeds the strategy: day means
+    /// computed exactly like [`TrajectorySet::day_means`], cluster data
+    /// borrowed straight from the runs (no copies on the live hot path).
     /// (Only valid for configs started at day 0; late-started runs are
     /// ranked via [`window_mean`](SearchDriver::window_mean).)
-    fn predict(&self, strategy: Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
+    fn predict(&self, strategy: &Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
         let cfg = &self.cs.stream.cfg;
-        let traj_of = |c: usize| self.runs[c].as_ref().expect("config never trained");
-        let ts = TrajectorySet {
-            steps_per_day: cfg.steps_per_day,
-            days: cfg.days,
+        let spd = cfg.steps_per_day;
+        let day_stop = day.clamp(1, cfg.days);
+        let traj_of =
+            |c: usize| &self.runs[c].as_ref().expect("config never trained").traj;
+        let ctx = PredictContext {
+            day_stop,
+            total_days: cfg.days,
             eval_days: self.cs.eval_days,
-            step_losses: subset.iter().map(|&c| traj_of(c).traj.step_losses.clone()).collect(),
-            day_cluster_counts: self.cs.day_cluster_counts.clone(),
+            day_means: subset
+                .iter()
+                .map(|&c| {
+                    let s = &traj_of(c).step_losses;
+                    (0..day_stop)
+                        .map(|d| {
+                            s[d * spd..(d + 1) * spd]
+                                .iter()
+                                .map(|&x| x as f64)
+                                .sum::<f64>()
+                                / spd as f64
+                        })
+                        .collect()
+                })
+                .collect(),
+            day_cluster_counts: &self.cs.day_cluster_counts[..day_stop],
             cluster_loss_sums: subset
                 .iter()
-                .map(|&c| traj_of(c).traj.cluster_loss_sums.clone())
+                .map(|&c| &traj_of(c).cluster_loss_sums[..day_stop])
                 .collect(),
-            eval_cluster_counts: self.cs.eval_cluster_counts.clone(),
+            eval_cluster_counts: &self.cs.eval_cluster_counts,
         };
-        let all_local: Vec<usize> = (0..subset.len()).collect();
-        ts.predict_subset(strategy, day, &all_local)
+        strategy.predict(&ctx)
     }
 
     fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64 {

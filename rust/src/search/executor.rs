@@ -44,7 +44,9 @@ pub enum ReplayKind {
 /// One independent replay over a shared read-only trajectory set.
 #[derive(Clone)]
 pub struct ReplayJob {
+    /// The recorded trajectories the replay consumes.
     pub ts: Arc<TrajectorySet>,
+    /// Which replay to run.
     pub kind: ReplayKind,
     /// Sub-sampling cost multiplier (§4.1.2); applied to the outcome's
     /// relative cost C.
@@ -56,56 +58,64 @@ pub struct ReplayJob {
 /// A finished replay, in the same position as its job.
 #[derive(Clone, Debug)]
 pub struct ReplayResult {
+    /// The replayed search's ranking, cost, and step audit.
     pub outcome: SearchOutcome,
+    /// The job's label, passed through unchanged.
     pub tag: String,
     /// Wall-clock this job took (executor throughput accounting).
     pub wall_seconds: f64,
 }
 
 impl ReplayJob {
-    pub fn one_shot(ts: &Arc<TrajectorySet>, strategy: Strategy, day_stop: usize) -> ReplayJob {
+    /// A one-shot early-stopping replay at `day_stop`.
+    pub fn one_shot(ts: &Arc<TrajectorySet>, strategy: &Strategy, day_stop: usize) -> ReplayJob {
         ReplayJob {
             ts: Arc::clone(ts),
-            kind: ReplayKind::OneShot { strategy, day_stop },
+            kind: ReplayKind::OneShot { strategy: strategy.clone(), day_stop },
             plan_mult: 1.0,
             tag: format!("one-shot@{day_stop}"),
         }
     }
 
+    /// An Algorithm-1 (performance-based stopping) replay.
     pub fn perf_based(
         ts: &Arc<TrajectorySet>,
-        strategy: Strategy,
+        strategy: &Strategy,
         stop_days: Vec<usize>,
         rho: f64,
     ) -> ReplayJob {
         ReplayJob {
             ts: Arc::clone(ts),
-            kind: ReplayKind::PerfBased { strategy, stop_days, rho },
+            kind: ReplayKind::PerfBased { strategy: strategy.clone(), stop_days, rho },
             plan_mult: 1.0,
             tag: "perf-based".into(),
         }
     }
 
+    /// Attach a sub-sampling cost multiplier (§4.1.2).
     pub fn with_mult(mut self, plan_mult: f64) -> ReplayJob {
         self.plan_mult = plan_mult;
         self
     }
 
+    /// Attach a free-form label carried through to the result.
     pub fn with_tag(mut self, tag: impl Into<String>) -> ReplayJob {
         self.tag = tag.into();
         self
     }
 
-    /// Run the replay through the shared [`SearchSession`] core. Pure:
-    /// identical inputs give identical outputs.
+    /// Run the replay through the shared
+    /// [`SearchSession`](super::SearchSession) core. Pure: identical
+    /// inputs give identical outputs.
     pub fn execute(&self) -> ReplayResult {
         let t0 = Instant::now();
         let outcome = match &self.kind {
             ReplayKind::OneShot { strategy, day_stop } => {
-                self.run_session(SearchPlan::one_shot(*day_stop).strategy(*strategy))
+                self.run_session(SearchPlan::one_shot(*day_stop).strategy(strategy.clone()))
             }
             ReplayKind::PerfBased { strategy, stop_days, rho } => self.run_session(
-                SearchPlan::performance_based(stop_days.clone(), *rho).strategy(*strategy),
+                SearchPlan::performance_based(stop_days.clone(), *rho)
+                    .strategy(strategy.clone()),
             ),
             ReplayKind::LateStart { start_day, day_stop } => {
                 // Clamp like the pre-session replay did, so degenerate
@@ -118,7 +128,7 @@ impl ReplayJob {
                 // ReplayDriver per bracket on scoped threads.
                 let hb = hyperband::hyperband_par(
                     &self.ts,
-                    *strategy,
+                    strategy,
                     *eta,
                     *brackets_seed,
                     (*workers).max(1),
@@ -185,6 +195,7 @@ impl ReplayExecutor {
         ReplayExecutor::new(w)
     }
 
+    /// Worker count this executor fans out over (1 = serial).
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -234,12 +245,12 @@ mod tests {
     fn job_set(ts: &Arc<TrajectorySet>) -> Vec<ReplayJob> {
         let mut jobs = Vec::new();
         for d in [2usize, 4, 6, 9, 12] {
-            jobs.push(ReplayJob::one_shot(ts, Strategy::Constant, d));
+            jobs.push(ReplayJob::one_shot(ts, &Strategy::constant(), d));
         }
         for s in [2usize, 3, 4] {
             jobs.push(ReplayJob::perf_based(
                 ts,
-                Strategy::Trajectory(LawKind::InversePowerLaw),
+                &Strategy::trajectory(LawKind::InversePowerLaw),
                 equally_spaced_stops(ts.days, s),
                 0.5,
             ));
@@ -253,7 +264,7 @@ mod tests {
         jobs.push(ReplayJob {
             ts: Arc::clone(ts),
             kind: ReplayKind::Hyperband {
-                strategy: Strategy::Constant,
+                strategy: Strategy::constant(),
                 eta: 3.0,
                 brackets_seed: 7,
                 workers: 2,
@@ -283,7 +294,7 @@ mod tests {
     fn results_preserve_submission_order() {
         let ts = small_ts();
         let jobs: Vec<ReplayJob> = (2..10)
-            .map(|d| ReplayJob::one_shot(&ts, Strategy::Constant, d).with_tag(format!("d{d}")))
+            .map(|d| ReplayJob::one_shot(&ts, &Strategy::constant(), d).with_tag(format!("d{d}")))
             .collect();
         let out = ReplayExecutor::new(3).run(jobs);
         let tags: Vec<&str> = out.iter().map(|r| r.tag.as_str()).collect();
@@ -293,7 +304,7 @@ mod tests {
     #[test]
     fn plan_multiplier_scales_cost() {
         let ts = small_ts();
-        let base = ReplayJob::one_shot(&ts, Strategy::Constant, 6);
+        let base = ReplayJob::one_shot(&ts, &Strategy::constant(), 6);
         let scaled = base.clone().with_mult(0.25);
         let out = ReplayExecutor::serial().run(vec![base, scaled]);
         assert!((out[0].outcome.cost * 0.25 - out[1].outcome.cost).abs() < 1e-15);
@@ -312,7 +323,7 @@ mod tests {
     fn timing_is_recorded() {
         let ts = small_ts();
         let out = ReplayExecutor::serial()
-            .run(vec![ReplayJob::one_shot(&ts, Strategy::Constant, 12)]);
+            .run(vec![ReplayJob::one_shot(&ts, &Strategy::constant(), 12)]);
         assert!(out[0].wall_seconds >= 0.0);
     }
 }

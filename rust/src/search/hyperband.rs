@@ -22,11 +22,13 @@ use crate::util::error::Result;
 use crate::util::prng::Rng;
 use crate::util::threadpool::ThreadPool;
 
+/// Result of a Hyperband run over all brackets.
 #[derive(Clone, Debug)]
 pub struct HyperbandOutcome {
     /// Final ranking over all configs (configs never touched by any
     /// bracket rank last, in index order).
     pub ranking: Vec<usize>,
+    /// Relative cost C summed over every bracket's training.
     pub cost: f64,
     /// (bracket, n_configs, first_stop_day, bracket cost) diagnostics.
     pub brackets: Vec<(usize, usize, usize, f64)>,
@@ -34,9 +36,13 @@ pub struct HyperbandOutcome {
 
 /// One planned bracket: evaluation is a pure function of this plan.
 pub struct BracketPlan {
+    /// Bracket index s (larger = more aggressive stopping).
     pub s: usize,
+    /// Global config ids assigned to this bracket.
     pub subset: Vec<usize>,
+    /// The bracket's Algorithm-1 stopping days.
     pub stops: Vec<usize>,
+    /// First stopping day (the bracket's initial budget r_s, in days).
     pub first_stop: usize,
 }
 
@@ -126,7 +132,7 @@ fn merge(
 /// `SearchMethod::Hyperband` runs — replay or live.
 pub fn hyperband_driver(
     driver: &mut dyn SearchDriver,
-    strategy: Strategy,
+    strategy: &Strategy,
     eta: f64,
     seed: u64,
 ) -> Result<HyperbandOutcome> {
@@ -143,7 +149,7 @@ pub fn hyperband_driver(
 /// random assignment of configs to brackets.
 pub fn hyperband(
     ts: &TrajectorySet,
-    strategy: Strategy,
+    strategy: &Strategy,
     eta: f64,
     seed: u64,
 ) -> HyperbandOutcome {
@@ -156,7 +162,7 @@ pub fn hyperband(
 /// the serial path.
 pub fn hyperband_par(
     ts: &TrajectorySet,
-    strategy: Strategy,
+    strategy: &Strategy,
     eta: f64,
     seed: u64,
     workers: usize,
@@ -186,7 +192,7 @@ mod tests {
     #[test]
     fn ranking_is_permutation_and_cheaper_than_full() {
         let ts = ts();
-        let out = hyperband(&ts, Strategy::Constant, 3.0, 1);
+        let out = hyperband(&ts, &Strategy::constant(), 3.0, 1);
         let mut r = out.ranking.clone();
         r.sort_unstable();
         assert_eq!(r, (0..24).collect::<Vec<_>>());
@@ -197,7 +203,7 @@ mod tests {
     #[test]
     fn brackets_hedge_budgets() {
         let ts = ts();
-        let out = hyperband(&ts, Strategy::Constant, 3.0, 2);
+        let out = hyperband(&ts, &Strategy::constant(), 3.0, 2);
         // at least two distinct first-stop budgets across brackets
         let mut stops: Vec<usize> = out.brackets.iter().map(|b| b.2).collect();
         stops.sort_unstable();
@@ -209,7 +215,7 @@ mod tests {
     fn top_of_ranking_is_reasonable() {
         let ts = ts();
         let gt = ts.ground_truth();
-        let out = hyperband(&ts, Strategy::Constant, 3.0, 3);
+        let out = hyperband(&ts, &Strategy::constant(), 3.0, 3);
         let reg = metrics::regret_at_k(&out.ranking, &gt, 3);
         let worst = gt.iter().cloned().fold(f64::MIN, f64::max)
             - gt.iter().cloned().fold(f64::MAX, f64::min);
@@ -219,8 +225,8 @@ mod tests {
     #[test]
     fn deterministic_in_seed() {
         let ts = ts();
-        let a = hyperband(&ts, Strategy::Constant, 3.0, 5);
-        let b = hyperband(&ts, Strategy::Constant, 3.0, 5);
+        let a = hyperband(&ts, &Strategy::constant(), 3.0, 5);
+        let b = hyperband(&ts, &Strategy::constant(), 3.0, 5);
         assert_eq!(a.ranking, b.ranking);
         assert_eq!(a.cost, b.cost);
     }
@@ -228,8 +234,8 @@ mod tests {
     #[test]
     fn bracket_parallel_matches_serial() {
         let ts = ts();
-        let a = hyperband(&ts, Strategy::Constant, 3.0, 11);
-        let b = hyperband_par(&ts, Strategy::Constant, 3.0, 11, 4);
+        let a = hyperband(&ts, &Strategy::constant(), 3.0, 11);
+        let b = hyperband_par(&ts, &Strategy::constant(), 3.0, 11, 4);
         assert_eq!(a.ranking, b.ranking);
         assert_eq!(a.cost.to_bits(), b.cost.to_bits());
         assert_eq!(a.brackets, b.brackets);
@@ -241,9 +247,9 @@ mod tests {
         // and hyperband_par (one driver per bracket) share the core; the
         // outcomes must be identical on a replay backend.
         let ts = ts();
-        let a = hyperband_par(&ts, Strategy::Constant, 3.0, 13, 2);
+        let a = hyperband_par(&ts, &Strategy::constant(), 3.0, 13, 2);
         let mut d = ReplayDriver::new(&ts);
-        let b = hyperband_driver(&mut d, Strategy::Constant, 3.0, 13).unwrap();
+        let b = hyperband_driver(&mut d, &Strategy::constant(), 3.0, 13).unwrap();
         assert_eq!(a.ranking, b.ranking);
         assert_eq!(a.cost.to_bits(), b.cost.to_bits());
         assert_eq!(a.brackets, b.brackets);

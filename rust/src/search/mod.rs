@@ -21,7 +21,7 @@ pub use session::{
     SearchMethod, SearchPlan, SearchPlanBuilder, SearchSession, TwoStageOutcome,
 };
 
-use crate::predict::{self, Strategy};
+use crate::predict::{PredictContext, Strategy};
 
 /// Everything the search strategies need to know about a family's runs:
 /// full per-step metric trajectories plus per-day per-cluster loss
@@ -29,7 +29,9 @@ use crate::predict::{self, Strategy};
 /// (`train::bank`), consumed by [`ReplayDriver`].
 #[derive(Clone, Debug)]
 pub struct TrajectorySet {
+    /// Training steps per virtual day.
     pub steps_per_day: usize,
+    /// Training horizon in days.
     pub days: usize,
     /// Evaluation window in days (paper: 3).
     pub eval_days: usize,
@@ -47,17 +49,21 @@ pub struct TrajectorySet {
 /// relative cost C (including any sub-sampling multiplier).
 #[derive(Clone, Debug)]
 pub struct SearchOutcome {
+    /// Config indices, predicted-best first.
     pub ranking: Vec<usize>,
+    /// Relative cost C of obtaining the ranking (§4.1).
     pub cost: f64,
     /// Steps each config actually trained (empirical-cost audit).
     pub steps_trained: Vec<usize>,
 }
 
 impl TrajectorySet {
+    /// Number of recorded configurations.
     pub fn n_configs(&self) -> usize {
         self.step_losses.len()
     }
 
+    /// Steps of one full-horizon run (`days * steps_per_day`).
     pub fn total_steps(&self) -> usize {
         self.days * self.steps_per_day
     }
@@ -84,44 +90,44 @@ impl TrajectorySet {
             .collect()
     }
 
+    /// Assemble the truncated-observation view a
+    /// [`PredictionStrategy`](crate::predict::PredictionStrategy)
+    /// consumes: day-mean series plus cluster decompositions for
+    /// `subset`, covering observed days `[0, day_stop)` (clamped to the
+    /// horizon). Cluster data is borrowed, not copied; the day-mean
+    /// series are computed eagerly for every strategy — deliberate
+    /// uniformity: the stratified strategies ignore them, but the one
+    /// O(observed steps) summation pass is dwarfed by the per-slice law
+    /// fits those strategies run instead.
+    pub fn predict_context<'a>(
+        &'a self,
+        day_stop: usize,
+        subset: &[usize],
+    ) -> PredictContext<'a> {
+        let day_stop = day_stop.clamp(1, self.days);
+        PredictContext {
+            day_stop,
+            total_days: self.days,
+            eval_days: self.eval_days,
+            day_means: subset.iter().map(|&c| self.day_means(c, day_stop)).collect(),
+            day_cluster_counts: &self.day_cluster_counts[..day_stop],
+            cluster_loss_sums: subset
+                .iter()
+                .map(|&c| &self.cluster_loss_sums[c][..day_stop])
+                .collect(),
+            eval_cluster_counts: &self.eval_cluster_counts,
+        }
+    }
+
     /// Predict eval metrics for a subset of configs from data observed in
     /// days `[0, day_stop)`. Output aligned with `subset`.
     pub fn predict_subset(
         &self,
-        strategy: Strategy,
+        strategy: &Strategy,
         day_stop: usize,
         subset: &[usize],
     ) -> Vec<f64> {
-        let day_stop = day_stop.clamp(1, self.days);
-        match strategy {
-            Strategy::Constant => subset
-                .iter()
-                .map(|&c| {
-                    predict::constant_prediction(&self.day_means(c, day_stop), predict::FIT_DAYS)
-                })
-                .collect(),
-            Strategy::Trajectory(law) => {
-                let dms: Vec<Vec<f64>> =
-                    subset.iter().map(|&c| self.day_means(c, day_stop)).collect();
-                predict::trajectory_predict(law, &dms, self.days, self.eval_days)
-            }
-            Strategy::Stratified { law, n_slices } => {
-                let counts = &self.day_cluster_counts[..day_stop];
-                let sums: Vec<Vec<Vec<f32>>> = subset
-                    .iter()
-                    .map(|&c| self.cluster_loss_sums[c][..day_stop].to_vec())
-                    .collect();
-                predict::stratified_predict(
-                    law,
-                    counts,
-                    &sums,
-                    &self.eval_cluster_counts,
-                    n_slices,
-                    self.days,
-                    self.eval_days,
-                )
-            }
-        }
+        strategy.predict(&self.predict_context(day_stop, subset))
     }
 }
 
@@ -203,8 +209,9 @@ mod tests {
     #[test]
     fn predict_subset_aligns_with_subset() {
         let ts = toy(6, 12, 8, 2);
-        let full = ts.predict_subset(Strategy::Constant, 6, &[0, 1, 2, 3, 4, 5]);
-        let sub = ts.predict_subset(Strategy::Constant, 6, &[4, 1]);
+        let strat = Strategy::constant();
+        let full = ts.predict_subset(&strat, 6, &[0, 1, 2, 3, 4, 5]);
+        let sub = ts.predict_subset(&strat, 6, &[4, 1]);
         assert_eq!(sub[0].to_bits(), full[4].to_bits());
         assert_eq!(sub[1].to_bits(), full[1].to_bits());
     }

@@ -47,7 +47,10 @@ pub enum SearchMethod {
 /// instead of panicking.
 #[derive(Clone, Debug)]
 pub struct SearchPlan {
+    /// Which search method stage 1 runs.
     pub method: SearchMethod,
+    /// Prediction strategy used at every stopping day (registry handle;
+    /// see [`Strategy::parse`] and `nshpo strategies`).
     pub strategy: Strategy,
     /// Sub-sampling cost multiplier (§4.1.2), applied to every reported
     /// relative cost C.
@@ -60,23 +63,53 @@ pub struct SearchPlan {
 }
 
 impl SearchPlan {
+    /// One-shot early stopping at `day_stop` (§4.1.1).
     pub fn one_shot(day_stop: usize) -> SearchPlanBuilder {
         SearchPlanBuilder::new(SearchMethod::OneShot { day_stop })
     }
 
+    /// Performance-based stopping (Algorithm 1) with the given stopping
+    /// days and pruning ratio `rho`.
     pub fn performance_based(stop_days: Vec<usize>, rho: f64) -> SearchPlanBuilder {
         SearchPlanBuilder::new(SearchMethod::PerformanceBased { stop_days, rho })
     }
 
+    /// Late starting over `[start_day, day_stop)` (§B.4).
     pub fn late_start(start_day: usize, day_stop: usize) -> SearchPlanBuilder {
         SearchPlanBuilder::new(SearchMethod::LateStart { start_day, day_stop })
     }
 
+    /// Hyperband brackets over Algorithm 1 (the §2 extension).
     pub fn hyperband(eta: f64, brackets_seed: u64) -> SearchPlanBuilder {
         SearchPlanBuilder::new(SearchMethod::Hyperband { eta, brackets_seed })
     }
 }
 
+/// Builder returned by the [`SearchPlan`] constructors: chain strategy /
+/// budget / finalist settings, then [`build`](SearchPlanBuilder::build)
+/// (validating) or [`run_replay`](SearchPlanBuilder::run_replay)
+/// (validate + one stage-1 replay).
+///
+/// # Examples
+///
+/// ```
+/// use nshpo::predict::Strategy;
+/// use nshpo::search::SearchPlan;
+///
+/// let plan = SearchPlan::performance_based(vec![3, 6, 9], 0.5)
+///     .strategy(Strategy::parse("stratified@5").unwrap())
+///     .budget(0.6)
+///     .top_k(2)
+///     .build()
+///     .unwrap();
+/// assert_eq!(plan.top_k, 2);
+/// assert_eq!(plan.strategy.tag(), "stratified@5");
+///
+/// // build() returns errors instead of panicking on bad parameters:
+/// assert!(SearchPlan::performance_based(vec![3], 1.5).build().is_err());
+/// assert!(SearchPlan::one_shot(0).build().is_err());
+/// assert!(SearchPlan::one_shot(6).budget(-1.0).build().is_err());
+/// ```
 pub struct SearchPlanBuilder {
     method: SearchMethod,
     strategy: Strategy,
@@ -89,28 +122,35 @@ impl SearchPlanBuilder {
     fn new(method: SearchMethod) -> SearchPlanBuilder {
         SearchPlanBuilder {
             method,
-            strategy: Strategy::Constant,
+            strategy: Strategy::constant(),
             plan_mult: 1.0,
             budget: None,
             top_k: 3,
         }
     }
 
+    /// Prediction strategy used at every stopping day (default:
+    /// `constant`).
     pub fn strategy(mut self, strategy: Strategy) -> Self {
         self.strategy = strategy;
         self
     }
 
+    /// Sub-sampling cost multiplier (§4.1.2) folded into every reported
+    /// relative cost C (default: 1.0).
     pub fn plan_mult(mut self, mult: f64) -> Self {
         self.plan_mult = mult;
         self
     }
 
+    /// Hard cap on the stage-1 relative cost C, specified
+    /// post-multiplier.
     pub fn budget(mut self, cost_cap: f64) -> Self {
         self.budget = Some(cost_cap);
         self
     }
 
+    /// Finalists stage 2 resumes to the full horizon (default: 3).
     pub fn top_k(mut self, k: usize) -> Self {
         self.top_k = k;
         self
@@ -204,10 +244,12 @@ pub struct SearchSession<'d> {
 }
 
 impl<'d> SearchSession<'d> {
+    /// Bind a validated plan to a backend driver.
     pub fn new(plan: SearchPlan, driver: &'d mut dyn SearchDriver) -> SearchSession<'d> {
         SearchSession { plan, driver }
     }
 
+    /// The plan this session runs.
     pub fn plan(&self) -> &SearchPlan {
         &self.plan
     }
@@ -217,15 +259,15 @@ impl<'d> SearchSession<'d> {
     pub fn run(&mut self) -> Result<SearchOutcome> {
         // Budget is specified post-multiplier; the core works pre-multiplier.
         let budget = self.plan.budget.map(|b| b / self.plan.plan_mult);
-        let strategy = self.plan.strategy;
+        let strategy = self.plan.strategy.clone();
         let mut out = match &self.plan.method {
             SearchMethod::OneShot { day_stop } => {
-                run_one_shot(self.driver, strategy, *day_stop, budget)?
+                run_one_shot(self.driver, &strategy, *day_stop, budget)?
             }
             SearchMethod::PerformanceBased { stop_days, rho } => {
                 let subset: Vec<usize> = (0..self.driver.n_configs()).collect();
                 let core =
-                    algorithm1(self.driver, strategy, stop_days, *rho, &subset, budget)?;
+                    algorithm1(self.driver, &strategy, stop_days, *rho, &subset, budget)?;
                 SearchOutcome {
                     ranking: core.ranking,
                     cost: cost::empirical(&core.steps_trained, self.driver.total_steps()),
@@ -238,7 +280,7 @@ impl<'d> SearchSession<'d> {
             SearchMethod::Hyperband { eta, brackets_seed } => {
                 let hb = hyperband::hyperband_driver(
                     self.driver,
-                    strategy,
+                    &strategy,
                     *eta,
                     *brackets_seed,
                 )?;
@@ -302,7 +344,7 @@ fn affordable_days(budget: f64, days: usize) -> Result<usize> {
 
 fn run_one_shot(
     driver: &mut dyn SearchDriver,
-    strategy: Strategy,
+    strategy: &Strategy,
     day_stop: usize,
     budget: Option<f64>,
 ) -> Result<SearchOutcome> {
@@ -369,7 +411,7 @@ pub(crate) struct Algo1Out {
 /// day.
 pub(crate) fn algorithm1(
     driver: &mut dyn SearchDriver,
-    strategy: Strategy,
+    strategy: &Strategy,
     stop_days: &[usize],
     rho: f64,
     subset: &[usize],
@@ -525,7 +567,7 @@ mod tests {
         let out = replay(
             &ts,
             SearchPlan::one_shot(6)
-                .strategy(Strategy::Trajectory(crate::predict::LawKind::InversePowerLaw)),
+                .strategy(Strategy::trajectory(crate::predict::LawKind::InversePowerLaw)),
         );
         let gt = ts.ground_truth();
         assert!(metrics::regret_at_k(&out.ranking, &gt, 3) < 0.05);
@@ -536,10 +578,10 @@ mod tests {
         let ts = toy(5, 12, 8, 8);
         let out = replay(
             &ts,
-            SearchPlan::one_shot(6).strategy(Strategy::Stratified {
-                law: Some(crate::predict::LawKind::InversePowerLaw),
-                n_slices: 1,
-            }),
+            SearchPlan::one_shot(6).strategy(Strategy::stratified(
+                Some(crate::predict::LawKind::InversePowerLaw),
+                1,
+            )),
         );
         assert_eq!(out.ranking.len(), 5);
     }

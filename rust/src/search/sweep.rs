@@ -7,23 +7,31 @@
 //! FM v2 / CN / MLP vary an architectural axis x a 9-point optimization
 //! sub-grid (lr x final-lr at the middle weight decay).
 
+/// Initial learning rates of the optimization grid.
 pub const LR_GRID: [f64; 3] = [1e-4, 1e-3, 1e-2];
+/// Weight decays of the optimization grid.
 pub const WD_GRID: [f64; 3] = [1e-6, 2e-6, 1e-5];
+/// Final learning rates of the optimization grid.
 pub const FLR_GRID: [f64; 3] = [1e-3, 1e-2, 1e-1];
 
 /// One candidate configuration: an artifact (architecture variant) plus
 /// runtime optimization hyperparameters (the flat-state ABI's `hparams`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ConfigSpec {
+    /// Experiment family (`fm`, `moe`, ...).
     pub family: String,
     /// AOT artifact name (e.g. "fm_base", "cn_l3").
     pub variant: String,
+    /// Initial learning rate.
     pub lr: f64,
+    /// Final learning rate of the schedule.
     pub final_lr: f64,
+    /// Weight decay.
     pub weight_decay: f64,
 }
 
 impl ConfigSpec {
+    /// Human-readable config label (variant + hyperparameters).
     pub fn label(&self) -> String {
         format!(
             "{}/lr{:.0e}/flr{:.0e}/wd{:.0e}",

@@ -23,11 +23,16 @@ use crate::predict::Strategy;
 use crate::search::{equally_spaced_stops, SearchPlan, TrajectorySet};
 use crate::util::prng::Rng;
 
+/// Parameters of the calibrated learning-curve simulator.
 #[derive(Clone, Debug)]
 pub struct SurrogateConfig {
+    /// Candidate configurations per search task.
     pub n_configs: usize,
+    /// Virtual training horizon in days.
     pub days: usize,
+    /// Steps per virtual day (scaled ~100x above the public benchmark).
     pub steps_per_day: usize,
+    /// Evaluation window in days.
     pub eval_days: usize,
     /// Asymptotic-loss spread between configs (calibrated: small).
     pub config_spread: f64,
@@ -159,7 +164,7 @@ pub fn fig6_point_with(
         let ts = sample_task(&cfg, seed ^ task.wrapping_mul(0x9E37_79B9));
         let stops = equally_spaced_stops(cfg.days, stop_every_days);
         let out = SearchPlan::performance_based(stops, rho)
-            .strategy(Strategy::Constant)
+            .strategy(Strategy::constant())
             .run_replay(&ts)
             .expect("invalid surrogate search parameters");
         let gt = ts.ground_truth();

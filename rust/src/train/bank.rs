@@ -16,13 +16,20 @@ const MAGIC: &[u8; 4] = b"NSBK";
 // v2: scenario provenance on the bank header and every RunKey.
 const VERSION: u32 = 2;
 
+/// Identity of one recorded training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunKey {
+    /// Experiment family (`fm`, `moe`, ...).
     pub family: String,
+    /// AOT artifact / architecture variant name.
     pub variant: String,
+    /// Human-readable config label (variant + hyperparameters).
     pub label: String,
+    /// Runtime hyperparameters `[log10 lr, log10 final lr, wd]`.
     pub hparams: [f32; 3],
+    /// Sub-sampling plan tag (`full`, `uni0.2500`, ...).
     pub plan_tag: String,
+    /// Model initialization seed.
     pub seed: i32,
     /// Canonical tag of the data scenario the run was trained on
     /// (`data::scenario`) — trajectories from different regimes must
@@ -30,32 +37,46 @@ pub struct RunKey {
     pub scenario: String,
 }
 
+/// One recorded run: its key plus the full metric trajectory.
 #[derive(Clone, Debug)]
 pub struct RunRecord {
+    /// Which (config, plan, seed) this run trained.
     pub key: RunKey,
+    /// Progressive-validation loss per step.
     pub step_losses: Vec<f32>,
     /// `[day][cluster]`, flattened row-major.
     pub cluster_loss_sums: Vec<f32>,
+    /// Training examples actually consumed (sub-sampling audit).
     pub examples_trained: u64,
+    /// Examples evaluated (the full stream).
     pub examples_seen: u64,
 }
 
+/// The trajectory bank: stream-level metadata plus every recorded run.
 #[derive(Clone, Debug)]
 pub struct Bank {
+    /// Training horizon in days.
     pub days: usize,
+    /// Steps per virtual day.
     pub steps_per_day: usize,
+    /// Drift clusters in the per-day decompositions.
     pub n_clusters: usize,
+    /// Evaluation window in days.
     pub eval_days: usize,
+    /// Seed of the stream every run trained on.
     pub stream_seed: u64,
     /// Canonical scenario tag of the stream every run trained on.
     pub scenario: String,
     /// `[day][cluster]` data-side example counts.
     pub day_cluster_counts: Vec<Vec<u32>>,
+    /// `[cluster]` example counts over the evaluation window.
     pub eval_cluster_counts: Vec<u64>,
+    /// Every recorded run.
     pub runs: Vec<RunRecord>,
 }
 
 impl Bank {
+    /// Append one finished run under its key.
     pub fn push(&mut self, key: RunKey, traj: RunTrajectory) {
         let mut flat = Vec::with_capacity(self.days * self.n_clusters);
         for row in &traj.cluster_loss_sums {
@@ -145,6 +166,7 @@ impl Bank {
 
     // ---------------------------------------------------------- io
 
+    /// Serialize the bank to disk (framed binary, `util::ser`).
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut w = Writer::new(MAGIC, VERSION);
         w.u32(self.days as u32);
@@ -178,6 +200,7 @@ impl Bank {
         w.write_file(path)
     }
 
+    /// Load a bank written by [`Bank::save`].
     pub fn load(path: &Path) -> Result<Bank, SerError> {
         let buf =
             std::fs::read(path).map_err(|e| SerError(format!("reading {path:?}: {e}")))?;

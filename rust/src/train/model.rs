@@ -15,6 +15,7 @@ use crate::runtime::{Model, RunState};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
 
+/// Anything that can take one online training step (see module docs).
 pub trait OnlineModel {
     /// Re-initialize parameters for `seed`.
     fn reset(&mut self, seed: i32) -> Result<()>;
@@ -40,11 +41,13 @@ pub struct PjrtOnline<'a> {
 }
 
 impl<'a> PjrtOnline<'a> {
+    /// Initialize a run of `model` with the given parameter seed.
     pub fn new(model: &'a Model, seed: i32) -> Result<PjrtOnline<'a>> {
         let run = model.init_state(seed)?;
         Ok(PjrtOnline { model, run })
     }
 
+    /// Size of the run's flat training state on device.
     pub fn state_bytes(&self) -> usize {
         self.run.size_bytes()
     }
@@ -85,6 +88,7 @@ pub struct LogisticProxy {
 }
 
 impl LogisticProxy {
+    /// A fresh proxy with parameters initialized from `seed`.
     pub fn new(seed: i32) -> LogisticProxy {
         let mut p = LogisticProxy {
             bias: 0.0,

@@ -21,8 +21,11 @@ pub enum ClusterSource {
 /// A stream plus a fixed example->cluster assignment and the data-side
 /// cluster statistics (identical for every configuration).
 pub struct ClusteredStream {
+    /// The underlying batch generator.
     pub stream: Stream,
+    /// Drift clusters in the fixed assignment.
     pub n_clusters: usize,
+    /// Evaluation window in days.
     pub eval_days: usize,
     /// `[t][i]` cluster of example i in batch t.
     pub assignments: Vec<Vec<u16>>,
@@ -33,6 +36,8 @@ pub struct ClusteredStream {
 }
 
 impl ClusteredStream {
+    /// Assign every example of the stream to a drift cluster and collect
+    /// the data-side per-day / eval-window cluster counts.
     pub fn build(stream: Stream, source: ClusterSource, eval_days: usize) -> ClusteredStream {
         let t_total = stream.cfg.total_steps();
         let spd = stream.cfg.steps_per_day;
@@ -103,6 +108,7 @@ pub struct RunTrajectory {
     pub cluster_loss_sums: Vec<Vec<f32>>,
     /// Training examples actually consumed (sub-sampling audit).
     pub examples_trained: u64,
+    /// Examples evaluated (always the full stream through the run).
     pub examples_seen: u64,
 }
 

@@ -9,30 +9,39 @@ use std::time::{Duration, Instant};
 
 use super::stats;
 
+/// Timing samples of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name (grep key in reports).
     pub name: String,
+    /// Per-iteration time of each timed sample, in nanoseconds.
     pub samples_ns: Vec<f64>,
+    /// Iterations each sample ran (auto-calibrated).
     pub iters_per_sample: u64,
 }
 
 impl BenchResult {
+    /// Mean per-iteration time (ns).
     pub fn mean_ns(&self) -> f64 {
         stats::mean(&self.samples_ns)
     }
 
+    /// Median per-iteration time (ns).
     pub fn median_ns(&self) -> f64 {
         stats::median(&self.samples_ns)
     }
 
+    /// 95th-percentile per-iteration time (ns).
     pub fn p95_ns(&self) -> f64 {
         stats::quantile(&self.samples_ns, 0.95)
     }
 
+    /// Sample standard deviation of per-iteration time (ns).
     pub fn std_ns(&self) -> f64 {
         stats::std(&self.samples_ns)
     }
 
+    /// One grep-friendly summary line.
     pub fn report(&self) -> String {
         format!(
             "bench {:<44} mean {:>12}  median {:>12}  p95 {:>12}  std {:>10}  ({} samples x {} iters)",
@@ -53,6 +62,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable duration from nanoseconds (ns/us/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1}ns")

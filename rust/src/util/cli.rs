@@ -5,14 +5,17 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Non-flag arguments in order (the first is the subcommand).
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     present: Vec<String>,
 }
 
-pub const FLAG_SET: &str = "\u{1}"; // sentinel for value-less flags
+/// Sentinel stored for value-less flags (`--quiet`).
+pub const FLAG_SET: &str = "\u{1}";
 
 impl Args {
     /// Parse raw arguments (without argv[0]).
@@ -45,14 +48,17 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (argv[1..]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// True when `--key` appeared (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// The flag's value, if present *with* a value.
     pub fn str_opt(&self, key: &str) -> Option<&str> {
         match self.flags.get(key).map(|s| s.as_str()) {
             Some(FLAG_SET) => None,
@@ -60,18 +66,22 @@ impl Args {
         }
     }
 
+    /// The flag's value, or `default` when absent/value-less.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or(default).to_string()
     }
 
+    /// Parse the flag as usize, or `default`; exits(2) on junk.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.parse_or(key, default)
     }
 
+    /// Parse the flag as u64, or `default`; exits(2) on junk.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.parse_or(key, default)
     }
 
+    /// Parse the flag as f64, or `default`; exits(2) on junk.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.parse_or(key, default)
     }

@@ -4,8 +4,9 @@
 //! [`Error`] is a lightweight dynamic error: a chain of human-readable
 //! messages, outermost context first. The [`Context`] extension trait
 //! layers context onto any `Result` whose error converts into [`Error`]
-//! (which includes every `std::error::Error`), and the [`err!`] /
-//! [`bail!`] macros build ad-hoc errors from format strings:
+//! (which includes every `std::error::Error`), and the
+//! [`err!`](crate::err) / [`bail!`](crate::bail) macros build ad-hoc
+//! errors from format strings:
 //!
 //! ```ignore
 //! use crate::util::error::{Context, Result};
@@ -81,11 +82,14 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     }
 }
 
+/// Crate-wide result type defaulting to the chain [`Error`].
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Attach context to failures, converting the error into [`Error`].
 pub trait Context<T> {
+    /// Wrap a failure with an eagerly-evaluated context message.
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap a failure with a lazily-evaluated context message.
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

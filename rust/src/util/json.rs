@@ -8,21 +8,30 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// One JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key` into an object (panics on non-objects); chainable.
     pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), value);
@@ -32,6 +41,7 @@ impl Json {
         self
     }
 
+    /// Object field by key (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -39,6 +49,7 @@ impl Json {
         }
     }
 
+    /// Array element by index (`None` on non-arrays / out of range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -46,6 +57,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -53,10 +65,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -64,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -71,6 +86,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -92,22 +108,26 @@ impl Json {
         Some(cur)
     }
 
+    /// An array of numbers.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// An array of strings.
     pub fn from_strs(xs: &[&str]) -> Json {
         Json::Arr(xs.iter().map(|s| Json::Str(s.to_string())).collect())
     }
 
     // ------------------------------------------------------------ write
 
+    /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(0));
         out
     }
 
+    /// Serialize without whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None);
@@ -162,6 +182,7 @@ impl Json {
 
     // ------------------------------------------------------------ parse
 
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();

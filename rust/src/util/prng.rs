@@ -27,6 +27,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (SplitMix64-expanded into xoshiro state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -51,6 +52,7 @@ impl Rng {
         Rng { s, spare_normal: None }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -68,6 +70,7 @@ impl Rng {
         result
     }
 
+    /// Next raw 32-bit draw (upper half of a 64-bit draw).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -103,6 +106,7 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// Coin flip with success probability `p`.
     #[inline]
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.uniform() < p
@@ -122,6 +126,7 @@ impl Rng {
         r * theta.cos()
     }
 
+    /// Normal draw with the given mean and standard deviation.
     #[inline]
     pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
@@ -236,6 +241,7 @@ pub struct CategoricalAlias {
 }
 
 impl CategoricalAlias {
+    /// Build the alias table from unnormalized non-negative weights.
     pub fn new(weights: &[f64]) -> Self {
         let n = weights.len();
         assert!(n > 0, "empty categorical");
@@ -267,6 +273,7 @@ impl CategoricalAlias {
         CategoricalAlias { prob, alias }
     }
 
+    /// Draw one category index in O(1).
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let n = self.prob.len();
@@ -278,10 +285,12 @@ impl CategoricalAlias {
         }
     }
 
+    /// Number of categories.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// True when the table has no categories (never, post-construction).
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -9,6 +9,8 @@ use super::prng::Rng;
 
 /// Types that can propose strictly-smaller candidates of themselves.
 pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Strictly-smaller candidates to try when a case fails (empty =
+    /// no shrinking for this type).
     fn shrink_candidates(&self) -> Vec<Self> {
         Vec::new()
     }
@@ -135,15 +137,18 @@ fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
 pub mod gen {
     use super::super::prng::Rng;
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
         rng.uniform_range(lo, hi)
     }
 
+    /// Uniform f64 vector of random length `0..=max_len`.
     pub fn vec_f64(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
         let n = rng.below(max_len as u64 + 1) as usize;
         (0..n).map(|_| rng.uniform_range(lo, hi)).collect()
     }
 
+    /// Uniform f64 vector of random length `1..=max_len`.
     pub fn vec_f64_nonempty(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
         let n = 1 + rng.below(max_len as u64) as usize;
         (0..n).map(|_| rng.uniform_range(lo, hi)).collect()

@@ -5,11 +5,14 @@
 //! simple framed binary format: magic + version header, then typed fields
 //! written/read in lockstep by the structs in `train::bank`.
 
+/// Appends typed little-endian fields to a framed buffer.
 pub struct Writer {
+    /// The serialized bytes (header included).
     pub buf: Vec<u8>,
 }
 
 impl Writer {
+    /// Start a buffer with the 4-byte magic and format version header.
     pub fn new(magic: &[u8; 4], version: u32) -> Writer {
         let mut w = Writer { buf: Vec::with_capacity(4096) };
         w.buf.extend_from_slice(magic);
@@ -17,31 +20,38 @@ impl Writer {
         w
     }
 
+    /// Write one byte.
     pub fn u8(&mut self, x: u8) {
         self.buf.push(x);
     }
 
+    /// Write a little-endian u32.
     pub fn u32(&mut self, x: u32) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
+    /// Write a little-endian u64.
     pub fn u64(&mut self, x: u64) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
+    /// Write a little-endian f32.
     pub fn f32(&mut self, x: f32) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
+    /// Write a little-endian f64.
     pub fn f64(&mut self, x: f64) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
+    /// Write a length-prefixed UTF-8 string.
     pub fn str(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
     }
 
+    /// Write a length-prefixed f32 vector.
     pub fn f32s(&mut self, xs: &[f32]) {
         self.u32(xs.len() as u32);
         for &x in xs {
@@ -49,6 +59,7 @@ impl Writer {
         }
     }
 
+    /// Write a length-prefixed f64 vector.
     pub fn f64s(&mut self, xs: &[f64]) {
         self.u32(xs.len() as u32);
         for &x in xs {
@@ -56,6 +67,7 @@ impl Writer {
         }
     }
 
+    /// Write a length-prefixed u32 vector.
     pub fn u32s(&mut self, xs: &[u32]) {
         self.u32(xs.len() as u32);
         for &x in xs {
@@ -63,6 +75,7 @@ impl Writer {
         }
     }
 
+    /// Write the buffer to disk, creating parent directories.
     pub fn write_file(&self, path: &std::path::Path) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -71,11 +84,13 @@ impl Writer {
     }
 }
 
+/// Reads typed fields back in the order the [`Writer`] emitted them.
 pub struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
+/// A serialization-format error (bad magic/version, truncation, UTF-8).
 #[derive(Debug)]
 pub struct SerError(pub String);
 
@@ -90,6 +105,7 @@ impl std::error::Error for SerError {}
 type Result<T> = std::result::Result<T, SerError>;
 
 impl<'a> Reader<'a> {
+    /// Open a buffer, verifying the magic and version header.
     pub fn new(buf: &'a [u8], magic: &[u8; 4], version: u32) -> Result<Reader<'a>> {
         let mut r = Reader { buf, pos: 0 };
         let m = r.bytes(4)?;
@@ -116,32 +132,39 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.bytes(1)?[0])
     }
 
+    /// Read a little-endian u32.
     pub fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian u64.
     pub fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian f32.
     pub fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian f64.
     pub fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
+    /// Read a length-prefixed UTF-8 string.
     pub fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         let b = self.bytes(n)?;
         String::from_utf8(b.to_vec()).map_err(|e| SerError(e.to_string()))
     }
 
+    /// Read a length-prefixed f32 vector.
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let mut out = Vec::with_capacity(n);
@@ -151,6 +174,7 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    /// Read a length-prefixed f64 vector.
     pub fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.u32()? as usize;
         let mut out = Vec::with_capacity(n);
@@ -160,6 +184,7 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    /// Read a length-prefixed u32 vector.
     pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
         let mut out = Vec::with_capacity(n);
@@ -169,6 +194,7 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    /// True when the whole buffer has been consumed.
     pub fn done(&self) -> bool {
         self.pos == self.buf.len()
     }

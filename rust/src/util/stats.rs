@@ -34,6 +34,7 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median (the 0.5 quantile).
 pub fn median(xs: &[f64]) -> f64 {
     quantile(xs, 0.5)
 }
@@ -156,12 +157,14 @@ pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
 /// Streaming mean/variance accumulator (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
+    /// Number of observations pushed so far.
     pub n: u64,
     mean: f64,
     m2: f64,
 }
 
 impl Welford {
+    /// Fold one observation into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -169,10 +172,12 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Unbiased running variance (0 below two observations).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -181,6 +186,7 @@ impl Welford {
         }
     }
 
+    /// Unbiased running standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }

@@ -21,12 +21,14 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size worker pool over a shared job queue.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `n_workers` (at least 1) named worker threads.
     pub fn new(n_workers: usize) -> ThreadPool {
         let n = n_workers.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -60,6 +62,7 @@ impl ThreadPool {
             .unwrap_or(1)
     }
 
+    /// Queue one fire-and-forget job on the pool.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
         self.tx
             .as_ref()

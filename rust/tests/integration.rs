@@ -66,13 +66,15 @@ fn full_pipeline_proxy_bank_to_figures() {
     let reg = metrics::regret_at_k(&pb.ranking, &gt, 3) / gt[0].min(1.0);
     assert!(reg.is_finite());
 
-    // all three prediction strategies produce rankings over the bank
-    for strat in [
-        Strategy::Constant,
-        Strategy::Trajectory(LawKind::InversePowerLaw),
-        Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 4 },
-    ] {
-        let o = replay(&ts, SearchPlan::one_shot(6).strategy(strat));
+    // every registered prediction strategy produces a ranking over the
+    // bank, plus an explicitly parameterized stratified variant
+    let mut strategies: Vec<Strategy> = nshpo::predict::strategy::tags()
+        .iter()
+        .map(|t| Strategy::parse(t).unwrap())
+        .collect();
+    strategies.push(Strategy::stratified(Some(LawKind::InversePowerLaw), 4));
+    for strat in strategies {
+        let o = replay(&ts, SearchPlan::one_shot(6).strategy(strat.clone()));
         let mut r = o.ranking.clone();
         r.sort_unstable();
         assert_eq!(r, (0..9).collect::<Vec<_>>(), "{}", strat.name());
@@ -81,7 +83,7 @@ fn full_pipeline_proxy_bank_to_figures() {
     // --- figures run end-to-end into a temp dir
     let out = std::env::temp_dir().join("nshpo_it_figs");
     let _ = std::fs::remove_dir_all(&out);
-    for id in ["1", "2", "3", "4", "5", "7", "10", "11", "seeds", "summary", "t1"] {
+    for id in ["1", "2", "3", "4", "5", "7", "10", "11", "seeds", "summary", "t1", "strat"] {
         nshpo::harness::run_figure(id, Some(&bank), &out)
             .unwrap_or_else(|e| panic!("figure {id}: {e:#}"));
     }
@@ -195,7 +197,7 @@ fn live_search_agrees_with_bank_replay_on_cost() {
     );
     let specs = sweep::thin(sweep::family_sweep("fm"), 3);
     let plan = SearchPlan::performance_based(vec![2, 4, 6], 0.5)
-        .strategy(Strategy::Constant)
+        .strategy(Strategy::constant())
         .build()
         .unwrap();
     let live = LiveSearch {

@@ -15,12 +15,14 @@ use std::sync::Arc;
 /// crossed with the three prediction strategies over one trajectory set.
 fn fig45_job_set(ts: &Arc<nshpo::search::TrajectorySet>) -> Vec<ReplayJob> {
     let strategies = [
-        Strategy::Constant,
-        Strategy::Trajectory(LawKind::InversePowerLaw),
-        Strategy::Stratified { law: Some(LawKind::InversePowerLaw), n_slices: 1 },
+        Strategy::constant(),
+        Strategy::recency(1.5),
+        Strategy::trajectory(LawKind::InversePowerLaw),
+        Strategy::stratified(Some(LawKind::InversePowerLaw), 1),
+        Strategy::switching(4, Strategy::trajectory(LawKind::InversePowerLaw)),
     ];
     let mut jobs = Vec::new();
-    for strat in strategies {
+    for strat in &strategies {
         for d in [2usize, 3, 4, 6, 8, 12] {
             jobs.push(ReplayJob::one_shot(ts, strat, d).with_tag(format!("os{d}")));
         }
@@ -40,7 +42,7 @@ fn fig45_job_set(ts: &Arc<nshpo::search::TrajectorySet>) -> Vec<ReplayJob> {
     jobs.push(ReplayJob {
         ts: Arc::clone(ts),
         kind: ReplayKind::Hyperband {
-            strategy: Strategy::Constant,
+            strategy: Strategy::constant(),
             eta: 3.0,
             brackets_seed: 5,
             // bracket-parallel inside an executor job: the outcome must

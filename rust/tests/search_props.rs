@@ -85,12 +85,13 @@ fn with_random_ts(seed: u64, cases: usize, prop: impl Fn(&TrajectorySet) -> Resu
 fn prop_rankings_are_permutations_for_every_strategy() {
     with_random_ts(101, 40, |ts| {
         let day_stop = 1 + ts.days / 2;
-        for strat in [
-            Strategy::Constant,
-            Strategy::Trajectory(nshpo::predict::LawKind::InversePowerLaw),
-            Strategy::Stratified { law: None, n_slices: 3 },
-        ] {
-            let o = replay(ts, SearchPlan::one_shot(day_stop).strategy(strat));
+        let mut strategies: Vec<Strategy> = nshpo::predict::strategy::tags()
+            .iter()
+            .map(|t| Strategy::parse(t).unwrap())
+            .collect();
+        strategies.push(Strategy::stratified(None, 3));
+        for strat in strategies {
+            let o = replay(ts, SearchPlan::one_shot(day_stop).strategy(strat.clone()));
             let mut r = o.ranking.clone();
             r.sort_unstable();
             if r != (0..ts.n_configs()).collect::<Vec<_>>() {

@@ -103,13 +103,29 @@ fn perf_based_stratified_live_matches_replay() {
     // through both backends.
     assert_parity(
         || {
-            SearchPlan::performance_based(vec![2, 4], 0.5).strategy(Strategy::Stratified {
-                law: Some(LawKind::InversePowerLaw),
-                n_slices: 3,
-            })
+            SearchPlan::performance_based(vec![2, 4], 0.5)
+                .strategy(Strategy::stratified(Some(LawKind::InversePowerLaw), 3))
         },
         2,
     );
+}
+
+/// Replay-vs-live parity must hold for *every* registered prediction
+/// strategy — the acceptance gate of the strategy registry: a newly
+/// registered strategy that computes differently over the live driver's
+/// partial trajectories than over the recorded bank fails here.
+#[test]
+fn parity_holds_for_every_strategy() {
+    for tag in nshpo::predict::strategy::tags() {
+        let strat = Strategy::parse(tag)
+            .unwrap_or_else(|e| panic!("[{tag}] did not parse: {e:#}"));
+        assert_parity(
+            || {
+                SearchPlan::performance_based(vec![2, 4, 6], 0.5).strategy(strat.clone())
+            },
+            2,
+        );
+    }
 }
 
 #[test]

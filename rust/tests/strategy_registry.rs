@@ -1,0 +1,253 @@
+//! Acceptance gates for the prediction-strategy registry:
+//!
+//! 1. The three paper strategies produce **bit-identical** scores through
+//!    the `PredictionStrategy` trait compared to calling the underlying
+//!    `predict::*` functions the way the pre-registry enum dispatch did.
+//! 2. Strategy-tag parsing is a total function into `Result`: every
+//!    malformed tag shape is rejected with an error listing the valid
+//!    tags, never a panic.
+//! 3. The CLI listings (`nshpo strategies` / `nshpo scenarios` render
+//!    through `registry_table()`) name every registered tag.
+
+use nshpo::data::scenario;
+use nshpo::predict::{self, strategy, LawKind, Strategy};
+use nshpo::search::{SearchPlan, TrajectorySet};
+use nshpo::util::prng::Rng;
+
+/// Deterministic multi-cluster trajectory set: 6 configs, 12 days, 4
+/// drift clusters with different growth directions (so stratified
+/// slicing is non-trivial).
+fn multi_cluster_ts() -> TrajectorySet {
+    let (n_cfg, days, spd, k) = (6usize, 12usize, 4usize, 4usize);
+    let mut rng = Rng::new(0xCAFE);
+    let mut step_losses = Vec::new();
+    for c in 0..n_cfg {
+        let base = 0.4 + 0.03 * c as f64;
+        let tr: Vec<f32> = (0..days * spd)
+            .map(|t| {
+                let warm = 0.25 / ((t + 2) as f64).sqrt();
+                (base + warm + 0.01 * rng.normal()) as f32
+            })
+            .collect();
+        step_losses.push(tr);
+    }
+    // cluster 0 grows, cluster 1 shrinks, 2 and 3 stay stable
+    let day_cluster_counts: Vec<Vec<u32>> = (0..days)
+        .map(|d| {
+            vec![
+                (20 + 10 * d) as u32,
+                (140 - 10 * d) as u32,
+                60,
+                40 + (d % 2) as u32,
+            ]
+        })
+        .collect();
+    let cluster_loss_sums: Vec<Vec<Vec<f32>>> = (0..n_cfg)
+        .map(|c| {
+            (0..days)
+                .map(|d| {
+                    let dm: f64 = step_losses[c][d * spd..(d + 1) * spd]
+                        .iter()
+                        .map(|&x| x as f64)
+                        .sum::<f64>()
+                        / spd as f64;
+                    // per-cluster loss levels differ so slices disagree
+                    (0..k)
+                        .map(|kk| {
+                            (dm * (0.8 + 0.1 * kk as f64)
+                                * day_cluster_counts[d][kk] as f64)
+                                as f32
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    TrajectorySet {
+        steps_per_day: spd,
+        days,
+        eval_days: 3,
+        step_losses,
+        day_cluster_counts,
+        cluster_loss_sums,
+        eval_cluster_counts: vec![900, 100, 600, 400],
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: config {i} diverged ({x} vs {y})"
+        );
+    }
+}
+
+#[test]
+fn constant_is_bit_identical_to_the_enum_era_path() {
+    let ts = multi_cluster_ts();
+    let strat = Strategy::parse("constant").unwrap();
+    let subset: Vec<usize> = vec![0, 2, 5, 1];
+    for day_stop in [1usize, 4, 7, 12] {
+        let via_trait = ts.predict_subset(&strat, day_stop, &subset);
+        let direct: Vec<f64> = subset
+            .iter()
+            .map(|&c| {
+                predict::constant_prediction(&ts.day_means(c, day_stop), predict::FIT_DAYS)
+            })
+            .collect();
+        assert_bits_eq(&via_trait, &direct, &format!("constant@day{day_stop}"));
+    }
+}
+
+#[test]
+fn trajectory_is_bit_identical_to_the_enum_era_path() {
+    let ts = multi_cluster_ts();
+    let strat = Strategy::parse("trajectory").unwrap();
+    let subset: Vec<usize> = (0..ts.n_configs()).collect();
+    for day_stop in [2usize, 6, 10] {
+        let via_trait = ts.predict_subset(&strat, day_stop, &subset);
+        let dms: Vec<Vec<f64>> =
+            subset.iter().map(|&c| ts.day_means(c, day_stop)).collect();
+        let direct = predict::trajectory_predict(
+            LawKind::InversePowerLaw,
+            &dms,
+            ts.days,
+            ts.eval_days,
+        );
+        assert_bits_eq(&via_trait, &direct, &format!("trajectory@day{day_stop}"));
+    }
+}
+
+#[test]
+fn stratified_is_bit_identical_to_the_enum_era_path() {
+    let ts = multi_cluster_ts();
+    let subset: Vec<usize> = vec![4, 0, 3];
+    for (tag, law, n_slices) in [
+        ("stratified@5", Some(LawKind::InversePowerLaw), 5usize),
+        ("stratified-constant@3", None, 3usize),
+    ] {
+        let strat = Strategy::parse(tag).unwrap();
+        for day_stop in [3usize, 8, 12] {
+            let via_trait = ts.predict_subset(&strat, day_stop, &subset);
+            let counts = &ts.day_cluster_counts[..day_stop];
+            let sums: Vec<&[Vec<f32>]> = subset
+                .iter()
+                .map(|&c| &ts.cluster_loss_sums[c][..day_stop])
+                .collect();
+            let direct = predict::stratified_predict(
+                law,
+                counts,
+                &sums,
+                &ts.eval_cluster_counts,
+                n_slices,
+                ts.days,
+                ts.eval_days,
+            );
+            assert_bits_eq(&via_trait, &direct, &format!("{tag}@day{day_stop}"));
+        }
+    }
+}
+
+#[test]
+fn every_registered_strategy_searches_a_trajectory_set() {
+    let ts = multi_cluster_ts();
+    for tag in strategy::tags() {
+        let strat = Strategy::parse(tag).unwrap();
+        let out = SearchPlan::performance_based(vec![3, 6, 9], 0.5)
+            .strategy(strat)
+            .run_replay(&ts)
+            .unwrap_or_else(|e| panic!("[{tag}] search failed: {e:#}"));
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..ts.n_configs()).collect::<Vec<_>>(), "[{tag}]");
+        assert!(out.cost < 1.0, "[{tag}] no savings: {}", out.cost);
+    }
+}
+
+#[test]
+fn registry_has_at_least_five_tags_and_they_roundtrip() {
+    let tags = strategy::tags();
+    assert!(tags.len() >= 5, "registry shrank: {tags:?}");
+    for tag in tags {
+        let s = Strategy::parse(tag).unwrap();
+        let canonical = s.tag();
+        let reparsed = Strategy::parse(&canonical)
+            .unwrap_or_else(|e| panic!("canonical {canonical:?} did not parse: {e:#}"));
+        assert_eq!(reparsed.tag(), canonical);
+    }
+}
+
+/// One rejection test per malformed tag shape (the satellite fix): every
+/// parse failure is an `Err` whose message names the registered tags.
+#[test]
+fn malformed_tags_are_rejected_with_the_valid_tag_list() {
+    let shapes = [
+        ("unknown base", "definitely_not_registered"),
+        ("parameter on a parameterless tag", "constant@3"),
+        ("non-numeric recency half-life", "recency@soon"),
+        ("negative recency half-life", "recency@-2"),
+        ("empty parameter", "recency@"),
+        ("unknown trajectory law", "trajectory@ZipfLaw"),
+        ("zero slice count", "stratified@0"),
+        ("non-numeric slice count", "stratified@lots"),
+        ("unknown stratified law", "stratified@5[ZipfLaw]"),
+        ("zero slice count (constant)", "stratified-constant@0"),
+        ("law on stratified-constant", "stratified-constant@3[VaporPressure]"),
+        ("zero switching day", "switching@0"),
+        ("non-numeric switching day", "switching@eventually"),
+        ("unknown switching inner", "switching@4[no_such_inner]"),
+        ("empty tag", ""),
+    ];
+    for (shape, tag) in shapes {
+        let err = Strategy::parse(tag)
+            .err()
+            .unwrap_or_else(|| panic!("{shape}: {tag:?} was accepted"));
+        let msg = format!("{err:#}");
+        for registered in strategy::tags() {
+            assert!(
+                msg.contains(registered),
+                "{shape}: error for {tag:?} does not list {registered:?}: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn strategies_listing_names_every_registered_tag() {
+    let table = strategy::registry_table();
+    for tag in strategy::tags() {
+        assert!(table.contains(tag), "strategies table misses {tag}:\n{table}");
+    }
+    // the table carries provenance for every row
+    for info in &strategy::REGISTRY {
+        assert!(table.contains(info.reference), "missing reference for {}", info.tag);
+    }
+}
+
+#[test]
+fn scenarios_listing_names_every_registered_tag() {
+    let table = scenario::registry_table();
+    for tag in scenario::tags() {
+        assert!(table.contains(tag), "scenarios table misses {tag}:\n{table}");
+    }
+}
+
+#[test]
+fn switching_equals_constant_early_and_trajectory_late() {
+    let ts = multi_cluster_ts();
+    let subset: Vec<usize> = (0..ts.n_configs()).collect();
+    let sw = Strategy::parse("switching@6").unwrap();
+    let pre = ts.predict_subset(&sw, 4, &subset);
+    let pre_const = ts.predict_subset(&Strategy::constant(), 4, &subset);
+    assert_bits_eq(&pre, &pre_const, "switching pre-handoff");
+    let post = ts.predict_subset(&sw, 8, &subset);
+    let post_traj = ts.predict_subset(
+        &Strategy::trajectory(LawKind::InversePowerLaw),
+        8,
+        &subset,
+    );
+    assert_bits_eq(&post, &post_traj, "switching post-handoff");
+}
