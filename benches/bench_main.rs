@@ -151,6 +151,31 @@ fn main() {
         })
     });
 
+    // The two rung/bracket schedulers head to head on one 32-config
+    // task, both with their parallel replay fast paths at 4 workers:
+    // asha promotes rung by rung with work-stealing wave scoring,
+    // hyperband_par evaluates brackets on scoped threads.
+    let sched_ts = surrogate::sample_task(
+        &surrogate::SurrogateConfig { n_configs: 32, ..Default::default() },
+        19,
+    );
+    run("search/asha_par_w4", &mut || {
+        bench("search/asha_par_w4", SAMPLES, MIN_SAMPLE, || {
+            black_box(nshpo::search::asha_par(&sched_ts, &Strategy::constant(), 3.0, None, 4))
+        })
+    });
+    run("search/hyperband_par_w4", &mut || {
+        bench("search/hyperband_par_w4", SAMPLES, MIN_SAMPLE, || {
+            black_box(nshpo::search::hyperband::hyperband_par(
+                &sched_ts,
+                &Strategy::constant(),
+                3.0,
+                7,
+                4,
+            ))
+        })
+    });
+
     // ---------------------------------------------------------- surrogate
     run("surrogate/sample_task_30cfg", &mut || {
         bench("surrogate/sample_task_30cfg", 3, MIN_SAMPLE, || {

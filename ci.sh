@@ -42,6 +42,24 @@ if cargo run --release -- search --live --proxy --strategy no_such_predictor \
   exit 1
 fi
 
+echo "== method gate =="
+# Third registry, same contract: the listing must name the new methods,
+# registry tags must drive a (tiny) live search end to end, and unknown
+# tags must be rejected with the valid-tag list.
+cargo run --release -- methods | grep -q asha
+cargo run --release -- search --live --proxy --method asha@2 \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+cargo run --release -- search --live --proxy --method budget_greedy@0.9 \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+if cargo run --release -- search --live --proxy --method no_such_method \
+    --days 4 --steps-per-day 4 --batch 64 --thin 9 >/dev/null 2>&1; then
+  echo "FAIL: unknown method tag was accepted" >&2
+  exit 1
+fi
+# The cross-registry parity matrix is part of `cargo test` above; run it
+# by name so the gate stays loud if the target is ever dropped.
+cargo test -q --test method_matrix
+
 echo "== rustdoc gate =="
 # The crate carries #![warn(missing_docs)]; the public API must document
 # cleanly (docs/API.md is the committed markdown rendering of it).

@@ -11,7 +11,7 @@
 use nshpo::coordinator::{build_bank, BankOptions};
 use nshpo::data::{Plan, StreamConfig};
 use nshpo::metrics;
-use nshpo::search::{equally_spaced_stops, ReplayDriver, SearchPlan, SearchSession};
+use nshpo::search::{equally_spaced_stops, Method, ReplayDriver, SearchPlan, SearchSession};
 use nshpo::util::error::Result;
 
 fn main() -> Result<()> {
@@ -53,6 +53,12 @@ fn main() -> Result<()> {
             "performance-based",
             SearchPlan::performance_based(equally_spaced_stops(ts.days, 3), 0.5)
                 .run_replay(&ts)?,
+        ),
+        // any `nshpo methods` registry tag slots into the same plan —
+        // here asynchronous successive halving at eta 3
+        (
+            "asha@3",
+            SearchPlan::with_method(Method::parse("asha@3")?).run_replay(&ts)?,
         ),
     ];
     let reference = truth.iter().cloned().fold(f64::MAX, f64::min);

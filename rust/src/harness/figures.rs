@@ -25,10 +25,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 /// Every exhibit id `nshpo figure --all` regenerates.
-pub const ALL_FIGURES: [&str; 18] = [
+pub const ALL_FIGURES: [&str; 19] = [
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "t1", "seeds", "summary",
     // extensions/ablations beyond the paper's exhibits (DESIGN.md §6):
-    "rho", "slices", "hb", "strat",
+    "rho", "slices", "hb", "strat", "methods",
 ];
 
 /// Stopping days used for one-shot cost sweeps.
@@ -220,6 +220,7 @@ pub fn run_figure_with(
         "slices" => ablation_slices(bank, out_dir, exec),
         "hb" => ablation_hyperband(bank, out_dir, exec),
         "strat" => ablation_strategies(bank, out_dir, exec),
+        "methods" => ablation_methods(bank, out_dir, exec),
         other => Err(err!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
     }
 }
@@ -899,6 +900,63 @@ fn ablation_strategies(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result
         true,
     );
     write_out(out, "_strat", &text, &csv)
+}
+
+/// Extension: every *registered* search method on one bank — the method
+/// registry's own exhibit (the `strat` ablation's twin on the scheduling
+/// axis). One point per `nshpo methods` tag under constant prediction,
+/// plus the ASHA work-stealing replay fast path at two extra eta values,
+/// so a newly registered method shows up here (and in the CSV) without
+/// touching the harness.
+fn ablation_methods(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(bank, "moe");
+    let (plan, mult) = pick_plan(bank, &fam);
+    let ts = need(bank, &fam, plan)?;
+    let mut jobs: Vec<ReplayJob> = Vec::new();
+    // budget_greedy's cap must afford its FIT_DAYS warm-up probe on this
+    // bank's horizon (bare tag = 0.5, which short --quick banks cannot
+    // cover) — parameterize it instead of panicking in the executor.
+    let probe = crate::predict::FIT_DAYS.min(ts.days) as f64;
+    let greedy_cap = (2.0 * probe / ts.days as f64).clamp(0.5, 1.0);
+    for tag in crate::search::method::tags() {
+        let m = match tag {
+            "budget_greedy" => crate::search::Method::budget_greedy(greedy_cap),
+            bare => crate::search::Method::parse(bare).expect("registry tag must parse"),
+        };
+        jobs.push(ReplayJob::method(&ts, &m, &Strategy::constant()).with_mult(mult));
+    }
+    // spend the executor's spare workers inside the asha jobs, on the
+    // work-stealing rung scorer (outcome is worker-count-invariant)
+    let inner_workers = (exec.workers() / 2).max(1);
+    for eta in [2.0, 4.0] {
+        jobs.push(ReplayJob {
+            ts: Arc::clone(&ts),
+            kind: ReplayKind::Asha {
+                strategy: Strategy::constant(),
+                eta,
+                rungs: None,
+                workers: inner_workers,
+            },
+            plan_mult: mult,
+            tag: format!("asha@{eta}"),
+        });
+    }
+    let tags: Vec<String> = jobs.iter().map(|j| j.tag.clone()).collect();
+    let pts = points_against(&ts, &exec.run(jobs));
+    let mut series = Vec::new();
+    let mut csv = String::from("method,cost,regret3\n");
+    for (tag, p) in tags.iter().zip(&pts) {
+        csv.push_str(&format!("{tag},{},{}\n", p.cost, p.regret3));
+        series.push(Series { name: tag.clone(), points: vec![(p.cost, p.regret3)] });
+    }
+    let text = plot::render(
+        &format!("Extension [{fam}]: registered search methods (constant prediction)"),
+        "C",
+        "normalized regret@3",
+        &series,
+        true,
+    );
+    write_out(out, "_methods", &text, &csv)
 }
 
 // ------------------------------------------------------------- helpers

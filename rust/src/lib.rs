@@ -24,10 +24,12 @@
 //!   `predict::strategy` registry (`PredictionStrategy` trait,
 //!   `Strategy::parse` tags, `nshpo strategies`).
 //! * [`search`] — the unified two-stage `SearchSession` API: every
-//!   strategy (one-shot, Algorithm 1, late starting, Hyperband) written
-//!   once against the `SearchDriver` trait, with replay and live
-//!   backends, the cost model (§4.1), and the parallel replay executor
-//!   every exhibit runs on.
+//!   scheduling policy (one-shot, Algorithm 1, late starting, Hyperband,
+//!   ASHA, budget-greedy) lives in the pluggable `search::method`
+//!   registry (`SearchMethod` trait, `Method::parse` tags, `nshpo
+//!   methods`), written once against the `SearchDriver` trait, with
+//!   replay and live backends, the cost model + `CostLedger` (§4.1),
+//!   and the parallel replay executor every exhibit runs on.
 //! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6).
 //! * [`coordinator`] — experiment scheduler (bank building, wall-clock
 //!   accounting for live sessions over real PJRT runs).

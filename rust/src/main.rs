@@ -7,6 +7,7 @@
 //!   live       thin alias for `search --live`
 //!   scenarios  list the registered data scenarios (data::scenario)
 //!   strategies list the registered prediction strategies (predict::strategy)
+//!   methods    list the registered search methods (search::method)
 //!   sim        industrial surrogate sweep (Fig 6 style)
 //!   info       inspect artifacts and banks
 
@@ -17,8 +18,8 @@ use nshpo::data::{Plan, StreamConfig};
 use nshpo::harness;
 use nshpo::predict::Strategy;
 use nshpo::search::{
-    equally_spaced_stops, sweep, ReplayDriver, ReplayExecutor, SearchOutcome, SearchPlan,
-    SearchSession,
+    equally_spaced_stops, sweep, Method, ReplayDriver, ReplayExecutor, SearchOutcome,
+    SearchPlan, SearchSession,
 };
 use nshpo::surrogate;
 use nshpo::train::{Bank, ClusterSource, ClusteredStream};
@@ -54,7 +55,10 @@ USAGE: nshpo <subcommand> [flags]
             [--no-batch-cache]  (live: regenerate batches per config)
             [--workers N]  (live backend only; replay figures
             parallelize via `figure --workers`)
-            plan:    [--method perf|one-shot|late-start|hyperband]
+            plan:    [--method <tag>]  (registry tag, see `nshpo
+            methods`; legacy names perf|one-shot|late-start|hyperband
+            take the flags below; any other tag parses as
+            e.g. asha@3, asha@3,4, budget_greedy@0.4, perf@0.25)
             [--strategy <tag>]  (registry tag, see `nshpo strategies`;
             e.g. constant, recency@1.5, trajectory@VaporPressure,
             stratified@8, stratified-constant, switching@4)
@@ -67,6 +71,7 @@ USAGE: nshpo <subcommand> [flags]
             [--proxy] [--days 12] [--steps-per-day 12] [--workers N]
   scenarios  list registered data scenarios (tag, dynamics, stresses)
   strategies list registered prediction strategies (tag, reference, use)
+  methods    list registered search methods (tag, reference, use)
   sim       [--tasks 12] [--configs 30] [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
 ";
@@ -80,6 +85,7 @@ fn main() {
         Some("live") => run_search(&args, true, 1),
         Some("scenarios") => cmd_scenarios(),
         Some("strategies") => cmd_strategies(),
+        Some("methods") => cmd_methods(),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -117,6 +123,15 @@ fn cmd_strategies() -> Result<()> {
     println!(
         "\nuse with: nshpo search --strategy <tag>  (parameters attach as @<param>, \
          e.g. recency@1.5, trajectory@VaporPressure, stratified@8, switching@4)"
+    );
+    Ok(())
+}
+
+fn cmd_methods() -> Result<()> {
+    print!("{}", nshpo::search::method::registry_table());
+    println!(
+        "\nuse with: nshpo search --method <tag>  (parameters attach as @<param>, \
+         e.g. one-shot@6, perf@0.25, asha@3, asha@3,4, budget_greedy@0.4)"
     );
     Ok(())
 }
@@ -262,7 +277,10 @@ fn plan_from(args: &Args, days: usize, plan_mult: f64) -> Result<SearchPlan> {
         "hyperband" => {
             SearchPlan::hyperband(args.f64_or("eta", 3.0), args.u64_or("bracket-seed", 7))
         }
-        other => bail!("unknown --method {other:?} (perf|one-shot|late-start|hyperband)"),
+        // Anything else resolves through the search-method registry
+        // (`nshpo methods`): asha@3, asha@3,4, budget_greedy@0.4,
+        // perf@0.25, one-shot@6, ... Unknown tags error with the list.
+        other => SearchPlan::with_method(Method::parse(other)?),
     };
     let mut builder = builder
         .strategy(parse_strategy(args)?)

@@ -1,5 +1,9 @@
 //! The relative-cost model C (§4.1): ratio of compute spent obtaining a
-//! ranking to the compute of training every configuration on full data.
+//! ranking to the compute of training every configuration on full data —
+//! plus the [`CostLedger`], the per-config spent/committed step account
+//! every search method charges through
+//! [`MethodContext`](crate::search::MethodContext) and both stages of a
+//! [`SearchSession`](crate::search::SearchSession) share.
 
 /// One-shot early stopping: C(t_stop) = t_stop / T  (§4.1.1).
 pub fn one_shot(t_stop: usize, t_total: usize) -> f64 {
@@ -41,6 +45,98 @@ pub fn empirical(steps_trained: &[usize], t_total: usize) -> f64 {
 /// (§4.1.2 is "orthogonal to the other data reduction strategies").
 pub fn with_subsampling(stopping_cost: f64, subsample_cost: f64) -> f64 {
     stopping_cost * subsample_cost
+}
+
+/// Per-config compute account shared across stage 1 and stage 2 of a
+/// search session.
+///
+/// * **spent** — steps each config has actually trained, mirrored from
+///   the backing [`SearchDriver`](crate::search::SearchDriver) every
+///   time a [`MethodContext`](crate::search::MethodContext) trains
+///   through it (the driver is the source of truth, so the ledger
+///   reconciles with `SearchOutcome::steps_trained` by construction).
+/// * **committed** — steps a method has reserved for probes it has not
+///   run yet. Budget-aware methods (`budget_greedy`) commit before
+///   training and settle after, so a hard cap can be enforced on
+///   spent + committed without ever overshooting it.
+#[derive(Clone, Debug)]
+pub struct CostLedger {
+    t_total: usize,
+    spent: Vec<usize>,
+    committed: Vec<usize>,
+}
+
+impl CostLedger {
+    /// A fresh ledger for `n_configs` runs of `t_total` steps each.
+    pub fn new(n_configs: usize, t_total: usize) -> CostLedger {
+        assert!(t_total > 0);
+        CostLedger {
+            t_total,
+            spent: vec![0; n_configs],
+            committed: vec![0; n_configs],
+        }
+    }
+
+    /// Number of configurations the ledger accounts for.
+    pub fn n_configs(&self) -> usize {
+        self.spent.len()
+    }
+
+    /// Steps of one full-horizon run (the cost denominator's T).
+    pub fn t_total(&self) -> usize {
+        self.t_total
+    }
+
+    /// Record config `c`'s trained-step count as reported by the driver.
+    /// Monotone bookkeeping is the driver's job; the ledger mirrors it
+    /// (including a live driver resetting a failed segment).
+    pub fn observe(&mut self, c: usize, steps_trained: usize) {
+        self.spent[c] = steps_trained;
+    }
+
+    /// Reserve `steps` for a probe of config `c` that has not run yet.
+    pub fn commit(&mut self, c: usize, steps: usize) {
+        self.committed[c] += steps;
+    }
+
+    /// Clear config `c`'s outstanding commitment (the probe ran — its
+    /// cost is now in `spent` via [`observe`](CostLedger::observe) — or
+    /// was abandoned).
+    pub fn settle(&mut self, c: usize) {
+        self.committed[c] = 0;
+    }
+
+    /// Steps config `c` has actually trained.
+    pub fn spent(&self, c: usize) -> usize {
+        self.spent[c]
+    }
+
+    /// Per-config spent steps (aligned with config indices).
+    pub fn spent_steps(&self) -> &[usize] {
+        &self.spent
+    }
+
+    /// Total steps trained across every config.
+    pub fn total_spent(&self) -> usize {
+        self.spent.iter().sum()
+    }
+
+    /// Total steps reserved but not yet trained.
+    pub fn total_committed(&self) -> usize {
+        self.committed.iter().sum()
+    }
+
+    /// Would spending everything outstanding (spent + committed) exceed
+    /// a cap of `cap_steps` total steps?
+    pub fn would_exceed(&self, cap_steps: usize) -> bool {
+        self.total_spent() + self.total_committed() > cap_steps
+    }
+
+    /// Relative cost C of the spent steps — identical to
+    /// [`empirical`] over [`spent_steps`](CostLedger::spent_steps).
+    pub fn relative_cost(&self) -> f64 {
+        empirical(&self.spent, self.t_total)
+    }
 }
 
 #[cfg(test)]
@@ -91,6 +187,40 @@ mod tests {
     #[test]
     fn subsampling_composes() {
         assert!((with_subsampling(0.5, 0.6) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_tracks_spent_and_committed() {
+        let mut l = CostLedger::new(3, 100);
+        assert_eq!(l.n_configs(), 3);
+        assert_eq!(l.t_total(), 100);
+        l.observe(0, 50);
+        l.observe(2, 25);
+        assert_eq!(l.spent(0), 50);
+        assert_eq!(l.total_spent(), 75);
+        assert_eq!(l.spent_steps(), &[50, 0, 25]);
+        // observe mirrors the driver, it does not accumulate
+        l.observe(0, 60);
+        assert_eq!(l.total_spent(), 85);
+
+        l.commit(1, 30);
+        assert_eq!(l.total_committed(), 30);
+        assert!(!l.would_exceed(115));
+        assert!(l.would_exceed(114));
+        l.settle(1);
+        assert_eq!(l.total_committed(), 0);
+    }
+
+    #[test]
+    fn ledger_relative_cost_matches_empirical() {
+        let mut l = CostLedger::new(2, 200);
+        l.observe(0, 200);
+        l.observe(1, 0);
+        assert_eq!(
+            l.relative_cost().to_bits(),
+            empirical(&[200, 0], 200).to_bits()
+        );
+        assert_eq!(l.relative_cost(), 0.5);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! all cores minus one; 1 = serial).
 
 use super::hyperband;
+use super::method::{self, Method};
 use super::session::SearchPlanBuilder;
 use super::{SearchOutcome, SearchPlan, TrajectorySet};
 use crate::predict::Strategy;
@@ -39,6 +40,14 @@ pub enum ReplayKind {
     /// (`hyperband_par`) — useful when the exhibit has fewer jobs than
     /// the executor has workers; the outcome is worker-count-invariant.
     Hyperband { strategy: Strategy, eta: f64, brackets_seed: u64, workers: usize },
+    /// Any registered search method (`nshpo methods` tag) through the
+    /// shared session core — the method registry's generic replay.
+    Registry { method: Method, strategy: Strategy },
+    /// ASHA fast path (`method::asha_par`): rung-wave scoring fans out
+    /// work-stealing over `workers` scoped threads; the outcome is
+    /// worker-count-invariant and bit-identical to the `Registry`
+    /// variant running `asha`.
+    Asha { strategy: Strategy, eta: f64, rungs: Option<usize>, workers: usize },
 }
 
 /// One independent replay over a shared read-only trajectory set.
@@ -92,6 +101,21 @@ impl ReplayJob {
         }
     }
 
+    /// A replay of any registered search method (resolved from the
+    /// `search::method` registry), labeled with the method's canonical
+    /// tag.
+    pub fn method(ts: &Arc<TrajectorySet>, method: &Method, strategy: &Strategy) -> ReplayJob {
+        ReplayJob {
+            ts: Arc::clone(ts),
+            kind: ReplayKind::Registry {
+                method: method.clone(),
+                strategy: strategy.clone(),
+            },
+            plan_mult: 1.0,
+            tag: method.tag(),
+        }
+    }
+
     /// Attach a sub-sampling cost multiplier (§4.1.2).
     pub fn with_mult(mut self, plan_mult: f64) -> ReplayJob {
         self.plan_mult = plan_mult;
@@ -138,6 +162,16 @@ impl ReplayJob {
                     cost: hb.cost,
                     steps_trained: Vec::new(),
                 };
+                outcome.cost *= self.plan_mult;
+                outcome
+            }
+            ReplayKind::Registry { method, strategy } => self.run_session(
+                SearchPlan::with_method(method.clone()).strategy(strategy.clone()),
+            ),
+            ReplayKind::Asha { strategy, eta, rungs, workers } => {
+                // Work-stealing rung-wave scoring; worker-count-invariant.
+                let mut outcome =
+                    method::asha_par(&self.ts, strategy, *eta, *rungs, (*workers).max(1));
                 outcome.cost *= self.plan_mult;
                 outcome
             }
@@ -271,6 +305,23 @@ mod tests {
             },
             plan_mult: 1.0,
             tag: "hb".into(),
+        });
+        // every registered search method through the generic Registry
+        // kind, plus the ASHA work-stealing fast path
+        for tag in method::tags() {
+            let m = Method::parse(tag).expect("registry tag must parse");
+            jobs.push(ReplayJob::method(ts, &m, &Strategy::constant()));
+        }
+        jobs.push(ReplayJob {
+            ts: Arc::clone(ts),
+            kind: ReplayKind::Asha {
+                strategy: Strategy::constant(),
+                eta: 3.0,
+                rungs: None,
+                workers: 2,
+            },
+            plan_mult: 1.0,
+            tag: "asha-par".into(),
         });
         jobs
     }

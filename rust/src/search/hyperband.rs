@@ -9,13 +9,13 @@
 //! hedge between "many configs, aggressive stopping" and "few configs,
 //! long training". Bracket *planning* (subsets, schedules) lives here;
 //! bracket *evaluation* is the shared Algorithm-1 core in
-//! `search::session`, so Hyperband runs identically over any
+//! `search::method`, so Hyperband runs identically over any
 //! [`SearchDriver`] — replayed from a bank ([`hyperband_par`], with
 //! bracket-level parallelism) or live through
 //! [`hyperband_driver`].
 
 use super::driver::{ReplayDriver, SearchDriver};
-use super::session::{algorithm1, Algo1Out};
+use super::method::{algorithm1, Algo1Out};
 use super::{equally_spaced_stops, TrajectorySet};
 use crate::predict::Strategy;
 use crate::util::error::Result;
@@ -128,8 +128,8 @@ fn merge(
 }
 
 /// Hyperband against any [`SearchDriver`]: brackets evaluated serially,
-/// each through the shared Algorithm-1 core. This is what
-/// `SearchMethod::Hyperband` runs — replay or live.
+/// each through the shared Algorithm-1 core. This is what the
+/// registered `hyperband` method runs — replay or live.
 pub fn hyperband_driver(
     driver: &mut dyn SearchDriver,
     strategy: &Strategy,

@@ -1,0 +1,1335 @@
+//! Pluggable search methods: the open registry behind `--method`.
+//!
+//! This module completes the registry triad — `data::scenario` answers
+//! "how does the world move", `predict::strategy` answers "how do we
+//! extrapolate a truncated trajectory", and `search::method` answers
+//! "how does stage 1 *schedule* partial runs" (§4.1). A [`SearchMethod`]
+//! is a trait object that drives training/pruning decisions over a
+//! [`MethodContext`], and a [`Method`] is the cheap clonable handle a
+//! [`SearchPlan`](super::SearchPlan) stores and the CLI resolves from
+//! registry tags ([`Method::parse`], `nshpo methods`).
+//!
+//! Registered tags (see [`REGISTRY`]):
+//!
+//! * `one-shot[@day]` — §4.1.1: stop everything at `day` (default T/2),
+//!   rank by the prediction strategy.
+//! * `perf[@rho[d1,d2,...]]` — the paper's Algorithm 1: predict + prune
+//!   the worst `rho` fraction at each stopping day (default rho 0.5,
+//!   stops every 3 days; the bracketed form pins explicit stop days).
+//! * `late-start[@start,stop]` — §B.4: train only `[start, stop)`, rank
+//!   by the observed window mean.
+//! * `hyperband[@eta[,seed]]` — §2 extension: Hyperband brackets over
+//!   Algorithm 1 (Li et al., 2018).
+//! * `asha[@eta[,rungs]]` — asynchronous successive halving: rung-by-rung
+//!   promotions without bracket barriers, budget-aware (Li et al., 2018;
+//!   cost-efficient online HPO, arXiv:2101.06590). The replay fast path
+//!   ([`asha_par`]) fans rung-wave scoring out work-stealing over the
+//!   in-tree thread pool; output is bit-identical across worker counts.
+//! * `budget_greedy[@cap]` — consumes the [`CostLedger`] to spend a hard
+//!   relative-cost cap one probe at a time on the currently
+//!   best-predicted config (arXiv:2101.06590).
+//!
+//! The four legacy policies are the exact scheduling cores the closed
+//! `SearchMethod` enum ran — bit-identical through the registry
+//! (`rust/tests/method_registry.rs` pins this), and replay-vs-live
+//! parity plus serial-vs-parallel bit-identity hold for every registered
+//! tag (`rust/tests/method_matrix.rs`).
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::cost::{self, CostLedger};
+use super::driver::{ReplayDriver, SearchDriver};
+use super::{equally_spaced_stops, hyperband, SearchOutcome, TrajectorySet};
+use crate::err;
+use crate::metrics;
+use crate::predict::{Strategy, FIT_DAYS};
+use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
+
+/// Default pruning ratio of the `perf` method (paper Appendix A.5).
+pub const DEFAULT_RHO: f64 = 0.5;
+/// Default stopping-day spacing of the `perf` method (days).
+pub const DEFAULT_STOP_EVERY: usize = 3;
+/// Default downsampling factor eta of `hyperband` and `asha`.
+pub const DEFAULT_ETA: f64 = 3.0;
+/// Default bracket-assignment seed of `hyperband`.
+pub const DEFAULT_BRACKETS_SEED: u64 = 7;
+/// Default relative-cost cap of `budget_greedy`.
+pub const DEFAULT_GREEDY_CAP: f64 = 0.5;
+
+/// Everything a search method schedules over: the backend driver (train
+/// / predict / observe), the plan's prediction strategy and budget, and
+/// the shared [`CostLedger`].
+///
+/// `MethodContext` itself implements [`SearchDriver`] as a
+/// ledger-charging decorator — `train_to`/`start_at` delegate to the
+/// backend and mirror the resulting per-config step counts into the
+/// ledger, so every method's compute is accounted without the method
+/// doing any bookkeeping of its own.
+pub struct MethodContext<'a, 'd> {
+    driver: &'a mut (dyn SearchDriver + 'd),
+    /// Prediction strategy the plan resolved (registry handle).
+    pub strategy: Strategy,
+    /// Pre-multiplier cap on the stage-1 relative cost C, if any.
+    pub budget: Option<f64>,
+    /// Per-config spent/committed step account, shared across stages.
+    pub ledger: &'a mut CostLedger,
+}
+
+impl<'a, 'd> MethodContext<'a, 'd> {
+    /// Bind a backend driver, strategy, budget, and ledger together.
+    pub fn new(
+        driver: &'a mut (dyn SearchDriver + 'd),
+        strategy: Strategy,
+        budget: Option<f64>,
+        ledger: &'a mut CostLedger,
+    ) -> MethodContext<'a, 'd> {
+        MethodContext { driver, strategy, budget, ledger }
+    }
+}
+
+impl SearchDriver for MethodContext<'_, '_> {
+    fn n_configs(&self) -> usize {
+        self.driver.n_configs()
+    }
+
+    fn days(&self) -> usize {
+        self.driver.days()
+    }
+
+    fn steps_per_day(&self) -> usize {
+        self.driver.steps_per_day()
+    }
+
+    fn eval_days(&self) -> usize {
+        self.driver.eval_days()
+    }
+
+    fn train_to(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        let r = self.driver.train_to(configs, day);
+        for &c in configs {
+            self.ledger.observe(c, self.driver.steps_trained(c));
+        }
+        r
+    }
+
+    fn start_at(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        let r = self.driver.start_at(configs, day);
+        for &c in configs {
+            self.ledger.observe(c, self.driver.steps_trained(c));
+        }
+        r
+    }
+
+    fn predict(&self, strategy: &Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
+        self.driver.predict(strategy, day, subset)
+    }
+
+    fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64 {
+        self.driver.window_mean(c, from_day, to_day)
+    }
+
+    fn steps_trained(&self, c: usize) -> usize {
+        self.driver.steps_trained(c)
+    }
+}
+
+/// One search-scheduling policy (§4.1): decides which configs train how
+/// far, and returns the stage-1 [`SearchOutcome`]. Implementations must
+/// be deterministic functions of the context (replay-vs-live parity and
+/// the bit-identical parallel replay both depend on it) and must train
+/// exclusively through the context so the [`CostLedger`] stays exact.
+pub trait SearchMethod: Send + Sync {
+    /// Canonical registry tag, including parameters (`asha@3,4`). Used
+    /// for CLI round-trips, figure series names, and job labels.
+    fn tag(&self) -> String;
+
+    /// Where the method comes from (paper section or citation) — shown
+    /// by `nshpo methods` and usable as figure-caption provenance.
+    fn provenance(&self) -> &'static str;
+
+    /// Validate construction parameters plus plan compatibility (e.g.
+    /// hyperband rejects budget caps). Called by
+    /// [`SearchPlanBuilder::build`](super::SearchPlanBuilder::build);
+    /// every rejection is an error, never a panic.
+    fn validate(&self, budget: Option<f64>) -> Result<()>;
+
+    /// Run stage-1 identification over the context. The returned cost is
+    /// pre-multiplier; the session folds the plan's sub-sampling
+    /// multiplier in afterwards.
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome>;
+}
+
+/// A cheap clonable handle to a [`SearchMethod`] — this is what
+/// [`SearchPlan`](super::SearchPlan)s store. Build one via the
+/// constructors ([`Method::one_shot`], [`Method::asha`], ...), from a
+/// registry tag ([`Method::parse`]), or from any custom trait
+/// implementation ([`Method::custom`]).
+#[derive(Clone)]
+pub struct Method(Arc<dyn SearchMethod>);
+
+impl Method {
+    /// §4.1.1 one-shot early stopping at `day_stop`.
+    pub fn one_shot(day_stop: usize) -> Method {
+        Method(Arc::new(OneShot { day_stop: Some(day_stop) }))
+    }
+
+    /// Performance-based stopping (Algorithm 1) with explicit stopping
+    /// days and pruning ratio `rho`.
+    pub fn performance_based(stop_days: Vec<usize>, rho: f64) -> Method {
+        Method(Arc::new(PerfBased { stop_days: Some(stop_days), rho }))
+    }
+
+    /// §B.4 late starting over `[start_day, day_stop)`.
+    pub fn late_start(start_day: usize, day_stop: usize) -> Method {
+        Method(Arc::new(LateStart { window: Some((start_day, day_stop)) }))
+    }
+
+    /// Hyperband brackets over Algorithm 1 (the §2 extension).
+    pub fn hyperband(eta: f64, brackets_seed: u64) -> Method {
+        Method(Arc::new(Hyperband { eta, brackets_seed }))
+    }
+
+    /// Asynchronous successive halving: geometric rungs, promotions
+    /// without bracket barriers. `rungs` of `None` derives the rung
+    /// count from the horizon (`floor(log_eta(days)) + 1`).
+    pub fn asha(eta: f64, rungs: Option<usize>) -> Method {
+        Method(Arc::new(Asha { eta, rungs }))
+    }
+
+    /// Ledger-driven greedy probing under a hard relative-cost `cap`.
+    pub fn budget_greedy(cap: f64) -> Method {
+        Method(Arc::new(BudgetGreedy { cap }))
+    }
+
+    /// Wrap a custom [`SearchMethod`] implementation — the open end of
+    /// the registry (external scheduling policies plug in here).
+    pub fn custom(implementation: Arc<dyn SearchMethod>) -> Method {
+        Method(implementation)
+    }
+
+    /// Resolve a registry tag (`one-shot@6`, `perf@0.25`,
+    /// `perf@0.5[3,6,9]`, `late-start@2,8`, `hyperband@3`, `asha@3,4`,
+    /// `budget_greedy@0.4`) into a method. Bare base tags pick the
+    /// documented defaults (day/window parameters resolve against the
+    /// horizon at schedule time), and every `tag()` a method prints
+    /// round-trips.
+    ///
+    /// Every rejection is a [`util::error`](crate::util::error) `Result`
+    /// naming the registered tags — CLI input feeds straight in.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nshpo::search::Method;
+    ///
+    /// assert_eq!(Method::parse("one-shot@6").unwrap().tag(), "one-shot@6");
+    /// assert_eq!(Method::parse("perf").unwrap().tag(), "perf@0.5");
+    /// assert_eq!(Method::parse("asha@3,4").unwrap().tag(), "asha@3,4");
+    ///
+    /// // Unknown tags are errors (no panics), listing the valid tags.
+    /// let err = Method::parse("no_such_method").unwrap_err();
+    /// assert!(format!("{err:#}").contains("asha"));
+    /// ```
+    pub fn parse(tag: &str) -> Result<Method> {
+        let (base, param) = match tag.split_once('@') {
+            Some((b, p)) => (b, Some(p)),
+            None => (tag, None),
+        };
+        let listed = || tags().join(", ");
+        // Split an `@` parameter like `0.5[3,6,9]` into its head and
+        // optional bracketed part (the strategy-registry grammar).
+        let split_bracket = |p: &'_ str| -> (String, Option<String>) {
+            match p.find('[') {
+                Some(i) if p.ends_with(']') => {
+                    (p[..i].to_string(), Some(p[i + 1..p.len() - 1].to_string()))
+                }
+                _ => (p.to_string(), None),
+            }
+        };
+        match base {
+            "one-shot" => {
+                let day_stop = match param {
+                    None => None,
+                    Some(p) => Some(
+                        p.parse::<usize>().ok().filter(|&d| d >= 1).ok_or_else(|| {
+                            err!(
+                                "one-shot stopping day must be an integer >= 1, \
+                                 got {tag:?} (registered: {})",
+                                listed()
+                            )
+                        })?,
+                    ),
+                };
+                Ok(Method(Arc::new(OneShot { day_stop })))
+            }
+            "perf" => {
+                let (head, bracket) = match param {
+                    None => (String::new(), None),
+                    Some(p) => split_bracket(p),
+                };
+                let rho = if head.is_empty() && param.is_none() {
+                    DEFAULT_RHO
+                } else {
+                    head.parse::<f64>()
+                        .ok()
+                        .filter(|r| r.is_finite() && (0.0..1.0).contains(r))
+                        .ok_or_else(|| {
+                            err!(
+                                "perf pruning ratio rho must be in [0, 1), got {tag:?} \
+                                 (registered: {})",
+                                listed()
+                            )
+                        })?
+                };
+                let stop_days = match bracket {
+                    None => None,
+                    // `perf@0.5[]` round-trips explicit-empty stop days
+                    // (no stopping: every config trains the horizon) —
+                    // distinct from the bare default schedule.
+                    Some(b) if b.trim().is_empty() => Some(Vec::new()),
+                    Some(b) => Some(
+                        b.split(',')
+                            .map(|s| s.trim().parse::<usize>().ok().filter(|&d| d >= 1))
+                            .collect::<Option<Vec<usize>>>()
+                            .ok_or_else(|| {
+                                err!(
+                                    "perf stopping days must be integers >= 1, got {tag:?} \
+                                     (registered: {})",
+                                    listed()
+                                )
+                            })?,
+                    ),
+                };
+                Ok(Method(Arc::new(PerfBased { stop_days, rho })))
+            }
+            "late-start" => {
+                let window = match param {
+                    None => None,
+                    Some(p) => {
+                        let parsed = p.split_once(',').and_then(|(s, d)| {
+                            Some((s.trim().parse::<usize>().ok()?, d.trim().parse::<usize>().ok()?))
+                        });
+                        match parsed {
+                            Some((s, d)) if d > s => Some((s, d)),
+                            _ => {
+                                return Err(err!(
+                                    "late-start takes @start,stop with stop > start, \
+                                     got {tag:?} (registered: {})",
+                                    listed()
+                                ))
+                            }
+                        }
+                    }
+                };
+                Ok(Method(Arc::new(LateStart { window })))
+            }
+            "hyperband" | "asha" => {
+                let (eta_text, second) = match param {
+                    None => (None, None),
+                    Some(p) => match p.split_once(',') {
+                        Some((e, s)) => (Some(e), Some(s)),
+                        None => (Some(p), None),
+                    },
+                };
+                let eta = match eta_text {
+                    None => DEFAULT_ETA,
+                    Some(e) => e
+                        .trim()
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|x| x.is_finite() && *x > 1.0)
+                        .ok_or_else(|| {
+                            err!(
+                                "{base} eta must be a finite number > 1, got {tag:?} \
+                                 (registered: {})",
+                                listed()
+                            )
+                        })?,
+                };
+                if base == "hyperband" {
+                    let seed = match second {
+                        None => DEFAULT_BRACKETS_SEED,
+                        Some(s) => s.trim().parse::<u64>().ok().ok_or_else(|| {
+                            err!(
+                                "hyperband bracket seed must be an integer, got {tag:?} \
+                                 (registered: {})",
+                                listed()
+                            )
+                        })?,
+                    };
+                    Ok(Method(Arc::new(Hyperband { eta, brackets_seed: seed })))
+                } else {
+                    let rungs = match second {
+                        None => None,
+                        Some(r) => Some(
+                            r.trim().parse::<usize>().ok().filter(|&x| x >= 1).ok_or_else(
+                                || {
+                                    err!(
+                                        "asha rung count must be an integer >= 1, \
+                                         got {tag:?} (registered: {})",
+                                        listed()
+                                    )
+                                },
+                            )?,
+                        ),
+                    };
+                    Ok(Method(Arc::new(Asha { eta, rungs })))
+                }
+            }
+            "budget_greedy" => {
+                let cap = match param {
+                    None => DEFAULT_GREEDY_CAP,
+                    Some(p) => p
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|c| c.is_finite() && *c > 0.0 && *c <= 1.0)
+                        .ok_or_else(|| {
+                            err!(
+                                "budget_greedy cap must be a relative cost in (0, 1], \
+                                 got {tag:?} (registered: {})",
+                                listed()
+                            )
+                        })?,
+                };
+                Ok(Method(Arc::new(BudgetGreedy { cap })))
+            }
+            other => Err(err!("unknown method {other:?} (registered: {})", listed())),
+        }
+    }
+
+    /// Canonical registry tag of this method (round-trips through
+    /// [`Method::parse`] for registry-built methods).
+    pub fn tag(&self) -> String {
+        self.0.tag()
+    }
+
+    /// Paper-section / citation provenance of the method.
+    pub fn provenance(&self) -> &'static str {
+        self.0.provenance()
+    }
+
+    /// Validate parameters plus plan compatibility (see
+    /// [`SearchMethod::validate`]).
+    pub fn validate(&self, budget: Option<f64>) -> Result<()> {
+        self.0.validate(budget)
+    }
+
+    /// Run stage-1 identification over the context (see
+    /// [`SearchMethod::schedule`]).
+    pub fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        self.0.schedule(ctx)
+    }
+}
+
+impl fmt::Debug for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Method({})", self.tag())
+    }
+}
+
+impl PartialEq for Method {
+    fn eq(&self, other: &Method) -> bool {
+        self.tag() == other.tag()
+    }
+}
+
+// ------------------------------------------------- the scheduling cores
+//
+// These are the exact cores the pre-registry `SearchMethod` enum ran —
+// written once against the driver trait, shared verbatim between replay
+// and live backends, and now owned by the method layer.
+
+/// Whole days of single-config training a relative-cost budget can pay
+/// for; an error if it cannot cover even one.
+fn affordable_days(budget: f64, days: usize) -> Result<usize> {
+    let afford = (budget * days as f64).floor() as usize;
+    if afford == 0 {
+        return Err(err!("budget {budget} cannot cover even one day of {days}"));
+    }
+    Ok(afford)
+}
+
+pub(crate) fn run_one_shot(
+    driver: &mut dyn SearchDriver,
+    strategy: &Strategy,
+    day_stop: usize,
+    budget: Option<f64>,
+) -> Result<SearchOutcome> {
+    let days = driver.days();
+    let mut day_stop = day_stop.clamp(1, days);
+    if let Some(b) = budget {
+        day_stop = day_stop.min(affordable_days(b, days)?);
+    }
+    let all: Vec<usize> = (0..driver.n_configs()).collect();
+    driver.train_to(&all, day_stop)?;
+    let preds = driver.predict(strategy, day_stop, &all);
+    let steps_trained: Vec<usize> = all.iter().map(|&c| driver.steps_trained(c)).collect();
+    Ok(SearchOutcome {
+        ranking: metrics::ranking_from_scores(&preds),
+        cost: cost::one_shot(day_stop * driver.steps_per_day(), driver.total_steps()),
+        steps_trained,
+    })
+}
+
+pub(crate) fn run_late_start(
+    driver: &mut dyn SearchDriver,
+    start_day: usize,
+    day_stop: usize,
+    budget: Option<f64>,
+) -> Result<SearchOutcome> {
+    let days = driver.days();
+    let start = start_day.min(days - 1);
+    let mut stop = day_stop.clamp(start + 1, days);
+    if let Some(b) = budget {
+        stop = stop.min(start + affordable_days(b, days)?);
+    }
+    let all: Vec<usize> = (0..driver.n_configs()).collect();
+    driver.start_at(&all, start)?;
+    driver.train_to(&all, stop)?;
+    // NOTE: replaying a late start from full-data trajectories is an
+    // approximation (the real late-started model would warm up from
+    // scratch); the live driver runs it exactly. For ranking purposes
+    // the warm-up bias is shared across configs.
+    let from = start.min(stop - 1);
+    let preds: Vec<f64> = all.iter().map(|&c| driver.window_mean(c, from, stop)).collect();
+    let steps_trained: Vec<usize> = all.iter().map(|&c| driver.steps_trained(c)).collect();
+    Ok(SearchOutcome {
+        ranking: metrics::ranking_from_scores(&preds),
+        cost: cost::one_shot((stop - start) * driver.steps_per_day(), driver.total_steps()),
+        steps_trained,
+    })
+}
+
+/// Outcome of the Algorithm-1 core over a subset of configs.
+pub(crate) struct Algo1Out {
+    /// Global config ids, best first (subset members only).
+    pub ranking: Vec<usize>,
+    /// Steps trained, aligned with the input subset.
+    pub steps_trained: Vec<usize>,
+}
+
+/// The paper's Algorithm 1, written once against the driver trait: at
+/// each stopping day, predict the remaining configs' final metrics,
+/// prune the worst `rho` fraction, train the rest onward. Survivors are
+/// ranked by their observed (full-horizon) performance ahead of the
+/// pruned tail (lines 8, 11-12). `budget` (pre-multiplier, measured over
+/// `subset`) stops advancing once the next segment would exceed it;
+/// remaining configs are then ranked by prediction at the last observed
+/// day.
+pub(crate) fn algorithm1(
+    driver: &mut dyn SearchDriver,
+    strategy: &Strategy,
+    stop_days: &[usize],
+    rho: f64,
+    subset: &[usize],
+    budget: Option<f64>,
+) -> Result<Algo1Out> {
+    let days_total = driver.days();
+    let spd = driver.steps_per_day();
+    let mut days: Vec<usize> = stop_days
+        .iter()
+        .copied()
+        .filter(|&d| d >= 1 && d < days_total)
+        .collect();
+    days.sort_unstable();
+    days.dedup();
+    days.push(days_total); // final segment
+
+    let budget_steps =
+        budget.map(|b| (b * (subset.len() * days_total * spd) as f64).floor() as usize);
+
+    let mut remaining: Vec<usize> = subset.to_vec();
+    let mut tail: Vec<usize> = Vec::new(); // pruned, best-first
+    let mut spent = 0usize;
+    let mut seg_start = 0usize;
+    let mut truncated = false;
+
+    for (seg, &day) in days.iter().enumerate() {
+        if let Some(cap) = budget_steps {
+            let seg_cost = remaining.len() * (day - seg_start) * spd;
+            if spent + seg_cost > cap {
+                truncated = true;
+                break;
+            }
+        }
+        driver.train_to(&remaining, day)?;
+        spent += remaining.len() * (day - seg_start) * spd;
+        seg_start = day;
+        let is_final = seg == days.len() - 1;
+        if is_final || remaining.len() <= 1 {
+            continue;
+        }
+
+        // Predict + prune (Algorithm 1 lines 5-10).
+        let preds = driver.predict(strategy, day, &remaining);
+        let order = metrics::ranking_from_scores(&preds); // best-first, local idx
+        let n_prune =
+            (((remaining.len() as f64) * rho).floor() as usize).min(remaining.len() - 1);
+        if n_prune == 0 {
+            continue;
+        }
+        let cut = remaining.len() - n_prune;
+        // Line 8: newly pruned go ahead of earlier-pruned.
+        let mut pruned: Vec<usize> = order[cut..].iter().map(|&i| remaining[i]).collect();
+        pruned.extend(tail);
+        tail = pruned;
+        remaining = order[..cut].iter().map(|&i| remaining[i]).collect();
+    }
+
+    // Lines 11-12: survivors ranked by observed performance, ahead of
+    // everything pruned. Under a truncating budget the survivors never
+    // reached the horizon, so they rank by prediction instead.
+    let scores: Vec<f64> = if truncated {
+        if seg_start == 0 {
+            return Err(err!(
+                "budget {:?} too small to train {} configs through one stopping day",
+                budget,
+                subset.len()
+            ));
+        }
+        driver.predict(strategy, seg_start, &remaining)
+    } else {
+        driver.final_scores(&remaining)
+    };
+    let order = metrics::ranking_from_scores(&scores);
+    let mut ranking: Vec<usize> = order.iter().map(|&i| remaining[i]).collect();
+    ranking.extend(tail);
+
+    let steps_trained: Vec<usize> =
+        subset.iter().map(|&c| driver.steps_trained(c)).collect();
+    Ok(Algo1Out { ranking, steps_trained })
+}
+
+// ------------------------------------------------ the registered methods
+
+/// §4.1.1 one-shot early stopping (bare tag: stop at T/2).
+struct OneShot {
+    day_stop: Option<usize>,
+}
+
+impl SearchMethod for OneShot {
+    fn tag(&self) -> String {
+        match self.day_stop {
+            None => "one-shot".to_string(),
+            Some(d) => format!("one-shot@{d}"),
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.1.1"
+    }
+
+    fn validate(&self, _budget: Option<f64>) -> Result<()> {
+        if self.day_stop == Some(0) {
+            return Err(err!("one-shot day_stop must be >= 1"));
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let strategy = ctx.strategy.clone();
+        let budget = ctx.budget;
+        let day = self.day_stop.unwrap_or_else(|| (ctx.days() / 2).max(1));
+        run_one_shot(&mut *ctx, &strategy, day, budget)
+    }
+}
+
+/// Performance-based stopping — the paper's Algorithm 1 (bare tag:
+/// stops every 3 days at rho 0.5).
+struct PerfBased {
+    stop_days: Option<Vec<usize>>,
+    rho: f64,
+}
+
+impl SearchMethod for PerfBased {
+    fn tag(&self) -> String {
+        match &self.stop_days {
+            None => format!("perf@{}", self.rho),
+            Some(days) => format!(
+                "perf@{}[{}]",
+                self.rho,
+                days.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+            ),
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.1.1 (Algorithm 1)"
+    }
+
+    fn validate(&self, _budget: Option<f64>) -> Result<()> {
+        if !(self.rho.is_finite() && (0.0..1.0).contains(&self.rho)) {
+            return Err(err!("rho must be in [0, 1), got {}", self.rho));
+        }
+        if let Some(days) = &self.stop_days {
+            if days.contains(&0) {
+                return Err(err!("stopping days must be >= 1 (got day 0)"));
+            }
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let strategy = ctx.strategy.clone();
+        let budget = ctx.budget;
+        let stops = match &self.stop_days {
+            Some(days) => days.clone(),
+            None => equally_spaced_stops(ctx.days(), DEFAULT_STOP_EVERY),
+        };
+        let subset: Vec<usize> = (0..ctx.n_configs()).collect();
+        let total = ctx.total_steps();
+        let core = algorithm1(&mut *ctx, &strategy, &stops, self.rho, &subset, budget)?;
+        Ok(SearchOutcome {
+            ranking: core.ranking,
+            cost: cost::empirical(&core.steps_trained, total),
+            steps_trained: core.steps_trained,
+        })
+    }
+}
+
+/// §B.4 late starting (bare tag: the `[T/4, T)` window).
+struct LateStart {
+    window: Option<(usize, usize)>,
+}
+
+impl SearchMethod for LateStart {
+    fn tag(&self) -> String {
+        match self.window {
+            None => "late-start".to_string(),
+            Some((s, d)) => format!("late-start@{s},{d}"),
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §B.4"
+    }
+
+    fn validate(&self, _budget: Option<f64>) -> Result<()> {
+        if let Some((start_day, day_stop)) = self.window {
+            if day_stop <= start_day {
+                return Err(err!(
+                    "late start needs day_stop > start_day, got [{start_day}, {day_stop})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let budget = ctx.budget;
+        let (start, stop) = self.window.unwrap_or((ctx.days() / 4, ctx.days()));
+        run_late_start(&mut *ctx, start, stop, budget)
+    }
+}
+
+/// Hyperband brackets over Algorithm 1 (the §2 extension).
+struct Hyperband {
+    eta: f64,
+    brackets_seed: u64,
+}
+
+impl SearchMethod for Hyperband {
+    fn tag(&self) -> String {
+        if self.brackets_seed == DEFAULT_BRACKETS_SEED {
+            format!("hyperband@{}", self.eta)
+        } else {
+            format!("hyperband@{},{}", self.eta, self.brackets_seed)
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "Li et al., 2018 (paper §2 extension)"
+    }
+
+    fn validate(&self, budget: Option<f64>) -> Result<()> {
+        if !(self.eta.is_finite() && self.eta > 1.0) {
+            return Err(err!("hyperband eta must be > 1, got {}", self.eta));
+        }
+        if budget.is_some() {
+            return Err(err!("budget caps are not supported for hyperband brackets"));
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let strategy = ctx.strategy.clone();
+        let hb =
+            hyperband::hyperband_driver(&mut *ctx, &strategy, self.eta, self.brackets_seed)?;
+        // The driver tracked every bracket's training, so the
+        // empirical-cost audit holds: empirical(steps) == hb.cost.
+        let steps_trained: Vec<usize> =
+            (0..ctx.n_configs()).map(|c| ctx.steps_trained(c)).collect();
+        Ok(SearchOutcome { ranking: hb.ranking, cost: hb.cost, steps_trained })
+    }
+}
+
+/// Asynchronous successive halving (see [`asha_run`]).
+struct Asha {
+    eta: f64,
+    rungs: Option<usize>,
+}
+
+impl SearchMethod for Asha {
+    fn tag(&self) -> String {
+        match self.rungs {
+            None => format!("asha@{}", self.eta),
+            Some(r) => format!("asha@{},{r}", self.eta),
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "Li et al., 2018 (ASHA); arXiv:2101.06590"
+    }
+
+    fn validate(&self, _budget: Option<f64>) -> Result<()> {
+        if !(self.eta.is_finite() && self.eta > 1.0) {
+            return Err(err!("asha eta must be > 1, got {}", self.eta));
+        }
+        if self.rungs == Some(0) {
+            return Err(err!("asha rung count must be >= 1"));
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let strategy = ctx.strategy.clone();
+        let budget = ctx.budget;
+        asha_run(&mut *ctx, &strategy, self.eta, self.rungs, budget, None)
+    }
+}
+
+/// Ledger-driven greedy probing under a hard relative-cost cap: probe
+/// every config for [`FIT_DAYS`] days, then repeatedly spend one more
+/// day on the currently best-predicted unfinished config (ties: fewer
+/// spent steps, then index — the cheapest next probe) until the cap is
+/// exhausted. Each probe is committed to the [`CostLedger`] before it
+/// runs and settled after, so the cap is never overshot.
+struct BudgetGreedy {
+    cap: f64,
+}
+
+impl SearchMethod for BudgetGreedy {
+    fn tag(&self) -> String {
+        format!("budget_greedy@{}", self.cap)
+    }
+
+    fn provenance(&self) -> &'static str {
+        "arXiv:2101.06590 (cost-efficient online HPO)"
+    }
+
+    fn validate(&self, _budget: Option<f64>) -> Result<()> {
+        if !(self.cap.is_finite() && self.cap > 0.0 && self.cap <= 1.0) {
+            return Err(err!(
+                "budget_greedy cap must be a relative cost in (0, 1], got {}",
+                self.cap
+            ));
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let strategy = ctx.strategy.clone();
+        let n = ctx.n_configs();
+        let days = ctx.days();
+        let spd = ctx.steps_per_day();
+        let t_total = days * spd;
+        // The plan's budget composes as a second cap: the tighter wins.
+        let cap = match ctx.budget {
+            Some(b) => self.cap.min(b),
+            None => self.cap,
+        };
+        let cap_steps = (cap * (n * t_total) as f64).floor() as usize;
+
+        let probe_days = FIT_DAYS.min(days);
+        if n * probe_days * spd > cap_steps {
+            return Err(err!(
+                "budget_greedy cap {cap} cannot cover the initial {probe_days}-day \
+                 probe of {n} configs"
+            ));
+        }
+        let all: Vec<usize> = (0..n).collect();
+        ctx.train_to(&all, probe_days)?;
+        let mut day_of = vec![probe_days; n];
+        let mut score: Vec<f64> = if probe_days == days {
+            ctx.final_scores(&all)
+        } else {
+            ctx.predict(&strategy, probe_days, &all)
+        };
+
+        loop {
+            // Most promising unfinished config; ties by fewer spent
+            // steps (the cheapest probe), then index.
+            let mut pick: Option<usize> = None;
+            for c in 0..n {
+                if day_of[c] >= days {
+                    continue;
+                }
+                let better = match pick {
+                    None => true,
+                    Some(p) => match score[c].partial_cmp(&score[p]) {
+                        Some(std::cmp::Ordering::Less) => true,
+                        Some(std::cmp::Ordering::Greater) => false,
+                        _ => (ctx.ledger.spent(c), c) < (ctx.ledger.spent(p), p),
+                    },
+                };
+                if better {
+                    pick = Some(c);
+                }
+            }
+            let Some(c) = pick else { break };
+            ctx.ledger.commit(c, spd);
+            if ctx.ledger.would_exceed(cap_steps) {
+                ctx.ledger.settle(c);
+                break;
+            }
+            ctx.train_to(&[c], day_of[c] + 1)?;
+            ctx.ledger.settle(c);
+            day_of[c] += 1;
+            score[c] = if day_of[c] == days {
+                ctx.final_scores(&[c])[0]
+            } else {
+                ctx.predict(&strategy, day_of[c], &[c])[0]
+            };
+        }
+
+        let steps_trained: Vec<usize> = (0..n).map(|c| ctx.steps_trained(c)).collect();
+        Ok(SearchOutcome {
+            ranking: metrics::ranking_from_scores(&score),
+            cost: cost::empirical(&steps_trained, t_total),
+            steps_trained,
+        })
+    }
+}
+
+// -------------------------------------------------------------- asha
+
+/// Geometric rung budgets in days: rung k trains through
+/// `max(1, floor(days / eta^(rungs-1-k)))`, with the top rung at the
+/// full horizon. Deduplicated, strictly increasing.
+pub(crate) fn rung_days(days: usize, eta: f64, rungs: Option<usize>) -> Vec<usize> {
+    let r = rungs
+        .unwrap_or_else(|| ((days as f64).ln() / eta.ln()).floor() as usize + 1)
+        .clamp(1, days.max(1));
+    let mut v: Vec<usize> = (0..r)
+        .map(|k| {
+            let b = days as f64 / eta.powi((r - 1 - k) as i32);
+            (b.floor() as usize).max(1)
+        })
+        .collect();
+    v.dedup();
+    v
+}
+
+/// One rung-wave scoring request: `configs` just trained through `day`;
+/// `observed` selects eval-window scoring at the full horizon (the
+/// Algorithm-1 line-11 rule) over strategy prediction.
+pub struct RungScore {
+    /// The rung's stopping day.
+    pub day: usize,
+    /// `day == horizon`: score by the observed eval-window metric.
+    pub observed: bool,
+    /// Global config ids in the group.
+    pub configs: Vec<usize>,
+}
+
+/// Asynchronous successive halving over any [`SearchDriver`].
+///
+/// Configs enter the bottom rung in staggered deterministic waves (no
+/// bracket barrier: early arrivals climb rungs while later configs are
+/// still entering), and a config completing rung k is promoted once it
+/// ranks in the top `floor(|completed_k| / eta)` of *whatever has
+/// completed rung k so far* — the ASHA rule, which never waits for a
+/// full rung. The decision loop is serial and deterministic; per-wave
+/// rung scoring goes through `wave_scorer` when provided ([`asha_par`]
+/// fans it out work-stealing over the thread pool), so the outcome is a
+/// pure function of the data — bit-identical across worker counts.
+///
+/// `budget` (pre-multiplier) gates whole waves like Algorithm 1's
+/// truncation: a wave that would exceed the cap is dropped and the
+/// search ends with whatever ranks exist.
+pub(crate) fn asha_run(
+    driver: &mut dyn SearchDriver,
+    strategy: &Strategy,
+    eta: f64,
+    rungs: Option<usize>,
+    budget: Option<f64>,
+    wave_scorer: Option<&dyn Fn(&[RungScore]) -> Vec<Vec<f64>>>,
+) -> Result<SearchOutcome> {
+    let n = driver.n_configs();
+    let days = driver.days();
+    let spd = driver.steps_per_day();
+    let rd = rung_days(days, eta, rungs);
+    let n_rungs = rd.len();
+    let cap_steps = budget.map(|b| (b * (n * days * spd) as f64).floor() as usize);
+
+    // Deterministic staggered arrivals, index order.
+    let arrivals_per_wave = ((n + n_rungs - 1) / n_rungs).max(1);
+    let mut next_arrival = 0usize;
+    let mut rung_of: Vec<Option<usize>> = vec![None; n]; // highest completed rung
+    let mut score_of: Vec<f64> = vec![f64::INFINITY; n]; // score at that rung
+    let mut completed: Vec<Vec<usize>> = vec![Vec::new(); n_rungs];
+    let mut spent = 0usize;
+
+    loop {
+        // ---- decide the wave (serial, pure function of recorded state)
+        let mut wave: Vec<(usize, Vec<usize>)> = Vec::new(); // (target rung, configs)
+        for k in (0..n_rungs.saturating_sub(1)).rev() {
+            let done = &completed[k];
+            let quota = ((done.len() as f64) / eta).floor() as usize;
+            if quota == 0 {
+                continue;
+            }
+            let mut order: Vec<usize> = done.clone();
+            order.sort_by(|&a, &b| {
+                score_of[a]
+                    .partial_cmp(&score_of[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let promos: Vec<usize> = order[..quota]
+                .iter()
+                .copied()
+                .filter(|&c| rung_of[c] == Some(k))
+                .collect();
+            if !promos.is_empty() {
+                wave.push((k + 1, promos));
+            }
+        }
+        if next_arrival < n {
+            let take = arrivals_per_wave.min(n - next_arrival);
+            wave.push((0, (next_arrival..next_arrival + take).collect()));
+            next_arrival += take;
+        }
+        if wave.is_empty() {
+            break;
+        }
+
+        // ---- budget gate: whole wave or nothing
+        let wave_steps: usize = wave
+            .iter()
+            .map(|(r, cs)| {
+                cs.iter()
+                    .map(|&c| (rd[*r] - rung_of[c].map_or(0, |k| rd[k])) * spd)
+                    .sum::<usize>()
+            })
+            .sum();
+        if let Some(cap) = cap_steps {
+            if spent + wave_steps > cap {
+                if spent == 0 {
+                    return Err(err!(
+                        "budget {budget:?} too small to train the first asha rung \
+                         of {n} configs"
+                    ));
+                }
+                break;
+            }
+        }
+
+        // ---- train each rung group
+        for (r, cs) in &wave {
+            driver.train_to(cs, rd[*r])?;
+        }
+        spent += wave_steps;
+
+        // ---- score each group at its rung day
+        let reqs: Vec<RungScore> = wave
+            .iter()
+            .map(|(r, cs)| RungScore {
+                day: rd[*r],
+                observed: rd[*r] == days,
+                configs: cs.clone(),
+            })
+            .collect();
+        let scores: Vec<Vec<f64>> = match wave_scorer {
+            Some(f) => f(&reqs),
+            None => reqs
+                .iter()
+                .map(|req| {
+                    if req.observed {
+                        driver.final_scores(&req.configs)
+                    } else {
+                        driver.predict(strategy, req.day, &req.configs)
+                    }
+                })
+                .collect(),
+        };
+        for ((r, cs), ss) in wave.iter().zip(&scores) {
+            for (&c, &s) in cs.iter().zip(ss) {
+                rung_of[c] = Some(*r);
+                score_of[c] = s;
+                completed[*r].push(c);
+            }
+        }
+    }
+
+    // ---- ranking: highest rung first (the full-horizon finishers carry
+    // observed eval metrics), then score, then index; configs that never
+    // started (budget truncation) rank last in index order.
+    let mut ranking: Vec<usize> = (0..n).collect();
+    ranking.sort_by(|&a, &b| {
+        let ra = rung_of[a].map_or(-1i64, |k| k as i64);
+        let rb = rung_of[b].map_or(-1i64, |k| k as i64);
+        rb.cmp(&ra)
+            .then(
+                score_of[a]
+                    .partial_cmp(&score_of[b])
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.cmp(&b))
+    });
+    let steps_trained: Vec<usize> = (0..n).map(|c| driver.steps_trained(c)).collect();
+    let cost = cost::empirical(&steps_trained, days * spd);
+    Ok(SearchOutcome { ranking, cost, steps_trained })
+}
+
+/// Replay fast path for ASHA: the same deterministic decision loop as
+/// the registered method, with each wave's rung-group scoring fanned out
+/// work-stealing over `workers` scoped threads
+/// ([`ThreadPool::scoped_map`]'s atomic-cursor index claiming). Results
+/// are collected in group order, so the outcome is **bit-identical**
+/// across worker counts and to the serial method path
+/// (`rust/tests/method_matrix.rs` pins both).
+pub fn asha_par(
+    ts: &TrajectorySet,
+    strategy: &Strategy,
+    eta: f64,
+    rungs: Option<usize>,
+    workers: usize,
+) -> SearchOutcome {
+    // A second (immutable) replay view for the worker threads: replay
+    // predictions and window means read the recorded trajectories only,
+    // independent of any training cursor.
+    let probe = ReplayDriver::new(ts);
+    let scorer = |reqs: &[RungScore]| -> Vec<Vec<f64>> {
+        ThreadPool::scoped_map(workers.max(1), reqs, |_, req| {
+            if req.observed {
+                probe.final_scores(&req.configs)
+            } else {
+                probe.predict(strategy, req.day, &req.configs)
+            }
+        })
+    };
+    let mut driver = ReplayDriver::new(ts);
+    asha_run(&mut driver, strategy, eta, rungs, None, Some(&scorer))
+        .expect("replay asha cannot fail")
+}
+
+// -------------------------------------------------------------- registry
+
+/// One registry row: base tag, provenance, and the one-line guidance
+/// shown by `nshpo methods`.
+pub struct MethodInfo {
+    /// Base registry tag (parameters attach as `@<param>`).
+    pub tag: &'static str,
+    /// Paper section or citation the method implements.
+    pub reference: &'static str,
+    /// When to reach for this method.
+    pub when_to_use: &'static str,
+}
+
+/// Every registered method, base tags only — all of them also accept an
+/// `@<param>` (stopping day / rho[+stop days] / start,stop / eta[,seed]
+/// / eta[,rungs] / cap).
+pub const REGISTRY: [MethodInfo; 6] = [
+    MethodInfo {
+        tag: "one-shot",
+        reference: "paper §4.1.1",
+        when_to_use: "one cheap truncation point, no pruning machinery",
+    },
+    MethodInfo {
+        tag: "perf",
+        reference: "paper §4.1.1 (Algorithm 1)",
+        when_to_use: "the default: prune the worst rho at every stopping day",
+    },
+    MethodInfo {
+        tag: "late-start",
+        reference: "paper §B.4",
+        when_to_use: "recent data dominates: train only a trailing window",
+    },
+    MethodInfo {
+        tag: "hyperband",
+        reference: "Li et al., 2018",
+        when_to_use: "unknown best budget: bracket-hedge many-short vs few-long",
+    },
+    MethodInfo {
+        tag: "asha",
+        reference: "Li et al., 2018 (ASHA); arXiv:2101.06590",
+        when_to_use: "rung promotions without bracket barriers, budget-aware",
+    },
+    MethodInfo {
+        tag: "budget_greedy",
+        reference: "arXiv:2101.06590",
+        when_to_use: "hard compute cap: spend it one probe at a time on the best",
+    },
+];
+
+/// Base tags of every registered method, registry order.
+pub fn tags() -> Vec<&'static str> {
+    REGISTRY.iter().map(|m| m.tag).collect()
+}
+
+/// The `nshpo methods` table: one row per registered tag with its
+/// provenance and usage guidance. Tests pin that every registered tag
+/// appears here, so the CLI listing cannot silently drop one.
+pub fn registry_table() -> String {
+    let mut out = format!("{:<15} {:<38} when to use\n", "tag", "reference");
+    for info in &REGISTRY {
+        out.push_str(&format!(
+            "{:<15} {:<38} {}\n",
+            info.tag, info.reference, info.when_to_use
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{SearchPlan, SearchSession};
+
+    fn toy() -> TrajectorySet {
+        TrajectorySet::toy(9, 12, 6, 5)
+    }
+
+    #[test]
+    fn rung_days_are_geometric_and_end_at_the_horizon() {
+        assert_eq!(rung_days(12, 3.0, None), vec![1, 4, 12]);
+        assert_eq!(rung_days(12, 3.0, Some(2)), vec![4, 12]);
+        assert_eq!(rung_days(8, 2.0, Some(4)), vec![1, 2, 4, 8]);
+        assert_eq!(rung_days(4, 3.0, Some(1)), vec![4]);
+        // floors that collide deduplicate into strictly increasing days
+        let rd = rung_days(5, 2.0, Some(6));
+        assert!(rd.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*rd.last().unwrap(), 5);
+    }
+
+    #[test]
+    fn asha_ranking_is_permutation_and_saves_compute() {
+        let ts = toy();
+        let out = SearchPlan::with_method(Method::asha(3.0, None))
+            .run_replay(&ts)
+            .unwrap();
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..9).collect::<Vec<_>>());
+        assert!(out.cost < 1.0, "no savings: {}", out.cost);
+        // the audit holds
+        let audit = cost::empirical(&out.steps_trained, ts.total_steps());
+        assert_eq!(audit.to_bits(), out.cost.to_bits());
+        // at least one config reached the horizon, at least one did not
+        assert!(out.steps_trained.iter().any(|&s| s == ts.total_steps()));
+        assert!(out.steps_trained.iter().any(|&s| s < ts.total_steps()));
+    }
+
+    #[test]
+    fn asha_par_is_bit_identical_across_worker_counts() {
+        let ts = toy();
+        let strat = Strategy::constant();
+        let serial = SearchPlan::with_method(Method::asha(3.0, None))
+            .strategy(strat.clone())
+            .run_replay(&ts)
+            .unwrap();
+        for workers in [1usize, 2, 4] {
+            let par = asha_par(&ts, &strat, 3.0, None, workers);
+            assert_eq!(serial.ranking, par.ranking, "workers={workers}");
+            assert_eq!(serial.steps_trained, par.steps_trained, "workers={workers}");
+            assert_eq!(serial.cost.to_bits(), par.cost.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn asha_budget_truncates_or_errors() {
+        let ts = toy();
+        let full = SearchPlan::with_method(Method::asha(3.0, None))
+            .run_replay(&ts)
+            .unwrap();
+        let capped = SearchPlan::with_method(Method::asha(3.0, None))
+            .budget(full.cost * 0.5)
+            .run_replay(&ts)
+            .unwrap();
+        assert!(capped.cost <= full.cost * 0.5 + 1e-12);
+        let mut r = capped.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..9).collect::<Vec<_>>());
+        // a cap below one bottom-rung wave is an error, not an overrun
+        assert!(SearchPlan::with_method(Method::asha(3.0, None))
+            .budget(1e-6)
+            .run_replay(&ts)
+            .is_err());
+    }
+
+    #[test]
+    fn budget_greedy_respects_its_cap_and_ranks_everyone() {
+        let ts = toy();
+        for cap in [0.3, 0.5, 0.8] {
+            let out = SearchPlan::with_method(Method::budget_greedy(cap))
+                .run_replay(&ts)
+                .unwrap();
+            assert!(out.cost <= cap + 1e-12, "cost {} exceeds cap {cap}", out.cost);
+            let mut r = out.ranking.clone();
+            r.sort_unstable();
+            assert_eq!(r, (0..9).collect::<Vec<_>>());
+        }
+        // an impossible cap errors instead of silently overrunning
+        assert!(SearchPlan::with_method(Method::budget_greedy(0.01))
+            .run_replay(&ts)
+            .is_err());
+    }
+
+    #[test]
+    fn budget_greedy_ledger_reconciles_with_the_outcome() {
+        let ts = toy();
+        let plan = SearchPlan::with_method(Method::budget_greedy(0.5)).build().unwrap();
+        let mut d = ReplayDriver::new(&ts);
+        let mut session = SearchSession::new(plan, &mut d);
+        let out = session.run().unwrap();
+        assert_eq!(session.ledger().spent_steps(), &out.steps_trained[..]);
+        assert_eq!(session.ledger().total_committed(), 0);
+        assert_eq!(
+            session.ledger().relative_cost().to_bits(),
+            out.cost.to_bits()
+        );
+    }
+
+    #[test]
+    fn budget_greedy_spends_more_on_the_better_configs() {
+        // toy quality is ordered by index: the greedy probe loop must
+        // concentrate compute at the low indices.
+        let ts = toy();
+        let out = SearchPlan::with_method(Method::budget_greedy(0.5))
+            .run_replay(&ts)
+            .unwrap();
+        let best_half: usize = out.steps_trained[..4].iter().sum();
+        let worst_half: usize = out.steps_trained[5..].iter().sum();
+        assert!(
+            best_half > worst_half,
+            "greedy did not concentrate: {:?}",
+            out.steps_trained
+        );
+    }
+
+    #[test]
+    fn method_tags_are_unique_and_roundtrip() {
+        let methods = [
+            Method::one_shot(6),
+            Method::performance_based(vec![3, 6, 9], 0.5),
+            Method::late_start(2, 8),
+            Method::hyperband(3.0, DEFAULT_BRACKETS_SEED),
+            Method::hyperband(3.0, 11),
+            Method::asha(3.0, None),
+            Method::asha(2.0, Some(4)),
+            Method::budget_greedy(0.4),
+        ];
+        let mut tags: Vec<String> = methods.iter().map(|m| m.tag()).collect();
+        for t in &tags {
+            let reparsed = Method::parse(t).unwrap_or_else(|e| panic!("{t:?}: {e:#}"));
+            assert_eq!(&reparsed.tag(), t);
+        }
+        tags.sort();
+        let n = tags.len();
+        tags.dedup();
+        assert_eq!(tags.len(), n, "duplicate method tags");
+    }
+}

@@ -1,25 +1,29 @@
 //! Search layer (§4.1): the unified two-stage [`SearchSession`] API.
 //!
-//! The paper's strategies — one-shot early stopping, performance-based
-//! stopping (Algorithm 1), late starting, Hyperband brackets — are each
-//! written **once** in [`session`] against the [`SearchDriver`] trait,
-//! and driven by exactly two backends ([`driver`]): replaying recorded
-//! trajectories (the paper's backtesting methodology) or training real
-//! models live through the coordinator. [`TrajectorySet`] is the recorded
-//! data a replay consumes; the strategies themselves no longer live on it.
+//! The scheduling policies — one-shot early stopping, performance-based
+//! stopping (Algorithm 1), late starting, Hyperband brackets, ASHA, and
+//! budget-greedy probing — are each written **once** in [`method`]
+//! (the pluggable [`SearchMethod`] registry) against the
+//! [`SearchDriver`] trait, and driven by exactly two backends
+//! ([`driver`]): replaying recorded trajectories (the paper's
+//! backtesting methodology) or training real models live through the
+//! coordinator. [`TrajectorySet`] is the recorded data a replay
+//! consumes; every method's compute is accounted in the shared
+//! [`CostLedger`] ([`cost`]).
 
 pub mod cost;
 pub mod driver;
 pub mod executor;
 pub mod hyperband;
+pub mod method;
 pub mod session;
 pub mod sweep;
 
+pub use cost::CostLedger;
 pub use driver::{LiveDriver, ReplayDriver, SearchDriver};
 pub use executor::{ReplayExecutor, ReplayJob, ReplayKind, ReplayResult};
-pub use session::{
-    SearchMethod, SearchPlan, SearchPlanBuilder, SearchSession, TwoStageOutcome,
-};
+pub use method::{asha_par, Method, MethodContext, SearchMethod};
+pub use session::{SearchPlan, SearchPlanBuilder, SearchSession, TwoStageOutcome};
 
 use crate::predict::{PredictContext, Strategy};
 
@@ -129,30 +133,15 @@ impl TrajectorySet {
     ) -> Vec<f64> {
         strategy.predict(&self.predict_context(day_stop, subset))
     }
-}
 
-/// Equally spaced stopping days: every `every` days starting at `every`
-/// (the paper's T_stop construction, Appendix A.5).
-pub fn equally_spaced_stops(days: usize, every: usize) -> Vec<usize> {
-    if every == 0 {
-        return Vec::new();
-    }
-    (1..)
-        .map(|i| i * every)
-        .take_while(|&d| d < days)
-        .collect()
-}
-
-/// Synthetic trajectory sets shared by the search-layer unit tests.
-#[cfg(test)]
-pub(crate) mod testkit {
-    use super::TrajectorySet;
-    use crate::util::prng::Rng;
-
-    /// Synthetic trajectory set: config quality ordered by index, shared
-    /// day-level hardness wobble, 1 cluster (stratified degenerates).
+    /// Synthetic trajectory set for tests, benches, and the
+    /// cross-registry matrix suites: config quality ordered by index
+    /// (config 0 is the ground-truth best), a shared day-level hardness
+    /// wobble, a warm-up transient, and a single cluster (stratified
+    /// prediction degenerates to the aggregate). Deterministic in
+    /// `seed`.
     pub fn toy(n_cfg: usize, days: usize, spd: usize, seed: u64) -> TrajectorySet {
-        let mut rng = Rng::new(seed);
+        let mut rng = crate::util::prng::Rng::new(seed);
         let mut step_losses = Vec::new();
         for c in 0..n_cfg {
             let quality = 0.4 + 0.02 * c as f64;
@@ -189,6 +178,30 @@ pub(crate) mod testkit {
             cluster_loss_sums,
             eval_cluster_counts: vec![1000],
         }
+    }
+}
+
+/// Equally spaced stopping days: every `every` days starting at `every`
+/// (the paper's T_stop construction, Appendix A.5).
+pub fn equally_spaced_stops(days: usize, every: usize) -> Vec<usize> {
+    if every == 0 {
+        return Vec::new();
+    }
+    (1..)
+        .map(|i| i * every)
+        .take_while(|&d| d < days)
+        .collect()
+}
+
+/// Synthetic trajectory sets shared by the search-layer unit tests
+/// (shim over the public [`TrajectorySet::toy`]).
+#[cfg(test)]
+pub(crate) mod testkit {
+    use super::TrajectorySet;
+
+    /// See [`TrajectorySet::toy`].
+    pub fn toy(n_cfg: usize, days: usize, spd: usize, seed: u64) -> TrajectorySet {
+        TrajectorySet::toy(n_cfg, days, spd, seed)
     }
 }
 

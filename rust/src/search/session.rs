@@ -1,62 +1,53 @@
 //! The unified two-stage search session: the paper's paradigm as a
 //! first-class API.
 //!
-//! A [`SearchPlan`] names *what* to search — a method (one-shot,
-//! performance-based / Algorithm 1, late starting, Hyperband), a
-//! prediction [`Strategy`], a sub-sampling cost multiplier, an optional
-//! budget cap, and the stage-2 finalist count. A
-//! [`SearchDriver`](super::SearchDriver) names *where* the observations
-//! come from — bank replay ([`ReplayDriver`](super::ReplayDriver)) or
-//! live training ([`LiveDriver`](super::LiveDriver)). Every strategy is
-//! written exactly once here against the driver trait; there are no
-//! per-backend copies of the pruning loop.
+//! A [`SearchPlan`] names *what* to search — a search [`Method`]
+//! resolved from the `search::method` registry (one-shot,
+//! performance-based / Algorithm 1, late starting, Hyperband, ASHA,
+//! budget-greedy probing), a prediction [`Strategy`], a sub-sampling
+//! cost multiplier, an optional budget cap, and the stage-2 finalist
+//! count. A [`SearchDriver`](super::SearchDriver) names *where* the
+//! observations come from — bank replay
+//! ([`ReplayDriver`](super::ReplayDriver)) or live training
+//! ([`LiveDriver`](super::LiveDriver)). Every method is written exactly
+//! once against the driver trait; there are no per-backend copies of
+//! any pruning loop.
 //!
 //! [`SearchSession::run`] executes stage 1 (identify promising configs
 //! cheaply); [`SearchSession::run_two_stage`] realizes the paper's full
 //! paradigm — identify the top-k under the plan, then resume and finish
 //! *only those* to the full horizon, reporting the combined relative
-//! cost C.
+//! cost C. Both stages charge the session's shared
+//! [`CostLedger`](super::CostLedger), so the per-config compute account
+//! always reconciles with the reported steps and costs.
 
+use super::cost::{self, CostLedger};
 use super::driver::{ReplayDriver, SearchDriver};
-use super::{cost, hyperband, SearchOutcome, TrajectorySet};
+use super::method::{Method, MethodContext};
+use super::{SearchOutcome, TrajectorySet};
 use crate::err;
 use crate::metrics;
 use crate::predict::Strategy;
 use crate::util::error::Result;
 
-/// Which search method stage 1 runs. All methods are driven through the
-/// same [`SearchDriver`] trait.
-#[derive(Clone, Debug)]
-pub enum SearchMethod {
-    /// One-shot early stopping (§4.1.1): stop everything at `day_stop`,
-    /// rank by the prediction strategy.
-    OneShot { day_stop: usize },
-    /// Performance-based stopping — the paper's Algorithm 1. With
-    /// constant prediction and rho = 1/2 this is successive halving.
-    PerformanceBased { stop_days: Vec<usize>, rho: f64 },
-    /// Late starting (§B.4): train only over `[start_day, day_stop)`,
-    /// rank by the mean observed day loss.
-    LateStart { start_day: usize, day_stop: usize },
-    /// Hyperband brackets over Algorithm 1 (the §2 extension).
-    Hyperband { eta: f64, brackets_seed: u64 },
-}
-
 /// A validated search plan: method × prediction strategy × data-reduction
 /// multiplier × budget × finalist count. Build via [`SearchPlan::one_shot`]
-/// and friends; [`SearchPlanBuilder::build`] rejects invalid parameters
-/// instead of panicking.
+/// and friends (or [`SearchPlan::with_method`] for any registry method);
+/// [`SearchPlanBuilder::build`] rejects invalid parameters instead of
+/// panicking.
 #[derive(Clone, Debug)]
 pub struct SearchPlan {
-    /// Which search method stage 1 runs.
-    pub method: SearchMethod,
+    /// Which search method stage 1 runs (registry handle; see
+    /// [`Method::parse`] and `nshpo methods`).
+    pub method: Method,
     /// Prediction strategy used at every stopping day (registry handle;
     /// see [`Strategy::parse`] and `nshpo strategies`).
     pub strategy: Strategy,
     /// Sub-sampling cost multiplier (§4.1.2), applied to every reported
     /// relative cost C.
     pub plan_mult: f64,
-    /// Cap on the stage-1 relative cost C (after `plan_mult`); Algorithm 1
-    /// stops advancing once the next segment would exceed it.
+    /// Cap on the stage-1 relative cost C (after `plan_mult`); methods
+    /// stop advancing once the next segment would exceed it.
     pub budget: Option<f64>,
     /// Finalists stage 2 resumes to the full horizon.
     pub top_k: usize,
@@ -65,23 +56,30 @@ pub struct SearchPlan {
 impl SearchPlan {
     /// One-shot early stopping at `day_stop` (§4.1.1).
     pub fn one_shot(day_stop: usize) -> SearchPlanBuilder {
-        SearchPlanBuilder::new(SearchMethod::OneShot { day_stop })
+        SearchPlanBuilder::new(Method::one_shot(day_stop))
     }
 
     /// Performance-based stopping (Algorithm 1) with the given stopping
     /// days and pruning ratio `rho`.
     pub fn performance_based(stop_days: Vec<usize>, rho: f64) -> SearchPlanBuilder {
-        SearchPlanBuilder::new(SearchMethod::PerformanceBased { stop_days, rho })
+        SearchPlanBuilder::new(Method::performance_based(stop_days, rho))
     }
 
     /// Late starting over `[start_day, day_stop)` (§B.4).
     pub fn late_start(start_day: usize, day_stop: usize) -> SearchPlanBuilder {
-        SearchPlanBuilder::new(SearchMethod::LateStart { start_day, day_stop })
+        SearchPlanBuilder::new(Method::late_start(start_day, day_stop))
     }
 
     /// Hyperband brackets over Algorithm 1 (the §2 extension).
     pub fn hyperband(eta: f64, brackets_seed: u64) -> SearchPlanBuilder {
-        SearchPlanBuilder::new(SearchMethod::Hyperband { eta, brackets_seed })
+        SearchPlanBuilder::new(Method::hyperband(eta, brackets_seed))
+    }
+
+    /// A plan around any registered (or custom) search [`Method`] — the
+    /// entry point for `Method::parse` tags like `asha@3` and
+    /// `budget_greedy@0.4`.
+    pub fn with_method(method: Method) -> SearchPlanBuilder {
+        SearchPlanBuilder::new(method)
     }
 }
 
@@ -94,7 +92,7 @@ impl SearchPlan {
 ///
 /// ```
 /// use nshpo::predict::Strategy;
-/// use nshpo::search::SearchPlan;
+/// use nshpo::search::{Method, SearchPlan};
 ///
 /// let plan = SearchPlan::performance_based(vec![3, 6, 9], 0.5)
 ///     .strategy(Strategy::parse("stratified@5").unwrap())
@@ -104,6 +102,13 @@ impl SearchPlan {
 ///     .unwrap();
 /// assert_eq!(plan.top_k, 2);
 /// assert_eq!(plan.strategy.tag(), "stratified@5");
+/// assert_eq!(plan.method.tag(), "perf@0.5[3,6,9]");
+///
+/// // any registry method slots in the same way
+/// let plan = SearchPlan::with_method(Method::parse("asha@3").unwrap())
+///     .build()
+///     .unwrap();
+/// assert_eq!(plan.method.tag(), "asha@3");
 ///
 /// // build() returns errors instead of panicking on bad parameters:
 /// assert!(SearchPlan::performance_based(vec![3], 1.5).build().is_err());
@@ -111,7 +116,7 @@ impl SearchPlan {
 /// assert!(SearchPlan::one_shot(6).budget(-1.0).build().is_err());
 /// ```
 pub struct SearchPlanBuilder {
-    method: SearchMethod,
+    method: Method,
     strategy: Strategy,
     plan_mult: f64,
     budget: Option<f64>,
@@ -119,7 +124,7 @@ pub struct SearchPlanBuilder {
 }
 
 impl SearchPlanBuilder {
-    fn new(method: SearchMethod) -> SearchPlanBuilder {
+    fn new(method: Method) -> SearchPlanBuilder {
         SearchPlanBuilder {
             method,
             strategy: Strategy::constant(),
@@ -157,7 +162,9 @@ impl SearchPlanBuilder {
     }
 
     /// Validate and build. Every rejection is an error, not a panic —
-    /// CLI and live callers feed user input straight in.
+    /// CLI and live callers feed user input straight in. Method-specific
+    /// parameters are validated by the method itself
+    /// ([`SearchMethod::validate`](super::SearchMethod::validate)).
     pub fn build(self) -> Result<SearchPlan> {
         if !(self.plan_mult.is_finite() && self.plan_mult > 0.0) {
             return Err(err!("plan_mult must be finite and > 0, got {}", self.plan_mult));
@@ -170,36 +177,7 @@ impl SearchPlanBuilder {
         if self.top_k == 0 {
             return Err(err!("top_k must be >= 1"));
         }
-        match &self.method {
-            SearchMethod::OneShot { day_stop } => {
-                if *day_stop == 0 {
-                    return Err(err!("one-shot day_stop must be >= 1"));
-                }
-            }
-            SearchMethod::PerformanceBased { stop_days, rho } => {
-                if !(rho.is_finite() && (0.0..1.0).contains(rho)) {
-                    return Err(err!("rho must be in [0, 1), got {rho}"));
-                }
-                if stop_days.contains(&0) {
-                    return Err(err!("stopping days must be >= 1 (got day 0)"));
-                }
-            }
-            SearchMethod::LateStart { start_day, day_stop } => {
-                if day_stop <= start_day {
-                    return Err(err!(
-                        "late start needs day_stop > start_day, got [{start_day}, {day_stop})"
-                    ));
-                }
-            }
-            SearchMethod::Hyperband { eta, .. } => {
-                if !(eta.is_finite() && *eta > 1.0) {
-                    return Err(err!("hyperband eta must be > 1, got {eta}"));
-                }
-                if self.budget.is_some() {
-                    return Err(err!("budget caps are not supported for hyperband brackets"));
-                }
-            }
-        }
+        self.method.validate(self.budget)?;
         Ok(SearchPlan {
             method: self.method,
             strategy: self.strategy,
@@ -236,17 +214,19 @@ pub struct TwoStageOutcome {
     pub steps_trained: Vec<usize>,
 }
 
-/// One search over one driver: the only entry point to the strategy
-/// implementations, shared verbatim between replay and live backends.
+/// One search over one driver: binds a plan, a backend, and the shared
+/// [`CostLedger`] both stages charge.
 pub struct SearchSession<'d> {
     plan: SearchPlan,
     driver: &'d mut dyn SearchDriver,
+    ledger: CostLedger,
 }
 
 impl<'d> SearchSession<'d> {
-    /// Bind a validated plan to a backend driver.
+    /// Bind a validated plan to a backend driver (with a fresh ledger).
     pub fn new(plan: SearchPlan, driver: &'d mut dyn SearchDriver) -> SearchSession<'d> {
-        SearchSession { plan, driver }
+        let ledger = CostLedger::new(driver.n_configs(), driver.total_steps());
+        SearchSession { plan, driver, ledger }
     }
 
     /// The plan this session runs.
@@ -254,44 +234,27 @@ impl<'d> SearchSession<'d> {
         &self.plan
     }
 
-    /// Stage 1: identify promising configs under the plan. The reported
-    /// cost includes the plan's sub-sampling multiplier.
+    /// The per-config compute ledger, charged by every stage the session
+    /// has run so far. Reconciles with the outcome's `steps_trained`.
+    pub fn ledger(&self) -> &CostLedger {
+        &self.ledger
+    }
+
+    /// Stage 1: identify promising configs under the plan, scheduling
+    /// through the plan's [`Method`]. The reported cost includes the
+    /// plan's sub-sampling multiplier.
     pub fn run(&mut self) -> Result<SearchOutcome> {
-        // Budget is specified post-multiplier; the core works pre-multiplier.
+        // Budget is specified post-multiplier; the methods work
+        // pre-multiplier.
         let budget = self.plan.budget.map(|b| b / self.plan.plan_mult);
-        let strategy = self.plan.strategy.clone();
-        let mut out = match &self.plan.method {
-            SearchMethod::OneShot { day_stop } => {
-                run_one_shot(self.driver, &strategy, *day_stop, budget)?
-            }
-            SearchMethod::PerformanceBased { stop_days, rho } => {
-                let subset: Vec<usize> = (0..self.driver.n_configs()).collect();
-                let core =
-                    algorithm1(self.driver, &strategy, stop_days, *rho, &subset, budget)?;
-                SearchOutcome {
-                    ranking: core.ranking,
-                    cost: cost::empirical(&core.steps_trained, self.driver.total_steps()),
-                    steps_trained: core.steps_trained,
-                }
-            }
-            SearchMethod::LateStart { start_day, day_stop } => {
-                run_late_start(self.driver, *start_day, *day_stop, budget)?
-            }
-            SearchMethod::Hyperband { eta, brackets_seed } => {
-                let hb = hyperband::hyperband_driver(
-                    self.driver,
-                    &strategy,
-                    *eta,
-                    *brackets_seed,
-                )?;
-                // The driver tracked every bracket's training, so the
-                // empirical-cost audit holds: empirical(steps) == hb.cost.
-                let steps_trained: Vec<usize> = (0..self.driver.n_configs())
-                    .map(|c| self.driver.steps_trained(c))
-                    .collect();
-                SearchOutcome { ranking: hb.ranking, cost: hb.cost, steps_trained }
-            }
-        };
+        let method = self.plan.method.clone();
+        let mut ctx = MethodContext::new(
+            &mut *self.driver,
+            self.plan.strategy.clone(),
+            budget,
+            &mut self.ledger,
+        );
+        let mut out = method.schedule(&mut ctx)?;
         out.cost *= self.plan.plan_mult;
         Ok(out)
     }
@@ -307,7 +270,17 @@ impl<'d> SearchSession<'d> {
         let finalists: Vec<usize> = stage1.ranking[..k].to_vec();
 
         let days = self.driver.days();
-        self.driver.train_to(&finalists, days)?;
+        // Stage 2 trains through a ledgered context too, so the shared
+        // ledger covers both stages.
+        {
+            let mut ctx = MethodContext::new(
+                &mut *self.driver,
+                self.plan.strategy.clone(),
+                None,
+                &mut self.ledger,
+            );
+            ctx.train_to(&finalists, days)?;
+        }
 
         let scores = self.driver.final_scores(&finalists);
         let order = metrics::ranking_from_scores(&scores);
@@ -328,169 +301,6 @@ impl<'d> SearchSession<'d> {
             steps_trained,
         })
     }
-}
-
-// ------------------------------------------------------ the shared cores
-
-/// Whole days of single-config training a relative-cost budget can pay
-/// for; an error if it cannot cover even one.
-fn affordable_days(budget: f64, days: usize) -> Result<usize> {
-    let afford = (budget * days as f64).floor() as usize;
-    if afford == 0 {
-        return Err(err!("budget {budget} cannot cover even one day of {days}"));
-    }
-    Ok(afford)
-}
-
-fn run_one_shot(
-    driver: &mut dyn SearchDriver,
-    strategy: &Strategy,
-    day_stop: usize,
-    budget: Option<f64>,
-) -> Result<SearchOutcome> {
-    let days = driver.days();
-    let mut day_stop = day_stop.clamp(1, days);
-    if let Some(b) = budget {
-        day_stop = day_stop.min(affordable_days(b, days)?);
-    }
-    let all: Vec<usize> = (0..driver.n_configs()).collect();
-    driver.train_to(&all, day_stop)?;
-    let preds = driver.predict(strategy, day_stop, &all);
-    let steps_trained: Vec<usize> = all.iter().map(|&c| driver.steps_trained(c)).collect();
-    Ok(SearchOutcome {
-        ranking: metrics::ranking_from_scores(&preds),
-        cost: cost::one_shot(day_stop * driver.steps_per_day(), driver.total_steps()),
-        steps_trained,
-    })
-}
-
-fn run_late_start(
-    driver: &mut dyn SearchDriver,
-    start_day: usize,
-    day_stop: usize,
-    budget: Option<f64>,
-) -> Result<SearchOutcome> {
-    let days = driver.days();
-    let start = start_day.min(days - 1);
-    let mut stop = day_stop.clamp(start + 1, days);
-    if let Some(b) = budget {
-        stop = stop.min(start + affordable_days(b, days)?);
-    }
-    let all: Vec<usize> = (0..driver.n_configs()).collect();
-    driver.start_at(&all, start)?;
-    driver.train_to(&all, stop)?;
-    // NOTE: replaying a late start from full-data trajectories is an
-    // approximation (the real late-started model would warm up from
-    // scratch); the live driver runs it exactly. For ranking purposes
-    // the warm-up bias is shared across configs.
-    let from = start.min(stop - 1);
-    let preds: Vec<f64> = all.iter().map(|&c| driver.window_mean(c, from, stop)).collect();
-    let steps_trained: Vec<usize> = all.iter().map(|&c| driver.steps_trained(c)).collect();
-    Ok(SearchOutcome {
-        ranking: metrics::ranking_from_scores(&preds),
-        cost: cost::one_shot((stop - start) * driver.steps_per_day(), driver.total_steps()),
-        steps_trained,
-    })
-}
-
-/// Outcome of the Algorithm-1 core over a subset of configs.
-pub(crate) struct Algo1Out {
-    /// Global config ids, best first (subset members only).
-    pub ranking: Vec<usize>,
-    /// Steps trained, aligned with the input subset.
-    pub steps_trained: Vec<usize>,
-}
-
-/// The paper's Algorithm 1, written once against the driver trait: at
-/// each stopping day, predict the remaining configs' final metrics,
-/// prune the worst `rho` fraction, train the rest onward. Survivors are
-/// ranked by their observed (full-horizon) performance ahead of the
-/// pruned tail (lines 8, 11-12). `budget` (pre-multiplier, measured over
-/// `subset`) stops advancing once the next segment would exceed it;
-/// remaining configs are then ranked by prediction at the last observed
-/// day.
-pub(crate) fn algorithm1(
-    driver: &mut dyn SearchDriver,
-    strategy: &Strategy,
-    stop_days: &[usize],
-    rho: f64,
-    subset: &[usize],
-    budget: Option<f64>,
-) -> Result<Algo1Out> {
-    let days_total = driver.days();
-    let spd = driver.steps_per_day();
-    let mut days: Vec<usize> = stop_days
-        .iter()
-        .copied()
-        .filter(|&d| d >= 1 && d < days_total)
-        .collect();
-    days.sort_unstable();
-    days.dedup();
-    days.push(days_total); // final segment
-
-    let budget_steps =
-        budget.map(|b| (b * (subset.len() * days_total * spd) as f64).floor() as usize);
-
-    let mut remaining: Vec<usize> = subset.to_vec();
-    let mut tail: Vec<usize> = Vec::new(); // pruned, best-first
-    let mut spent = 0usize;
-    let mut seg_start = 0usize;
-    let mut truncated = false;
-
-    for (seg, &day) in days.iter().enumerate() {
-        if let Some(cap) = budget_steps {
-            let seg_cost = remaining.len() * (day - seg_start) * spd;
-            if spent + seg_cost > cap {
-                truncated = true;
-                break;
-            }
-        }
-        driver.train_to(&remaining, day)?;
-        spent += remaining.len() * (day - seg_start) * spd;
-        seg_start = day;
-        let is_final = seg == days.len() - 1;
-        if is_final || remaining.len() <= 1 {
-            continue;
-        }
-
-        // Predict + prune (Algorithm 1 lines 5-10).
-        let preds = driver.predict(strategy, day, &remaining);
-        let order = metrics::ranking_from_scores(&preds); // best-first, local idx
-        let n_prune =
-            (((remaining.len() as f64) * rho).floor() as usize).min(remaining.len() - 1);
-        if n_prune == 0 {
-            continue;
-        }
-        let cut = remaining.len() - n_prune;
-        // Line 8: newly pruned go ahead of earlier-pruned.
-        let mut pruned: Vec<usize> = order[cut..].iter().map(|&i| remaining[i]).collect();
-        pruned.extend(tail);
-        tail = pruned;
-        remaining = order[..cut].iter().map(|&i| remaining[i]).collect();
-    }
-
-    // Lines 11-12: survivors ranked by observed performance, ahead of
-    // everything pruned. Under a truncating budget the survivors never
-    // reached the horizon, so they rank by prediction instead.
-    let scores: Vec<f64> = if truncated {
-        if seg_start == 0 {
-            return Err(err!(
-                "budget {:?} too small to train {} configs through one stopping day",
-                budget,
-                subset.len()
-            ));
-        }
-        driver.predict(strategy, seg_start, &remaining)
-    } else {
-        driver.final_scores(&remaining)
-    };
-    let order = metrics::ranking_from_scores(&scores);
-    let mut ranking: Vec<usize> = order.iter().map(|&i| remaining[i]).collect();
-    ranking.extend(tail);
-
-    let steps_trained: Vec<usize> =
-        subset.iter().map(|&c| driver.steps_trained(c)).collect();
-    Ok(Algo1Out { ranking, steps_trained })
 }
 
 #[cfg(test)]
@@ -653,6 +463,16 @@ mod tests {
         assert!(SearchPlan::one_shot(6).plan_mult(f64::INFINITY).build().is_err());
     }
 
+    #[test]
+    fn build_rejects_bad_registry_methods() {
+        assert!(SearchPlan::with_method(Method::asha(1.0, None)).build().is_err());
+        assert!(SearchPlan::with_method(Method::asha(3.0, Some(0))).build().is_err());
+        assert!(SearchPlan::with_method(Method::budget_greedy(0.0)).build().is_err());
+        assert!(SearchPlan::with_method(Method::budget_greedy(1.5)).build().is_err());
+        assert!(SearchPlan::with_method(Method::asha(3.0, Some(2))).build().is_ok());
+        assert!(SearchPlan::with_method(Method::budget_greedy(0.5)).build().is_ok());
+    }
+
     // ---------------------------------------------------------- budget
 
     #[test]
@@ -701,6 +521,8 @@ mod tests {
             (0.25, SearchPlan::one_shot(12).budget(0.25)),
             (0.30, SearchPlan::late_start(2, 12).budget(0.30)),
             (0.40, SearchPlan::performance_based(vec![3, 6, 9], 0.5).budget(0.40)),
+            (0.50, SearchPlan::with_method(Method::asha(2.0, None)).budget(0.50)),
+            (0.40, SearchPlan::with_method(Method::budget_greedy(0.9)).budget(0.40)),
         ] {
             let mut d = ReplayDriver::new(&ts);
             let out = SearchSession::new(plan.build().unwrap(), &mut d).run().unwrap();
@@ -715,6 +537,45 @@ mod tests {
         assert_eq!(out.steps_trained.len(), 12);
         let audit = cost::empirical(&out.steps_trained, ts.total_steps());
         assert_eq!(audit.to_bits(), out.cost.to_bits());
+    }
+
+    // ------------------------------------------------------ the ledger
+
+    #[test]
+    fn session_ledger_reconciles_with_stage1_outcome() {
+        let ts = toy(10, 12, 8, 18);
+        for builder in [
+            SearchPlan::one_shot(6),
+            SearchPlan::performance_based(vec![3, 6, 9], 0.5),
+            SearchPlan::hyperband(3.0, 7),
+            SearchPlan::with_method(Method::asha(3.0, None)),
+        ] {
+            let plan = builder.build().unwrap();
+            let tag = plan.method.tag();
+            let mut d = ReplayDriver::new(&ts);
+            let mut session = SearchSession::new(plan, &mut d);
+            let out = session.run().unwrap();
+            assert_eq!(
+                session.ledger().spent_steps(),
+                &out.steps_trained[..],
+                "[{tag}] ledger diverged from the step audit"
+            );
+            assert_eq!(session.ledger().total_committed(), 0, "[{tag}]");
+        }
+    }
+
+    #[test]
+    fn session_ledger_covers_both_stages() {
+        let ts = toy(10, 12, 8, 19);
+        let plan = SearchPlan::one_shot(4).top_k(3).build().unwrap();
+        let mut d = ReplayDriver::new(&ts);
+        let mut session = SearchSession::new(plan, &mut d);
+        let two = session.run_two_stage().unwrap();
+        assert_eq!(session.ledger().spent_steps(), &two.steps_trained[..]);
+        assert_eq!(
+            session.ledger().relative_cost().to_bits(),
+            two.combined_cost.to_bits()
+        );
     }
 
     // ------------------------------------------------------- two-stage

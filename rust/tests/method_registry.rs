@@ -1,0 +1,185 @@
+//! Acceptance gates for the search-method registry (mirroring
+//! `strategy_registry.rs` on the scheduling axis):
+//!
+//! 1. The four legacy policies produce **bit-identical** outcomes
+//!    through the `SearchMethod` trait compared to the `SearchPlan`
+//!    convenience constructors that carried the pre-registry enum's
+//!    exact parameters (and the numeric pins in `search::session`'s
+//!    unit tests hold the absolute behaviour).
+//! 2. Method-tag parsing is a total function into `Result`: every
+//!    malformed tag shape is rejected with an error listing the valid
+//!    tags, never a panic.
+//! 3. Canonical tags round-trip through `Method::parse`, and the
+//!    `nshpo methods` listing (`registry_table()`) names every tag.
+
+use nshpo::search::{method, Method, SearchOutcome, SearchPlan, TrajectorySet};
+
+fn toy() -> TrajectorySet {
+    TrajectorySet::toy(9, 12, 6, 0xA11)
+}
+
+fn assert_same_outcome(a: &SearchOutcome, b: &SearchOutcome, label: &str) {
+    assert_eq!(a.ranking, b.ranking, "{label}: ranking diverged");
+    assert_eq!(a.steps_trained, b.steps_trained, "{label}: steps diverged");
+    assert_eq!(
+        a.cost.to_bits(),
+        b.cost.to_bits(),
+        "{label}: cost diverged ({} vs {})",
+        a.cost,
+        b.cost
+    );
+}
+
+/// The `SearchPlan::*` constructors carry the exact parameters the
+/// pre-registry enum stored; the same parameters resolved from registry
+/// tags must replay bit-identically — constructor/parse divergence is a
+/// silent behaviour fork.
+#[test]
+fn legacy_constructors_match_their_registry_tags_bit_for_bit() {
+    let ts = toy();
+    let pairs: [(&str, nshpo::search::SearchPlanBuilder); 4] = [
+        ("one-shot@6", SearchPlan::one_shot(6)),
+        ("perf@0.5[3,6,9]", SearchPlan::performance_based(vec![3, 6, 9], 0.5)),
+        ("late-start@3,9", SearchPlan::late_start(3, 9)),
+        ("hyperband@3", SearchPlan::hyperband(3.0, 7)),
+    ];
+    for (tag, builder) in pairs {
+        let via_ctor = builder.run_replay(&ts).unwrap();
+        let via_tag = SearchPlan::with_method(Method::parse(tag).unwrap())
+            .run_replay(&ts)
+            .unwrap();
+        assert_same_outcome(&via_ctor, &via_tag, tag);
+    }
+}
+
+#[test]
+fn every_registered_method_searches_a_trajectory_set() {
+    let ts = toy();
+    for tag in method::tags() {
+        let m = Method::parse(tag).unwrap();
+        let out = SearchPlan::with_method(m)
+            .run_replay(&ts)
+            .unwrap_or_else(|e| panic!("[{tag}] search failed: {e:#}"));
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..ts.n_configs()).collect::<Vec<_>>(), "[{tag}]");
+        assert!(out.cost <= 1.0 + 1e-12, "[{tag}] cost {}", out.cost);
+        assert!(out.cost > 0.0, "[{tag}] free search");
+        // the steps audit backs the reported cost for every empirical
+        // method; the analytic ones (one-shot, late-start) agree too
+        // because every config trains the same window
+        let audit = nshpo::search::cost::empirical(&out.steps_trained, ts.total_steps());
+        assert!(
+            (audit - out.cost).abs() < 1e-12,
+            "[{tag}] audit {audit} vs cost {}",
+            out.cost
+        );
+    }
+}
+
+#[test]
+fn registry_tags_parse_and_roundtrip() {
+    for info in &method::REGISTRY {
+        let m = Method::parse(info.tag).unwrap();
+        let canonical = m.tag();
+        assert!(
+            canonical == info.tag || canonical.starts_with(&format!("{}@", info.tag)),
+            "{} -> {canonical}",
+            info.tag
+        );
+        let again = Method::parse(&canonical).unwrap();
+        assert_eq!(again.tag(), canonical);
+        assert!(!m.provenance().is_empty());
+    }
+    assert!(method::tags().len() >= 6);
+}
+
+#[test]
+fn parameterized_canonical_tags_roundtrip() {
+    for m in [
+        Method::one_shot(6),
+        Method::performance_based(vec![3, 6, 9], 0.5),
+        Method::performance_based(vec![4], 0.25),
+        // explicit-empty stop days (no stopping) round-trip too
+        Method::performance_based(vec![], 0.5),
+        Method::late_start(2, 8),
+        Method::hyperband(3.0, 7),
+        Method::hyperband(2.5, 11),
+        Method::asha(3.0, None),
+        Method::asha(2.0, Some(4)),
+        Method::budget_greedy(0.4),
+    ] {
+        let tag = m.tag();
+        let reparsed =
+            Method::parse(&tag).unwrap_or_else(|e| panic!("{tag:?} did not parse: {e:#}"));
+        assert_eq!(reparsed.tag(), tag);
+    }
+}
+
+/// One rejection test per malformed tag shape: every parse failure is an
+/// `Err` whose message names the registered tags.
+#[test]
+fn malformed_tags_are_rejected_with_the_valid_tag_list() {
+    let shapes = [
+        ("unknown base", "no_such_method"),
+        ("zero one-shot day", "one-shot@0"),
+        ("non-numeric one-shot day", "one-shot@soon"),
+        ("rho out of range", "perf@1.5"),
+        ("negative rho", "perf@-0.1"),
+        ("non-numeric rho", "perf@half"),
+        ("zero stop day", "perf@0.5[0,3]"),
+        ("non-numeric stop days", "perf@0.5[x]"),
+        ("late-start missing comma", "late-start@5"),
+        ("late-start empty window", "late-start@6,6"),
+        ("late-start inverted window", "late-start@6,3"),
+        ("hyperband eta at the boundary", "hyperband@1"),
+        ("non-numeric hyperband eta", "hyperband@fast"),
+        ("non-numeric hyperband seed", "hyperband@3,teal"),
+        ("asha eta too small", "asha@1"),
+        ("asha empty parameter", "asha@"),
+        ("asha trailing garbage", "asha@3x"),
+        ("zero asha rungs", "asha@3,0"),
+        ("non-numeric asha rungs", "asha@3,many"),
+        ("asha extra parameter", "asha@3,2,1"),
+        ("zero budget_greedy cap", "budget_greedy@0"),
+        ("budget_greedy cap above one", "budget_greedy@2"),
+        ("non-numeric budget_greedy cap", "budget_greedy@lots"),
+        ("empty tag", ""),
+    ];
+    for (shape, tag) in shapes {
+        let err = Method::parse(tag)
+            .err()
+            .unwrap_or_else(|| panic!("{shape}: {tag:?} was accepted"));
+        let msg = format!("{err:#}");
+        for registered in method::tags() {
+            assert!(
+                msg.contains(registered),
+                "{shape}: error for {tag:?} does not list {registered:?}: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn methods_listing_names_every_registered_tag() {
+    let table = method::registry_table();
+    for tag in method::tags() {
+        assert!(table.contains(tag), "methods table misses {tag}:\n{table}");
+    }
+    for info in &method::REGISTRY {
+        assert!(
+            table.contains(info.reference),
+            "missing reference for {}",
+            info.tag
+        );
+    }
+}
+
+#[test]
+fn debug_and_eq_use_tags() {
+    let a = Method::parse("asha@3,4").unwrap();
+    let b = Method::asha(3.0, Some(4));
+    assert_eq!(a, b);
+    assert_eq!(format!("{a:?}"), "Method(asha@3,4)");
+    assert_ne!(a, Method::parse("asha@3").unwrap());
+}

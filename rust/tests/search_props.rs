@@ -202,6 +202,143 @@ fn prop_regret_decreases_with_later_stopping_on_clean_curves() {
     });
 }
 
+// ---------------------------------------- metrics::ranking properties
+
+/// Random (truth, scores) pair; scores are quantized to one decimal so
+/// ties are common and the tie-break path is actually exercised.
+fn gen_truth_and_tied_scores(rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+    let n = 2 + rng.below(15) as usize;
+    let truth: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 2.0)).collect();
+    let scores: Vec<f64> = (0..n)
+        .map(|_| (rng.uniform_range(0.0, 1.0) * 10.0).floor() / 10.0)
+        .collect();
+    (truth, scores)
+}
+
+#[test]
+fn prop_ranking_from_scores_is_permutation_and_deterministic_under_ties() {
+    propcheck::check(
+        301,
+        200,
+        gen_truth_and_tied_scores,
+        |(_, scores)| {
+            let r = metrics::ranking_from_scores(scores);
+            // permutation
+            let mut sorted = r.clone();
+            sorted.sort_unstable();
+            if sorted != (0..scores.len()).collect::<Vec<_>>() {
+                return Err(format!("not a permutation: {r:?}"));
+            }
+            // deterministic: the same scores rank identically every time
+            if metrics::ranking_from_scores(scores) != r {
+                return Err("ranking not deterministic".into());
+            }
+            // ascending by score, ties broken by ascending index
+            for w in r.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                if scores[a] > scores[b] {
+                    return Err(format!("scores out of order at {a},{b}"));
+                }
+                if scores[a] == scores[b] && a > b {
+                    return Err(format!("tie not broken by index at {a},{b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ground_truth_ranking_has_zero_regret_at_every_k() {
+    propcheck::check(
+        302,
+        200,
+        gen_truth_and_tied_scores,
+        |(truth, _)| {
+            if truth.is_empty() {
+                return Ok(()); // shrunk pair: nothing to check
+            }
+            let r_star = metrics::ranking_from_scores(truth);
+            for k in 1..=truth.len() {
+                let g = metrics::regret_at_k(&r_star, truth, k);
+                if g != 0.0 {
+                    return Err(format!("ground-truth ranking has regret@{k} = {g}"));
+                }
+            }
+            if metrics::regret(&r_star, truth) != 0.0 {
+                return Err("ground-truth ranking has nonzero full regret".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_per_and_normalized_regret_bounded_in_unit_interval() {
+    propcheck::check(
+        303,
+        200,
+        gen_truth_and_tied_scores,
+        |(truth, scores)| {
+            if truth.len() != scores.len() || truth.is_empty() {
+                return Ok(()); // shrunk pair: nothing to check
+            }
+            let r = metrics::ranking_from_scores(scores);
+            let p = metrics::per(&r, truth);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("PER out of range: {p}"));
+            }
+            // Every per-position regret term is bounded by the truth
+            // range, so regret@k normalized by that range lives in [0,1].
+            let hi = truth.iter().cloned().fold(f64::MIN, f64::max);
+            let lo = truth.iter().cloned().fold(f64::MAX, f64::min);
+            let range = (hi - lo).max(1e-12);
+            for k in 1..=truth.len() {
+                let nr = metrics::normalized_regret_at_k(&r, truth, k, range);
+                if !(0.0..=1.0 + 1e-12).contains(&nr) {
+                    return Err(format!("normalized regret@{k} out of [0,1]: {nr}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cumulative_regret_is_monotone_in_k() {
+    // regret@k averages non-negative per-position terms, so the
+    // *cumulative* form k * regret@k is non-decreasing in k (plain
+    // regret@k itself can move either way as the average dilutes or
+    // absorbs a bad position), and regret@n is exactly the full regret.
+    propcheck::check(
+        304,
+        200,
+        gen_truth_and_tied_scores,
+        |(truth, scores)| {
+            if truth.len() != scores.len() || truth.is_empty() {
+                return Ok(()); // shrunk pair: nothing to check
+            }
+            let r = metrics::ranking_from_scores(scores);
+            let n = truth.len();
+            let mut prev_total = 0.0f64;
+            for k in 1..=n {
+                let total = metrics::regret_at_k(&r, truth, k) * k as f64;
+                if total + 1e-12 < prev_total {
+                    return Err(format!(
+                        "cumulative regret shrank at k={k}: {prev_total} -> {total}"
+                    ));
+                }
+                prev_total = total;
+            }
+            let full = metrics::regret(&r, truth) * n as f64;
+            if (full - prev_total).abs() > 1e-9 {
+                return Err(format!("regret@n {prev_total} != full regret {full}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_per_against_bruteforce_definition() {
     propcheck::check(
