@@ -11,7 +11,9 @@
 //!   proxy step / pjrt step            -> L3 + L1/L2 training hot path
 //!
 //! Filter with: cargo bench -- <substring>. Output quoted in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf. `cargo bench -- --json` additionally runs the
+//! replay comparison benches and writes BENCH_replay.json (raw numbers
+//! plus derived speedups) at the repo root.
 
 use nshpo::data::{Plan, Stream, StreamConfig};
 use nshpo::metrics;
@@ -29,6 +31,7 @@ const MIN_SAMPLE: Duration = Duration::from_millis(40);
 
 fn main() {
     let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let json_out = std::env::args().any(|a| a == "--json");
     let mut results: Vec<String> = Vec::new();
     let mut run = |name: &str, f: &mut dyn FnMut() -> BenchResult| {
         if let Some(fil) = &filter {
@@ -229,7 +232,10 @@ fn main() {
     // the acceptance bar is >= 2x throughput at 4+ workers. (Placed after
     // the `run` helper's last use so both results can be compared here.)
     let matches = |name: &str| filter.as_ref().map_or(true, |f| name.contains(f.as_str()));
-    if matches("replay/serial") || matches("replay/parallel") {
+    // Structured results + derived metrics for `--json` (BENCH_replay.json).
+    let mut json_results: Vec<BenchResult> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    if json_out || matches("replay/serial") || matches("replay/parallel") {
         let replay_ts = Arc::new(surrogate::sample_task(
             &surrogate::SurrogateConfig { n_configs: 32, ..Default::default() },
             21,
@@ -279,6 +285,12 @@ fn main() {
             r_serial.mean_ns() / r_par.mean_ns(),
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         );
+        derived.push((
+            "replay_parallel_speedup".into(),
+            r_serial.mean_ns() / r_par.mean_ns(),
+        ));
+        json_results.push(r_serial);
+        json_results.push(r_par);
     }
 
     // ------------------------------------------------ live batch cache
@@ -377,6 +389,104 @@ fn main() {
             "chunking amortization: map_chunked is {:.2}x the throughput of map_indexed on tiny items",
             r_item.mean_ns() / r_chunk.mean_ns()
         );
+    }
+
+    // -------------------------------------------- sharded bank replay
+    // Cold monolithic v2 load+replay vs cold lazy v3 open+replay of one
+    // (family, plan) matrix cell of a 4-family synthetic bank: the v2
+    // path deserializes every run on every iteration, the v3 path only
+    // the shards holding the requested cell (budgeted to 2 resident).
+    if json_out || matches("replay/monolithic_cell") || matches("replay/sharded_cell") {
+        use nshpo::search::ReplayKind;
+        use nshpo::train::{
+            save_v3, Bank, BankMeta, CompactOptions, RunKey, RunRecord, ShardStore,
+        };
+
+        const B_DAYS: usize = 12;
+        const B_SPD: usize = 4;
+        const B_K: usize = 4;
+        const B_CFG: usize = 512;
+        let mut bank = Bank::empty(BankMeta {
+            days: B_DAYS,
+            steps_per_day: B_SPD,
+            n_clusters: B_K,
+            eval_days: 3,
+            stream_seed: 17,
+            scenario: "criteo_like".into(),
+            day_cluster_counts: vec![vec![64; B_K]; B_DAYS],
+            eval_cluster_counts: vec![256; B_K],
+        });
+        for f in 0..4 {
+            let family = format!("f{f}");
+            for c in 0..B_CFG {
+                let step_losses: Vec<f32> = (0..B_DAYS * B_SPD)
+                    .map(|t| 0.4 + 1e-4 * c as f32 + 1e-3 * ((t * 31 + c * 7) % 100) as f32)
+                    .collect();
+                bank.runs.push(RunRecord {
+                    key: RunKey {
+                        family: family.clone(),
+                        variant: format!("{family}_v"),
+                        label: format!("{family}-cfg{c:04}"),
+                        hparams: [-3.0, -2.0, 1e-6],
+                        plan_tag: "full".into(),
+                        seed: 0,
+                        scenario: "criteo_like".into(),
+                    },
+                    step_losses,
+                    cluster_loss_sums: vec![1.0; B_DAYS * B_K],
+                    examples_trained: 1 << 20,
+                    examples_seen: 1 << 20,
+                });
+            }
+        }
+        let v2_path = std::env::temp_dir().join("nshpo_bench_bank.nsbk");
+        bank.save(&v2_path).unwrap();
+        let v3_dir = std::env::temp_dir().join("nshpo_bench_bank_v3");
+        let _ = std::fs::remove_dir_all(&v3_dir);
+        save_v3(&bank, &v3_dir, &CompactOptions { max_shard_runs: 128 }, 4).unwrap();
+        drop(bank);
+
+        let r_mono = bench("replay/monolithic_cell", 3, MIN_SAMPLE, || {
+            let b = Bank::load(&v2_path).unwrap();
+            let (ts, _) = b.trajectory_set("f0", "full", 0).unwrap();
+            black_box(SearchPlan::one_shot(6).run_replay(&ts).unwrap())
+        });
+        println!("{}", r_mono.report());
+        results.push(r_mono.report());
+
+        let r_shard = bench("replay/sharded_cell", 3, MIN_SAMPLE, || {
+            let store = Arc::new(ShardStore::open(&v3_dir).unwrap().with_cache_budget(2));
+            black_box(
+                ReplayJob::from_store(
+                    &store,
+                    "f0",
+                    "full",
+                    0,
+                    ReplayKind::OneShot { strategy: Strategy::constant(), day_stop: 6 },
+                )
+                .execute(),
+            )
+        });
+        println!("{}", r_shard.report());
+        results.push(r_shard.report());
+
+        println!(
+            "sharded replay: {:.2}x vs monolithic v2 on one cell of a 4-family bank \
+             ({B_CFG} configs/family, both cold per iteration)",
+            r_mono.mean_ns() / r_shard.mean_ns(),
+        );
+        derived.push((
+            "sharded_vs_monolithic_speedup".into(),
+            r_mono.mean_ns() / r_shard.mean_ns(),
+        ));
+        json_results.push(r_mono);
+        json_results.push(r_shard);
+    }
+
+    if json_out {
+        let doc = nshpo::util::bench::json_report(&json_results, &derived);
+        std::fs::write("BENCH_replay.json", &doc).expect("writing BENCH_replay.json");
+        println!("wrote BENCH_replay.json ({} results)", json_results.len());
     }
 
     println!("\n{} benches run", results.len());

@@ -60,6 +60,48 @@ fi
 # by name so the gate stays loud if the target is ever dropped.
 cargo test -q --test method_matrix
 
+echo "== bank gate =="
+# The sharded v3 pipeline end to end: build (streamed to shards) ->
+# inspect -> replay search; v2 build -> migrate -> inspect -> replay;
+# compact across formats; and a corrupt shard must fail loudly. The
+# bit-identity acceptance suite is part of `cargo test` above; run it by
+# name so the gate stays loud if the target is ever dropped.
+cargo test -q --test bank_shards
+BANKTMP=$(mktemp -d)
+trap 'rm -rf "$BANKTMP"' EXIT
+# v3 build writes a sharded directory with an index
+cargo run --release -- bank --proxy --quick --out "$BANKTMP/bank" \
+  --days 4 --steps-per-day 3 --batch 64 --thin 9 --variance-seeds 2 \
+  --max-shard-runs 2 --quiet
+test -f "$BANKTMP/bank/index.nsbi"
+cargo run --release -- bank inspect --bank "$BANKTMP/bank" | grep -q "v3"
+cargo run --release -- search --bank "$BANKTMP/bank" --method one-shot@2 \
+  --family fm --plan full >/dev/null
+# v2 build still works, migrates to v3, and replays identically well
+cargo run --release -- bank --proxy --quick --format v2 --out "$BANKTMP/old" \
+  --days 4 --steps-per-day 3 --batch 64 --thin 9 --variance-seeds 2 --quiet
+cargo run --release -- bank inspect --bank "$BANKTMP/old.nsbk" | grep -q "v2"
+cargo run --release -- bank migrate --src "$BANKTMP/old.nsbk" \
+  --out "$BANKTMP/migrated" --max-shard-runs 2
+cargo run --release -- search --bank "$BANKTMP/migrated" --method one-shot@2 \
+  --family fm --plan full >/dev/null
+# compact merges v3 + v2 sources into one balanced bank
+cargo run --release -- bank compact --src "$BANKTMP/bank" \
+  --out "$BANKTMP/compacted" --max-shard-runs 4
+cargo run --release -- bank inspect --bank "$BANKTMP/compacted" | grep -q "runs"
+# a truncated shard must fail the replay loudly, naming the file
+shard=$(ls "$BANKTMP/bank"/shard-0000-*.nss | head -n1)
+truncate -s -5 "$shard" 2>/dev/null || python3 - "$shard" <<'EOF'
+import os, sys
+p = sys.argv[1]
+os.truncate(p, os.path.getsize(p) - 5)
+EOF
+if cargo run --release -- search --bank "$BANKTMP/bank" --method one-shot@2 \
+    --family fm --plan full >/dev/null 2>&1; then
+  echo "FAIL: truncated shard was accepted" >&2
+  exit 1
+fi
+
 echo "== rustdoc gate =="
 # The crate carries #![warn(missing_docs)]; the public API must document
 # cleanly (docs/API.md is the committed markdown rendering of it).

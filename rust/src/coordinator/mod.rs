@@ -8,13 +8,13 @@ pub mod live;
 use crate::data::{Plan, Stream, StreamConfig};
 use crate::search::sweep::{self, ConfigSpec};
 use crate::train::{
-    run_full, Bank, ClusterSource, ClusteredStream, LogisticProxy, OnlineModel, PjrtOnline,
-    RunKey,
+    run_full, Bank, BankAppender, BankIndex, BankMeta, ClusterSource, ClusteredStream,
+    LogisticProxy, OnlineModel, PjrtOnline, RunKey, RunTrajectory,
 };
 use crate::util::error::{Context, Result};
 use crate::util::threadpool::ThreadPool;
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Everything `build_bank` needs to train one bank.
@@ -74,9 +74,83 @@ struct Job {
     seed: i32,
 }
 
+/// Where `build_into` delivers trained runs. `start` fires exactly once,
+/// after clustering fixes the stream metadata and before any run is
+/// recorded; `record` fires once per finished run, in deterministic job
+/// order regardless of the training backend's parallelism.
+trait RunSink {
+    fn start(&mut self, meta: &BankMeta) -> Result<()>;
+    fn record(&mut self, key: RunKey, traj: RunTrajectory) -> Result<()>;
+}
+
+/// In-memory sink backing [`build_bank`].
+struct CollectSink {
+    bank: Option<Bank>,
+}
+
+impl RunSink for CollectSink {
+    fn start(&mut self, meta: &BankMeta) -> Result<()> {
+        self.bank = Some(Bank::empty(meta.clone()));
+        Ok(())
+    }
+
+    fn record(&mut self, key: RunKey, traj: RunTrajectory) -> Result<()> {
+        self.bank.as_mut().expect("sink started").push(key, traj);
+        Ok(())
+    }
+}
+
+/// Streaming v3 sink backing [`build_bank_v3`]: each run is framed and
+/// appended to its shard file as soon as it is recorded, so the build
+/// never holds the serialized bank in memory.
+struct AppendSink<'a> {
+    dir: &'a Path,
+    max_shard_runs: usize,
+    appender: Option<BankAppender>,
+}
+
+impl RunSink for AppendSink<'_> {
+    fn start(&mut self, meta: &BankMeta) -> Result<()> {
+        self.appender = Some(
+            BankAppender::create(self.dir, meta.clone())?
+                .with_max_shard_runs(self.max_shard_runs),
+        );
+        Ok(())
+    }
+
+    fn record(&mut self, key: RunKey, traj: RunTrajectory) -> Result<()> {
+        self.appender.as_mut().expect("sink started").append(key, traj)?;
+        Ok(())
+    }
+}
+
 /// Train every (config, plan, seed) combination once and collect the
-/// trajectory bank.
+/// trajectory bank in memory.
 pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
+    let mut sink = CollectSink { bank: None };
+    build_into(opts, &mut sink)?;
+    Ok(sink.bank.expect("sink started"))
+}
+
+/// Train the same job set as [`build_bank`] but stream every finished
+/// run into a sharded v3 bank directory at `out_dir` via
+/// [`BankAppender`], returning the written index. `max_shard_runs`
+/// bounds runs per shard file (0 = never rotate within a
+/// (family, plan) group).
+pub fn build_bank_v3(
+    opts: &BankOptions,
+    out_dir: &Path,
+    max_shard_runs: usize,
+) -> Result<BankIndex> {
+    let mut sink = AppendSink { dir: out_dir, max_shard_runs, appender: None };
+    build_into(opts, &mut sink)?;
+    Ok(sink.appender.expect("sink started").finish()?)
+}
+
+/// The shared training body: build the clustered stream, enumerate the
+/// sweep jobs, train each one (proxy fan-out or PJRT by-variant), and
+/// hand every finished run to `sink` in deterministic job order.
+fn build_into(opts: &BankOptions, sink: &mut dyn RunSink) -> Result<()> {
     let mut stream = Stream::try_new(opts.stream.clone())?;
     if opts.batch_cache {
         // One generation per step for the whole bank build: the
@@ -117,7 +191,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
         );
     }
 
-    let mut bank = Bank {
+    sink.start(&BankMeta {
         days: opts.stream.days,
         steps_per_day: opts.stream.steps_per_day,
         n_clusters: cs.n_clusters,
@@ -126,8 +200,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
         scenario: scenario_tag.clone(),
         day_cluster_counts: cs.day_cluster_counts.clone(),
         eval_cluster_counts: cs.eval_cluster_counts.clone(),
-        runs: Vec::new(),
-    };
+    })?;
 
     if opts.use_proxy {
         // Proxy runs are cheap, independent, and only borrow the
@@ -159,7 +232,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
             traj
         });
         for (job, traj) in jobs.iter().zip(trajs) {
-            bank.push(key_of(job, &scenario_tag), traj);
+            sink.record(key_of(job, &scenario_tag), traj)?;
         }
     } else {
         // PJRT: group jobs by variant so each artifact compiles once.
@@ -190,7 +263,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
                     job.spec.hparams(),
                     job.seed as u64,
                 )?;
-                bank.push(key_of(&job, &scenario_tag), traj);
+                sink.record(key_of(&job, &scenario_tag), traj)?;
                 finished += 1;
                 if opts.verbose {
                     eprintln!(
@@ -203,7 +276,7 @@ pub fn build_bank(opts: &BankOptions) -> Result<Bank> {
             }
         }
     }
-    Ok(bank)
+    Ok(())
 }
 
 fn key_of(job: &Job, scenario: &str) -> RunKey {
@@ -370,6 +443,27 @@ mod tests {
             .map(|r| r.key.seed)
             .collect();
         assert_eq!(seeds, vec![1, 2]);
+    }
+
+    #[test]
+    fn v3_build_matches_in_memory_build() {
+        let opts = quick_opts();
+        let bank = build_bank(&opts).unwrap();
+        let dir = std::env::temp_dir().join("nshpo_coord_bank_v3");
+        let _ = std::fs::remove_dir_all(&dir);
+        let index = build_bank_v3(&opts, &dir, 3).unwrap();
+        assert_eq!(index.n_runs(), bank.runs.len());
+        assert!(index.shards.len() > 1); // max_shard_runs=3 splits fm/full
+        let store = crate::train::ShardStore::open(&dir).unwrap();
+        for plan in ["full", "pos1.00neg0.50"] {
+            let (a, la) = bank.trajectory_set("fm", plan, 0).unwrap();
+            let (b, lb) = store.trajectory_set("fm", plan, 0).unwrap().unwrap();
+            assert_eq!(la, lb);
+            assert_eq!(a.step_losses, b.step_losses);
+            assert_eq!(a.cluster_loss_sums, b.cluster_loss_sums);
+            assert_eq!(a.eval_cluster_counts, b.eval_cluster_counts);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -16,9 +16,12 @@ use super::plot::{self, Series};
 use crate::err;
 use crate::metrics;
 use crate::predict::{LawKind, Strategy};
-use crate::search::{equally_spaced_stops, ReplayExecutor, ReplayJob, ReplayKind, ReplayResult, TrajectorySet};
+use crate::search::{
+    equally_spaced_stops, ReplayExecutor, ReplayJob, ReplayKind, ReplayResult, TrajectorySet,
+    TsSource,
+};
 use crate::surrogate;
-use crate::train::{variance, Bank};
+use crate::train::{variance, ShardStore};
 use crate::util::error::Result;
 use crate::util::stats;
 use std::path::Path;
@@ -57,22 +60,22 @@ fn reference(ts: &TrajectorySet) -> f64 {
 /// The acceptable normalized-regret level: the metric movement caused by
 /// seed randomness alone, measured from the bank's multi-seed runs
 /// (paper §5.1.2 — 0.1% at Criteo scale; larger at this repo's reduced
-/// scale, so the *measured* floor is what the target lines use).
-fn seed_floor(bank: &Bank) -> f64 {
-    let mut by_label: std::collections::BTreeMap<&str, Vec<Vec<f32>>> = Default::default();
-    for r in &bank.runs {
-        if r.key.plan_tag == "full" {
-            by_label.entry(&r.key.label).or_default().push(r.step_losses.clone());
-        }
+/// scale, so the *measured* floor is what the target lines use). Loads
+/// only the full-plan shards.
+fn seed_floor(store: &ShardStore) -> Result<f64> {
+    let mut by_label: std::collections::BTreeMap<String, Vec<Vec<f32>>> = Default::default();
+    for r in store.collect_runs(|k| k.plan_tag == "full")? {
+        by_label.entry(r.key.label).or_default().push(r.step_losses);
     }
-    let eval_steps = bank.eval_days * bank.steps_per_day;
+    let meta = store.meta();
+    let eval_steps = meta.eval_days * meta.steps_per_day;
     for trs in by_label.values() {
         if trs.len() >= 2 {
             let evals = variance::eval_metrics(trs, eval_steps);
-            return variance::seed_relative_std(&evals);
+            return Ok(variance::seed_relative_std(&evals));
         }
     }
-    metrics::TARGET_NORMALIZED_REGRET
+    Ok(metrics::TARGET_NORMALIZED_REGRET)
 }
 
 struct CurvePoint {
@@ -145,16 +148,10 @@ fn to_series(name: &str, pts: &[CurvePoint], use_per: bool) -> Series {
     }
 }
 
-fn families_in(bank: &Bank) -> Vec<String> {
-    let mut fams: Vec<String> = bank.runs.iter().map(|r| r.key.family.clone()).collect();
-    fams.sort();
-    fams.dedup();
-    fams
-}
-
-fn need(bank: &Bank, family: &str, plan: &str) -> Result<Arc<TrajectorySet>> {
-    bank.trajectory_set(family, plan, 0)
-        .map(|(ts, _)| Arc::new(ts))
+fn need(store: &ShardStore, family: &str, plan: &str) -> Result<Arc<TrajectorySet>> {
+    store
+        .trajectory_set(family, plan, 0)?
+        .map(|(ts, _)| ts)
         .ok_or_else(|| err!("bank missing family={family} plan={plan} (re-run `nshpo bank`)"))
 }
 
@@ -184,43 +181,45 @@ const RHO: f64 = 0.5; // paper Appendix A.5
 /// teardown each time); callers generating several exhibits should build
 /// one `ReplayExecutor` and loop [`run_figure_with`] instead, as the CLI
 /// does.
-pub fn run_figure(id: &str, bank: Option<&Bank>, out_dir: &Path) -> Result<()> {
-    run_figure_with(id, bank, out_dir, &ReplayExecutor::from_env())
+pub fn run_figure(id: &str, store: Option<&ShardStore>, out_dir: &Path) -> Result<()> {
+    run_figure_with(id, store, out_dir, &ReplayExecutor::from_env())
 }
 
 /// Run one exhibit's generator, submitting its replay jobs through the
 /// given executor (serial and parallel executors produce byte-identical
-/// files).
+/// files). The store may be any bank format — generators answer
+/// inventory questions from its index and stream shards only for the
+/// cells they actually replay.
 pub fn run_figure_with(
     id: &str,
-    bank: Option<&Bank>,
+    store: Option<&ShardStore>,
     out_dir: &Path,
     exec: &ReplayExecutor,
 ) -> Result<()> {
     match id {
         "6" => return fig6(out_dir, exec),
-        "t1" => return table1(bank, out_dir),
+        "t1" => return table1(store, out_dir),
         _ => {}
     }
-    let bank = bank.ok_or_else(|| err!("figure {id} needs a bank (run `nshpo bank`)"))?;
+    let store = store.ok_or_else(|| err!("figure {id} needs a bank (run `nshpo bank`)"))?;
     match id {
-        "1" => fig1(bank, out_dir),
-        "2" => fig2(bank, out_dir),
-        "3" => fig3(bank, out_dir, exec),
-        "4" => fig4_8(bank, out_dir, true, exec),
-        "8" => fig4_8(bank, out_dir, false, exec),
-        "5" => fig5_9(bank, out_dir, true, exec),
-        "9" => fig5_9(bank, out_dir, false, exec),
-        "7" => fig7(bank, out_dir, exec),
-        "10" => fig10(bank, out_dir, exec),
-        "11" => fig11(bank, out_dir, exec),
-        "seeds" => seeds(bank, out_dir),
-        "summary" => summary(bank, out_dir, exec),
-        "rho" => ablation_rho(bank, out_dir, exec),
-        "slices" => ablation_slices(bank, out_dir, exec),
-        "hb" => ablation_hyperband(bank, out_dir, exec),
-        "strat" => ablation_strategies(bank, out_dir, exec),
-        "methods" => ablation_methods(bank, out_dir, exec),
+        "1" => fig1(store, out_dir),
+        "2" => fig2(store, out_dir),
+        "3" => fig3(store, out_dir, exec),
+        "4" => fig4_8(store, out_dir, true, exec),
+        "8" => fig4_8(store, out_dir, false, exec),
+        "5" => fig5_9(store, out_dir, true, exec),
+        "9" => fig5_9(store, out_dir, false, exec),
+        "7" => fig7(store, out_dir, exec),
+        "10" => fig10(store, out_dir, exec),
+        "11" => fig11(store, out_dir, exec),
+        "seeds" => seeds(store, out_dir),
+        "summary" => summary(store, out_dir, exec),
+        "rho" => ablation_rho(store, out_dir, exec),
+        "slices" => ablation_slices(store, out_dir, exec),
+        "hb" => ablation_hyperband(store, out_dir, exec),
+        "strat" => ablation_strategies(store, out_dir, exec),
+        "methods" => ablation_methods(store, out_dir, exec),
         other => Err(err!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
     }
 }
@@ -228,13 +227,14 @@ pub fn run_figure_with(
 // ------------------------------------------------------------- figures
 
 /// Fig 1: cluster sizes vary over the training window.
-fn fig1(bank: &Bank, out: &Path) -> Result<()> {
-    let days = bank.days;
-    let k = bank.n_clusters;
+fn fig1(store: &ShardStore, out: &Path) -> Result<()> {
+    let meta = store.meta();
+    let days = meta.days;
+    let k = meta.n_clusters;
     // pick the 6 clusters with the largest share swing
     let share = |d: usize, c: usize| -> f64 {
-        let total: u32 = bank.day_cluster_counts[d].iter().sum();
-        bank.day_cluster_counts[d][c] as f64 / total.max(1) as f64
+        let total: u32 = meta.day_cluster_counts[d].iter().sum();
+        meta.day_cluster_counts[d][c] as f64 / total.max(1) as f64
     };
     let mut swings: Vec<(usize, f64)> = (0..k)
         .map(|c| {
@@ -254,7 +254,7 @@ fn fig1(bank: &Bank, out: &Path) -> Result<()> {
         })
         .collect();
     let text = plot::render(
-        &format!("Figure 1: cluster sizes over the training window [{}]", bank.scenario),
+        &format!("Figure 1: cluster sizes over the training window [{}]", meta.scenario),
         "day",
         "share of examples",
         &series,
@@ -265,12 +265,12 @@ fn fig1(bank: &Bank, out: &Path) -> Result<()> {
 
 /// Fig 2: (left) per-config day-mean loss; (right) loss relative to a
 /// reference configuration.
-fn fig2(bank: &Bank, out: &Path) -> Result<()> {
+fn fig2(store: &ShardStore, out: &Path) -> Result<()> {
     // one representative config per family on full data
     let mut series_abs = Vec::new();
     let mut raw: Vec<(String, Vec<f64>)> = Vec::new();
-    for fam in families_in(bank) {
-        if let Some((ts, labels)) = bank.trajectory_set(&fam, "full", 0) {
+    for fam in store.families() {
+        if let Some((ts, labels)) = store.trajectory_set(&fam, "full", 0)? {
             // top-truth config as representative (post-warm-up regime:
             // the paper's Fig 2 configurations are all near the optimum)
             let gt = ts.ground_truth();
@@ -337,14 +337,14 @@ fn fig2(bank: &Bank, out: &Path) -> Result<()> {
 
 /// Fig 3: the headline — ours (perf-based + stratified + neg-0.5
 /// sub-sampling) vs basic early stopping vs basic sub-sampling, per family.
-fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+fn fig3(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let mut text = String::new();
     let mut csv = String::new();
-    for fam in families_in(bank) {
-        let ts_full = need(bank, &fam, "full")?;
+    for fam in store.families() {
+        let ts_full = need(store, &fam, "full")?;
         let mut series = Vec::new();
-        if let Ok(ts_neg) = need(bank, &fam, NEG05) {
-            let mult = bank.plan_multiplier(&fam, NEG05);
+        if let Ok(ts_neg) = need(store, &fam, NEG05) {
+            let mult = store.plan_multiplier(&fam, NEG05);
             series.push(to_series(
                 "ours: perf-stopping + stratified + neg0.5",
                 &perf_curve(exec, &ts_neg, &strat_stratified(), mult, RHO),
@@ -361,9 +361,8 @@ fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
         // evaluated against the full-data ground truth
         let mut sub_jobs: Vec<ReplayJob> = Vec::new();
         for tag in ["full", "uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
-            if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
-                let mult = bank.plan_multiplier(&fam, tag);
-                let ts_sub = Arc::new(ts_sub);
+            if let Some((ts_sub, _)) = store.trajectory_set(&fam, tag, 0)? {
+                let mult = store.plan_multiplier(&fam, tag);
                 let days = ts_sub.days;
                 sub_jobs.push(
                     ReplayJob::one_shot(&ts_sub, &Strategy::constant(), days)
@@ -391,14 +390,14 @@ fn fig3(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
 }
 
 /// Figs 4 & 8: one-shot vs performance-based per prediction strategy.
-fn fig4_8(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Result<()> {
-    let fams = if moe_only { vec![pick_family(bank, "moe")] } else { families_in(bank) };
+fn fig4_8(store: &ShardStore, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Result<()> {
+    let fams = if moe_only { vec![pick_family(store, "moe")] } else { store.families() };
     let fig = if moe_only { "4" } else { "8" };
     let mut text = String::new();
     let mut csv = String::new();
     for fam in fams {
-        let (plan, mult) = pick_plan(bank, &fam);
-        let ts = need(bank, &fam, plan)?;
+        let (plan, mult) = pick_plan(store, &fam);
+        let ts = need(store, &fam, plan)?;
         for (sname, strat) in [
             ("constant", Strategy::constant()),
             ("trajectory", strat_trajectory()),
@@ -424,14 +423,14 @@ fn fig4_8(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Res
 }
 
 /// Figs 5 & 9: prediction strategies compared (under perf-based stopping).
-fn fig5_9(bank: &Bank, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Result<()> {
-    let fams = if moe_only { vec![pick_family(bank, "moe")] } else { families_in(bank) };
+fn fig5_9(store: &ShardStore, out: &Path, moe_only: bool, exec: &ReplayExecutor) -> Result<()> {
+    let fams = if moe_only { vec![pick_family(store, "moe")] } else { store.families() };
     let fig = if moe_only { "5" } else { "9" };
     let mut text = String::new();
     let mut csv = String::new();
     for fam in fams {
-        let (plan, mult) = pick_plan(bank, &fam);
-        let ts = need(bank, &fam, plan)?;
+        let (plan, mult) = pick_plan(store, &fam);
+        let ts = need(store, &fam, plan)?;
         let series = vec![
             to_series("constant", &perf_curve(exec, &ts, &Strategy::constant(), mult, RHO), false),
             to_series("trajectory", &perf_curve(exec, &ts, &strat_trajectory(), mult, RHO), false),
@@ -475,12 +474,12 @@ fn fig6(out: &Path, exec: &ReplayExecutor) -> Result<()> {
 }
 
 /// Fig 7: stratified-constant vs stratified-trajectory.
-fn fig7(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+fn fig7(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let mut text = String::new();
     let mut csv = String::new();
-    for fam in families_in(bank) {
-        let (plan, mult) = pick_plan(bank, &fam);
-        let ts = need(bank, &fam, plan)?;
+    for fam in store.families() {
+        let (plan, mult) = pick_plan(store, &fam);
+        let ts = need(store, &fam, plan)?;
         let strat_const = Strategy::stratified(None, 5);
         let series = vec![
             to_series(
@@ -509,10 +508,10 @@ fn fig7(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
 }
 
 /// Fig 10: choice of law for trajectory prediction (regret@3 and PER).
-fn fig10(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let (plan, mult) = pick_plan(bank, &fam);
-    let ts = need(bank, &fam, plan)?;
+fn fig10(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let (plan, mult) = pick_plan(store, &fam);
+    let ts = need(store, &fam, plan)?;
     let laws = [
         LawKind::InversePowerLaw,
         LawKind::VaporPressure,
@@ -547,9 +546,9 @@ fn fig10(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
 }
 
 /// Fig 11: late starting vs early stopping (PER).
-fn fig11(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let ts = need(bank, &fam, "full")?;
+fn fig11(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let ts = need(store, &fam, "full")?;
     let gt = ts.ground_truth();
     let mut series = Vec::new();
     let mut csv = String::from("start_day,stop_day,cost,per\n");
@@ -561,7 +560,7 @@ fn fig11(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
         let jobs: Vec<ReplayJob> = stops
             .iter()
             .map(|&stop| ReplayJob {
-                ts: Arc::clone(&ts),
+                src: TsSource::from(&ts),
                 kind: ReplayKind::LateStart { start_day: start, day_stop: stop },
                 plan_mult: 1.0,
                 tag: format!("start{start}/stop{stop}"),
@@ -587,7 +586,7 @@ fn fig11(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
 }
 
 /// Table 1: law formulations, plus fitted parameters on real day-means.
-fn table1(bank: Option<&Bank>, out: &Path) -> Result<()> {
+fn table1(store: Option<&ShardStore>, out: &Path) -> Result<()> {
     let mut text = String::from(
         "Table 1: trajectory-prediction laws (f as a function of data fraction D)\n\
          \n\
@@ -598,9 +597,9 @@ fn table1(bank: Option<&Bank>, out: &Path) -> Result<()> {
          | LogPower        | A / (1 + (D/exp(B))^alpha)      | 3       |\n\
          | ExponentialLaw  | E - exp(-A D^alpha + B)         | 4       |\n",
     );
-    if let Some(bank) = bank {
-        let fam = pick_family(bank, "moe");
-        if let Some((ts, labels)) = bank.trajectory_set(&fam, "full", 0) {
+    if let Some(store) = store {
+        let fam = pick_family(store, "moe");
+        if let Some((ts, labels)) = store.trajectory_set(&fam, "full", 0)? {
             let dm = ts.day_means(0, ts.days / 2);
             let pts: Vec<(f64, f64)> = dm
                 .iter()
@@ -623,18 +622,14 @@ fn table1(bank: Option<&Bank>, out: &Path) -> Result<()> {
 }
 
 /// §5.1.2 seed variance: sets the normalized-regret target.
-fn seeds(bank: &Bank, out: &Path) -> Result<()> {
-    let runs: Vec<&crate::train::RunRecord> = bank
-        .runs
-        .iter()
-        .filter(|r| r.key.plan_tag == "full")
-        .collect();
-    // group by label, keep labels with >= 2 seeds
+fn seeds(store: &ShardStore, out: &Path) -> Result<()> {
+    // group by label, keep labels with >= 2 seeds (full-plan shards only)
     let mut by_label: std::collections::BTreeMap<String, Vec<Vec<f32>>> = Default::default();
-    for r in &runs {
-        by_label.entry(r.key.label.clone()).or_default().push(r.step_losses.clone());
+    for r in store.collect_runs(|k| k.plan_tag == "full")? {
+        by_label.entry(r.key.label).or_default().push(r.step_losses);
     }
-    let eval_steps = bank.eval_days * bank.steps_per_day;
+    let meta = store.meta();
+    let eval_steps = meta.eval_days * meta.steps_per_day;
     let mut text = String::from("Seed-variance analysis (paper §5.1.2)\n");
     let mut csv = String::from("label,n_seeds,rel_std\n");
     let mut any = false;
@@ -667,17 +662,17 @@ fn seeds(bank: &Bank, out: &Path) -> Result<()> {
 /// Headline summary: best cost at which each method first reaches the
 /// acceptable normalized regret@3 (the measured seed floor — the
 /// paper's "10x" claim structure).
-fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let floor = seed_floor(bank);
+fn summary(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let floor = seed_floor(store)?;
     let mut text = format!(
         "Headline summary [scenario {}]: smallest C reaching normalized \
          regret@3 <= {floor:.4} (measured seed floor)\n\
          family | basic early stop | basic subsample | ours (perf+strat+neg0.5)\n",
-        bank.scenario,
+        store.scenario(),
     );
     let mut csv = String::from("family,method,best_cost\n");
-    for fam in families_in(bank) {
-        let ts_full = need(bank, &fam, "full")?;
+    for fam in store.families() {
+        let ts_full = need(store, &fam, "full")?;
         let best = |pts: &[CurvePoint]| -> f64 {
             pts.iter()
                 .filter(|p| p.regret3 <= floor)
@@ -685,8 +680,8 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
                 .fold(f64::MAX, f64::min)
         };
         let es = best(&one_shot_curve(exec, &ts_full, &Strategy::constant(), 1.0));
-        let ours = if let Ok(ts_neg) = need(bank, &fam, NEG05) {
-            let mult = bank.plan_multiplier(&fam, NEG05);
+        let ours = if let Ok(ts_neg) = need(store, &fam, NEG05) {
+            let mult = store.plan_multiplier(&fam, NEG05);
             best(&perf_curve(exec, &ts_neg, &strat_stratified(), mult, RHO))
         } else {
             f64::MAX
@@ -695,13 +690,12 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
         let mut sub_jobs: Vec<ReplayJob> = Vec::new();
         let mut sub_mults: Vec<f64> = Vec::new();
         for tag in ["uni0.5000", "uni0.2500", "uni0.1250", "uni0.0625"] {
-            if let Some((ts_sub, _)) = bank.trajectory_set(&fam, tag, 0) {
-                let ts_sub = Arc::new(ts_sub);
+            if let Some((ts_sub, _)) = store.trajectory_set(&fam, tag, 0)? {
                 let days = ts_sub.days;
                 sub_jobs.push(
                     ReplayJob::one_shot(&ts_sub, &Strategy::constant(), days).with_tag(tag),
                 );
-                sub_mults.push(bank.plan_multiplier(&fam, tag));
+                sub_mults.push(store.plan_multiplier(&fam, tag));
             }
         }
         for (pt, mult) in points_against(&ts_full, &exec.run(sub_jobs)).iter().zip(&sub_mults) {
@@ -728,10 +722,10 @@ fn summary(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
 /// Ablation: the pruning ratio rho — the paper generalizes SHA's fixed
 /// eta=2 to a flexible rho (§2 "Positioning Our Work"); this quantifies
 /// the trade-off that flexibility buys on our workload.
-fn ablation_rho(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let (plan, mult) = pick_plan(bank, &fam);
-    let ts = need(bank, &fam, plan)?;
+fn ablation_rho(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let (plan, mult) = pick_plan(store, &fam);
+    let ts = need(store, &fam, plan)?;
     let rhos = [0.25, 0.5, 0.67, 0.8];
     let spacing_list = spacings(ts.days);
     // all (rho x spacing) replays are one flat job set
@@ -775,10 +769,10 @@ fn ablation_rho(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
 }
 
 /// Ablation: the number of slices L in stratified prediction.
-fn ablation_slices(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let (plan, mult) = pick_plan(bank, &fam);
-    let ts = need(bank, &fam, plan)?;
+fn ablation_slices(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let (plan, mult) = pick_plan(store, &fam);
+    let ts = need(store, &fam, plan)?;
     let ls = [1usize, 3, 5, 10, 20];
     let spacing_list = spacings(ts.days);
     let mut jobs: Vec<ReplayJob> = Vec::new();
@@ -813,10 +807,10 @@ fn ablation_slices(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()>
 }
 
 /// Extension: Hyperband brackets vs plain performance-based stopping.
-fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let (plan, mult) = pick_plan(bank, &fam);
-    let ts = need(bank, &fam, plan)?;
+fn ablation_hyperband(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let (plan, mult) = pick_plan(store, &fam);
+    let ts = need(store, &fam, plan)?;
     let etas = [2.0, 3.0, 4.0];
     // only 3 jobs: spend the executor's spare workers inside each job,
     // on bracket-parallel evaluation (outcome is worker-count-invariant)
@@ -824,7 +818,7 @@ fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<
     let jobs: Vec<ReplayJob> = etas
         .iter()
         .map(|&eta| ReplayJob {
-            ts: Arc::clone(&ts),
+            src: TsSource::from(&ts),
             kind: ReplayKind::Hyperband {
                 strategy: Strategy::constant(),
                 eta,
@@ -862,10 +856,10 @@ fn ablation_hyperband(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<
 /// the registry's own exhibit. One series per `nshpo strategies` tag, so
 /// a newly registered strategy shows up here (and in the CSV) without
 /// touching the harness.
-fn ablation_strategies(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let (plan, mult) = pick_plan(bank, &fam);
-    let ts = need(bank, &fam, plan)?;
+fn ablation_strategies(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let (plan, mult) = pick_plan(store, &fam);
+    let ts = need(store, &fam, plan)?;
     let spacing_list = spacings(ts.days);
     let strategies: Vec<Strategy> = crate::predict::strategy::tags()
         .iter()
@@ -908,10 +902,10 @@ fn ablation_strategies(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result
 /// plus the ASHA work-stealing replay fast path at two extra eta values,
 /// so a newly registered method shows up here (and in the CSV) without
 /// touching the harness.
-fn ablation_methods(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()> {
-    let fam = pick_family(bank, "moe");
-    let (plan, mult) = pick_plan(bank, &fam);
-    let ts = need(bank, &fam, plan)?;
+fn ablation_methods(store: &ShardStore, out: &Path, exec: &ReplayExecutor) -> Result<()> {
+    let fam = pick_family(store, "moe");
+    let (plan, mult) = pick_plan(store, &fam);
+    let ts = need(store, &fam, plan)?;
     let mut jobs: Vec<ReplayJob> = Vec::new();
     // budget_greedy's cap must afford its FIT_DAYS warm-up probe on this
     // bank's horizon (bare tag = 0.5, which short --quick banks cannot
@@ -930,7 +924,7 @@ fn ablation_methods(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()
     let inner_workers = (exec.workers() / 2).max(1);
     for eta in [2.0, 4.0] {
         jobs.push(ReplayJob {
-            ts: Arc::clone(&ts),
+            src: TsSource::from(&ts),
             kind: ReplayKind::Asha {
                 strategy: Strategy::constant(),
                 eta,
@@ -962,17 +956,18 @@ fn ablation_methods(bank: &Bank, out: &Path, exec: &ReplayExecutor) -> Result<()
 // ------------------------------------------------------------- helpers
 
 /// Prefer the neg-0.5 sub-sampled runs when present (the paper's Figs
-/// 4/5/7-9 all use negative sub-sampling at 0.5).
-fn pick_plan<'a>(bank: &Bank, family: &str) -> (&'a str, f64) {
-    if bank.trajectory_set(family, NEG05, 0).is_some() {
-        (NEG05, bank.plan_multiplier(family, NEG05))
+/// 4/5/7-9 all use negative sub-sampling at 0.5). Answered from the
+/// store's index — no shard loads.
+fn pick_plan<'a>(store: &ShardStore, family: &str) -> (&'a str, f64) {
+    if store.has_cell(family, NEG05, 0) {
+        (NEG05, store.plan_multiplier(family, NEG05))
     } else {
         ("full", 1.0)
     }
 }
 
-fn pick_family(bank: &Bank, preferred: &str) -> String {
-    let fams = families_in(bank);
+fn pick_family(store: &ShardStore, preferred: &str) -> String {
+    let fams = store.families();
     if fams.iter().any(|f| f == preferred) {
         preferred.to_string()
     } else {

@@ -22,7 +22,10 @@ use nshpo::search::{
     SearchPlan, SearchSession,
 };
 use nshpo::surrogate;
-use nshpo::train::{Bank, ClusterSource, ClusteredStream};
+use nshpo::train::{
+    migrate, resolve_bank_path, Bank, ClusterSource, ClusteredStream, CompactOptions,
+    ShardStore,
+};
 use nshpo::util::cli::Args;
 use nshpo::util::error::Result;
 use nshpo::util::threadpool::ThreadPool;
@@ -39,7 +42,19 @@ USAGE: nshpo <subcommand> [flags]
             [--scenario criteo_like]  (see `nshpo scenarios`)
             [--no-batch-cache]  (regenerate batches per run)
             [--workers N]  (proxy fan-out; 0/unset = cores - 1)
+            [--format v3|v2]  (v3 default: sharded directory, streamed
+            to disk as runs finish; v2: monolithic .nsbk file)
+            [--max-shard-runs 1024] [--force]  (v3: shard rotation
+            size; replace an existing bank directory)
+  bank compact  --src a[,b,...] --out DIR [--max-shard-runs 1024]
+            [--workers N]  (merge banks of either format into a
+            balanced v3 layout; sources must share stream metadata)
+  bank inspect  --bank results/bank  (header-only summary of either
+            format: shape, scenario, shard count, inventory)
+  bank migrate  --src results/bank.nsbk --out DIR
+            [--max-shard-runs 1024]  (v2 -> v3, bit-identical records)
   figure    --all | --id 3 [--bank results/bank] [--out results]
+            (--bank takes a v3 directory or a v2 .nsbk file)
             [--scenario TAG]  (guard: fail unless the bank was built
             on this scenario)
             [--workers N]  (replay parallelism; 0/unset = cores - 1,
@@ -47,6 +62,8 @@ USAGE: nshpo <subcommand> [flags]
             figure fails)
   search    unified two-stage SearchSession (one Algorithm-1 core):
             backend: [--bank results/bank [--plan full]] | --live
+            (--bank takes a v3 directory or a v2 .nsbk file; v3 loads
+            only the shards the chosen family/plan cell needs)
             [--proxy] [--family fm] [--thin 3]
             [--scenario criteo_like]  (live: pick the regime; replay:
             provenance guard against the bank; e.g. abrupt_shift,
@@ -137,6 +154,16 @@ fn cmd_methods() -> Result<()> {
 }
 
 fn cmd_bank(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("compact") => return bank_compact(args),
+        Some("inspect") => return bank_inspect(args),
+        Some("migrate") => return bank_migrate(args),
+        Some(other) => bail!(
+            "unknown bank subcommand {other:?} (compact | inspect | migrate, \
+             or no subcommand to train a bank)"
+        ),
+        None => {}
+    }
     let mut opts = BankOptions {
         stream: stream_from(args),
         eval_days: args.usize_or("eval-days", 3),
@@ -172,38 +199,113 @@ fn cmd_bank(args: &Args) -> Result<()> {
         opts.plans = vec![Plan::Full, Plan::negative_only(0.5), Plan::Uniform(0.25)];
     }
     let t0 = std::time::Instant::now();
-    let bank = coordinator::build_bank(&opts)?;
     let out = PathBuf::from(args.str_or("out", "results/bank"));
-    let path = out.with_extension("nsbk");
-    bank.save(&path)?;
+    if args.str_or("format", "v3") == "v2" {
+        let bank = coordinator::build_bank(&opts)?;
+        let path = out.with_extension("nsbk");
+        bank.save(&path)?;
+        eprintln!(
+            "bank: {} runs saved to {path:?} in {:.1}s",
+            bank.runs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        // v3 default: runs stream to shard files as they finish, so
+        // the serialized bank never accumulates in memory.
+        if args.has("force") && out.join("index.nsbi").is_file() {
+            std::fs::remove_dir_all(&out)?;
+        }
+        let index = coordinator::build_bank_v3(
+            &opts,
+            &out,
+            args.usize_or("max-shard-runs", 1024),
+        )?;
+        eprintln!(
+            "bank: {} runs in {} shards saved to {out:?} in {:.1}s",
+            index.n_runs(),
+            index.shards.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn bank_workers(args: &Args) -> usize {
+    match args.usize_or("workers", 0) {
+        0 => ThreadPool::default_workers(),
+        w => w,
+    }
+}
+
+fn bank_compact(args: &Args) -> Result<()> {
+    let srcs = args.list("src");
+    if srcs.is_empty() {
+        bail!("bank compact needs --src <bank>[,<bank>...]");
+    }
+    let out = match args.str_opt("out") {
+        Some(o) => PathBuf::from(o),
+        None => bail!("bank compact needs --out <dir>"),
+    };
+    let mut stores = Vec::with_capacity(srcs.len());
+    for s in &srcs {
+        stores.push(ShardStore::open(Path::new(s))?);
+    }
+    let opts = CompactOptions { max_shard_runs: args.usize_or("max-shard-runs", 1024) };
+    let index =
+        nshpo::train::bank::compact::compact(&stores, &out, &opts, bank_workers(args))?;
     eprintln!(
-        "bank: {} runs saved to {path:?} in {:.1}s",
-        bank.runs.len(),
-        t0.elapsed().as_secs_f64()
+        "compacted {} source bank(s) into {out:?}: {} runs across {} shards",
+        srcs.len(),
+        index.n_runs(),
+        index.shards.len()
+    );
+    Ok(())
+}
+
+fn bank_inspect(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.str_or("bank", "results/bank"));
+    print!("{}", Bank::inspect(&path)?.render());
+    Ok(())
+}
+
+fn bank_migrate(args: &Args) -> Result<()> {
+    let src = PathBuf::from(args.str_or("src", "results/bank"));
+    let out = match args.str_opt("out") {
+        Some(o) => PathBuf::from(o),
+        None => bail!("bank migrate needs --out <dir>"),
+    };
+    let opts = CompactOptions { max_shard_runs: args.usize_or("max-shard-runs", 1024) };
+    let index = migrate(&src, &out, &opts, bank_workers(args))?;
+    eprintln!(
+        "migrated {src:?} -> {out:?}: {} runs across {} shards",
+        index.n_runs(),
+        index.shards.len()
     );
     Ok(())
 }
 
 fn cmd_figure(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.str_or("out", "results"));
-    let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
-    let bank = if bank_path.exists() {
-        Some(Bank::load(&bank_path)?)
-    } else {
-        None
+    let bank_arg = PathBuf::from(args.str_or("bank", "results/bank"));
+    // Either format opens transparently: a v3 directory streams shards
+    // lazily as each figure asks for its (family, plan) cell; a v2 file
+    // loads whole.
+    let store = match resolve_bank_path(&bank_arg) {
+        Some(p) => Some(ShardStore::open(&p)?),
+        None => None,
     };
     // --scenario is a provenance guard here: exhibits replay the bank's
     // recorded trajectories, so the scenario is whatever the bank was
     // built on — fail loudly rather than mislabel a figure.
     if let Some(want) = args.str_opt("scenario") {
-        match &bank {
-            Some(b) if nshpo::data::scenario::tags_match(want, &b.scenario) => {}
-            Some(b) => bail!(
-                "bank {bank_path:?} was built on scenario {:?}, not {want:?} \
+        match &store {
+            Some(s) if nshpo::data::scenario::tags_match(want, s.scenario()) => {}
+            Some(s) => bail!(
+                "bank {bank_arg:?} was built on scenario {:?}, not {want:?} \
                  (rebuild with `nshpo bank --scenario {want}`)",
-                b.scenario
+                s.scenario()
             ),
-            None => bail!("--scenario needs a bank (none at {bank_path:?})"),
+            None => bail!("--scenario needs a bank (none at {bank_arg:?})"),
         }
     }
     let ids: Vec<String> = if args.has("all") {
@@ -223,7 +325,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
     };
     let mut failed: Vec<String> = Vec::new();
     for id in ids {
-        if let Err(e) = harness::run_figure_with(&id, bank.as_ref(), &out, &exec) {
+        if let Err(e) = harness::run_figure_with(&id, store.as_ref(), &out, &exec) {
             eprintln!("figure {id}: {e:#}");
             failed.push(id);
         }
@@ -319,35 +421,38 @@ fn report_stage1(out: &SearchOutcome, k: usize, label: impl Fn(usize) -> String)
 }
 
 fn search_replay(args: &Args, stage: usize) -> Result<()> {
-    let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
-    if !bank_path.exists() {
-        bail!("bank {bank_path:?} not found (run `nshpo bank`, or pass --live)");
-    }
-    let bank = Bank::load(&bank_path)?;
+    let bank_arg = PathBuf::from(args.str_or("bank", "results/bank"));
+    let bank_path = match resolve_bank_path(&bank_arg) {
+        Some(p) => p,
+        None => bail!("bank {bank_arg:?} not found (run `nshpo bank`, or pass --live)"),
+    };
+    // Either format opens transparently; v3 banks only deserialize the
+    // shards holding the requested (family, plan) cell.
+    let store = ShardStore::open(&bank_path)?;
     // Provenance guard (same contract as `figure --scenario`): a replay
     // search runs on whatever scenario the bank was built on, so a
     // mismatched request must fail loudly, not mislabel the results.
     if let Some(want) = args.str_opt("scenario") {
-        if !nshpo::data::scenario::tags_match(want, &bank.scenario) {
+        if !nshpo::data::scenario::tags_match(want, store.scenario()) {
             bail!(
                 "bank {bank_path:?} was built on scenario {:?}, not {want:?} \
                  (rebuild with `nshpo bank --scenario {want}`, or use --live)",
-                bank.scenario
+                store.scenario()
             );
         }
     }
     let family = args.str_or("family", "fm");
     let plan_tag = args.str_or("plan", "full");
-    let (ts, labels) = bank
-        .trajectory_set(&family, &plan_tag, 0)
+    let (ts, labels) = store
+        .trajectory_set(&family, &plan_tag, 0)?
         .ok_or_else(|| nshpo::err!("bank missing family={family} plan={plan_tag}"))?;
     // Sub-sampled plans train a fraction of the examples; fold the
     // measured multiplier into every reported cost C (§4.1.2).
-    let mult = bank.plan_multiplier(&family, &plan_tag);
+    let mult = store.plan_multiplier(&family, &plan_tag);
     let plan = plan_from(args, ts.days, mult)?;
     println!(
         "replay search: family={family} plan={plan_tag} scenario={} strategy={} ({} configs x {} steps, cost multiplier {mult:.3})",
-        bank.scenario,
+        store.scenario(),
         plan.strategy.tag(),
         ts.n_configs(),
         ts.total_steps()
@@ -504,19 +609,12 @@ fn cmd_info(args: &Args) -> Result<()> {
         }
         Err(e) => println!("artifacts: {e:#}"),
     }
-    let bank_path = PathBuf::from(args.str_or("bank", "results/bank")).with_extension("nsbk");
-    if bank_path.exists() {
-        let bank = Bank::load(&bank_path)?;
-        println!(
-            "bank {:?}: {} runs, {} days x {} steps/day, {} clusters, scenario {}",
-            bank_path, bank.runs.len(), bank.days, bank.steps_per_day, bank.n_clusters,
-            bank.scenario
-        );
-        for (fam, plan, n) in bank.inventory() {
-            println!("  {fam:<6} {plan:<16} {n} runs");
-        }
-    } else {
-        println!("bank: {bank_path:?} not found");
+    let bank_arg = PathBuf::from(args.str_or("bank", "results/bank"));
+    // Header-only inspection: no run record is deserialized even for
+    // multi-gigabyte banks.
+    match resolve_bank_path(&bank_arg) {
+        Some(p) => print!("{}", Bank::inspect(&p)?.render()),
+        None => println!("bank: {bank_arg:?} not found"),
     }
     Ok(())
 }

@@ -5,10 +5,12 @@
 //! over a recorded trajectory bank: each exhibit decomposes into a set of
 //! independent, pure jobs — (strategy × stopping schedule × law) over a
 //! shared read-only [`TrajectorySet`]. This module expresses that
-//! decomposition explicitly: a [`ReplayJob`] names one replay over an
-//! `Arc<TrajectorySet>`, and [`ReplayExecutor`] fans a job list out on
-//! the in-tree [`ThreadPool`] with order-preserving collection and
-//! per-job wall-clock timing.
+//! decomposition explicitly: a [`ReplayJob`] names one replay over a
+//! [`TsSource`] — either an already-resident `Arc<TrajectorySet>` or a
+//! lazy (family, plan, seed) cell of a [`ShardStore`], resolved only
+//! when the job actually runs — and [`ReplayExecutor`] fans a job list
+//! out on the in-tree [`ThreadPool`] with order-preserving collection
+//! and per-job wall-clock timing.
 //!
 //! Every replay is a deterministic pure function of its job (no shared
 //! mutable state, RNG seeds are explicit), so the parallel path is
@@ -21,9 +23,66 @@ use super::method::{self, Method};
 use super::session::SearchPlanBuilder;
 use super::{SearchOutcome, SearchPlan, TrajectorySet};
 use crate::predict::Strategy;
+use crate::train::ShardStore;
+use crate::util::ser::SerError;
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Where a replay job's trajectories come from.
+///
+/// `Resident` is the classic fully-materialized path; `Bank` defers the
+/// shard loads and `TrajectorySet` assembly to [`TsSource::resolve`], so
+/// a large job matrix holds cheap (store handle, cell key) references
+/// until each job actually executes — the executor's workers then stream
+/// shards through the store's bounded cache, sharing loads via `Arc`.
+#[derive(Clone)]
+pub enum TsSource {
+    /// An already-assembled trajectory set, shared by reference.
+    Resident(Arc<TrajectorySet>),
+    /// A (family, plan, seed) cell of a bank, loaded lazily on execute.
+    Bank {
+        /// The shard store to stream from.
+        store: Arc<ShardStore>,
+        /// Experiment family of the cell.
+        family: String,
+        /// Sub-sampling plan tag of the cell.
+        plan_tag: String,
+        /// Model seed of the cell.
+        seed: i32,
+    },
+}
+
+impl TsSource {
+    /// Materialize the trajectory set (a no-op clone of the `Arc` for
+    /// resident sources). An empty bank cell is an error — jobs are
+    /// built against cells the caller already checked exist.
+    pub fn resolve(&self) -> Result<Arc<TrajectorySet>, SerError> {
+        match self {
+            TsSource::Resident(ts) => Ok(Arc::clone(ts)),
+            TsSource::Bank { store, family, plan_tag, seed } => store
+                .trajectory_set(family, plan_tag, *seed)?
+                .map(|(ts, _labels)| ts)
+                .ok_or_else(|| {
+                    SerError(format!(
+                        "bank has no runs for family={family} plan={plan_tag} seed={seed}"
+                    ))
+                }),
+        }
+    }
+}
+
+impl From<Arc<TrajectorySet>> for TsSource {
+    fn from(ts: Arc<TrajectorySet>) -> TsSource {
+        TsSource::Resident(ts)
+    }
+}
+
+impl From<&Arc<TrajectorySet>> for TsSource {
+    fn from(ts: &Arc<TrajectorySet>) -> TsSource {
+        TsSource::Resident(Arc::clone(ts))
+    }
+}
 
 /// Which replay to run. All variants are pure functions of the
 /// trajectory set and their parameters.
@@ -53,8 +112,8 @@ pub enum ReplayKind {
 /// One independent replay over a shared read-only trajectory set.
 #[derive(Clone)]
 pub struct ReplayJob {
-    /// The recorded trajectories the replay consumes.
-    pub ts: Arc<TrajectorySet>,
+    /// Where the replayed trajectories come from (resident or lazy).
+    pub src: TsSource,
     /// Which replay to run.
     pub kind: ReplayKind,
     /// Sub-sampling cost multiplier (§4.1.2); applied to the outcome's
@@ -79,7 +138,7 @@ impl ReplayJob {
     /// A one-shot early-stopping replay at `day_stop`.
     pub fn one_shot(ts: &Arc<TrajectorySet>, strategy: &Strategy, day_stop: usize) -> ReplayJob {
         ReplayJob {
-            ts: Arc::clone(ts),
+            src: ts.into(),
             kind: ReplayKind::OneShot { strategy: strategy.clone(), day_stop },
             plan_mult: 1.0,
             tag: format!("one-shot@{day_stop}"),
@@ -94,7 +153,7 @@ impl ReplayJob {
         rho: f64,
     ) -> ReplayJob {
         ReplayJob {
-            ts: Arc::clone(ts),
+            src: ts.into(),
             kind: ReplayKind::PerfBased { strategy: strategy.clone(), stop_days, rho },
             plan_mult: 1.0,
             tag: "perf-based".into(),
@@ -106,13 +165,38 @@ impl ReplayJob {
     /// tag.
     pub fn method(ts: &Arc<TrajectorySet>, method: &Method, strategy: &Strategy) -> ReplayJob {
         ReplayJob {
-            ts: Arc::clone(ts),
+            src: ts.into(),
             kind: ReplayKind::Registry {
                 method: method.clone(),
                 strategy: strategy.clone(),
             },
             plan_mult: 1.0,
             tag: method.tag(),
+        }
+    }
+
+    /// A replay of `kind` over a lazy bank cell: the trajectory set is
+    /// assembled from shards only when the job executes, and its plan
+    /// multiplier comes from the store's index. The cell must exist
+    /// ([`ShardStore::has_cell`]) — execute panics otherwise, like every
+    /// other invalid-job programming error.
+    pub fn from_store(
+        store: &Arc<ShardStore>,
+        family: &str,
+        plan_tag: &str,
+        seed: i32,
+        kind: ReplayKind,
+    ) -> ReplayJob {
+        ReplayJob {
+            src: TsSource::Bank {
+                store: Arc::clone(store),
+                family: family.to_string(),
+                plan_tag: plan_tag.to_string(),
+                seed,
+            },
+            kind,
+            plan_mult: store.plan_multiplier(family, plan_tag),
+            tag: format!("{family}/{plan_tag}"),
         }
     }
 
@@ -133,11 +217,18 @@ impl ReplayJob {
     /// inputs give identical outputs.
     pub fn execute(&self) -> ReplayResult {
         let t0 = Instant::now();
+        // Resolve the source once per execution: resident sources clone
+        // an Arc; bank cells stream their shards here, on the worker.
+        let ts = self
+            .src
+            .resolve()
+            .unwrap_or_else(|e| panic!("replay job {}: {e}", self.tag));
         let outcome = match &self.kind {
             ReplayKind::OneShot { strategy, day_stop } => {
-                self.run_session(SearchPlan::one_shot(*day_stop).strategy(strategy.clone()))
+                self.run_session(&ts, SearchPlan::one_shot(*day_stop).strategy(strategy.clone()))
             }
             ReplayKind::PerfBased { strategy, stop_days, rho } => self.run_session(
+                &ts,
                 SearchPlan::performance_based(stop_days.clone(), *rho)
                     .strategy(strategy.clone()),
             ),
@@ -145,13 +236,13 @@ impl ReplayJob {
                 // Clamp like the pre-session replay did, so degenerate
                 // windows stay a graceful result rather than a panic.
                 let stop = (*day_stop).max(*start_day + 1);
-                self.run_session(SearchPlan::late_start(*start_day, stop))
+                self.run_session(&ts, SearchPlan::late_start(*start_day, stop))
             }
             ReplayKind::Hyperband { strategy, eta, brackets_seed, workers } => {
                 // Bracket-parallel fast path: same Algorithm-1 core, one
                 // ReplayDriver per bracket on scoped threads.
                 let hb = hyperband::hyperband_par(
-                    &self.ts,
+                    &ts,
                     strategy,
                     *eta,
                     *brackets_seed,
@@ -166,12 +257,13 @@ impl ReplayJob {
                 outcome
             }
             ReplayKind::Registry { method, strategy } => self.run_session(
+                &ts,
                 SearchPlan::with_method(method.clone()).strategy(strategy.clone()),
             ),
             ReplayKind::Asha { strategy, eta, rungs, workers } => {
                 // Work-stealing rung-wave scoring; worker-count-invariant.
                 let mut outcome =
-                    method::asha_par(&self.ts, strategy, *eta, *rungs, (*workers).max(1));
+                    method::asha_par(&ts, strategy, *eta, *rungs, (*workers).max(1));
                 outcome.cost *= self.plan_mult;
                 outcome
             }
@@ -186,10 +278,10 @@ impl ReplayJob {
     /// One session over a fresh replay driver. Replay jobs are built
     /// from trusted harness constants, so plan validation failures are
     /// programming errors (fail loud, like the old asserts).
-    fn run_session(&self, builder: SearchPlanBuilder) -> SearchOutcome {
+    fn run_session(&self, ts: &Arc<TrajectorySet>, builder: SearchPlanBuilder) -> SearchOutcome {
         builder
             .plan_mult(self.plan_mult)
-            .run_replay(&self.ts)
+            .run_replay(ts)
             .expect("invalid replay job parameters")
     }
 }
@@ -290,13 +382,13 @@ mod tests {
             ));
         }
         jobs.push(ReplayJob {
-            ts: Arc::clone(ts),
+            src: ts.into(),
             kind: ReplayKind::LateStart { start_day: 3, day_stop: 9 },
             plan_mult: 1.0,
             tag: "late".into(),
         });
         jobs.push(ReplayJob {
-            ts: Arc::clone(ts),
+            src: ts.into(),
             kind: ReplayKind::Hyperband {
                 strategy: Strategy::constant(),
                 eta: 3.0,
@@ -313,7 +405,7 @@ mod tests {
             jobs.push(ReplayJob::method(ts, &m, &Strategy::constant()));
         }
         jobs.push(ReplayJob {
-            ts: Arc::clone(ts),
+            src: ts.into(),
             kind: ReplayKind::Asha {
                 strategy: Strategy::constant(),
                 eta: 3.0,

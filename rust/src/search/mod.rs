@@ -21,7 +21,7 @@ pub mod sweep;
 
 pub use cost::CostLedger;
 pub use driver::{LiveDriver, ReplayDriver, SearchDriver};
-pub use executor::{ReplayExecutor, ReplayJob, ReplayKind, ReplayResult};
+pub use executor::{ReplayExecutor, ReplayJob, ReplayKind, ReplayResult, TsSource};
 pub use method::{asha_par, Method, MethodContext, SearchMethod};
 pub use session::{SearchPlan, SearchPlanBuilder, SearchSession, TwoStageOutcome};
 

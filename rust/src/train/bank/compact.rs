@@ -1,0 +1,405 @@
+//! Writing v3 banks: a parallel [`compact`] pass that merges any mix of
+//! sources (v2 monolithic banks, existing v3 directories, in-memory
+//! banks) into a balanced sharded layout, a [`migrate`] wrapper for the
+//! v2 -> v3 upgrade, and a [`BankAppender`] that streams records to
+//! shard files incrementally as live runs finish — so a crash mid-build
+//! loses at most the unfinished index, not the recorded trajectories.
+//!
+//! Invariants (DESIGN.md "§ bank format v3"):
+//!
+//! - every shard holds runs of exactly one (family, plan_tag) group;
+//! - group order is first-seen across the sources in the order given,
+//!   and run order within a group is preserved — so any (family, plan,
+//!   seed) selection replays bit-identically to the monolithic path;
+//! - `max_shard_runs` balances shards: a group with more runs is split
+//!   into near-equal chunks, never interleaved with another group.
+
+use super::format::{
+    shard_file_name, write_run, BankIndex, RunDirEntry, ShardEntry, SHARD_MAGIC, V3_VERSION,
+};
+use super::shard::ShardStore;
+use super::{Bank, BankMeta, RunKey};
+use crate::train::online::RunTrajectory;
+use crate::util::ser::{SerError, Writer};
+use crate::util::threadpool::ThreadPool;
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Knobs for [`compact`] / [`migrate`].
+#[derive(Clone, Copy, Debug)]
+pub struct CompactOptions {
+    /// Split a (family, plan_tag) group into shards of at most this many
+    /// runs (0 = never split: one shard per group).
+    pub max_shard_runs: usize,
+}
+
+impl Default for CompactOptions {
+    fn default() -> CompactOptions {
+        CompactOptions { max_shard_runs: 1024 }
+    }
+}
+
+/// One run's location across the sources: (source, shard, entry).
+type RunRef = (usize, usize, usize);
+
+/// Merge `sources` into a balanced v3 bank at `out_dir`, writing shard
+/// files in parallel (`workers` threads via `ThreadPool::scoped_map`)
+/// and the index last. All sources must agree on [`BankMeta`]; `out_dir`
+/// must not be a source's own directory (shards would be overwritten
+/// while still being read).
+pub fn compact(
+    sources: &[ShardStore],
+    out_dir: &Path,
+    opts: &CompactOptions,
+    workers: usize,
+) -> Result<BankIndex, SerError> {
+    let first = sources
+        .first()
+        .ok_or_else(|| SerError("compact needs at least one source bank".into()))?;
+    for s in &sources[1..] {
+        if s.meta() != first.meta() {
+            return Err(SerError(format!(
+                "cannot compact banks with different stream metadata \
+                 (scenario {:?} vs {:?})",
+                first.scenario(),
+                s.scenario()
+            )));
+        }
+    }
+    for s in sources {
+        if let Some(dir) = s.dir() {
+            if dir == out_dir {
+                return Err(SerError(format!(
+                    "compact output {out_dir:?} is also a source bank directory"
+                )));
+            }
+        }
+    }
+
+    // Group every run by (family, plan_tag), first-seen across sources.
+    let mut groups: Vec<((String, String), Vec<RunRef>)> = Vec::new();
+    for (si, source) in sources.iter().enumerate() {
+        for (hi, shard) in source.index().shards.iter().enumerate() {
+            let key = (shard.family.clone(), shard.plan_tag.clone());
+            let refs: Vec<RunRef> =
+                (0..shard.entries.len()).map(|ei| (si, hi, ei)).collect();
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.extend(refs),
+                None => groups.push((key, refs)),
+            }
+        }
+    }
+
+    // Split each group into near-equal chunks of <= max_shard_runs.
+    let mut chunks: Vec<(usize, String, String, Vec<RunRef>)> = Vec::new();
+    for ((family, plan_tag), refs) in groups {
+        let n = refs.len();
+        let n_chunks = if opts.max_shard_runs == 0 || n == 0 {
+            1
+        } else {
+            (n + opts.max_shard_runs - 1) / opts.max_shard_runs
+        };
+        let base = n / n_chunks;
+        let rem = n % n_chunks;
+        let mut start = 0;
+        for c in 0..n_chunks {
+            let len = base + usize::from(c < rem);
+            let seq = chunks.len();
+            chunks.push((
+                seq,
+                family.clone(),
+                plan_tag.clone(),
+                refs[start..start + len].to_vec(),
+            ));
+            start += len;
+        }
+    }
+
+    std::fs::create_dir_all(out_dir)
+        .map_err(|e| SerError(format!("creating bank directory {out_dir:?}: {e}")))?;
+
+    // Write shard files in parallel; each chunk loads the source shards
+    // it needs (the stores' caches share loads across chunks).
+    let written: Vec<Result<ShardEntry, SerError>> =
+        ThreadPool::scoped_map(workers.max(1), &chunks, |_, chunk| {
+            let (seq, family, plan_tag, refs) = chunk;
+            let file = shard_file_name(*seq, family, plan_tag);
+            let mut w = Writer::new(SHARD_MAGIC, V3_VERSION);
+            let mut entries = Vec::with_capacity(refs.len());
+            for &(si, hi, ei) in refs {
+                let records = sources[si].load_shard(hi)?;
+                let rec = &records[ei];
+                entries.push(RunDirEntry {
+                    key: rec.key.clone(),
+                    offset: w.buf.len() as u64,
+                    examples_trained: rec.examples_trained,
+                    examples_seen: rec.examples_seen,
+                });
+                write_run(&mut w, rec);
+            }
+            let path = out_dir.join(&file);
+            w.write_file(&path)
+                .map_err(|e| SerError(format!("writing shard {path:?}: {e}")))?;
+            Ok(ShardEntry {
+                file,
+                family: family.clone(),
+                plan_tag: plan_tag.clone(),
+                entries,
+            })
+        });
+
+    let mut shards = Vec::with_capacity(written.len());
+    for w in written {
+        shards.push(w?);
+    }
+    let index = BankIndex { meta: first.meta().clone(), shards };
+    index.save(out_dir)?;
+    Ok(index)
+}
+
+/// Upgrade the bank at `src` (either format) to a v3 directory at
+/// `out_dir`. A v2 -> v3 migration re-frames the records byte-for-byte;
+/// [`ShardStore::to_bank`] on the result round-trips bit-identically.
+pub fn migrate(
+    src: &Path,
+    out_dir: &Path,
+    opts: &CompactOptions,
+    workers: usize,
+) -> Result<BankIndex, SerError> {
+    let store = ShardStore::open(src)?;
+    compact(std::slice::from_ref(&store), out_dir, opts, workers)
+}
+
+/// Write an in-memory [`Bank`] as a v3 directory at `out_dir`.
+pub fn save_v3(
+    bank: &Bank,
+    out_dir: &Path,
+    opts: &CompactOptions,
+    workers: usize,
+) -> Result<BankIndex, SerError> {
+    let store = ShardStore::from_bank(bank.clone());
+    compact(std::slice::from_ref(&store), out_dir, opts, workers)
+}
+
+/// An open shard the appender is still writing to.
+struct OpenShard {
+    entry: ShardEntry,
+    file: std::fs::File,
+    next_offset: u64,
+}
+
+/// Streams run records into a v3 bank directory as they finish: each
+/// record is appended to its (family, plan_tag) shard file immediately
+/// (rotating to a fresh shard at `max_shard_runs`), and [`finish`]
+/// writes the index once at the end. This is the live-build path — the
+/// trajectories hit disk incrementally instead of accumulating in RAM.
+///
+/// [`finish`]: BankAppender::finish
+pub struct BankAppender {
+    dir: PathBuf,
+    meta: BankMeta,
+    max_shard_runs: usize,
+    shards: Vec<OpenShard>,
+    /// Open shard per (family, plan_tag) group: index into `shards`.
+    current: HashMap<(String, String), usize>,
+}
+
+impl BankAppender {
+    /// Start a new v3 bank at `dir`; refuses to overwrite an existing
+    /// index there.
+    pub fn create(dir: &Path, meta: BankMeta) -> Result<BankAppender, SerError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SerError(format!("creating bank directory {dir:?}: {e}")))?;
+        let idx = dir.join(super::format::INDEX_FILE);
+        if idx.exists() {
+            return Err(SerError(format!(
+                "refusing to overwrite existing bank index {idx:?}"
+            )));
+        }
+        Ok(BankAppender {
+            dir: dir.to_path_buf(),
+            meta,
+            max_shard_runs: CompactOptions::default().max_shard_runs,
+            shards: Vec::new(),
+            current: HashMap::new(),
+        })
+    }
+
+    /// Rotate shards at `max` runs (0 = never rotate).
+    pub fn with_max_shard_runs(mut self, max: usize) -> BankAppender {
+        self.max_shard_runs = max;
+        self
+    }
+
+    /// Append one finished run, flattening the trajectory's per-day
+    /// cluster rows exactly like [`Bank::push`].
+    pub fn append(&mut self, key: RunKey, traj: RunTrajectory) -> Result<(), SerError> {
+        let mut flat = Vec::with_capacity(traj.cluster_loss_sums.len() * self.meta.n_clusters);
+        for row in &traj.cluster_loss_sums {
+            flat.extend_from_slice(row);
+        }
+        self.append_record(super::RunRecord {
+            key,
+            step_losses: traj.step_losses,
+            cluster_loss_sums: flat,
+            examples_trained: traj.examples_trained,
+            examples_seen: traj.examples_seen,
+        })
+    }
+
+    /// Append one already-flattened record.
+    pub fn append_record(&mut self, rec: super::RunRecord) -> Result<(), SerError> {
+        let group = (rec.key.family.clone(), rec.key.plan_tag.clone());
+        let rotate = match self.current.get(&group) {
+            None => true,
+            Some(&i) => {
+                self.max_shard_runs > 0
+                    && self.shards[i].entry.entries.len() >= self.max_shard_runs
+            }
+        };
+        if rotate {
+            let seq = self.shards.len();
+            let file_name = shard_file_name(seq, &group.0, &group.1);
+            let path = self.dir.join(&file_name);
+            let mut file = std::fs::File::create(&path)
+                .map_err(|e| SerError(format!("creating shard {path:?}: {e}")))?;
+            let header = Writer::new(SHARD_MAGIC, V3_VERSION);
+            file.write_all(&header.buf)
+                .map_err(|e| SerError(format!("writing shard {path:?}: {e}")))?;
+            self.shards.push(OpenShard {
+                entry: ShardEntry {
+                    file: file_name,
+                    family: group.0.clone(),
+                    plan_tag: group.1.clone(),
+                    entries: Vec::new(),
+                },
+                file,
+                next_offset: header.buf.len() as u64,
+            });
+            self.current.insert(group.clone(), seq);
+        }
+        let shard = &mut self.shards[self.current[&group]];
+        // Serialize the record headerless: shard framing was written once
+        // at rotation, records go back to back after it.
+        let mut w = Writer { buf: Vec::new() };
+        write_run(&mut w, &rec);
+        shard.file.write_all(&w.buf).map_err(|e| {
+            SerError(format!("appending to shard {:?}: {e}", shard.entry.file))
+        })?;
+        shard.entry.entries.push(RunDirEntry {
+            key: rec.key,
+            offset: shard.next_offset,
+            examples_trained: rec.examples_trained,
+            examples_seen: rec.examples_seen,
+        });
+        shard.next_offset += w.buf.len() as u64;
+        Ok(())
+    }
+
+    /// Flush everything and write the index; returns it.
+    pub fn finish(self) -> Result<BankIndex, SerError> {
+        let dir = self.dir;
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for open in self.shards {
+            open.file
+                .sync_all()
+                .map_err(|e| SerError(format!("flushing shard {:?}: {e}", open.entry.file)))?;
+            shards.push(open.entry);
+        }
+        let index = BankIndex { meta: self.meta, shards };
+        index.save(&dir)?;
+        Ok(index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_bank;
+    use super::*;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_v3_roundtrips_bit_identically() {
+        let bank = toy_bank();
+        let dir = temp_dir("nshpo_compact_roundtrip");
+        let index = save_v3(&bank, &dir, &CompactOptions::default(), 2).unwrap();
+        assert_eq!(index.n_runs(), bank.runs.len());
+        let store = ShardStore::open(&dir).unwrap();
+        let back = store.to_bank().unwrap();
+        assert_eq!(back.meta(), bank.meta());
+        for (x, y) in back.runs.iter().zip(&bank.runs) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.step_losses, y.step_losses);
+            assert_eq!(x.cluster_loss_sums, y.cluster_loss_sums);
+        }
+    }
+
+    #[test]
+    fn max_shard_runs_splits_groups_balanced() {
+        let bank = toy_bank(); // fm/full holds 2 runs, cn/full holds 1
+        let dir = temp_dir("nshpo_compact_split");
+        let index =
+            save_v3(&bank, &dir, &CompactOptions { max_shard_runs: 1 }, 1).unwrap();
+        assert_eq!(index.shards.len(), 3);
+        assert!(index.shards.iter().all(|s| s.entries.len() == 1));
+        // split shards merge back into one inventory line per group
+        assert_eq!(
+            index.inventory(),
+            vec![
+                ("fm".to_string(), "full".to_string(), 2),
+                ("cn".to_string(), "full".to_string(), 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn appender_matches_compacted_layout() {
+        let bank = toy_bank();
+        let dir = temp_dir("nshpo_appender");
+        let mut app = BankAppender::create(&dir, bank.meta()).unwrap();
+        for r in &bank.runs {
+            app.append_record(r.clone()).unwrap();
+        }
+        let index = app.finish().unwrap();
+        assert_eq!(index.n_runs(), 3);
+        let store = ShardStore::open(&dir).unwrap();
+        let (a, la) = bank.trajectory_set("fm", "full", 0).unwrap();
+        let (b, lb) = store.trajectory_set("fm", "full", 0).unwrap().unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(a.step_losses, b.step_losses);
+        assert_eq!(a.cluster_loss_sums, b.cluster_loss_sums);
+    }
+
+    #[test]
+    fn appender_refuses_to_overwrite() {
+        let bank = toy_bank();
+        let dir = temp_dir("nshpo_appender_overwrite");
+        let app = BankAppender::create(&dir, bank.meta()).unwrap();
+        app.finish().unwrap();
+        let err = BankAppender::create(&dir, bank.meta()).unwrap_err();
+        assert!(err.0.contains("refusing to overwrite"), "{}", err.0);
+    }
+
+    #[test]
+    fn compact_rejects_mismatched_sources() {
+        let a = toy_bank();
+        let mut b = toy_bank();
+        b.scenario = "abrupt_shift@3".into();
+        b.runs.clear();
+        let dir = temp_dir("nshpo_compact_mismatch");
+        let err = compact(
+            &[ShardStore::from_bank(a), ShardStore::from_bank(b)],
+            &dir,
+            &CompactOptions::default(),
+            1,
+        )
+        .unwrap_err();
+        assert!(err.0.contains("different stream metadata"), "{}", err.0);
+    }
+}

@@ -1,0 +1,417 @@
+//! On-disk layouts for the trajectory bank: the sharded v3 format
+//! (a small `index.nsbi` header plus one shard file per (family,
+//! plan_tag) run-range) and the run-record codec it shares byte-for-byte
+//! with the legacy v2 monolithic file.
+//!
+//! DESIGN.md "§ bank format v3" documents the layout and its invariants;
+//! the short version:
+//!
+//! - `index.nsbi` holds the stream metadata ([`BankMeta`], including
+//!   scenario provenance) and a per-shard run-key directory with byte
+//!   offsets ([`ShardEntry`] / [`RunDirEntry`]), so inventories, plan
+//!   multipliers, and cell lookups never touch a shard file.
+//! - Each shard file (`shard-NNNN-<family>-<plan>.nss`) is an 8-byte
+//!   magic+version frame followed by run records back to back, at the
+//!   offsets the index recorded.
+//! - v3 stores `eval_cluster_counts` as real u64s (v2 narrowed them to
+//!   u32 — the truncation `Bank::save` now refuses).
+
+use super::{RunKey, RunRecord};
+use crate::search::TrajectorySet;
+use crate::util::ser::{Reader, SerError, Writer};
+use std::path::{Path, PathBuf};
+
+/// Magic of the v3 bank index file.
+pub const INDEX_MAGIC: &[u8; 4] = b"NSB3";
+/// Magic of every v3 shard file.
+pub const SHARD_MAGIC: &[u8; 4] = b"NSBS";
+/// Version of the v3 sharded format (index and shards move together).
+pub const V3_VERSION: u32 = 3;
+/// File name of the index inside a v3 bank directory.
+pub const INDEX_FILE: &str = "index.nsbi";
+
+/// Canonical shard file name for output shard `seq` holding a
+/// (family, plan_tag) run-range.
+pub fn shard_file_name(seq: usize, family: &str, plan_tag: &str) -> String {
+    format!("shard-{seq:04}-{family}-{plan_tag}.nss")
+}
+
+/// Stream-level metadata shared by every run in a bank: the v3 index
+/// header, and the non-run half of a v2 file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BankMeta {
+    /// Training horizon in days.
+    pub days: usize,
+    /// Steps per virtual day.
+    pub steps_per_day: usize,
+    /// Drift clusters in the per-day decompositions.
+    pub n_clusters: usize,
+    /// Evaluation window in days.
+    pub eval_days: usize,
+    /// Seed of the stream every run trained on.
+    pub stream_seed: u64,
+    /// Canonical scenario tag of the stream every run trained on.
+    pub scenario: String,
+    /// `[day][cluster]` data-side example counts.
+    pub day_cluster_counts: Vec<Vec<u32>>,
+    /// `[cluster]` example counts over the evaluation window.
+    pub eval_cluster_counts: Vec<u64>,
+}
+
+impl BankMeta {
+    /// Serialize the metadata (v3 layout: u64 eval counts).
+    pub fn write(&self, w: &mut Writer) {
+        w.u32(self.days as u32);
+        w.u32(self.steps_per_day as u32);
+        w.u32(self.n_clusters as u32);
+        w.u32(self.eval_days as u32);
+        w.u64(self.stream_seed);
+        w.str(&self.scenario);
+        w.u32(self.day_cluster_counts.len() as u32);
+        for row in &self.day_cluster_counts {
+            w.u32s(row);
+        }
+        w.u64s(&self.eval_cluster_counts);
+    }
+
+    /// Read metadata written by [`BankMeta::write`].
+    pub fn read(r: &mut Reader<'_>) -> Result<BankMeta, SerError> {
+        let days = r.u32()? as usize;
+        let steps_per_day = r.u32()? as usize;
+        let n_clusters = r.u32()? as usize;
+        let eval_days = r.u32()? as usize;
+        let stream_seed = r.u64()?;
+        let scenario = r.str()?;
+        let n_days = r.u32()? as usize;
+        let mut day_cluster_counts = Vec::with_capacity(n_days);
+        for _ in 0..n_days {
+            day_cluster_counts.push(r.u32s()?);
+        }
+        let eval_cluster_counts = r.u64s()?;
+        Ok(BankMeta {
+            days,
+            steps_per_day,
+            n_clusters,
+            eval_days,
+            stream_seed,
+            scenario,
+            day_cluster_counts,
+            eval_cluster_counts,
+        })
+    }
+
+    /// Assemble the [`TrajectorySet`] the search strategies consume from
+    /// an ordered run selection, plus the aligned config labels. Both the
+    /// v2 facade and the shard store build their sets through this one
+    /// helper, which is what makes streamed replay bit-identical to the
+    /// monolithic path.
+    pub fn assemble(&self, runs: &[&RunRecord]) -> (TrajectorySet, Vec<String>) {
+        let k = self.n_clusters;
+        let set = TrajectorySet {
+            steps_per_day: self.steps_per_day,
+            days: self.days,
+            eval_days: self.eval_days,
+            step_losses: runs.iter().map(|r| r.step_losses.clone()).collect(),
+            day_cluster_counts: self.day_cluster_counts.clone(),
+            cluster_loss_sums: runs
+                .iter()
+                .map(|r| {
+                    (0..self.days)
+                        .map(|d| r.cluster_loss_sums[d * k..(d + 1) * k].to_vec())
+                        .collect()
+                })
+                .collect(),
+            eval_cluster_counts: self.eval_cluster_counts.clone(),
+        };
+        let labels = runs.iter().map(|r| r.key.label.clone()).collect();
+        (set, labels)
+    }
+}
+
+/// One run's entry in the index directory: its full key, the byte offset
+/// of its record inside its shard file, and the example counters — so
+/// inventories, cell lookups, and plan multipliers come from the index
+/// alone, without loading a shard.
+#[derive(Clone, Debug)]
+pub struct RunDirEntry {
+    /// Which (config, plan, seed) the record trained.
+    pub key: RunKey,
+    /// Byte offset of the record from the start of its shard file.
+    pub offset: u64,
+    /// Training examples actually consumed (sub-sampling audit).
+    pub examples_trained: u64,
+    /// Examples evaluated (the full stream).
+    pub examples_seen: u64,
+}
+
+/// One shard file in the index: its file name, the (family, plan_tag)
+/// run-range it holds, and a directory entry per record in file order.
+#[derive(Clone, Debug)]
+pub struct ShardEntry {
+    /// Shard file name, relative to the bank directory.
+    pub file: String,
+    /// Experiment family of every record in the shard.
+    pub family: String,
+    /// Sub-sampling plan tag of every record in the shard.
+    pub plan_tag: String,
+    /// Per-record directory, in file order.
+    pub entries: Vec<RunDirEntry>,
+}
+
+/// The v3 bank index: stream metadata plus the shard directory. This is
+/// the only file a reader must parse before streaming shards on demand.
+#[derive(Clone, Debug)]
+pub struct BankIndex {
+    /// Stream metadata and scenario provenance.
+    pub meta: BankMeta,
+    /// Every shard, in run order (group order is first-seen, preserving
+    /// the builder's family -> plan -> config push order).
+    pub shards: Vec<ShardEntry>,
+}
+
+impl BankIndex {
+    /// Total recorded runs across all shards.
+    pub fn n_runs(&self) -> usize {
+        self.shards.iter().map(|s| s.entries.len()).sum()
+    }
+
+    /// All (family, plan_tag, run-count) triples in first-seen order
+    /// (shards split from one group merge back into one line).
+    pub fn inventory(&self) -> Vec<(String, String, usize)> {
+        let mut out: Vec<(String, String, usize)> = Vec::new();
+        for s in &self.shards {
+            match out
+                .iter_mut()
+                .find(|(f, p, _)| f == &s.family && p == &s.plan_tag)
+            {
+                Some((_, _, n)) => *n += s.entries.len(),
+                None => out.push((s.family.clone(), s.plan_tag.clone(), s.entries.len())),
+            }
+        }
+        out
+    }
+
+    /// Write the index to `<dir>/index.nsbi`, returning that path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf, SerError> {
+        let path = dir.join(INDEX_FILE);
+        let mut w = Writer::new(INDEX_MAGIC, V3_VERSION);
+        self.meta.write(&mut w);
+        w.u32(self.shards.len() as u32);
+        for s in &self.shards {
+            w.str(&s.file);
+            w.str(&s.family);
+            w.str(&s.plan_tag);
+            w.u32(s.entries.len() as u32);
+            for e in &s.entries {
+                write_key(&mut w, &e.key);
+                w.u64(e.offset);
+                w.u64(e.examples_trained);
+                w.u64(e.examples_seen);
+            }
+        }
+        w.write_file(&path)
+            .map_err(|e| SerError(format!("writing index {path:?}: {e}")))?;
+        Ok(path)
+    }
+
+    /// Load an index written by [`BankIndex::save`]; every failure names
+    /// the index file.
+    pub fn load(path: &Path) -> Result<BankIndex, SerError> {
+        let buf =
+            std::fs::read(path).map_err(|e| SerError(format!("reading index {path:?}: {e}")))?;
+        BankIndex::parse(&buf).map_err(|e| SerError(format!("index {path:?}: {}", e.0)))
+    }
+
+    fn parse(buf: &[u8]) -> Result<BankIndex, SerError> {
+        let mut r = Reader::new(buf, INDEX_MAGIC, V3_VERSION)?;
+        let meta = BankMeta::read(&mut r)?;
+        let n_shards = r.u32()? as usize;
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let file = r.str()?;
+            let family = r.str()?;
+            let plan_tag = r.str()?;
+            let n_entries = r.u32()? as usize;
+            let mut entries = Vec::with_capacity(n_entries);
+            for _ in 0..n_entries {
+                let key = read_key(&mut r)?;
+                let offset = r.u64()?;
+                let examples_trained = r.u64()?;
+                let examples_seen = r.u64()?;
+                entries.push(RunDirEntry { key, offset, examples_trained, examples_seen });
+            }
+            shards.push(ShardEntry { file, family, plan_tag, entries });
+        }
+        if !r.done() {
+            return Err(SerError("trailing bytes after the shard directory".into()));
+        }
+        Ok(BankIndex { meta, shards })
+    }
+}
+
+// ------------------------------------------------- shared record codec
+
+/// Serialize a run key (the field order every format shares).
+pub fn write_key(w: &mut Writer, k: &RunKey) {
+    w.str(&k.family);
+    w.str(&k.variant);
+    w.str(&k.label);
+    w.f32(k.hparams[0]);
+    w.f32(k.hparams[1]);
+    w.f32(k.hparams[2]);
+    w.str(&k.plan_tag);
+    w.u32(k.seed as u32);
+    w.str(&k.scenario);
+}
+
+/// Read a run key written by [`write_key`].
+pub fn read_key(r: &mut Reader<'_>) -> Result<RunKey, SerError> {
+    let family = r.str()?;
+    let variant = r.str()?;
+    let label = r.str()?;
+    let hparams = [r.f32()?, r.f32()?, r.f32()?];
+    let plan_tag = r.str()?;
+    let seed = r.u32()? as i32;
+    let scenario = r.str()?;
+    Ok(RunKey { family, variant, label, hparams, plan_tag, seed, scenario })
+}
+
+/// Serialize one run record. The byte layout is shared verbatim between
+/// v2 files and v3 shards, so migration is a re-framing, not a rewrite.
+pub fn write_run(w: &mut Writer, rec: &RunRecord) {
+    write_key(w, &rec.key);
+    w.f32s(&rec.step_losses);
+    w.f32s(&rec.cluster_loss_sums);
+    w.u64(rec.examples_trained);
+    w.u64(rec.examples_seen);
+}
+
+/// Read one run record written by [`write_run`].
+pub fn read_run(r: &mut Reader<'_>) -> Result<RunRecord, SerError> {
+    let key = read_key(r)?;
+    let step_losses = r.f32s()?;
+    let cluster_loss_sums = r.f32s()?;
+    let examples_trained = r.u64()?;
+    let examples_seen = r.u64()?;
+    Ok(RunRecord { key, step_losses, cluster_loss_sums, examples_trained, examples_seen })
+}
+
+/// Scan past one run record reading only its (family, plan_tag) — the
+/// header-only inspect path over v2 files, which never materializes a
+/// trajectory.
+pub(crate) fn scan_run(r: &mut Reader<'_>) -> Result<(String, String), SerError> {
+    let family = r.str()?;
+    r.skip_vec(1)?; // variant
+    r.skip_vec(1)?; // label
+    r.skip(12)?; // hparams
+    let plan_tag = r.str()?;
+    r.skip(4)?; // seed
+    r.skip_vec(1)?; // scenario
+    r.skip_vec(4)?; // step_losses
+    r.skip_vec(4)?; // cluster_loss_sums
+    r.skip(16)?; // example counters
+    Ok((family, plan_tag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_meta() -> BankMeta {
+        BankMeta {
+            days: 3,
+            steps_per_day: 2,
+            n_clusters: 2,
+            eval_days: 1,
+            stream_seed: 11,
+            scenario: "criteo_like".into(),
+            day_cluster_counts: vec![vec![5, 6]; 3],
+            eval_cluster_counts: vec![7, u32::MAX as u64 + 9],
+        }
+    }
+
+    fn toy_record(label: &str) -> RunRecord {
+        RunRecord {
+            key: RunKey {
+                family: "fm".into(),
+                variant: "fm_v".into(),
+                label: label.into(),
+                hparams: [-3.0, -2.0, 1e-6],
+                plan_tag: "full".into(),
+                seed: 0,
+                scenario: "criteo_like".into(),
+            },
+            step_losses: vec![0.5; 6],
+            cluster_loss_sums: vec![1.0; 6],
+            examples_trained: 100,
+            examples_seen: 120,
+        }
+    }
+
+    #[test]
+    fn meta_roundtrips_with_u64_counts() {
+        let meta = toy_meta();
+        let mut w = Writer::new(INDEX_MAGIC, V3_VERSION);
+        meta.write(&mut w);
+        let mut r = Reader::new(&w.buf, INDEX_MAGIC, V3_VERSION).unwrap();
+        let back = BankMeta::read(&mut r).unwrap();
+        assert_eq!(back, meta);
+        assert_eq!(back.eval_cluster_counts[1], u32::MAX as u64 + 9);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn record_roundtrips_and_scans() {
+        let rec = toy_record("a");
+        let mut w = Writer::new(SHARD_MAGIC, V3_VERSION);
+        write_run(&mut w, &rec);
+        write_run(&mut w, &toy_record("b"));
+        let mut r = Reader::new(&w.buf, SHARD_MAGIC, V3_VERSION).unwrap();
+        let back = read_run(&mut r).unwrap();
+        assert_eq!(back.key, rec.key);
+        assert_eq!(back.step_losses, rec.step_losses);
+        assert_eq!(back.examples_seen, 120);
+        // the scan skips the second record's payload and lands at the end
+        assert_eq!(scan_run(&mut r).unwrap(), ("fm".into(), "full".into()));
+        assert!(r.done());
+    }
+
+    #[test]
+    fn index_roundtrips_through_disk() {
+        let rec = toy_record("a");
+        let index = BankIndex {
+            meta: toy_meta(),
+            shards: vec![ShardEntry {
+                file: shard_file_name(0, "fm", "full"),
+                family: "fm".into(),
+                plan_tag: "full".into(),
+                entries: vec![RunDirEntry {
+                    key: rec.key.clone(),
+                    offset: 8,
+                    examples_trained: 100,
+                    examples_seen: 120,
+                }],
+            }],
+        };
+        let dir = std::env::temp_dir().join("nshpo_index_test");
+        let path = index.save(&dir).unwrap();
+        let back = BankIndex::load(&path).unwrap();
+        assert_eq!(back.meta, index.meta);
+        assert_eq!(back.n_runs(), 1);
+        assert_eq!(back.shards[0].file, "shard-0000-fm-full.nss");
+        assert_eq!(back.shards[0].entries[0].key, rec.key);
+        assert_eq!(back.inventory(), vec![("fm".into(), "full".into(), 1)]);
+    }
+
+    #[test]
+    fn index_load_names_the_file_on_bad_magic() {
+        let dir = std::env::temp_dir().join("nshpo_index_badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(INDEX_FILE);
+        std::fs::write(&path, b"XXXXzzzz").unwrap();
+        let err = BankIndex::load(&path).unwrap_err();
+        assert!(err.0.contains("index"), "{}", err.0);
+        assert!(err.0.contains("index.nsbi"), "{}", err.0);
+        assert!(err.0.contains("bad magic"), "{}", err.0);
+    }
+}

@@ -1,0 +1,608 @@
+//! The trajectory bank: every candidate configuration trained once on
+//! full (or sub-sampled) data with its full metric trajectory recorded.
+//!
+//! Search strategies replay from the bank (the paper's backtesting
+//! methodology): stopping a run = truncating its trajectory, so a single
+//! expensive training phase supports every (strategy, stopping schedule,
+//! prediction) combination in the figures.
+//!
+//! Two on-disk layouts exist:
+//!
+//! - **v2** — one monolithic framed-binary file (`.nsbk`), read and
+//!   written by the [`Bank`] facade in this module. Loading it
+//!   deserializes every run.
+//! - **v3** — a directory of per-(family, plan_tag) shard files behind a
+//!   small `index.nsbi` ([`format`]), streamed lazily through a
+//!   [`ShardStore`] ([`shard`]) and written by the compaction pass or
+//!   the incremental [`BankAppender`] ([`compact`]).
+//!
+//! `--bank` paths accept either transparently ([`ShardStore::open`] /
+//! [`resolve_bank_path`]); [`Bank::inspect`] summarizes either without
+//! deserializing any trajectory.
+
+pub mod compact;
+pub mod format;
+pub mod shard;
+
+pub use compact::{migrate, save_v3, BankAppender, CompactOptions};
+pub use format::{BankIndex, BankMeta, RunDirEntry, ShardEntry};
+pub use shard::{CacheStats, ShardStore};
+
+use super::online::RunTrajectory;
+use crate::search::TrajectorySet;
+use crate::util::ser::{Reader, SerError, Writer};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"NSBK";
+// v2: scenario provenance on the bank header and every RunKey.
+const VERSION: u32 = 2;
+
+/// Identity of one recorded training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunKey {
+    /// Experiment family (`fm`, `moe`, ...).
+    pub family: String,
+    /// AOT artifact / architecture variant name.
+    pub variant: String,
+    /// Human-readable config label (variant + hyperparameters).
+    pub label: String,
+    /// Runtime hyperparameters `[log10 lr, log10 final lr, wd]`.
+    pub hparams: [f32; 3],
+    /// Sub-sampling plan tag (`full`, `uni0.2500`, ...).
+    pub plan_tag: String,
+    /// Model initialization seed.
+    pub seed: i32,
+    /// Canonical tag of the data scenario the run was trained on
+    /// (`data::scenario`) — trajectories from different regimes must
+    /// never be compared as if they shared a stream.
+    pub scenario: String,
+}
+
+/// One recorded run: its key plus the full metric trajectory.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// Which (config, plan, seed) this run trained.
+    pub key: RunKey,
+    /// Progressive-validation loss per step.
+    pub step_losses: Vec<f32>,
+    /// `[day][cluster]`, flattened row-major.
+    pub cluster_loss_sums: Vec<f32>,
+    /// Training examples actually consumed (sub-sampling audit).
+    pub examples_trained: u64,
+    /// Examples evaluated (the full stream).
+    pub examples_seen: u64,
+}
+
+/// The fully-resident trajectory bank: stream-level metadata plus every
+/// recorded run. This is the v2 compatibility facade — builders that fit
+/// in memory and the tests use it directly; the scaling path goes
+/// through [`ShardStore`].
+#[derive(Clone, Debug)]
+pub struct Bank {
+    /// Training horizon in days.
+    pub days: usize,
+    /// Steps per virtual day.
+    pub steps_per_day: usize,
+    /// Drift clusters in the per-day decompositions.
+    pub n_clusters: usize,
+    /// Evaluation window in days.
+    pub eval_days: usize,
+    /// Seed of the stream every run trained on.
+    pub stream_seed: u64,
+    /// Canonical scenario tag of the stream every run trained on.
+    pub scenario: String,
+    /// `[day][cluster]` data-side example counts.
+    pub day_cluster_counts: Vec<Vec<u32>>,
+    /// `[cluster]` example counts over the evaluation window.
+    pub eval_cluster_counts: Vec<u64>,
+    /// Every recorded run.
+    pub runs: Vec<RunRecord>,
+}
+
+impl Bank {
+    /// An empty bank carrying `meta`'s stream metadata.
+    pub fn empty(meta: BankMeta) -> Bank {
+        Bank {
+            days: meta.days,
+            steps_per_day: meta.steps_per_day,
+            n_clusters: meta.n_clusters,
+            eval_days: meta.eval_days,
+            stream_seed: meta.stream_seed,
+            scenario: meta.scenario,
+            day_cluster_counts: meta.day_cluster_counts,
+            eval_cluster_counts: meta.eval_cluster_counts,
+            runs: Vec::new(),
+        }
+    }
+
+    /// The bank's stream metadata as the format-level [`BankMeta`].
+    pub fn meta(&self) -> BankMeta {
+        BankMeta {
+            days: self.days,
+            steps_per_day: self.steps_per_day,
+            n_clusters: self.n_clusters,
+            eval_days: self.eval_days,
+            stream_seed: self.stream_seed,
+            scenario: self.scenario.clone(),
+            day_cluster_counts: self.day_cluster_counts.clone(),
+            eval_cluster_counts: self.eval_cluster_counts.clone(),
+        }
+    }
+
+    /// Append one finished run under its key.
+    pub fn push(&mut self, key: RunKey, traj: RunTrajectory) {
+        let mut flat = Vec::with_capacity(self.days * self.n_clusters);
+        for row in &traj.cluster_loss_sums {
+            flat.extend_from_slice(row);
+        }
+        self.runs.push(RunRecord {
+            key,
+            step_losses: traj.step_losses,
+            cluster_loss_sums: flat,
+            examples_trained: traj.examples_trained,
+            examples_seen: traj.examples_seen,
+        });
+    }
+
+    /// Select runs (family, plan, seed) and assemble the TrajectorySet
+    /// the search strategies consume. Returns config labels aligned with
+    /// the set's config indices.
+    pub fn trajectory_set(
+        &self,
+        family: &str,
+        plan_tag: &str,
+        seed: i32,
+    ) -> Option<(TrajectorySet, Vec<String>)> {
+        let runs: Vec<&RunRecord> = self
+            .runs
+            .iter()
+            .filter(|r| {
+                r.key.family == family && r.key.plan_tag == plan_tag && r.key.seed == seed
+            })
+            .collect();
+        if runs.is_empty() {
+            return None;
+        }
+        Some(self.meta().assemble(&runs))
+    }
+
+    /// Empirical sub-sampling cost multiplier (§4.1.2) measured from the
+    /// (family, plan_tag) runs: examples trained / examples seen. 1.0
+    /// when the bank has no such runs (or for the full plan).
+    pub fn plan_multiplier(&self, family: &str, plan_tag: &str) -> f64 {
+        let (mut trained, mut seen) = (0u64, 0u64);
+        for r in &self.runs {
+            if r.key.family == family && r.key.plan_tag == plan_tag {
+                trained += r.examples_trained;
+                seen += r.examples_seen;
+            }
+        }
+        if seen == 0 {
+            1.0
+        } else {
+            trained as f64 / seen as f64
+        }
+    }
+
+    /// All (family, plan_tag) pairs present.
+    pub fn inventory(&self) -> Vec<(String, String, usize)> {
+        let mut out: Vec<(String, String, usize)> = Vec::new();
+        for r in &self.runs {
+            match out
+                .iter_mut()
+                .find(|(f, p, _)| f == &r.key.family && p == &r.key.plan_tag)
+            {
+                Some((_, _, n)) => *n += 1,
+                None => out.push((r.key.family.clone(), r.key.plan_tag.clone(), 1)),
+            }
+        }
+        out
+    }
+
+    // ---------------------------------------------------------- io
+
+    /// Serialize the bank to disk in the legacy v2 monolithic layout.
+    ///
+    /// The v2 header narrows `eval_cluster_counts` to u32; a count that
+    /// would not fit is an `InvalidData` error instead of the silent
+    /// truncation older versions performed — save such banks as v3
+    /// ([`save_v3`]) instead.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = Writer::new(MAGIC, VERSION);
+        w.u32(self.days as u32);
+        w.u32(self.steps_per_day as u32);
+        w.u32(self.n_clusters as u32);
+        w.u32(self.eval_days as u32);
+        w.u64(self.stream_seed);
+        w.str(&self.scenario);
+        w.u32(self.day_cluster_counts.len() as u32);
+        for row in &self.day_cluster_counts {
+            w.u32s(row);
+        }
+        let mut eval_as_u32 = Vec::with_capacity(self.eval_cluster_counts.len());
+        for &x in &self.eval_cluster_counts {
+            eval_as_u32.push(u32::try_from(x).map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "eval cluster count {x} overflows the v2 format's u32 \
+                         field; save this bank as v3 instead"
+                    ),
+                )
+            })?);
+        }
+        w.u32s(&eval_as_u32);
+        w.u32(self.runs.len() as u32);
+        for r in &self.runs {
+            format::write_run(&mut w, r);
+        }
+        w.write_file(path)
+    }
+
+    /// Load a bank written by [`Bank::save`]. The u32 eval counts are
+    /// widened back to u64; values beyond u32 never reach a valid v2
+    /// file because [`Bank::save`] refuses to narrow them.
+    pub fn load(path: &Path) -> Result<Bank, SerError> {
+        let buf =
+            std::fs::read(path).map_err(|e| SerError(format!("reading {path:?}: {e}")))?;
+        let mut r = Reader::new(&buf, MAGIC, VERSION)?;
+        let days = r.u32()? as usize;
+        let steps_per_day = r.u32()? as usize;
+        let n_clusters = r.u32()? as usize;
+        let eval_days = r.u32()? as usize;
+        let stream_seed = r.u64()?;
+        let scenario = r.str()?;
+        let n_days = r.u32()? as usize;
+        let mut day_cluster_counts = Vec::with_capacity(n_days);
+        for _ in 0..n_days {
+            day_cluster_counts.push(r.u32s()?);
+        }
+        let eval_cluster_counts: Vec<u64> =
+            r.u32s()?.into_iter().map(|x| x as u64).collect();
+        let n_runs = r.u32()? as usize;
+        let mut runs = Vec::with_capacity(n_runs);
+        for _ in 0..n_runs {
+            runs.push(format::read_run(&mut r)?);
+        }
+        Ok(Bank {
+            days,
+            steps_per_day,
+            n_clusters,
+            eval_days,
+            stream_seed,
+            scenario,
+            day_cluster_counts,
+            eval_cluster_counts,
+            runs,
+        })
+    }
+
+    /// Header-only summary of the bank at `path` (either format):
+    /// dimensions, scenario provenance, and the (family, plan) inventory
+    /// without deserializing a single trajectory. v3 reads only the
+    /// index; v2 scans the file skipping every payload.
+    pub fn inspect(path: &Path) -> Result<BankSummary, SerError> {
+        match locate(path)? {
+            Located::V3 { dir, index } => {
+                let idx = BankIndex::load(&index)?;
+                let mut bytes =
+                    std::fs::metadata(&index).map(|m| m.len()).unwrap_or(0);
+                for s in &idx.shards {
+                    bytes += std::fs::metadata(dir.join(&s.file))
+                        .map(|m| m.len())
+                        .unwrap_or(0);
+                }
+                Ok(BankSummary {
+                    format: "v3".into(),
+                    path: dir,
+                    days: idx.meta.days,
+                    steps_per_day: idx.meta.steps_per_day,
+                    n_clusters: idx.meta.n_clusters,
+                    eval_days: idx.meta.eval_days,
+                    stream_seed: idx.meta.stream_seed,
+                    scenario: idx.meta.scenario.clone(),
+                    n_runs: idx.n_runs(),
+                    n_shards: idx.shards.len(),
+                    inventory: idx.inventory(),
+                    bytes,
+                })
+            }
+            Located::V2(file) => {
+                let buf = std::fs::read(&file)
+                    .map_err(|e| SerError(format!("reading {file:?}: {e}")))?;
+                inspect_v2(&buf, &file)
+                    .map_err(|e| SerError(format!("bank {file:?}: {}", e.0)))
+            }
+        }
+    }
+}
+
+/// Header-only scan of a v2 buffer (payloads skipped, never decoded).
+fn inspect_v2(buf: &[u8], file: &Path) -> Result<BankSummary, SerError> {
+    let mut r = Reader::new(buf, MAGIC, VERSION)?;
+    let days = r.u32()? as usize;
+    let steps_per_day = r.u32()? as usize;
+    let n_clusters = r.u32()? as usize;
+    let eval_days = r.u32()? as usize;
+    let stream_seed = r.u64()?;
+    let scenario = r.str()?;
+    let n_days = r.u32()? as usize;
+    for _ in 0..n_days {
+        r.skip_vec(4)?; // day_cluster_counts row
+    }
+    r.skip_vec(4)?; // eval_cluster_counts
+    let n_runs = r.u32()? as usize;
+    let mut inventory: Vec<(String, String, usize)> = Vec::new();
+    for _ in 0..n_runs {
+        let (family, plan_tag) = format::scan_run(&mut r)?;
+        match inventory
+            .iter_mut()
+            .find(|(f, p, _)| f == &family && p == &plan_tag)
+        {
+            Some((_, _, n)) => *n += 1,
+            None => inventory.push((family, plan_tag, 1)),
+        }
+    }
+    Ok(BankSummary {
+        format: "v2".into(),
+        path: file.to_path_buf(),
+        days,
+        steps_per_day,
+        n_clusters,
+        eval_days,
+        stream_seed,
+        scenario,
+        n_runs,
+        n_shards: 0,
+        inventory,
+        bytes: buf.len() as u64,
+    })
+}
+
+/// What [`Bank::inspect`] reports: everything the header and index know,
+/// no trajectories.
+#[derive(Clone, Debug)]
+pub struct BankSummary {
+    /// `"v2"` (monolithic file) or `"v3"` (sharded directory).
+    pub format: String,
+    /// The bank file (v2) or directory (v3) inspected.
+    pub path: PathBuf,
+    /// Training horizon in days.
+    pub days: usize,
+    /// Steps per virtual day.
+    pub steps_per_day: usize,
+    /// Drift clusters in the per-day decompositions.
+    pub n_clusters: usize,
+    /// Evaluation window in days.
+    pub eval_days: usize,
+    /// Seed of the stream every run trained on.
+    pub stream_seed: u64,
+    /// Canonical scenario tag of the stream every run trained on.
+    pub scenario: String,
+    /// Total recorded runs.
+    pub n_runs: usize,
+    /// Shard files (0 for v2).
+    pub n_shards: usize,
+    /// (family, plan_tag, run-count) triples in first-seen order.
+    pub inventory: Vec<(String, String, usize)>,
+    /// Total bytes on disk (index + shards, or the v2 file).
+    pub bytes: u64,
+}
+
+impl BankSummary {
+    /// Human-readable multi-line rendering (the `nshpo bank inspect` and
+    /// `nshpo info` output).
+    pub fn render(&self) -> String {
+        let shards = if self.format == "v3" {
+            format!(", {} shards", self.n_shards)
+        } else {
+            String::new()
+        };
+        let mut out = format!(
+            "bank {:?} [{}{}, {} bytes]: {} runs, {} days x {} steps/day, \
+             {} clusters, scenario {}\n",
+            self.path,
+            self.format,
+            shards,
+            self.bytes,
+            self.n_runs,
+            self.days,
+            self.steps_per_day,
+            self.n_clusters,
+            self.scenario
+        );
+        for (fam, plan, n) in &self.inventory {
+            out.push_str(&format!("  {fam:<6} {plan:<16} {n} runs\n"));
+        }
+        out
+    }
+}
+
+/// Where a `--bank` path actually points.
+pub(crate) enum Located {
+    /// A v3 bank directory and its index file.
+    V3 {
+        /// The bank directory.
+        dir: PathBuf,
+        /// `<dir>/index.nsbi`.
+        index: PathBuf,
+    },
+    /// A v2 monolithic bank file.
+    V2(PathBuf),
+}
+
+/// Resolve a user-supplied bank path to a concrete format: a v3
+/// directory (or its `index.nsbi` directly), a v2 file, or the v2 file
+/// with the `.nsbk` extension appended. Errors when nothing exists.
+pub(crate) fn locate(path: &Path) -> Result<Located, SerError> {
+    if path.is_dir() {
+        let index = path.join(format::INDEX_FILE);
+        if index.is_file() {
+            return Ok(Located::V3 { dir: path.to_path_buf(), index });
+        }
+    }
+    if path.is_file() {
+        if path.file_name().map(|n| n == format::INDEX_FILE).unwrap_or(false) {
+            let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+            return Ok(Located::V3 { dir, index: path.to_path_buf() });
+        }
+        return Ok(Located::V2(path.to_path_buf()));
+    }
+    let v2 = path.with_extension("nsbk");
+    if v2.is_file() {
+        return Ok(Located::V2(v2));
+    }
+    Err(SerError(format!(
+        "no bank at {path:?} (tried a v3 directory with {}, and v2 files \
+         {path:?} / {v2:?})",
+        format::INDEX_FILE
+    )))
+}
+
+/// The canonical existing bank at `path` in either format, or `None`:
+/// the v3 directory, the v2 file, or `<path>.nsbk`. The CLI's optional
+/// bank discovery (figures run without a bank when none exists).
+pub fn resolve_bank_path(path: &Path) -> Option<PathBuf> {
+    match locate(path) {
+        Ok(Located::V3 { dir, .. }) => Some(dir),
+        Ok(Located::V2(file)) => Some(file),
+        Err(_) => None,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn toy_bank() -> Bank {
+        let mut bank = Bank {
+            days: 4,
+            steps_per_day: 2,
+            n_clusters: 3,
+            eval_days: 2,
+            stream_seed: 9,
+            scenario: "criteo_like".into(),
+            day_cluster_counts: vec![vec![10, 20, 30]; 4],
+            eval_cluster_counts: vec![20, 40, 60],
+            runs: Vec::new(),
+        };
+        for (i, fam) in [("a", "fm"), ("b", "fm"), ("c", "cn")] {
+            let key = RunKey {
+                family: fam.into(),
+                variant: format!("{fam}_v"),
+                label: i.into(),
+                hparams: [-3.0, -2.0, 1e-6],
+                plan_tag: "full".into(),
+                seed: 0,
+                scenario: "criteo_like".into(),
+            };
+            let traj = RunTrajectory {
+                step_losses: vec![0.5; 8],
+                cluster_loss_sums: vec![vec![1.0, 2.0, 3.0]; 4],
+                examples_trained: 100,
+                examples_seen: 100,
+            };
+            bank.push(key, traj);
+        }
+        bank
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let bank = toy_bank();
+        let path = std::env::temp_dir().join("nshpo_bank_test.nsbk");
+        bank.save(&path).unwrap();
+        let loaded = Bank::load(&path).unwrap();
+        assert_eq!(loaded.runs.len(), 3);
+        assert_eq!(loaded.days, 4);
+        assert_eq!(loaded.scenario, "criteo_like");
+        assert_eq!(loaded.runs[0].key, bank.runs[0].key);
+        assert_eq!(loaded.runs[2].step_losses, bank.runs[2].step_losses);
+        assert_eq!(loaded.eval_cluster_counts, vec![20, 40, 60]);
+    }
+
+    #[test]
+    fn trajectory_set_filters_by_family() {
+        let bank = toy_bank();
+        let (ts, labels) = bank.trajectory_set("fm", "full", 0).unwrap();
+        assert_eq!(ts.n_configs(), 2);
+        assert_eq!(labels, vec!["a", "b"]);
+        assert_eq!(ts.cluster_loss_sums[0][2], vec![1.0, 2.0, 3.0]);
+        assert!(bank.trajectory_set("mlp", "full", 0).is_none());
+        assert!(bank.trajectory_set("fm", "uni0.5000", 0).is_none());
+    }
+
+    #[test]
+    fn inventory_counts() {
+        let inv = toy_bank().inventory();
+        assert!(inv.contains(&("fm".into(), "full".into(), 2)));
+        assert!(inv.contains(&("cn".into(), "full".into(), 1)));
+    }
+
+    #[test]
+    fn save_errors_on_u64_overflow_instead_of_truncating() {
+        let mut bank = toy_bank();
+        bank.eval_cluster_counts[1] = u32::MAX as u64 + 1;
+        let path = std::env::temp_dir().join("nshpo_bank_overflow.nsbk");
+        let err = bank.save(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("overflows"), "{err}");
+        // the same bank saves fine as v3 (real u64s on disk)
+        let dir = std::env::temp_dir().join("nshpo_bank_overflow_v3");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_v3(&bank, &dir, &CompactOptions::default(), 1).unwrap();
+        let back = ShardStore::open(&dir).unwrap();
+        assert_eq!(back.meta().eval_cluster_counts[1], u32::MAX as u64 + 1);
+    }
+
+    #[test]
+    fn inspect_summarizes_both_formats_header_only() {
+        let bank = toy_bank();
+        let v2 = std::env::temp_dir().join("nshpo_inspect_v2.nsbk");
+        bank.save(&v2).unwrap();
+        let s = Bank::inspect(&v2).unwrap();
+        assert_eq!(s.format, "v2");
+        assert_eq!(s.n_runs, 3);
+        assert_eq!(s.scenario, "criteo_like");
+        assert_eq!(s.days, 4);
+        assert_eq!(
+            s.inventory,
+            vec![
+                ("fm".to_string(), "full".to_string(), 2),
+                ("cn".to_string(), "full".to_string(), 1)
+            ]
+        );
+        assert!(s.render().contains("fm"));
+
+        let dir = std::env::temp_dir().join("nshpo_inspect_v3");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_v3(&bank, &dir, &CompactOptions::default(), 1).unwrap();
+        let s3 = Bank::inspect(&dir).unwrap();
+        assert_eq!(s3.format, "v3");
+        assert_eq!(s3.n_runs, 3);
+        assert_eq!(s3.n_shards, 2);
+        assert_eq!(s3.inventory, s.inventory);
+        assert!(s3.bytes > 0);
+    }
+
+    #[test]
+    fn locate_resolves_every_spelling() {
+        let bank = toy_bank();
+        let v2 = std::env::temp_dir().join("nshpo_locate_v2.nsbk");
+        bank.save(&v2).unwrap();
+        // exact file, and extensionless (the CLI's `--bank results/bank`)
+        assert!(resolve_bank_path(&v2).is_some());
+        assert_eq!(resolve_bank_path(&v2.with_extension("")), Some(v2.clone()));
+
+        let dir = std::env::temp_dir().join("nshpo_locate_v3");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_v3(&bank, &dir, &CompactOptions::default(), 1).unwrap();
+        assert_eq!(resolve_bank_path(&dir), Some(dir.clone()));
+        // the index file itself resolves to its directory
+        assert_eq!(
+            resolve_bank_path(&dir.join(format::INDEX_FILE)),
+            Some(dir.clone())
+        );
+        assert!(resolve_bank_path(Path::new("/nonexistent/bank")).is_none());
+    }
+}

@@ -1,0 +1,393 @@
+//! Lazily-loaded access to a bank: [`ShardStore`] answers index-only
+//! queries (inventory, families, plan multipliers, cell lookups) without
+//! touching a shard file, and streams shards on demand behind a bounded
+//! `Arc` cache when a replay actually needs trajectories.
+//!
+//! A store opens either format transparently: a v3 directory streams
+//! from disk shard by shard; a v2 monolithic file is loaded once and
+//! served from pre-warmed in-memory shards (the v2 layout cannot be
+//! partially read). Concurrent jobs share loads — `load_shard` hands out
+//! clones of one `Arc<Vec<RunRecord>>` per shard — and the FIFO cache
+//! never holds more than `with_cache_budget(n)` shards resident
+//! (`peak_resident` in [`CacheStats`] audits that bound).
+
+use super::format::{read_run, BankIndex, ShardEntry, SHARD_MAGIC, V3_VERSION};
+use super::{locate, Bank, BankMeta, Located, RunDirEntry, RunKey, RunRecord};
+use crate::search::TrajectorySet;
+use crate::util::ser::{Reader, SerError};
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Shard-cache observability counters (all monotonic except
+/// `peak_resident`, which is a high-water mark).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Shards read and parsed from disk.
+    pub loads: u64,
+    /// Requests served from the resident cache.
+    pub hits: u64,
+    /// Shards dropped to stay within the cache budget.
+    pub evictions: u64,
+    /// Most shards ever resident in the cache at once.
+    pub peak_resident: usize,
+}
+
+#[derive(Default)]
+struct CacheState {
+    map: HashMap<usize, Arc<Vec<RunRecord>>>,
+    order: VecDeque<usize>,
+    stats: CacheStats,
+}
+
+/// A handle over a bank in either format that loads shards lazily.
+pub struct ShardStore {
+    /// Bank directory for on-disk v3 stores; `None` when every shard is
+    /// pre-warmed in memory (v2 loads, `from_bank`).
+    dir: Option<PathBuf>,
+    index: BankIndex,
+    prewarmed: Vec<Option<Arc<Vec<RunRecord>>>>,
+    /// Max shards resident in the cache at once (0 = unbounded).
+    budget: usize,
+    cache: Mutex<CacheState>,
+}
+
+impl ShardStore {
+    /// Open a bank at `path`, accepting either format transparently: a
+    /// v3 directory (or its `index.nsbi`), a v2 file, or `<path>.nsbk`.
+    /// v3 stores read only the index here; shards stream on demand.
+    pub fn open(path: &Path) -> Result<ShardStore, SerError> {
+        match locate(path)? {
+            Located::V3 { dir, index } => {
+                let index = BankIndex::load(&index)?;
+                let n = index.shards.len();
+                Ok(ShardStore {
+                    dir: Some(dir),
+                    index,
+                    prewarmed: vec![None; n],
+                    budget: 0,
+                    cache: Mutex::new(CacheState::default()),
+                })
+            }
+            Located::V2(file) => Ok(ShardStore::from_bank(Bank::load(&file)?)),
+        }
+    }
+
+    /// Wrap an in-memory bank: runs are grouped into pre-warmed
+    /// (family, plan_tag) shards, preserving first-seen group order and
+    /// within-group run order, so every query answers exactly like the
+    /// `Bank` it came from.
+    pub fn from_bank(bank: Bank) -> ShardStore {
+        let meta = bank.meta();
+        let mut groups: Vec<((String, String), Vec<RunRecord>)> = Vec::new();
+        for r in bank.runs {
+            let key = (r.key.family.clone(), r.key.plan_tag.clone());
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(r),
+                None => groups.push((key, vec![r])),
+            }
+        }
+        let mut shards = Vec::with_capacity(groups.len());
+        let mut prewarmed = Vec::with_capacity(groups.len());
+        for (seq, ((family, plan_tag), records)) in groups.into_iter().enumerate() {
+            let entries = records
+                .iter()
+                .map(|r| RunDirEntry {
+                    key: r.key.clone(),
+                    offset: 0, // in-memory shards are never byte-addressed
+                    examples_trained: r.examples_trained,
+                    examples_seen: r.examples_seen,
+                })
+                .collect();
+            shards.push(ShardEntry {
+                file: super::format::shard_file_name(seq, &family, &plan_tag),
+                family,
+                plan_tag,
+                entries,
+            });
+            prewarmed.push(Some(Arc::new(records)));
+        }
+        ShardStore {
+            dir: None,
+            index: BankIndex { meta, shards },
+            prewarmed,
+            budget: 0,
+            cache: Mutex::new(CacheState::default()),
+        }
+    }
+
+    /// Bound the number of disk-loaded shards resident at once
+    /// (0 = unbounded). Pre-warmed shards don't count — they are the
+    /// bank itself, not a cache.
+    pub fn with_cache_budget(mut self, budget: usize) -> ShardStore {
+        self.budget = budget;
+        self
+    }
+
+    // ----------------------------------------------- index-only queries
+
+    /// The bank's stream metadata (scenario provenance included).
+    pub fn meta(&self) -> &BankMeta {
+        &self.index.meta
+    }
+
+    /// The full index (shard directory included).
+    pub fn index(&self) -> &BankIndex {
+        &self.index
+    }
+
+    /// Bank directory for on-disk v3 stores (`None` when in-memory).
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Canonical scenario tag every run trained on.
+    pub fn scenario(&self) -> &str {
+        &self.index.meta.scenario
+    }
+
+    /// Total recorded runs.
+    pub fn n_runs(&self) -> usize {
+        self.index.n_runs()
+    }
+
+    /// Number of shards (pre-warmed or on disk).
+    pub fn n_shards(&self) -> usize {
+        self.index.shards.len()
+    }
+
+    /// Sorted, deduplicated experiment families present.
+    pub fn families(&self) -> Vec<String> {
+        let mut fams: Vec<String> =
+            self.index.shards.iter().map(|s| s.family.clone()).collect();
+        fams.sort();
+        fams.dedup();
+        fams
+    }
+
+    /// All (family, plan_tag, run-count) triples in first-seen order.
+    pub fn inventory(&self) -> Vec<(String, String, usize)> {
+        self.index.inventory()
+    }
+
+    /// True when the bank holds at least one (family, plan, seed) run —
+    /// answered from the index directory alone.
+    pub fn has_cell(&self, family: &str, plan_tag: &str, seed: i32) -> bool {
+        self.index.shards.iter().any(|s| {
+            s.family == family
+                && s.plan_tag == plan_tag
+                && s.entries.iter().any(|e| e.key.seed == seed)
+        })
+    }
+
+    /// Empirical sub-sampling cost multiplier (§4.1.2) from the index's
+    /// example counters: examples trained / examples seen over the
+    /// (family, plan_tag) runs; 1.0 when the bank has no such runs.
+    pub fn plan_multiplier(&self, family: &str, plan_tag: &str) -> f64 {
+        let (mut trained, mut seen) = (0u64, 0u64);
+        for s in &self.index.shards {
+            if s.family == family && s.plan_tag == plan_tag {
+                for e in &s.entries {
+                    trained += e.examples_trained;
+                    seen += e.examples_seen;
+                }
+            }
+        }
+        if seen == 0 {
+            1.0
+        } else {
+            trained as f64 / seen as f64
+        }
+    }
+
+    /// Cache counters so callers (tests, benches) can audit the lazy
+    /// path: loads/hits/evictions and the resident high-water mark.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats
+    }
+
+    // --------------------------------------------------- shard streaming
+
+    /// The records of shard `i`, shared via `Arc` across concurrent
+    /// callers. Pre-warmed shards return their resident `Arc`; on-disk
+    /// shards are read, validated against the index directory, and
+    /// cached FIFO within the budget. Every failure names the shard
+    /// file. (The cache lock is held across the read, so concurrent
+    /// requests for one shard parse it once.)
+    pub fn load_shard(&self, i: usize) -> Result<Arc<Vec<RunRecord>>, SerError> {
+        if let Some(pre) = &self.prewarmed[i] {
+            return Ok(Arc::clone(pre));
+        }
+        let dir = self
+            .dir
+            .as_ref()
+            .ok_or_else(|| SerError(format!("in-memory store has no shard file {i}")))?;
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(hit) = cache.map.get(&i) {
+            cache.stats.hits += 1;
+            return Ok(Arc::clone(hit));
+        }
+        let shard = &self.index.shards[i];
+        let path = dir.join(&shard.file);
+        let records = Arc::new(read_shard_file(&path, shard)?);
+        if self.budget > 0 {
+            while cache.map.len() >= self.budget {
+                match cache.order.pop_front() {
+                    Some(old) => {
+                        cache.map.remove(&old);
+                        cache.stats.evictions += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        cache.map.insert(i, Arc::clone(&records));
+        cache.order.push_back(i);
+        cache.stats.loads += 1;
+        cache.stats.peak_resident = cache.stats.peak_resident.max(cache.map.len());
+        Ok(records)
+    }
+
+    /// Select runs (family, plan, seed) and assemble the TrajectorySet
+    /// the search strategies consume, loading only the shards that hold
+    /// matching runs. Labels align with the set's config indices; the
+    /// result is bit-identical to [`Bank::trajectory_set`] over the same
+    /// runs. `Ok(None)` when the bank has no such cell.
+    pub fn trajectory_set(
+        &self,
+        family: &str,
+        plan_tag: &str,
+        seed: i32,
+    ) -> Result<Option<(Arc<TrajectorySet>, Vec<String>)>, SerError> {
+        let mut loaded: Vec<Arc<Vec<RunRecord>>> = Vec::new();
+        for (i, s) in self.index.shards.iter().enumerate() {
+            if s.family == family
+                && s.plan_tag == plan_tag
+                && s.entries.iter().any(|e| e.key.seed == seed)
+            {
+                loaded.push(self.load_shard(i)?);
+            }
+        }
+        let runs: Vec<&RunRecord> = loaded
+            .iter()
+            .flat_map(|shard| shard.iter())
+            .filter(|r| {
+                r.key.family == family && r.key.plan_tag == plan_tag && r.key.seed == seed
+            })
+            .collect();
+        if runs.is_empty() {
+            return Ok(None);
+        }
+        let (set, labels) = self.index.meta.assemble(&runs);
+        Ok(Some((Arc::new(set), labels)))
+    }
+
+    /// Clone every run whose key matches `pred`, in bank order, loading
+    /// only shards whose index directory has a match (the seed-variance
+    /// exhibits' access path).
+    pub fn collect_runs<F: Fn(&RunKey) -> bool>(
+        &self,
+        pred: F,
+    ) -> Result<Vec<RunRecord>, SerError> {
+        let mut out = Vec::new();
+        for (i, s) in self.index.shards.iter().enumerate() {
+            if s.entries.iter().any(|e| pred(&e.key)) {
+                let shard = self.load_shard(i)?;
+                out.extend(shard.iter().filter(|r| pred(&r.key)).cloned());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Materialize the whole bank (migration, round-trip tests). Loads
+    /// every shard once, in order.
+    pub fn to_bank(&self) -> Result<Bank, SerError> {
+        let mut bank = Bank::empty(self.index.meta.clone());
+        for i in 0..self.index.shards.len() {
+            let shard = self.load_shard(i)?;
+            bank.runs.extend(shard.iter().cloned());
+        }
+        Ok(bank)
+    }
+}
+
+/// Read and validate one shard file against its index directory entry.
+fn read_shard_file(path: &Path, shard: &ShardEntry) -> Result<Vec<RunRecord>, SerError> {
+    let buf =
+        std::fs::read(path).map_err(|e| SerError(format!("reading shard {path:?}: {e}")))?;
+    parse_shard(&buf, shard).map_err(|e| SerError(format!("shard {path:?}: {}", e.0)))
+}
+
+fn parse_shard(buf: &[u8], shard: &ShardEntry) -> Result<Vec<RunRecord>, SerError> {
+    let mut r = Reader::new(buf, SHARD_MAGIC, V3_VERSION)?;
+    let mut out = Vec::with_capacity(shard.entries.len());
+    for e in &shard.entries {
+        if r.pos() as u64 != e.offset {
+            return Err(SerError(format!(
+                "record {:?} indexed at byte {} but reader is at {}",
+                e.key.label,
+                e.offset,
+                r.pos()
+            )));
+        }
+        out.push(read_run(&mut r)?);
+    }
+    if !r.done() {
+        return Err(SerError(format!(
+            "{} trailing bytes after the indexed records",
+            buf.len() - r.pos()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_bank;
+    use super::*;
+
+    #[test]
+    fn from_bank_answers_like_the_bank() {
+        let bank = toy_bank();
+        let store = ShardStore::from_bank(bank.clone());
+        assert_eq!(store.n_runs(), bank.runs.len());
+        assert_eq!(store.inventory(), bank.inventory());
+        assert_eq!(store.families(), vec!["cn".to_string(), "fm".to_string()]);
+        assert!(store.has_cell("fm", "full", 0));
+        assert!(!store.has_cell("fm", "uni0.5000", 0));
+        assert_eq!(
+            store.plan_multiplier("fm", "full"),
+            bank.plan_multiplier("fm", "full")
+        );
+
+        let (a, la) = bank.trajectory_set("fm", "full", 0).unwrap();
+        let (b, lb) = store.trajectory_set("fm", "full", 0).unwrap().unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(a.step_losses, b.step_losses);
+        assert_eq!(a.cluster_loss_sums, b.cluster_loss_sums);
+        assert!(store.trajectory_set("mlp", "full", 0).unwrap().is_none());
+
+        // pre-warmed stores never touch the disk cache
+        assert_eq!(store.cache_stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn collect_runs_filters_in_order() {
+        let store = ShardStore::from_bank(toy_bank());
+        let runs = store.collect_runs(|k| k.plan_tag == "full").unwrap();
+        let labels: Vec<&str> = runs.iter().map(|r| r.key.label.as_str()).collect();
+        assert_eq!(labels, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn to_bank_roundtrips() {
+        let bank = toy_bank();
+        let back = ShardStore::from_bank(bank.clone()).to_bank().unwrap();
+        assert_eq!(back.runs.len(), bank.runs.len());
+        assert_eq!(back.meta(), bank.meta());
+        for (x, y) in back.runs.iter().zip(&bank.runs) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.step_losses, y.step_losses);
+        }
+    }
+}

@@ -7,6 +7,9 @@ pub mod model;
 pub mod online;
 pub mod variance;
 
-pub use bank::{Bank, RunKey, RunRecord};
+pub use bank::{
+    migrate, resolve_bank_path, save_v3, Bank, BankAppender, BankIndex, BankMeta,
+    BankSummary, CacheStats, CompactOptions, RunKey, RunRecord, ShardStore,
+};
 pub use model::{LogisticProxy, OnlineModel, PjrtOnline};
 pub use online::{run_full, run_range, ClusterSource, ClusteredStream, RunTrajectory};

@@ -119,6 +119,44 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Serialize bench results plus derived scalar metrics (speedups,
+/// ratios) as a JSON document — hand-built, the crate is
+/// zero-dependency. `cargo bench -- --json` uses this to write
+/// `BENCH_replay.json` at the repo root.
+pub fn json_report(results: &[BenchResult], derived: &[(String, f64)]) -> String {
+    let mut s = String::from("{\n  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"median_ns\": {:.1}, \
+             \"p95_ns\": {:.1}, \"std_ns\": {:.1}, \"samples\": {}, \
+             \"iters_per_sample\": {}}}{}\n",
+            json_escape(&r.name),
+            r.mean_ns(),
+            r.median_ns(),
+            r.p95_ns(),
+            r.std_ns(),
+            r.samples_ns.len(),
+            r.iters_per_sample,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"derived\": {\n");
+    for (i, (k, v)) in derived.iter().enumerate() {
+        s.push_str(&format!(
+            "    \"{}\": {:.4}{}\n",
+            json_escape(k),
+            v,
+            if i + 1 < derived.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  }\n}\n");
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +183,33 @@ mod tests {
         assert!(line.contains("2.00us"));
         let tline = r.report_throughput(100.0, "steps");
         assert!(tline.contains("steps/s"));
+    }
+
+    #[test]
+    fn json_report_is_parseable() {
+        let r = BenchResult {
+            name: "replay/sharded_cell".into(),
+            samples_ns: vec![1000.0, 2000.0],
+            iters_per_sample: 3,
+        };
+        let text = json_report(
+            std::slice::from_ref(&r),
+            &[("sharded_vs_monolithic_speedup".into(), 2.5)],
+        );
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str().unwrap(),
+            "replay/sharded_cell"
+        );
+        let derived = doc.get("derived").unwrap();
+        assert!(
+            (derived.get("sharded_vs_monolithic_speedup").unwrap().as_f64().unwrap()
+                - 2.5)
+                .abs()
+                < 1e-9
+        );
     }
 
     #[test]

@@ -75,6 +75,14 @@ impl Writer {
         }
     }
 
+    /// Write a length-prefixed u64 vector.
+    pub fn u64s(&mut self, xs: &[u64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
     /// Write the buffer to disk, creating parent directories.
     pub fn write_file(&self, path: &std::path::Path) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
@@ -194,6 +202,33 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    /// Read a length-prefixed u64 vector.
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Current byte offset into the buffer (header included).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Skip `n` raw bytes (bounds-checked like every read).
+    pub fn skip(&mut self, n: usize) -> Result<()> {
+        self.bytes(n).map(|_| ())
+    }
+
+    /// Skip a length-prefixed vector of `elem_bytes`-sized elements
+    /// without materializing it (header-only scans).
+    pub fn skip_vec(&mut self, elem_bytes: usize) -> Result<()> {
+        let n = self.u32()? as usize;
+        self.skip(n * elem_bytes)
+    }
+
     /// True when the whole buffer has been consumed.
     pub fn done(&self) -> bool {
         self.pos == self.buf.len()
@@ -246,5 +281,28 @@ mod tests {
         let cut = &w.buf[..w.buf.len() - 4];
         let mut r = Reader::new(cut, MAGIC, 1).unwrap();
         assert!(r.f64s().is_err());
+    }
+
+    #[test]
+    fn u64s_roundtrip_and_skip() {
+        let mut w = Writer::new(MAGIC, 1);
+        w.u64s(&[1, u64::MAX, 7]);
+        w.f32s(&[1.0, 2.0]);
+        w.str("tail");
+        let mut r = Reader::new(&w.buf, MAGIC, 1).unwrap();
+        assert_eq!(r.u64s().unwrap(), vec![1, u64::MAX, 7]);
+        // skip the f32 payload without decoding, then land on the string
+        r.skip_vec(4).unwrap();
+        assert_eq!(r.str().unwrap(), "tail");
+        assert!(r.done());
+        assert_eq!(r.pos(), w.buf.len());
+    }
+
+    #[test]
+    fn skip_past_end_is_an_error() {
+        let mut w = Writer::new(MAGIC, 1);
+        w.u32(3);
+        let mut r = Reader::new(&w.buf, MAGIC, 1).unwrap();
+        assert!(r.skip_vec(8).is_err()); // claims 3 x 8 bytes, has none
     }
 }

@@ -1,0 +1,237 @@
+//! Acceptance suite for bank format v3 (sharded, lazily-loaded banks):
+//!
+//! - a synthetic large bank (>= 10k configs across >= 8 shards) compacts
+//!   and replays a (scenario x strategy x method) matrix cell
+//!   bit-identically to a monolithic v2 load, with the streaming path
+//!   never holding more resident shards than the configured cache
+//!   budget;
+//! - a v2 -> v3 `migrate` round-trips bit-identically on a toy bank;
+//! - a truncated shard, a missing shard referenced by the index, and a
+//!   magic mismatch each produce a `SerError` naming the offending file
+//!   (and header-only inspection still works with the corrupt shard on
+//!   disk).
+
+use nshpo::predict::Strategy;
+use nshpo::search::{ReplayJob, ReplayKind};
+use nshpo::train::{
+    migrate, save_v3, Bank, BankMeta, CompactOptions, RunKey, RunRecord, ShardStore,
+};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DAYS: usize = 6;
+const SPD: usize = 2;
+const K: usize = 2;
+
+fn meta() -> BankMeta {
+    BankMeta {
+        days: DAYS,
+        steps_per_day: SPD,
+        n_clusters: K,
+        eval_days: 2,
+        stream_seed: 7,
+        scenario: "criteo_like".into(),
+        day_cluster_counts: vec![vec![50, 70]; DAYS],
+        eval_cluster_counts: vec![100, 140],
+    }
+}
+
+fn record(family: &str, plan_tag: &str, seed: i32, c: usize) -> RunRecord {
+    // Deterministic synthetic losses: quality ordered by config index
+    // with a per-step hash wobble, so rankings are non-trivial but
+    // reproducible.
+    let step_losses: Vec<f32> = (0..DAYS * SPD)
+        .map(|t| {
+            let h = (c.wrapping_mul(2_654_435_761).wrapping_add(t * 97)) % 1000;
+            0.4 + 1e-5 * c as f32 + 1e-4 * h as f32
+        })
+        .collect();
+    let cluster_loss_sums: Vec<f32> = (0..DAYS * K)
+        .map(|i| 1.0 + 0.1 * i as f32 + 1e-5 * c as f32)
+        .collect();
+    RunRecord {
+        key: RunKey {
+            family: family.to_string(),
+            variant: format!("{family}_v"),
+            label: format!("{family}-{plan_tag}-cfg{c:05}"),
+            hparams: [-3.0, -2.0, 1e-6],
+            plan_tag: plan_tag.to_string(),
+            seed,
+            scenario: "criteo_like".into(),
+        },
+        step_losses,
+        cluster_loss_sums,
+        examples_trained: 1000,
+        examples_seen: 1000,
+    }
+}
+
+/// >= 10k configs in one (family, plan) group: splits into >= 10 shards
+/// at the default 1024-run rotation.
+fn big_bank() -> Bank {
+    let mut bank = Bank::empty(meta());
+    for c in 0..10_016 {
+        bank.runs.push(record("fm", "full", 0, c));
+    }
+    bank
+}
+
+/// Small grouped bank (fm/full, fm/neg, cn/full) for migration and
+/// corruption tests.
+fn toy_bank() -> Bank {
+    let mut bank = Bank::empty(meta());
+    for c in 0..4 {
+        bank.runs.push(record("fm", "full", 0, c));
+    }
+    for c in 0..3 {
+        bank.runs.push(record("fm", "pos1.00neg0.50", 0, c));
+    }
+    for c in 0..2 {
+        bank.runs.push(record("cn", "full", 0, c));
+    }
+    bank
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn sharded_replay_is_bit_identical_to_monolithic_v2() {
+    let bank = big_bank();
+
+    // Monolithic v2 reference: save, load whole, assemble the cell.
+    let v2 = std::env::temp_dir().join("nshpo_accept_big.nsbk");
+    bank.save(&v2).unwrap();
+    let mono = Bank::load(&v2).unwrap();
+    let (ts_mono, labels_mono) = mono.trajectory_set("fm", "full", 0).unwrap();
+    assert_eq!(ts_mono.n_configs(), 10_016);
+
+    // Sharded v3: >= 8 shards, opened with a 2-shard cache budget.
+    let v3 = temp_dir("nshpo_accept_big_v3");
+    let index = save_v3(&bank, &v3, &CompactOptions { max_shard_runs: 1024 }, 4).unwrap();
+    assert!(index.shards.len() >= 8, "only {} shards", index.shards.len());
+    assert_eq!(index.n_runs(), 10_016);
+    let store = Arc::new(ShardStore::open(&v3).unwrap().with_cache_budget(2));
+
+    // The assembled cell is bit-identical to the monolithic load.
+    let (ts_shard, labels_shard) =
+        store.trajectory_set("fm", "full", 0).unwrap().unwrap();
+    assert_eq!(labels_mono, labels_shard);
+    for (a, b) in ts_mono.step_losses.iter().zip(&ts_shard.step_losses) {
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb);
+    }
+    assert_eq!(ts_mono.cluster_loss_sums, ts_shard.cluster_loss_sums);
+    assert_eq!(ts_mono.eval_cluster_counts, ts_shard.eval_cluster_counts);
+
+    // Replay one (scenario x strategy x method) matrix cell both ways:
+    // criteo_like x constant x performance-based stopping.
+    let kind = ReplayKind::PerfBased {
+        strategy: Strategy::constant(),
+        stop_days: vec![2, 4],
+        rho: 0.5,
+    };
+    let sharded = ReplayJob::from_store(&store, "fm", "full", 0, kind).execute();
+    let ts_arc = Arc::new(ts_mono);
+    let monolithic =
+        ReplayJob::perf_based(&ts_arc, &Strategy::constant(), vec![2, 4], 0.5).execute();
+    assert_eq!(sharded.outcome.ranking, monolithic.outcome.ranking);
+    assert_eq!(
+        sharded.outcome.cost.to_bits(),
+        monolithic.outcome.cost.to_bits()
+    );
+    assert_eq!(sharded.outcome.steps_trained, monolithic.outcome.steps_trained);
+
+    // The lazy path touched every shard but never held more than the
+    // cache budget resident.
+    let stats = store.cache_stats();
+    assert!(stats.loads >= index.shards.len() as u64, "loads {}", stats.loads);
+    assert!(stats.evictions > 0);
+    assert!(
+        stats.peak_resident <= 2,
+        "peak_resident {} exceeds budget 2",
+        stats.peak_resident
+    );
+}
+
+#[test]
+fn migrate_roundtrips_v2_bit_identically() {
+    let bank = toy_bank();
+    let v2 = std::env::temp_dir().join("nshpo_accept_migrate.nsbk");
+    bank.save(&v2).unwrap();
+    let out = temp_dir("nshpo_accept_migrate_v3");
+    let index = migrate(&v2, &out, &CompactOptions::default(), 2).unwrap();
+    assert_eq!(index.n_runs(), bank.runs.len());
+
+    let back = ShardStore::open(&out).unwrap().to_bank().unwrap();
+    assert_eq!(back.meta(), bank.meta());
+    assert_eq!(back.runs.len(), bank.runs.len());
+    for (x, y) in back.runs.iter().zip(&bank.runs) {
+        assert_eq!(x.key, y.key);
+        let xb: Vec<u32> = x.step_losses.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.step_losses.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb);
+        assert_eq!(x.cluster_loss_sums, y.cluster_loss_sums);
+        assert_eq!(x.examples_trained, y.examples_trained);
+        assert_eq!(x.examples_seen, y.examples_seen);
+    }
+}
+
+#[test]
+fn truncated_shard_errors_with_the_file_name() {
+    let dir = temp_dir("nshpo_accept_truncated");
+    let index = save_v3(&toy_bank(), &dir, &CompactOptions::default(), 1).unwrap();
+    let shard_file = index.shards[0].file.clone();
+    let family = index.shards[0].family.clone();
+    let plan = index.shards[0].plan_tag.clone();
+    let path = dir.join(&shard_file);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+
+    let store = ShardStore::open(&dir).unwrap();
+    let err = store.trajectory_set(&family, &plan, 0).unwrap_err();
+    assert!(err.0.contains(&shard_file), "{}", err.0);
+    assert!(err.0.contains("truncated"), "{}", err.0);
+
+    // Header-only inspection still works with the corrupt shard on disk.
+    let summary = Bank::inspect(&dir).unwrap();
+    assert_eq!(summary.format, "v3");
+    assert_eq!(summary.n_runs, 9);
+}
+
+#[test]
+fn missing_shard_errors_with_the_file_name() {
+    let dir = temp_dir("nshpo_accept_missing");
+    let index = save_v3(&toy_bank(), &dir, &CompactOptions::default(), 1).unwrap();
+    let shard_file = index.shards[0].file.clone();
+    let family = index.shards[0].family.clone();
+    let plan = index.shards[0].plan_tag.clone();
+    std::fs::remove_file(dir.join(&shard_file)).unwrap();
+
+    let store = ShardStore::open(&dir).unwrap();
+    let err = store.trajectory_set(&family, &plan, 0).unwrap_err();
+    assert!(err.0.contains(&shard_file), "{}", err.0);
+    assert!(err.0.contains("reading shard"), "{}", err.0);
+}
+
+#[test]
+fn magic_mismatch_errors_with_the_file_name() {
+    let dir = temp_dir("nshpo_accept_badmagic");
+    let index = save_v3(&toy_bank(), &dir, &CompactOptions::default(), 1).unwrap();
+    let shard_file = index.shards[0].file.clone();
+    let family = index.shards[0].family.clone();
+    let plan = index.shards[0].plan_tag.clone();
+    let path = dir.join(&shard_file);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[..4].copy_from_slice(b"XXXX");
+    std::fs::write(&path, &bytes).unwrap();
+
+    let store = ShardStore::open(&dir).unwrap();
+    let err = store.trajectory_set(&family, &plan, 0).unwrap_err();
+    assert!(err.0.contains(&shard_file), "{}", err.0);
+    assert!(err.0.contains("bad magic"), "{}", err.0);
+}

@@ -80,11 +80,13 @@ fn full_pipeline_proxy_bank_to_figures() {
         assert_eq!(r, (0..9).collect::<Vec<_>>(), "{}", strat.name());
     }
 
-    // --- figures run end-to-end into a temp dir
+    // --- figures run end-to-end into a temp dir (the harness consumes
+    // the bank through the lazy ShardStore facade)
+    let store = nshpo::train::ShardStore::from_bank(bank.clone());
     let out = std::env::temp_dir().join("nshpo_it_figs");
     let _ = std::fs::remove_dir_all(&out);
     for id in ["1", "2", "3", "4", "5", "7", "10", "11", "seeds", "summary", "t1", "strat"] {
-        nshpo::harness::run_figure(id, Some(&bank), &out)
+        nshpo::harness::run_figure(id, Some(&store), &out)
             .unwrap_or_else(|e| panic!("figure {id}: {e:#}"));
     }
     // figure 6 needs no bank

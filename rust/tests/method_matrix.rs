@@ -231,7 +231,7 @@ fn asha_is_bit_identical_across_worker_counts() {
 
             // ... and via the executor's Asha job kind.
             let out = ReplayExecutor::serial().run(vec![ReplayJob {
-                ts: Arc::clone(&ts),
+                src: (&ts).into(),
                 kind: ReplayKind::Asha {
                     strategy: strategy.clone(),
                     eta: 3.0,

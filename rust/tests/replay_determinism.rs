@@ -34,13 +34,13 @@ fn fig45_job_set(ts: &Arc<nshpo::search::TrajectorySet>) -> Vec<ReplayJob> {
         }
     }
     jobs.push(ReplayJob {
-        ts: Arc::clone(ts),
+        src: ts.into(),
         kind: ReplayKind::LateStart { start_day: 3, day_stop: 10 },
         plan_mult: 1.0,
         tag: "late".into(),
     });
     jobs.push(ReplayJob {
-        ts: Arc::clone(ts),
+        src: ts.into(),
         kind: ReplayKind::Hyperband {
             strategy: Strategy::constant(),
             eta: 3.0,
@@ -123,6 +123,7 @@ fn quick_bank_opts() -> BankOptions {
 #[test]
 fn figure_files_byte_identical_serial_vs_parallel() {
     let bank = build_bank(&quick_bank_opts()).unwrap();
+    let store = nshpo::train::ShardStore::from_bank(bank);
     let base = std::env::temp_dir().join("nshpo_replay_det");
     let dir_serial = base.join("serial");
     let dir_parallel = base.join("parallel");
@@ -132,9 +133,9 @@ fn figure_files_byte_identical_serial_vs_parallel() {
     let parallel = ReplayExecutor::new(4);
     assert_eq!(parallel.workers(), 4);
     for id in ["3", "4", "5", "6"] {
-        nshpo::harness::run_figure_with(id, Some(&bank), &dir_serial, &serial)
+        nshpo::harness::run_figure_with(id, Some(&store), &dir_serial, &serial)
             .unwrap_or_else(|e| panic!("serial figure {id}: {e:#}"));
-        nshpo::harness::run_figure_with(id, Some(&bank), &dir_parallel, &parallel)
+        nshpo::harness::run_figure_with(id, Some(&store), &dir_parallel, &parallel)
             .unwrap_or_else(|e| panic!("parallel figure {id}: {e:#}"));
     }
     for id in ["3", "4", "5", "6"] {
