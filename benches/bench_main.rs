@@ -13,7 +13,9 @@
 //! Filter with: cargo bench -- <substring>. Output quoted in
 //! EXPERIMENTS.md §Perf. `cargo bench -- --json` additionally runs the
 //! replay comparison benches and writes BENCH_replay.json (raw numbers
-//! plus derived speedups) at the repo root.
+//! plus derived speedups) at the repo root, and the serve scheduler
+//! benches (submit→complete latency, serial vs multiplexed tenants)
+//! writing BENCH_serve.json.
 
 use nshpo::data::{Plan, Stream, StreamConfig};
 use nshpo::metrics;
@@ -481,6 +483,77 @@ fn main() {
         ));
         json_results.push(r_mono);
         json_results.push(r_shard);
+    }
+
+    // ------------------------------------------------- serve scheduler
+    // Submit→complete latency through the serve scheduler (admission,
+    // queueing, one toy session, settlement and drain), and a 6-tenant
+    // toy workload drained serially vs multiplexed at 4 workers. Every
+    // job is a pure function of its plan (bit-identical outcomes either
+    // way — serve_session pins that), so the contrast is pure
+    // coordination throughput.
+    if json_out || matches("serve/") {
+        use nshpo::serve::scheduler::null_sink;
+        use nshpo::serve::{PlanSpec, Scheduler, SchedulerOptions, SourceSpec};
+
+        let spec_for = |i: usize| PlanSpec {
+            source: SourceSpec::Toy { configs: 16, days: 12, steps_per_day: 8, seed: i as u64 },
+            method: "perf@0.5[3,6,9]".to_string(),
+            strategy: "constant".to_string(),
+            budget: None,
+            top_k: 3,
+            stage: 2,
+        };
+        let mut serve_json: Vec<BenchResult> = Vec::new();
+        let mut serve_derived: Vec<(String, f64)> = Vec::new();
+
+        let r_lat = bench("serve/submit_drain_1job", 3, MIN_SAMPLE, || {
+            let sched = Scheduler::new(SchedulerOptions { workers: 1, budget_steps: None });
+            sched.submit("lat", &spec_for(0), null_sink()).unwrap();
+            black_box(sched.drain())
+        });
+        println!("{}", r_lat.report());
+        results.push(r_lat.report());
+
+        const TENANTS: usize = 6;
+        let run_tenants = |workers: usize| {
+            let sched = Scheduler::new(SchedulerOptions { workers, budget_steps: None });
+            for i in 0..TENANTS {
+                sched.submit(&format!("t{i}"), &spec_for(i), null_sink()).unwrap();
+            }
+            sched.drain()
+        };
+        let r_serial = bench("serve/6tenants_serial_w1", 3, MIN_SAMPLE, || {
+            black_box(run_tenants(1))
+        });
+        println!("{}", r_serial.report());
+        results.push(r_serial.report());
+
+        let r_mux = bench("serve/6tenants_multiplexed_w4", 3, MIN_SAMPLE, || {
+            black_box(run_tenants(4))
+        });
+        println!("{}", r_mux.report());
+        results.push(r_mux.report());
+
+        println!(
+            "serve multiplexing: {:.2}x at 4 workers over {TENANTS} tenants \
+             (cores available: {})",
+            r_serial.mean_ns() / r_mux.mean_ns(),
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        );
+        serve_derived.push((
+            "serve_multiplex_speedup".into(),
+            r_serial.mean_ns() / r_mux.mean_ns(),
+        ));
+        serve_json.push(r_lat);
+        serve_json.push(r_serial);
+        serve_json.push(r_mux);
+
+        if json_out {
+            let doc = nshpo::util::bench::json_report(&serve_json, &serve_derived);
+            std::fs::write("BENCH_serve.json", &doc).expect("writing BENCH_serve.json");
+            println!("wrote BENCH_serve.json ({} results)", serve_json.len());
+        }
     }
 
     if json_out {

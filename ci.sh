@@ -102,6 +102,43 @@ if cargo run --release -- search --bank "$BANKTMP/bank" --method one-shot@2 \
   exit 1
 fi
 
+echo "== serve gate =="
+# The daemon end to end: serve on a temp socket, submit a replay plan
+# against the migrated bank and stream its events to a done frame,
+# graceful shutdown exits 0, and a submit after shutdown fails loudly.
+# The determinism pin (same plan set -> bit-identical outcomes and
+# ledger totals at any worker count or arrival order) and the per-shape
+# protocol rejections are part of `cargo test` above; run both by name
+# so the gate stays loud if either target is ever dropped.
+cargo test -q --test serve_session
+cargo test -q --test serve_protocol
+SOCK="$BANKTMP/nshpo.sock"
+cargo run --release -- serve --socket "$SOCK" --workers 2 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  [ -S "$SOCK" ] && break
+  sleep 0.1
+done
+test -S "$SOCK"
+# uses the migrated bank: the truncated-shard test above corrupted
+# $BANKTMP/bank, and a daemon submit against it must keep failing loudly
+cargo run --release -- submit --socket "$SOCK" --id ci-replay \
+  --bank "$BANKTMP/migrated" --family fm --plan full --method one-shot@2 \
+  | grep -q '"ev":"done"'
+if cargo run --release -- submit --socket "$SOCK" --id ci-corrupt \
+    --bank "$BANKTMP/bank" --family fm --plan full --method one-shot@2 \
+    >/dev/null 2>&1; then
+  echo "FAIL: daemon replay over a truncated shard did not fail" >&2
+  exit 1
+fi
+cargo run --release -- submit --socket "$SOCK" --shutdown | grep -q '"ev":"bye"'
+wait "$SERVE_PID"
+if cargo run --release -- submit --socket "$SOCK" --id too-late \
+    --method one-shot@2 >/dev/null 2>&1; then
+  echo "FAIL: submit after shutdown was accepted" >&2
+  exit 1
+fi
+
 echo "== rustdoc gate =="
 # The crate carries #![warn(missing_docs)]; the public API must document
 # cleanly (docs/API.md is the committed markdown rendering of it).

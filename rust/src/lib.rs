@@ -30,6 +30,10 @@
 //!   methods`), written once against the `SearchDriver` trait, with
 //!   replay and live backends, the cost model + `CostLedger` (§4.1),
 //!   and the parallel replay executor every exhibit runs on.
+//! * [`serve`] — the `nshpo serve` daemon: a persistent multi-tenant
+//!   search coordinator multiplexing concurrent `SearchSession`s over a
+//!   shared worker pool behind a newline-delimited JSON socket protocol,
+//!   with global-budget admission control (DESIGN.md §8).
 //! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6).
 //! * [`coordinator`] — experiment scheduler (bank building, wall-clock
 //!   accounting for live sessions over real PJRT runs).
@@ -48,6 +52,7 @@ pub mod metrics;
 pub mod predict;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod surrogate;
 pub mod train;
 pub mod util;

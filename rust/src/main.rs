@@ -10,6 +10,8 @@
 //!   methods    list the registered search methods (search::method)
 //!   sim        industrial surrogate sweep (Fig 6 style)
 //!   info       inspect artifacts and banks
+//!   serve      persistent multi-tenant search coordinator daemon
+//!   submit     client for a running serve daemon
 
 use nshpo::bail;
 use nshpo::coordinator::live::LiveSearch;
@@ -21,6 +23,7 @@ use nshpo::search::{
     equally_spaced_stops, sweep, Method, ReplayDriver, ReplayExecutor, SearchOutcome,
     SearchPlan, SearchSession,
 };
+use nshpo::serve::{Addr, Client, PlanSpec, Request, ServeOptions, SourceSpec};
 use nshpo::surrogate;
 use nshpo::train::{
     migrate, resolve_bank_path, Bank, ClusterSource, ClusteredStream, CompactOptions,
@@ -91,6 +94,25 @@ USAGE: nshpo <subcommand> [flags]
   methods    list registered search methods (tag, reference, use)
   sim       [--tasks 12] [--configs 30] [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
+  serve     persistent multi-tenant search coordinator daemon
+            (newline-delimited JSON frames; DESIGN.md §8):
+            [--socket results/nshpo.sock | --tcp 127.0.0.1:7878]
+            [--workers N]  (session multiplexing; 0/unset = cores - 1)
+            [--global-budget-steps N]  (admission control: reject
+            plans whose worst-case step demand exceeds the remaining
+            cross-tenant budget) [--verbose]
+  submit    client for a running serve daemon (same --socket/--tcp):
+            source:  --bank PATH [--family fm] [--plan full] [--seed 0]
+                   | --live [--family fm] [--thin 9] [--days 4]
+                     [--steps-per-day 4] [--batch 64] [--scenario TAG]
+                     [--seed 17] [--clusters 8] [--eval-days 3]
+                   | (default) toy [--configs 8] [--days 12]
+                     [--steps-per-day 8] [--seed 0]
+            plan:    [--id job1] [--method one-shot@6] [--strategy
+                     constant] [--budget C] [--top-k 3] [--stage 2]
+            admin:   --status ID | --cancel ID | --list | --shutdown
+            (streams event frames to stdout; exits nonzero unless the
+            job reaches \"done\" / the admin reply is not an error)
 ";
 
 fn main() {
@@ -105,6 +127,8 @@ fn main() {
         Some("methods") => cmd_methods(),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
         _ => {
             eprint!("{USAGE}");
             Ok(())
@@ -617,4 +641,101 @@ fn cmd_info(args: &Args) -> Result<()> {
         None => println!("bank: {bank_arg:?} not found"),
     }
     Ok(())
+}
+
+// -------------------------------------------------------------- serve
+
+/// Listen/connect address shared by `serve` and `submit`: `--tcp
+/// addr:port` wins; otherwise a Unix-domain socket at `--socket`.
+fn serve_addr(args: &Args) -> Addr {
+    match args.str_opt("tcp") {
+        Some(t) => Addr::Tcp(t.to_string()),
+        None => Addr::Unix(PathBuf::from(args.str_or("socket", "results/nshpo.sock"))),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let budget_steps = if args.has("global-budget-steps") {
+        Some(args.u64_or("global-budget-steps", 0))
+    } else {
+        None
+    };
+    let opts = ServeOptions {
+        addr: serve_addr(args),
+        workers: args.usize_or("workers", 0),
+        budget_steps,
+        verbose: args.has("verbose"),
+    };
+    println!("nshpo serve: {}", opts.addr);
+    if let Some(b) = opts.budget_steps {
+        println!("nshpo serve: global budget {b} training steps");
+    }
+    nshpo::serve::serve(opts)
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&serve_addr(args))?;
+
+    // Admin one-shots: send, print the single reply, fail on error frames.
+    let admin = if args.has("shutdown") {
+        Some(Request::Shutdown)
+    } else if args.has("list") {
+        Some(Request::List)
+    } else if let Some(id) = args.str_opt("status") {
+        Some(Request::Status { id: id.to_string() })
+    } else if let Some(id) = args.str_opt("cancel") {
+        Some(Request::Cancel { id: id.to_string() })
+    } else {
+        None
+    };
+    if let Some(req) = admin {
+        let reply = client.request(&req)?;
+        println!("{reply}");
+        return match nshpo::serve::protocol::event_kind(&reply).as_deref() {
+            Some("error") | None => bail!("daemon rejected request: {reply}"),
+            _ => Ok(()),
+        };
+    }
+
+    let source = if let Some(path) = args.str_opt("bank") {
+        SourceSpec::Bank {
+            path: path.to_string(),
+            family: args.str_or("family", "fm"),
+            plan: args.str_or("plan", "full"),
+            seed: args.u64_or("seed", 0) as i32,
+        }
+    } else if args.has("live") {
+        SourceSpec::Live {
+            family: args.str_or("family", "fm"),
+            thin: args.usize_or("thin", 9).max(1),
+            days: args.usize_or("days", 4),
+            steps_per_day: args.usize_or("steps-per-day", 4),
+            batch: args.usize_or("batch", 64),
+            scenario: args.str_or("scenario", "criteo_like"),
+            seed: args.u64_or("seed", 17),
+            clusters: args.usize_or("clusters", 8),
+            eval_days: args.usize_or("eval-days", 3),
+        }
+    } else {
+        SourceSpec::Toy {
+            configs: args.usize_or("configs", 8),
+            days: args.usize_or("days", 12),
+            steps_per_day: args.usize_or("steps-per-day", 8),
+            seed: args.u64_or("seed", 0),
+        }
+    };
+    let spec = PlanSpec {
+        source,
+        method: args.str_or("method", "one-shot@6"),
+        strategy: args.str_or("strategy", "constant"),
+        budget: args.str_opt("budget").map(|_| args.f64_or("budget", 1.0)),
+        top_k: args.usize_or("top-k", 3),
+        stage: args.usize_or("stage", 2),
+    };
+    let id = args.str_or("id", "job1");
+    let last = client.submit(&id, &spec, |line| println!("{line}"))?;
+    match nshpo::serve::protocol::event_kind(&last).as_deref() {
+        Some("done") => Ok(()),
+        _ => bail!("job {id:?} did not finish: {last}"),
+    }
 }

@@ -139,6 +139,83 @@ impl CostLedger {
     }
 }
 
+/// Cross-tenant admission account of the serve daemon: one budget in raw
+/// training steps spanning every submitted search session.
+///
+/// Where [`CostLedger`] tracks per-config steps *inside* one session,
+/// `GlobalLedger` tracks whole-session step totals *across* sessions —
+/// the daemon admits a submission by committing its worst-case demand up
+/// front ([`try_admit`](GlobalLedger::try_admit)), then settles the
+/// commitment to the actually-trained steps when the session finishes
+/// ([`settle`](GlobalLedger::settle)). A submission whose demand exceeds
+/// the remaining budget is rejected before any training step runs.
+///
+/// Totals are u64 sums of per-session step counts. Addition of exact
+/// integers is commutative and associative, so the settled totals for a
+/// given job set are bit-identical regardless of arrival interleaving or
+/// worker count — the serve determinism contract's ledger half
+/// (`rust/tests/serve_session.rs` pins it).
+#[derive(Clone, Debug)]
+pub struct GlobalLedger {
+    budget: Option<u64>,
+    spent: u64,
+    committed: u64,
+}
+
+impl GlobalLedger {
+    /// A fresh ledger with an optional global budget in raw training
+    /// steps (`None` = unlimited: every demand admits).
+    pub fn new(budget_steps: Option<u64>) -> GlobalLedger {
+        GlobalLedger { budget: budget_steps, spent: 0, committed: 0 }
+    }
+
+    /// The configured global budget, if any.
+    pub fn budget_steps(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Admit a session by committing its worst-case step demand, or
+    /// reject it — `Err(remaining)` — leaving the ledger untouched.
+    pub fn try_admit(&mut self, demand_steps: u64) -> Result<(), u64> {
+        if let Some(b) = self.budget {
+            let remaining = b.saturating_sub(self.spent + self.committed);
+            if demand_steps > remaining {
+                return Err(remaining);
+            }
+        }
+        self.committed += demand_steps;
+        Ok(())
+    }
+
+    /// Settle a finished (or failed / cancelled) session: its commitment
+    /// is released and the steps it actually trained become spent.
+    pub fn settle(&mut self, demand_steps: u64, actual_steps: u64) {
+        self.committed = self.committed.saturating_sub(demand_steps);
+        self.spent += actual_steps;
+    }
+
+    /// Release a commitment that never ran (a job cancelled while
+    /// queued): [`settle`](GlobalLedger::settle) with zero actual steps.
+    pub fn release(&mut self, demand_steps: u64) {
+        self.settle(demand_steps, 0);
+    }
+
+    /// Steps actually trained across every settled session.
+    pub fn spent_steps(&self) -> u64 {
+        self.spent
+    }
+
+    /// Steps committed to admitted-but-unsettled sessions.
+    pub fn committed_steps(&self) -> u64 {
+        self.committed
+    }
+
+    /// Budget left for new admissions (`None` = unlimited).
+    pub fn remaining_steps(&self) -> Option<u64> {
+        self.budget.map(|b| b.saturating_sub(self.spent + self.committed))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +298,61 @@ mod tests {
             empirical(&[200, 0], 200).to_bits()
         );
         assert_eq!(l.relative_cost(), 0.5);
+    }
+
+    // ---------------------------------------------------- global ledger
+
+    #[test]
+    fn global_ledger_admits_settles_and_rejects() {
+        let mut g = GlobalLedger::new(Some(1000));
+        assert_eq!(g.remaining_steps(), Some(1000));
+        g.try_admit(600).unwrap();
+        assert_eq!(g.committed_steps(), 600);
+        assert_eq!(g.remaining_steps(), Some(400));
+        // over-demand is rejected and leaves the ledger untouched
+        assert_eq!(g.try_admit(500), Err(400));
+        assert_eq!(g.committed_steps(), 600);
+        assert_eq!(g.spent_steps(), 0);
+        // settle to the (smaller) actual spend frees budget
+        g.settle(600, 450);
+        assert_eq!(g.spent_steps(), 450);
+        assert_eq!(g.committed_steps(), 0);
+        assert_eq!(g.remaining_steps(), Some(550));
+        g.try_admit(500).unwrap();
+        g.release(500);
+        assert_eq!(g.spent_steps(), 450);
+        assert_eq!(g.remaining_steps(), Some(550));
+    }
+
+    #[test]
+    fn global_ledger_unlimited_admits_everything() {
+        let mut g = GlobalLedger::new(None);
+        g.try_admit(u64::MAX / 2).unwrap();
+        assert_eq!(g.remaining_steps(), None);
+        assert_eq!(g.budget_steps(), None);
+        g.settle(u64::MAX / 2, 123);
+        assert_eq!(g.spent_steps(), 123);
+    }
+
+    #[test]
+    fn global_ledger_totals_are_order_invariant() {
+        // the determinism contract's arithmetic core: settled totals are
+        // a plain sum, so every interleaving agrees bit for bit
+        let jobs = [(700u64, 500u64), (300, 120), (900, 900)];
+        let mut orders = vec![vec![0usize, 1, 2], vec![2, 0, 1], vec![1, 2, 0]];
+        let mut totals = Vec::new();
+        for order in orders.drain(..) {
+            let mut g = GlobalLedger::new(Some(10_000));
+            for &i in &order {
+                g.try_admit(jobs[i].0).unwrap();
+            }
+            for &i in order.iter().rev() {
+                g.settle(jobs[i].0, jobs[i].1);
+            }
+            totals.push((g.spent_steps(), g.committed_steps()));
+        }
+        assert!(totals.windows(2).all(|w| w[0] == w[1]), "{totals:?}");
+        assert_eq!(totals[0], (1520, 0));
     }
 
     #[test]

@@ -58,11 +58,22 @@ impl TsSource {
     /// resident sources). An empty bank cell is an error — jobs are
     /// built against cells the caller already checked exist.
     pub fn resolve(&self) -> Result<Arc<TrajectorySet>, SerError> {
+        self.resolve_with_labels().map(|(ts, _labels)| ts)
+    }
+
+    /// Like [`resolve`](TsSource::resolve), but also returning the
+    /// per-config labels aligned with the set's config indices: bank
+    /// cells carry their recorded sweep labels; resident sets get
+    /// positional `cfg<i>` names. The serve daemon reports finalists by
+    /// these labels.
+    pub fn resolve_with_labels(&self) -> Result<(Arc<TrajectorySet>, Vec<String>), SerError> {
         match self {
-            TsSource::Resident(ts) => Ok(Arc::clone(ts)),
+            TsSource::Resident(ts) => {
+                let labels = (0..ts.n_configs()).map(|c| format!("cfg{c}")).collect();
+                Ok((Arc::clone(ts), labels))
+            }
             TsSource::Bank { store, family, plan_tag, seed } => store
                 .trajectory_set(family, plan_tag, *seed)?
-                .map(|(ts, _labels)| ts)
                 .ok_or_else(|| {
                     SerError(format!(
                         "bank has no runs for family={family} plan={plan_tag} seed={seed}"

@@ -61,6 +61,22 @@ pub struct SearchOutcome {
     pub steps_trained: Vec<usize>,
 }
 
+impl SearchOutcome {
+    /// JSON rendering (serve protocol `done` frames, result files):
+    /// ranking, relative cost, and the per-config step audit. Keys are
+    /// sorted and numbers render canonically, so bit-identical outcomes
+    /// serialize to byte-identical text.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let ints = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+        let mut o = Json::obj();
+        o.set("ranking", ints(&self.ranking))
+            .set("cost", Json::Num(self.cost))
+            .set("steps_trained", ints(&self.steps_trained));
+        o
+    }
+}
+
 impl TrajectorySet {
     /// Number of recorded configurations.
     pub fn n_configs(&self) -> usize {

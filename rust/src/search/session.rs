@@ -214,6 +214,25 @@ pub struct TwoStageOutcome {
     pub steps_trained: Vec<usize>,
 }
 
+impl TwoStageOutcome {
+    /// JSON rendering (serve protocol `done` frames, result files).
+    /// Like [`SearchOutcome::to_json`], bit-identical outcomes serialize
+    /// to byte-identical text — the serve determinism pin compares these
+    /// strings directly.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let ints = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+        let mut o = Json::obj();
+        o.set("stage1", self.stage1.to_json())
+            .set("finalists", ints(&self.finalists))
+            .set("final_ranking", ints(&self.final_ranking))
+            .set("stage2_cost", Json::Num(self.stage2_cost))
+            .set("combined_cost", Json::Num(self.combined_cost))
+            .set("steps_trained", ints(&self.steps_trained));
+        o
+    }
+}
+
 /// One search over one driver: binds a plan, a backend, and the shared
 /// [`CostLedger`] both stages charge.
 pub struct SearchSession<'d> {

@@ -1,0 +1,127 @@
+//! In-tree client for the `nshpo serve` daemon — the library behind
+//! `nshpo submit`, and the harness the socket-level tests drive.
+
+use crate::serve::protocol::{self, PlanSpec, Request};
+use crate::serve::server::Addr;
+use crate::util::error::Result;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+
+enum Conn {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    fn try_clone(&self) -> std::io::Result<Conn> {
+        match self {
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// One connection to a running daemon. Frames go out and come back as
+/// single lines; [`submit`](Client::submit) streams events until the
+/// job's terminal frame.
+pub struct Client {
+    reader: BufReader<Conn>,
+    writer: Conn,
+}
+
+impl Client {
+    /// Connect to a daemon at `addr`.
+    pub fn connect(addr: &Addr) -> Result<Client> {
+        let conn = match addr {
+            Addr::Unix(path) => UnixStream::connect(path)
+                .map(Conn::Unix)
+                .map_err(|e| crate::err!("cannot connect to {}: {e}", path.display()))?,
+            Addr::Tcp(a) => TcpStream::connect(a)
+                .map(Conn::Tcp)
+                .map_err(|e| crate::err!("cannot connect to {a}: {e}"))?,
+        };
+        let reader = BufReader::new(
+            conn.try_clone().map_err(|e| crate::err!("cannot clone connection: {e}"))?,
+        );
+        Ok(Client { reader, writer: conn })
+    }
+
+    /// Send one raw frame line.
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| crate::err!("write failed: {e}"))
+    }
+
+    /// Read one frame line; `None` when the daemon closed the
+    /// connection.
+    pub fn recv_line(&mut self) -> Result<Option<String>> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => Ok(None),
+            Ok(_) => Ok(Some(line.trim_end_matches(['\n', '\r']).to_string())),
+            Err(e) => Err(crate::err!("read failed: {e}")),
+        }
+    }
+
+    /// Submit a plan and stream every event line through `on_line` until
+    /// a terminal frame (`done` / `failed` / `cancelled` / `error`)
+    /// arrives. Returns the terminal line.
+    pub fn submit(
+        &mut self,
+        id: &str,
+        spec: &PlanSpec,
+        mut on_line: impl FnMut(&str),
+    ) -> Result<String> {
+        let req = Request::Submit { id: id.to_string(), spec: spec.clone() };
+        self.send_line(&req.to_line())?;
+        loop {
+            match self.recv_line()? {
+                Some(line) => {
+                    on_line(&line);
+                    if let Some(ev) = protocol::event_kind(&line) {
+                        if protocol::is_terminal(&ev) {
+                            return Ok(line);
+                        }
+                    }
+                }
+                None => return Err(crate::err!("daemon closed connection mid-stream")),
+            }
+        }
+    }
+
+    /// One-shot request/reply: send the frame and return the first reply
+    /// line (`status`, `list`, `cancelled`, `bye`, or an error frame).
+    pub fn request(&mut self, req: &Request) -> Result<String> {
+        self.send_line(&req.to_line())?;
+        self.recv_line()?
+            .ok_or_else(|| crate::err!("daemon closed connection before replying"))
+    }
+}

@@ -1,0 +1,34 @@
+//! `nshpo serve` — a persistent multi-tenant search coordinator daemon
+//! (DESIGN.md §8).
+//!
+//! Layering, bottom up:
+//!
+//! - [`protocol`] — the newline-delimited JSON frame protocol: request
+//!   parsing (lazily dispatched on `"cmd"` via
+//!   [`Json::scan_field`](crate::util::json::Json::scan_field)),
+//!   [`PlanSpec`]/[`SourceSpec`] wire forms, event frame constructors,
+//!   and the field-naming [`FrameError`] every rejection is reported
+//!   through.
+//! - [`scheduler`] — the session table: admission against a
+//!   [`GlobalLedger`](crate::search::cost::GlobalLedger) budget,
+//!   multiplexed execution of replay and live
+//!   [`SearchSession`](crate::search::SearchSession)s over one shared
+//!   [`ThreadPool`](crate::util::threadpool::ThreadPool), shared bank
+//!   stores and live streams, streamed wave events, and deterministic
+//!   settlement (same plans → bit-identical outcomes and ledger totals
+//!   at any worker count or arrival order).
+//! - [`server`] — the socket daemon: Unix-domain or TCP transport, one
+//!   thread per connection, graceful `shutdown` drain.
+//! - [`client`] — the in-tree client behind `nshpo submit`.
+
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use client::Client;
+pub use protocol::{FrameError, PlanSpec, Request, SourceSpec};
+pub use scheduler::{
+    Admission, EventSink, JobSnapshot, JobState, LedgerSnapshot, Scheduler, SchedulerOptions,
+};
+pub use server::{serve, Addr, ServeOptions};

@@ -1,0 +1,631 @@
+//! Wire protocol of the `nshpo serve` daemon: newline-delimited JSON
+//! frames on the in-tree [`Json`] codec.
+//!
+//! Every frame is one line. Client → server frames carry the magic field
+//! `"nshpo": "v1"` and a `"cmd"` (`submit` | `status` | `cancel` | `list`
+//! | `shutdown`); server → client frames carry an `"ev"` discriminator
+//! (`accepted`, `wave`, `done`, `failed`, `cancelled`, `status`, `list`,
+//! `bye`, `error`). Request dispatch uses [`Json::scan_field`] — the
+//! daemon reads `"nshpo"` / `"cmd"` / `"id"` without parsing the request
+//! body, and only a `submit`'s `"plan"` object is ever fully parsed.
+//!
+//! Every rejection is a [`FrameError`] naming the offending field
+//! (`"cmd"`, `"plan.method"`, `"plan.budget"`, ...), mirroring the
+//! registry tag-rejection contract: clients see *which* part of their
+//! frame was wrong, never a bare parse failure.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Value of the `"nshpo"` magic field every request must carry.
+pub const MAGIC: &str = "v1";
+
+/// The commands a frame may name, for error messages.
+const COMMANDS: &str = "submit | status | cancel | list | shutdown";
+
+/// A structured protocol rejection: which field of the frame was wrong,
+/// and why. Serialized as an `error` event frame.
+#[derive(Clone, Debug)]
+pub struct FrameError {
+    /// Dotted path of the offending field (`"cmd"`, `"plan.method"`, ...).
+    pub field: String,
+    /// Human-readable reason, including valid alternatives where the
+    /// registry defines them.
+    pub message: String,
+}
+
+impl FrameError {
+    /// A rejection of `field` with the given reason.
+    pub fn new(field: &str, message: impl Into<String>) -> FrameError {
+        FrameError { field: field.to_string(), message: message.into() }
+    }
+
+    /// Serialize as an `error` event frame, attributed to a job id when
+    /// one is known.
+    pub fn frame(&self, id: Option<&str>) -> String {
+        let mut o = event("error");
+        o.set("field", Json::Str(self.field.clone()))
+            .set("error", Json::Str(self.message.clone()));
+        if let Some(id) = id {
+            o.set("id", Json::Str(id.to_string()));
+        }
+        o.to_string_compact()
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.field, self.message)
+    }
+}
+
+/// Where a submitted plan's trajectories come from.
+#[derive(Clone, Debug)]
+pub enum SourceSpec {
+    /// The synthetic [`TrajectorySet::toy`](crate::search::TrajectorySet::toy)
+    /// generator — deterministic, instant, the protocol-test workload.
+    Toy {
+        /// Number of candidate configurations.
+        configs: usize,
+        /// Training horizon in days.
+        days: usize,
+        /// Training steps per day.
+        steps_per_day: usize,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// A (family, plan, seed) cell of an on-disk trajectory bank,
+    /// streamed through the daemon's shared
+    /// [`ShardStore`](crate::train::ShardStore).
+    Bank {
+        /// Bank path (v3 directory or v2 `.nsbk` file).
+        path: String,
+        /// Experiment family of the cell.
+        family: String,
+        /// Sub-sampling plan tag of the cell.
+        plan: String,
+        /// Model seed of the cell.
+        seed: i32,
+    },
+    /// Live proxy training over a generated stream, sharing the daemon's
+    /// per-stream [`BatchCache`](crate::data::BatchCache).
+    Live {
+        /// Experiment family (sweep) to search.
+        family: String,
+        /// Keep every n-th config of the sweep.
+        thin: usize,
+        /// Training horizon in days.
+        days: usize,
+        /// Training steps per day.
+        steps_per_day: usize,
+        /// Examples per batch.
+        batch: usize,
+        /// Data scenario tag (`nshpo scenarios`).
+        scenario: String,
+        /// Stream seed.
+        seed: u64,
+        /// Drift clusters for stratified prediction.
+        clusters: usize,
+        /// Evaluation window in days.
+        eval_days: usize,
+    },
+}
+
+/// A submitted search plan, as carried by a `submit` frame's `"plan"`
+/// object: a source, registry tags for method and strategy, and the
+/// session parameters. Resolution of the tags (and admission) happens in
+/// the [`Scheduler`](crate::serve::Scheduler); the spec itself is plain
+/// validated data.
+#[derive(Clone, Debug)]
+pub struct PlanSpec {
+    /// Where the trajectories come from.
+    pub source: SourceSpec,
+    /// Search-method registry tag (`nshpo methods`), e.g. `asha@3`.
+    pub method: String,
+    /// Prediction-strategy registry tag (`nshpo strategies`).
+    pub strategy: String,
+    /// Optional cap on the stage-1 relative cost C.
+    pub budget: Option<f64>,
+    /// Finalists stage 2 resumes to the full horizon.
+    pub top_k: usize,
+    /// 1 = identify only; 2 = identify + finish finalists (default).
+    pub stage: usize,
+}
+
+fn field_usize(o: &Json, ctx: &str, key: &str, default: usize) -> Result<usize, FrameError> {
+    match o.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| FrameError::new(&format!("{ctx}.{key}"), "must be a non-negative integer")),
+    }
+}
+
+fn field_str(o: &Json, ctx: &str, key: &str, default: &str) -> Result<String, FrameError> {
+    match o.get(key) {
+        None => Ok(default.to_string()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => Err(FrameError::new(&format!("{ctx}.{key}"), "must be a string")),
+    }
+}
+
+impl SourceSpec {
+    /// Parse the `"plan.source"` object; every rejection names the
+    /// offending field under `plan.source.`.
+    pub fn from_json(src: &Json) -> Result<SourceSpec, FrameError> {
+        const CTX: &str = "plan.source";
+        if !matches!(src, Json::Obj(_)) {
+            return Err(FrameError::new(CTX, "must be an object with a \"kind\""));
+        }
+        let kind = match src.get("kind") {
+            Some(Json::Str(k)) => k.clone(),
+            Some(_) => return Err(FrameError::new("plan.source.kind", "must be a string")),
+            None => {
+                return Err(FrameError::new(
+                    "plan.source.kind",
+                    "missing (toy | bank | live)",
+                ))
+            }
+        };
+        match kind.as_str() {
+            "toy" => {
+                let spec = SourceSpec::Toy {
+                    configs: field_usize(src, CTX, "configs", 8)?,
+                    days: field_usize(src, CTX, "days", 12)?,
+                    steps_per_day: field_usize(src, CTX, "steps_per_day", 8)?,
+                    seed: field_usize(src, CTX, "seed", 0)? as u64,
+                };
+                if let SourceSpec::Toy { configs, days, steps_per_day, .. } = &spec {
+                    for (name, v) in
+                        [("configs", *configs), ("days", *days), ("steps_per_day", *steps_per_day)]
+                    {
+                        if v == 0 {
+                            return Err(FrameError::new(
+                                &format!("{CTX}.{name}"),
+                                "must be >= 1",
+                            ));
+                        }
+                    }
+                }
+                Ok(spec)
+            }
+            "bank" => {
+                let path = match src.get("path") {
+                    Some(Json::Str(p)) if !p.is_empty() => p.clone(),
+                    Some(_) => {
+                        return Err(FrameError::new("plan.source.path", "must be a non-empty string"))
+                    }
+                    None => return Err(FrameError::new("plan.source.path", "missing (bank path)")),
+                };
+                Ok(SourceSpec::Bank {
+                    path,
+                    family: field_str(src, CTX, "family", "fm")?,
+                    plan: field_str(src, CTX, "plan", "full")?,
+                    seed: field_usize(src, CTX, "seed", 0)? as i32,
+                })
+            }
+            "live" => {
+                let spec = SourceSpec::Live {
+                    family: field_str(src, CTX, "family", "fm")?,
+                    thin: field_usize(src, CTX, "thin", 9)?.max(1),
+                    days: field_usize(src, CTX, "days", 4)?,
+                    steps_per_day: field_usize(src, CTX, "steps_per_day", 4)?,
+                    batch: field_usize(src, CTX, "batch", 64)?,
+                    scenario: field_str(src, CTX, "scenario", "criteo_like")?,
+                    seed: field_usize(src, CTX, "seed", 17)? as u64,
+                    clusters: field_usize(src, CTX, "clusters", 8)?.max(1),
+                    eval_days: field_usize(src, CTX, "eval_days", 3)?.max(1),
+                };
+                if let SourceSpec::Live { days, steps_per_day, batch, .. } = &spec {
+                    for (name, v) in
+                        [("days", *days), ("steps_per_day", *steps_per_day), ("batch", *batch)]
+                    {
+                        if v == 0 {
+                            return Err(FrameError::new(
+                                &format!("{CTX}.{name}"),
+                                "must be >= 1",
+                            ));
+                        }
+                    }
+                }
+                Ok(spec)
+            }
+            other => Err(FrameError::new(
+                "plan.source.kind",
+                format!("unknown source kind {other:?} (toy | bank | live)"),
+            )),
+        }
+    }
+
+    /// Serialize back to the `"plan.source"` object (client side).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            SourceSpec::Toy { configs, days, steps_per_day, seed } => {
+                o.set("kind", Json::Str("toy".into()))
+                    .set("configs", Json::Num(*configs as f64))
+                    .set("days", Json::Num(*days as f64))
+                    .set("steps_per_day", Json::Num(*steps_per_day as f64))
+                    .set("seed", Json::Num(*seed as f64));
+            }
+            SourceSpec::Bank { path, family, plan, seed } => {
+                o.set("kind", Json::Str("bank".into()))
+                    .set("path", Json::Str(path.clone()))
+                    .set("family", Json::Str(family.clone()))
+                    .set("plan", Json::Str(plan.clone()))
+                    .set("seed", Json::Num(*seed as f64));
+            }
+            SourceSpec::Live {
+                family,
+                thin,
+                days,
+                steps_per_day,
+                batch,
+                scenario,
+                seed,
+                clusters,
+                eval_days,
+            } => {
+                o.set("kind", Json::Str("live".into()))
+                    .set("family", Json::Str(family.clone()))
+                    .set("thin", Json::Num(*thin as f64))
+                    .set("days", Json::Num(*days as f64))
+                    .set("steps_per_day", Json::Num(*steps_per_day as f64))
+                    .set("batch", Json::Num(*batch as f64))
+                    .set("scenario", Json::Str(scenario.clone()))
+                    .set("seed", Json::Num(*seed as f64))
+                    .set("clusters", Json::Num(*clusters as f64))
+                    .set("eval_days", Json::Num(*eval_days as f64));
+            }
+        }
+        o
+    }
+}
+
+impl PlanSpec {
+    /// Parse the `"plan"` object of a `submit` frame; every rejection
+    /// names the offending field under `plan.`.
+    pub fn from_json(plan: &Json) -> Result<PlanSpec, FrameError> {
+        if !matches!(plan, Json::Obj(_)) {
+            return Err(FrameError::new("plan", "must be an object"));
+        }
+        let source = match plan.get("source") {
+            Some(s) => SourceSpec::from_json(s)?,
+            None => return Err(FrameError::new("plan.source", "missing (toy | bank | live)")),
+        };
+        let method = match plan.get("method") {
+            Some(Json::Str(m)) if !m.is_empty() => m.clone(),
+            Some(_) => return Err(FrameError::new("plan.method", "must be a non-empty string")),
+            None => {
+                return Err(FrameError::new(
+                    "plan.method",
+                    "missing (a search-method registry tag; see `nshpo methods`)",
+                ))
+            }
+        };
+        let strategy = field_str(plan, "plan", "strategy", "constant")?;
+        let budget = match plan.get("budget") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().filter(|b| b.is_finite() && *b > 0.0).ok_or_else(
+                || FrameError::new("plan.budget", "must be a finite number > 0 (a relative cost)"),
+            )?),
+        };
+        let top_k = field_usize(plan, "plan", "top_k", 3)?;
+        if top_k == 0 {
+            return Err(FrameError::new("plan.top_k", "must be >= 1"));
+        }
+        let stage = field_usize(plan, "plan", "stage", 2)?;
+        if stage != 1 && stage != 2 {
+            return Err(FrameError::new(
+                "plan.stage",
+                "must be 1 (identify) or 2 (identify + finish finalists)",
+            ));
+        }
+        Ok(PlanSpec { source, method, strategy, budget, top_k, stage })
+    }
+
+    /// Serialize back to the `"plan"` object (client side).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("source", self.source.to_json())
+            .set("method", Json::Str(self.method.clone()))
+            .set("strategy", Json::Str(self.strategy.clone()))
+            .set("top_k", Json::Num(self.top_k as f64))
+            .set("stage", Json::Num(self.stage as f64));
+        if let Some(b) = self.budget {
+            o.set("budget", Json::Num(b));
+        }
+        o
+    }
+}
+
+/// One parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Submit a new search session under `id`.
+    Submit {
+        /// Caller-chosen job id (unique per daemon lifetime).
+        id: String,
+        /// The plan to run.
+        spec: PlanSpec,
+    },
+    /// Query one job's state.
+    Status {
+        /// The job to query.
+        id: String,
+    },
+    /// Cooperatively cancel a job (takes effect at the next wave).
+    Cancel {
+        /// The job to cancel.
+        id: String,
+    },
+    /// List every job and the global ledger.
+    List,
+    /// Drain in-flight jobs and stop the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one frame line. The dispatch fields — `"nshpo"`, `"cmd"`,
+    /// `"id"` — are extracted with the lazy byte scanner
+    /// ([`Json::scan_field`]); only a `submit`'s body is fully parsed.
+    pub fn parse(line: &str) -> Result<Request, FrameError> {
+        let bytes = line.as_bytes();
+        match Json::scan_field(bytes, &["nshpo"])
+            .map_err(|e| FrameError::new("nshpo", format!("malformed frame: {e}")))?
+        {
+            Some(Json::Str(v)) if v == MAGIC => {}
+            Some(_) => {
+                return Err(FrameError::new(
+                    "nshpo",
+                    format!("frame version must be the string {MAGIC:?}"),
+                ))
+            }
+            None => {
+                return Err(FrameError::new(
+                    "nshpo",
+                    format!("missing magic field (expected \"nshpo\": {MAGIC:?})"),
+                ))
+            }
+        }
+        let cmd = match Json::scan_field(bytes, &["cmd"])
+            .map_err(|e| FrameError::new("cmd", format!("malformed frame: {e}")))?
+        {
+            Some(Json::Str(c)) => c,
+            Some(_) => return Err(FrameError::new("cmd", "must be a string")),
+            None => return Err(FrameError::new("cmd", format!("missing ({COMMANDS})"))),
+        };
+        let scan_id = || -> Result<String, FrameError> {
+            match Json::scan_field(bytes, &["id"])
+                .map_err(|e| FrameError::new("id", format!("malformed frame: {e}")))?
+            {
+                Some(Json::Str(s)) if !s.is_empty() => Ok(s),
+                Some(_) => Err(FrameError::new("id", "must be a non-empty string")),
+                None => Err(FrameError::new("id", format!("required by {cmd:?}"))),
+            }
+        };
+        match cmd.as_str() {
+            "submit" => {
+                let id = scan_id()?;
+                // only now does the body get a full parse
+                let root = Json::parse(line)
+                    .map_err(|e| FrameError::new("plan", format!("malformed frame: {e}")))?;
+                let plan = root
+                    .get("plan")
+                    .ok_or_else(|| FrameError::new("plan", "missing (the plan object)"))?;
+                Ok(Request::Submit { id, spec: PlanSpec::from_json(plan)? })
+            }
+            "status" => Ok(Request::Status { id: scan_id()? }),
+            "cancel" => Ok(Request::Cancel { id: scan_id()? }),
+            "list" => Ok(Request::List),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(FrameError::new(
+                "cmd",
+                format!("unknown command {other:?} ({COMMANDS})"),
+            )),
+        }
+    }
+
+    /// Serialize as a frame line (client side; no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut o = Json::obj();
+        o.set("nshpo", Json::Str(MAGIC.into()));
+        match self {
+            Request::Submit { id, spec } => {
+                o.set("cmd", Json::Str("submit".into()))
+                    .set("id", Json::Str(id.clone()))
+                    .set("plan", spec.to_json());
+            }
+            Request::Status { id } => {
+                o.set("cmd", Json::Str("status".into())).set("id", Json::Str(id.clone()));
+            }
+            Request::Cancel { id } => {
+                o.set("cmd", Json::Str("cancel".into())).set("id", Json::Str(id.clone()));
+            }
+            Request::List => {
+                o.set("cmd", Json::Str("list".into()));
+            }
+            Request::Shutdown => {
+                o.set("cmd", Json::Str("shutdown".into()));
+            }
+        }
+        o.to_string_compact()
+    }
+}
+
+// ----------------------------------------------------------- event frames
+
+fn event(ev: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("nshpo", Json::Str(MAGIC.into())).set("ev", Json::Str(ev.into()));
+    o
+}
+
+fn opt_num(v: Option<u64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x as f64),
+        None => Json::Null,
+    }
+}
+
+/// Server → client frame constructors. Each returns one serialized line
+/// (no trailing newline); all state is passed in as primitives so the
+/// protocol layer stays free of scheduler types.
+pub mod frames {
+    use super::{event, opt_num, Json};
+
+    /// A submission was admitted: its worst-case step demand was
+    /// committed against the global budget (`remaining` is `null` when
+    /// the budget is unlimited).
+    pub fn accepted(id: &str, demand_steps: u64, remaining_steps: Option<u64>) -> String {
+        let mut o = event("accepted");
+        o.set("id", Json::Str(id.into()))
+            .set("demand_steps", Json::Num(demand_steps as f64))
+            .set("remaining_steps", opt_num(remaining_steps));
+        o.to_string_compact()
+    }
+
+    /// One training wave finished: `seq`-th wave of the job, advancing
+    /// `configs` candidates through day `day`.
+    pub fn wave(id: &str, seq: usize, day: usize, configs: usize) -> String {
+        let mut o = event("wave");
+        o.set("id", Json::Str(id.into()))
+            .set("seq", Json::Num(seq as f64))
+            .set("day", Json::Num(day as f64))
+            .set("configs", Json::Num(configs as f64));
+        o.to_string_compact()
+    }
+
+    /// A job finished: the outcome (a [`SearchOutcome`](crate::search::SearchOutcome)
+    /// or [`TwoStageOutcome`](crate::search::TwoStageOutcome) rendering),
+    /// the steps it actually trained, and the top configs by label.
+    pub fn done(id: &str, outcome: Json, spent_steps: u64, top: &[String]) -> String {
+        let mut o = event("done");
+        o.set("id", Json::Str(id.into()))
+            .set("outcome", outcome)
+            .set("spent_steps", Json::Num(spent_steps as f64))
+            .set("top", Json::Arr(top.iter().map(|l| Json::Str(l.clone())).collect()));
+        o.to_string_compact()
+    }
+
+    /// A job failed at runtime (after admission).
+    pub fn failed(id: &str, error: &str) -> String {
+        let mut o = event("failed");
+        o.set("id", Json::Str(id.into())).set("error", Json::Str(error.into()));
+        o.to_string_compact()
+    }
+
+    /// A cancellation took effect.
+    pub fn cancelled(id: &str) -> String {
+        let mut o = event("cancelled");
+        o.set("id", Json::Str(id.into()));
+        o.to_string_compact()
+    }
+
+    /// One job's current state.
+    pub fn status(id: &str, state: &str, demand_steps: u64, spent_steps: u64) -> String {
+        let mut o = event("status");
+        o.set("id", Json::Str(id.into()))
+            .set("state", Json::Str(state.into()))
+            .set("demand_steps", Json::Num(demand_steps as f64))
+            .set("spent_steps", Json::Num(spent_steps as f64));
+        o.to_string_compact()
+    }
+
+    /// The session table and the global ledger.
+    pub fn list(
+        jobs: &[(String, &'static str)],
+        spent_steps: u64,
+        committed_steps: u64,
+        budget_steps: Option<u64>,
+    ) -> String {
+        let mut o = event("list");
+        let rows = jobs
+            .iter()
+            .map(|(id, state)| {
+                let mut r = Json::obj();
+                r.set("id", Json::Str(id.clone())).set("state", Json::Str((*state).into()));
+                r
+            })
+            .collect();
+        let mut ledger = Json::obj();
+        ledger
+            .set("spent_steps", Json::Num(spent_steps as f64))
+            .set("committed_steps", Json::Num(committed_steps as f64))
+            .set("budget_steps", opt_num(budget_steps));
+        o.set("jobs", Json::Arr(rows)).set("ledger", ledger);
+        o.to_string_compact()
+    }
+
+    /// The daemon drained and is exiting.
+    pub fn bye(spent_steps: u64) -> String {
+        let mut o = event("bye");
+        o.set("spent_steps", Json::Num(spent_steps as f64));
+        o.to_string_compact()
+    }
+}
+
+/// The `"ev"` discriminator of a server frame line, lazily scanned.
+pub fn event_kind(line: &str) -> Option<String> {
+    match Json::scan_field(line.as_bytes(), &["ev"]) {
+        Ok(Some(Json::Str(ev))) => Some(ev),
+        _ => None,
+    }
+}
+
+/// Whether an event kind ends a submit's event stream.
+pub fn is_terminal(ev: &str) -> bool {
+    matches!(ev, "done" | "failed" | "cancelled" | "error" | "bye")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_roundtrip_through_their_lines() {
+        let reqs = [
+            Request::Submit {
+                id: "j1".into(),
+                spec: PlanSpec {
+                    source: SourceSpec::Toy { configs: 8, days: 12, steps_per_day: 8, seed: 3 },
+                    method: "asha@3".into(),
+                    strategy: "constant".into(),
+                    budget: Some(0.5),
+                    top_k: 2,
+                    stage: 2,
+                },
+            },
+            Request::Status { id: "j1".into() },
+            Request::Cancel { id: "j1".into() },
+            Request::List,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            let back = Request::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back.to_line(), line);
+        }
+    }
+
+    #[test]
+    fn event_kind_scans_and_classifies() {
+        let line = frames::done("j1", Json::obj(), 42, &[]);
+        assert_eq!(event_kind(&line).as_deref(), Some("done"));
+        assert!(is_terminal("done"));
+        assert!(is_terminal("error"));
+        assert!(!is_terminal("wave"));
+        assert_eq!(event_kind("not json"), None);
+    }
+
+    #[test]
+    fn error_frames_name_their_field() {
+        let line = FrameError::new("plan.budget", "too big").frame(Some("j9"));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("field").unwrap().as_str(), Some("plan.budget"));
+        assert_eq!(v.get("id").unwrap().as_str(), Some("j9"));
+        assert_eq!(v.get("ev").unwrap().as_str(), Some("error"));
+    }
+}

@@ -1,0 +1,698 @@
+//! The session-table scheduler behind `nshpo serve`: admission,
+//! multiplexed execution, and deterministic settlement of many concurrent
+//! [`SearchSession`]s.
+//!
+//! **Structure.** One shared [`ThreadPool`] runs every admitted job; one
+//! [`GlobalLedger`] spans every tenant; one [`ShardStore`] per bank path
+//! and one [`ClusteredStream`] (with its [`BatchCache`](crate::data::BatchCache))
+//! per live stream key are shared across jobs, so concurrent submissions
+//! against the same bank or stream deduplicate their I/O and batch
+//! generation.
+//!
+//! **Determinism contract** (pinned by `rust/tests/serve_session.rs`):
+//! every job is a pure function of its [`PlanSpec`] — replay outcomes
+//! depend only on the trajectory set and the plan, live proxy outcomes
+//! only on the stream and the plan (per-job segment training is serial,
+//! `DESIGN.md` §7). Results are keyed by job id, and the global ledger's
+//! totals are exact u64 sums of per-job step counts. None of these
+//! depend on which worker ran a job or in what order jobs interleaved,
+//! so the same submitted plan set yields bit-identical outcome frames
+//! and ledger totals at any `--workers` and any arrival order.
+//!
+//! **Admission** happens entirely inside [`Scheduler::submit`], before
+//! the job is enqueued: the plan's worst-case step demand is computed
+//! from its source shape and budget, and committed against the
+//! [`GlobalLedger`] — an over-budget submission is rejected with a
+//! structured [`FrameError`] naming `plan.budget` before any training
+//! step is charged.
+
+use crate::coordinator::ProxyFactory;
+use crate::data::{Plan, Stream, StreamConfig};
+use crate::predict::Strategy;
+use crate::search::cost::GlobalLedger;
+use crate::search::sweep::{self, ConfigSpec};
+use crate::search::{
+    LiveDriver, ReplayDriver, Method, SearchDriver, SearchPlan, SearchSession, TrajectorySet,
+    TsSource,
+};
+use crate::serve::protocol::{frames, FrameError, PlanSpec, SourceSpec};
+use crate::train::{ClusterSource, ClusteredStream, ShardStore};
+use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Receives serialized event frame lines for one job's stream. The
+/// server wraps a connection writer; tests collect into a vector.
+pub type EventSink = Arc<dyn Fn(&str) + Send + Sync>;
+
+/// An event sink that drops everything (detached submissions, benches).
+pub fn null_sink() -> EventSink {
+    Arc::new(|_line: &str| {})
+}
+
+/// Scheduler construction parameters.
+#[derive(Clone, Debug)]
+pub struct SchedulerOptions {
+    /// Worker threads multiplexing the session table (0 = all cores
+    /// minus one).
+    pub workers: usize,
+    /// Global admission budget in raw training steps (`None` =
+    /// unlimited).
+    pub budget_steps: Option<u64>,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> SchedulerOptions {
+        SchedulerOptions { workers: 0, budget_steps: None }
+    }
+}
+
+/// Lifecycle of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a pool worker.
+    Queued,
+    /// Running on a pool worker.
+    Running,
+    /// Finished; its `done` frame is retained.
+    Done,
+    /// Errored at runtime (after admission).
+    Failed,
+    /// Cancelled before or during execution.
+    Cancelled,
+}
+
+impl JobState {
+    /// Protocol string for status/list frames.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the job will never run again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Point-in-time view of one job.
+#[derive(Clone, Debug)]
+pub struct JobSnapshot {
+    /// The job's id.
+    pub id: String,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Worst-case step demand committed at admission.
+    pub demand_steps: u64,
+    /// Steps actually trained (0 until settlement).
+    pub spent_steps: u64,
+}
+
+/// Point-in-time view of the global ledger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LedgerSnapshot {
+    /// Steps trained across every settled job.
+    pub spent_steps: u64,
+    /// Steps committed to admitted-but-unsettled jobs.
+    pub committed_steps: u64,
+    /// The configured budget (`None` = unlimited).
+    pub budget_steps: Option<u64>,
+}
+
+/// Result of a successful admission.
+#[derive(Clone, Debug)]
+pub struct Admission {
+    /// The admitted job's id.
+    pub id: String,
+    /// Worst-case step demand committed against the budget.
+    pub demand_steps: u64,
+    /// Budget remaining after this commitment (`None` = unlimited).
+    pub remaining_steps: Option<u64>,
+}
+
+/// The resolved source a job trains on, fixed at admission. Everything
+/// here is either owned or shared immutable state, so the job closure is
+/// a pure function of it.
+enum SourceHandle {
+    Toy { configs: usize, days: usize, steps_per_day: usize, seed: u64 },
+    Bank { store: Arc<ShardStore>, family: String, plan_tag: String, seed: i32 },
+    Live { cs: Arc<ClusteredStream>, specs: Arc<Vec<ConfigSpec>> },
+}
+
+struct Job {
+    state: JobState,
+    demand: u64,
+    spent: u64,
+    cancel: Arc<AtomicBool>,
+    done_line: Option<String>,
+}
+
+struct State {
+    ledger: GlobalLedger,
+    jobs: BTreeMap<String, Job>,
+    stores: HashMap<String, Arc<ShardStore>>,
+    streams: HashMap<String, Arc<ClusteredStream>>,
+    accepting: bool,
+    active: usize,
+}
+
+struct Inner {
+    /// Behind a mutex only to make `Inner` structurally `Sync` on every
+    /// toolchain (`mpsc::Sender` was not always `Sync`); enqueueing is a
+    /// sub-microsecond channel send, so contention is irrelevant.
+    pool: Mutex<ThreadPool>,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// The multi-tenant session scheduler. Cheap to clone through its inner
+/// `Arc`; dropped after [`drain`](Scheduler::drain) completes cleanly.
+pub struct Scheduler {
+    inner: Arc<Inner>,
+}
+
+impl Scheduler {
+    /// A fresh scheduler with its own worker pool and global ledger.
+    pub fn new(opts: SchedulerOptions) -> Scheduler {
+        let workers = if opts.workers == 0 {
+            ThreadPool::default_workers()
+        } else {
+            opts.workers
+        };
+        Scheduler {
+            inner: Arc::new(Inner {
+                pool: Mutex::new(ThreadPool::new(workers)),
+                state: Mutex::new(State {
+                    ledger: GlobalLedger::new(opts.budget_steps),
+                    jobs: BTreeMap::new(),
+                    stores: HashMap::new(),
+                    streams: HashMap::new(),
+                    accepting: true,
+                    active: 0,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Admit and enqueue one plan under `id`. On success the `accepted`
+    /// frame has already been emitted through `sink` and the job's
+    /// worst-case demand is committed; every rejection is a
+    /// [`FrameError`] naming the offending field, with nothing charged.
+    pub fn submit(
+        &self,
+        id: &str,
+        spec: &PlanSpec,
+        sink: EventSink,
+    ) -> std::result::Result<Admission, FrameError> {
+        // Registry resolution needs no lock and fails with field-named
+        // errors, exactly like the CLI's tag rejection.
+        let method = Method::parse(&spec.method)
+            .map_err(|e| FrameError::new("plan.method", format!("{e:#}")))?;
+        let strategy = Strategy::parse(&spec.strategy)
+            .map_err(|e| FrameError::new("plan.strategy", format!("{e:#}")))?;
+
+        let mut st = self.inner.state.lock().unwrap();
+        if !st.accepting {
+            return Err(FrameError::new("cmd", "daemon is draining; submissions are closed"));
+        }
+        if st.jobs.contains_key(id) {
+            return Err(FrameError::new("id", format!("duplicate job id {id:?}")));
+        }
+
+        let (handle, n, t_total, mult) = resolve_source(&mut st, &spec.source)?;
+        let mut builder = SearchPlan::with_method(method)
+            .strategy(strategy)
+            .plan_mult(mult)
+            .top_k(spec.top_k);
+        if let Some(b) = spec.budget {
+            builder = builder.budget(b);
+        }
+        let plan =
+            builder.build().map_err(|e| FrameError::new("plan", format!("{e:#}")))?;
+
+        let demand = demand_steps(&plan, spec.stage, n, t_total, mult);
+        st.ledger.try_admit(demand).map_err(|remaining| {
+            FrameError::new(
+                "plan.budget",
+                format!(
+                    "plan demands up to {demand} training steps but only {remaining} \
+                     of the global budget remain"
+                ),
+            )
+        })?;
+
+        let cancel = Arc::new(AtomicBool::new(false));
+        st.jobs.insert(
+            id.to_string(),
+            Job {
+                state: JobState::Queued,
+                demand,
+                spent: 0,
+                cancel: Arc::clone(&cancel),
+                done_line: None,
+            },
+        );
+        st.active += 1;
+        let remaining = st.ledger.remaining_steps();
+        drop(st);
+
+        sink(&frames::accepted(id, demand, remaining));
+        let inner = Arc::clone(&self.inner);
+        let job_id = id.to_string();
+        let stage = spec.stage;
+        self.inner.pool.lock().unwrap().execute(move || {
+            run_job(&inner, &job_id, handle, plan, stage, sink, cancel);
+        });
+        Ok(Admission { id: id.to_string(), demand_steps: demand, remaining_steps: remaining })
+    }
+
+    /// One job's current state; unknown ids are a [`FrameError`] naming
+    /// `id`.
+    pub fn status(&self, id: &str) -> std::result::Result<JobSnapshot, FrameError> {
+        let st = self.inner.state.lock().unwrap();
+        match st.jobs.get(id) {
+            Some(j) => Ok(JobSnapshot {
+                id: id.to_string(),
+                state: j.state,
+                demand_steps: j.demand,
+                spent_steps: j.spent,
+            }),
+            None => Err(FrameError::new("id", format!("unknown job id {id:?}"))),
+        }
+    }
+
+    /// Request cooperative cancellation: queued jobs never start; running
+    /// jobs stop at their next wave boundary. Terminal jobs are left
+    /// untouched. Returns the job's snapshot at request time; unknown ids
+    /// are a [`FrameError`] naming `id`.
+    pub fn cancel(&self, id: &str) -> std::result::Result<JobSnapshot, FrameError> {
+        {
+            let st = self.inner.state.lock().unwrap();
+            match st.jobs.get(id) {
+                Some(j) if !j.state.is_terminal() => j.cancel.store(true, Ordering::Relaxed),
+                Some(_) => {}
+                None => return Err(FrameError::new("id", format!("unknown job id {id:?}"))),
+            }
+        }
+        self.status(id)
+    }
+
+    /// Every job (in id order) plus the ledger.
+    pub fn list(&self) -> (Vec<JobSnapshot>, LedgerSnapshot) {
+        let st = self.inner.state.lock().unwrap();
+        let jobs = st
+            .jobs
+            .iter()
+            .map(|(id, j)| JobSnapshot {
+                id: id.clone(),
+                state: j.state,
+                demand_steps: j.demand,
+                spent_steps: j.spent,
+            })
+            .collect();
+        (jobs, ledger_snapshot(&st))
+    }
+
+    /// The retained terminal frame of a finished job (`done`, `failed`,
+    /// or `cancelled`) — the determinism pin compares these strings
+    /// byte for byte.
+    pub fn done_line(&self, id: &str) -> Option<String> {
+        self.inner.state.lock().unwrap().jobs.get(id).and_then(|j| j.done_line.clone())
+    }
+
+    /// Stop accepting submissions and block until every in-flight job
+    /// settles; returns the final ledger. Idempotent.
+    pub fn drain(&self) -> LedgerSnapshot {
+        let mut st = self.inner.state.lock().unwrap();
+        st.accepting = false;
+        while st.active > 0 {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        ledger_snapshot(&st)
+    }
+}
+
+fn ledger_snapshot(st: &State) -> LedgerSnapshot {
+    LedgerSnapshot {
+        spent_steps: st.ledger.spent_steps(),
+        committed_steps: st.ledger.committed_steps(),
+        budget_steps: st.ledger.budget_steps(),
+    }
+}
+
+/// Resolve a [`SourceSpec`] into an executable handle plus its shape:
+/// (handle, n_configs, t_total, plan_mult). Bank stores and live streams
+/// are shared across jobs through the scheduler's caches.
+fn resolve_source(
+    st: &mut State,
+    source: &SourceSpec,
+) -> std::result::Result<(SourceHandle, usize, usize, f64), FrameError> {
+    match source {
+        SourceSpec::Toy { configs, days, steps_per_day, seed } => Ok((
+            SourceHandle::Toy {
+                configs: *configs,
+                days: *days,
+                steps_per_day: *steps_per_day,
+                seed: *seed,
+            },
+            *configs,
+            days * steps_per_day,
+            1.0,
+        )),
+        SourceSpec::Bank { path, family, plan, seed } => {
+            let store = match st.stores.get(path) {
+                Some(s) => Arc::clone(s),
+                None => {
+                    let s = Arc::new(ShardStore::open(Path::new(path)).map_err(|e| {
+                        FrameError::new("plan.source.path", format!("cannot open bank {path:?}: {e}"))
+                    })?);
+                    st.stores.insert(path.clone(), Arc::clone(&s));
+                    s
+                }
+            };
+            // Shape comes from the index alone — no shard is loaded
+            // until the job runs on a worker.
+            let n = store
+                .index()
+                .shards
+                .iter()
+                .flat_map(|s| s.entries.iter())
+                .filter(|e| {
+                    e.key.family == *family && e.key.plan_tag == *plan && e.key.seed == *seed
+                })
+                .count();
+            if n == 0 {
+                return Err(FrameError::new(
+                    "plan.source",
+                    format!("bank {path:?} has no runs for family={family} plan={plan} seed={seed}"),
+                ));
+            }
+            let meta = store.meta();
+            let t_total = meta.days * meta.steps_per_day;
+            let mult = store.plan_multiplier(family, plan);
+            Ok((
+                SourceHandle::Bank {
+                    store,
+                    family: family.clone(),
+                    plan_tag: plan.clone(),
+                    seed: *seed,
+                },
+                n,
+                t_total,
+                mult,
+            ))
+        }
+        SourceSpec::Live {
+            family,
+            thin,
+            days,
+            steps_per_day,
+            batch,
+            scenario,
+            seed,
+            clusters,
+            eval_days,
+        } => {
+            if !sweep::FAMILIES.contains(&family.as_str()) {
+                return Err(FrameError::new(
+                    "plan.source.family",
+                    format!("unknown family {family:?} (valid: {:?})", sweep::FAMILIES),
+                ));
+            }
+            let specs = sweep::thin(sweep::family_sweep(family), *thin);
+            let n = specs.len();
+            let cfg = StreamConfig {
+                seed: *seed,
+                days: *days,
+                steps_per_day: *steps_per_day,
+                batch: *batch,
+                n_clusters: 32,
+                scenario: scenario.clone(),
+            };
+            let key = format!(
+                "{scenario}|{seed}|{days}|{steps_per_day}|{batch}|{clusters}|{eval_days}"
+            );
+            let cs = match st.streams.get(&key) {
+                Some(cs) => Arc::clone(cs),
+                None => {
+                    // Building the stream (and its k-means assignment)
+                    // happens once per key, at first admission; later
+                    // submissions against the same stream share it and
+                    // its batch cache.
+                    let total = cfg.total_steps();
+                    let stream = Stream::try_new(cfg)
+                        .map_err(|e| {
+                            FrameError::new("plan.source.scenario", format!("{e:#}"))
+                        })?
+                        .with_cache(total);
+                    let cs = Arc::new(ClusteredStream::build(
+                        stream,
+                        ClusterSource::KMeans {
+                            k: *clusters,
+                            sample_days: (*days).min(2).max(1),
+                        },
+                        *eval_days,
+                    ));
+                    st.streams.insert(key, Arc::clone(&cs));
+                    cs
+                }
+            };
+            Ok((
+                SourceHandle::Live { cs, specs: Arc::new(specs) },
+                n,
+                days * steps_per_day,
+                1.0,
+            ))
+        }
+    }
+}
+
+/// Worst-case raw-step demand of a plan over an `n × t_total` source.
+/// Stage 1 is capped by the plan budget (translated from relative cost
+/// back to raw steps through the plan multiplier); stage 2 can add at
+/// most `top_k` full-horizon finishes; nothing can exceed training
+/// everything fully.
+fn demand_steps(plan: &SearchPlan, stage: usize, n: usize, t_total: usize, mult: f64) -> u64 {
+    let n_t = n as u64 * t_total as u64;
+    let cap = match plan.budget {
+        Some(b) => (((b / mult) * n_t as f64).ceil() as u64).min(n_t),
+        None => n_t,
+    };
+    let extra = if stage == 2 { plan.top_k.min(n) as u64 * t_total as u64 } else { 0 };
+    (cap + extra).min(n_t)
+}
+
+// ------------------------------------------------------------- execution
+
+/// Driver wrapper that streams a `wave` frame per training wave and
+/// honors cooperative cancellation at wave boundaries. Pure with respect
+/// to the wrapped driver: it adds observation, never behavior.
+struct InstrumentedDriver<'a> {
+    inner: &'a mut dyn SearchDriver,
+    sink: &'a EventSink,
+    id: &'a str,
+    cancel: &'a AtomicBool,
+    waves: usize,
+}
+
+impl SearchDriver for InstrumentedDriver<'_> {
+    fn n_configs(&self) -> usize {
+        self.inner.n_configs()
+    }
+    fn days(&self) -> usize {
+        self.inner.days()
+    }
+    fn steps_per_day(&self) -> usize {
+        self.inner.steps_per_day()
+    }
+    fn eval_days(&self) -> usize {
+        self.inner.eval_days()
+    }
+    fn train_to(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        if self.cancel.load(Ordering::Relaxed) {
+            return Err(crate::err!("job cancelled at wave boundary"));
+        }
+        self.inner.train_to(configs, day)?;
+        self.waves += 1;
+        (self.sink)(&frames::wave(self.id, self.waves, day, configs.len()));
+        Ok(())
+    }
+    fn start_at(&mut self, configs: &[usize], day: usize) -> Result<()> {
+        self.inner.start_at(configs, day)
+    }
+    fn predict(&self, strategy: &Strategy, day: usize, subset: &[usize]) -> Vec<f64> {
+        self.inner.predict(strategy, day, subset)
+    }
+    fn window_mean(&self, c: usize, from_day: usize, to_day: usize) -> f64 {
+        self.inner.window_mean(c, from_day, to_day)
+    }
+    fn steps_trained(&self, c: usize) -> usize {
+        self.inner.steps_trained(c)
+    }
+}
+
+/// Run one admitted job on a pool worker and settle it. Everything that
+/// feeds the outcome is owned by the closure or shared immutable, so the
+/// result depends only on (handle, plan, stage).
+fn run_job(
+    inner: &Arc<Inner>,
+    id: &str,
+    handle: SourceHandle,
+    plan: SearchPlan,
+    stage: usize,
+    sink: EventSink,
+    cancel: Arc<AtomicBool>,
+) {
+    // A cancel that lands while queued skips execution entirely.
+    let cancelled_early = cancel.load(Ordering::Relaxed);
+    {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(j) = st.jobs.get_mut(id) {
+            j.state = if cancelled_early { JobState::Cancelled } else { JobState::Running };
+        }
+        if cancelled_early {
+            let demand = st.jobs.get(id).map(|j| j.demand).unwrap_or(0);
+            st.ledger.release(demand);
+            if let Some(j) = st.jobs.get_mut(id) {
+                j.done_line = Some(frames::cancelled(id));
+            }
+            st.active -= 1;
+            inner.cv.notify_all();
+        }
+    }
+    if cancelled_early {
+        sink(&frames::cancelled(id));
+        return;
+    }
+
+    let (result, spent) = execute_plan(&handle, &plan, stage, &sink, id, &cancel);
+    let line = match result {
+        Ok(done_line) => done_line,
+        Err(e) => {
+            if cancel.load(Ordering::Relaxed) {
+                frames::cancelled(id)
+            } else {
+                frames::failed(id, &format!("{e:#}"))
+            }
+        }
+    };
+    let state = match protocol_state_of(&line) {
+        "done" => JobState::Done,
+        "cancelled" => JobState::Cancelled,
+        _ => JobState::Failed,
+    };
+    {
+        let mut st = inner.state.lock().unwrap();
+        let demand = st.jobs.get(id).map(|j| j.demand).unwrap_or(0);
+        st.ledger.settle(demand, spent);
+        if let Some(j) = st.jobs.get_mut(id) {
+            j.state = state;
+            j.spent = spent;
+            j.done_line = Some(line.clone());
+        }
+        st.active -= 1;
+        inner.cv.notify_all();
+    }
+    sink(&line);
+}
+
+fn protocol_state_of(line: &str) -> &'static str {
+    match crate::serve::protocol::event_kind(line).as_deref() {
+        Some("done") => "done",
+        Some("cancelled") => "cancelled",
+        _ => "failed",
+    }
+}
+
+/// Execute the session over the resolved source. Returns the terminal
+/// frame line (on success) and the raw steps actually trained (always,
+/// including on error — partial training is still spent compute).
+fn execute_plan(
+    handle: &SourceHandle,
+    plan: &SearchPlan,
+    stage: usize,
+    sink: &EventSink,
+    id: &str,
+    cancel: &AtomicBool,
+) -> (Result<String>, u64) {
+    match handle {
+        SourceHandle::Toy { configs, days, steps_per_day, seed } => {
+            let ts = TrajectorySet::toy(*configs, *days, *steps_per_day, *seed);
+            let labels: Vec<String> = (0..*configs).map(|c| format!("cfg{c}")).collect();
+            let mut driver = ReplayDriver::new(&ts);
+            run_session(&mut driver, plan, stage, sink, id, cancel, &labels)
+        }
+        SourceHandle::Bank { store, family, plan_tag, seed } => {
+            let src = TsSource::Bank {
+                store: Arc::clone(store),
+                family: family.clone(),
+                plan_tag: plan_tag.clone(),
+                seed: *seed,
+            };
+            let (ts, labels) = match src.resolve_with_labels() {
+                Ok(pair) => pair,
+                Err(e) => return (Err(crate::err!("{e}")), 0),
+            };
+            let mut driver = ReplayDriver::new(&ts);
+            run_session(&mut driver, plan, stage, sink, id, cancel, &labels)
+        }
+        SourceHandle::Live { cs, specs } => {
+            let labels: Vec<String> = specs.iter().map(ConfigSpec::label).collect();
+            // Per-job training is serial (workers = 1): cross-job
+            // parallelism comes from the scheduler pool, and a serial
+            // segment loop keeps each job a pure function of its plan.
+            let mut driver = LiveDriver::new(&ProxyFactory, cs, specs, Plan::Full, 0);
+            run_session(&mut driver, plan, stage, sink, id, cancel, &labels)
+        }
+    }
+}
+
+fn run_session(
+    driver: &mut dyn SearchDriver,
+    plan: &SearchPlan,
+    stage: usize,
+    sink: &EventSink,
+    id: &str,
+    cancel: &AtomicBool,
+    labels: &[String],
+) -> (Result<String>, u64) {
+    let mut inst = InstrumentedDriver { inner: driver, sink, id, cancel, waves: 0 };
+    let mut session = SearchSession::new(plan.clone(), &mut inst);
+    let top_k = plan.top_k;
+    let result = if stage == 2 {
+        session.run_two_stage().map(|two| {
+            let top: Vec<String> = two
+                .final_ranking
+                .iter()
+                .take(top_k)
+                .map(|&c| labels[c].clone())
+                .collect();
+            (two.to_json(), two.steps_trained.iter().sum::<usize>() as u64, top)
+        })
+    } else {
+        session.run().map(|out| {
+            let top: Vec<String> =
+                out.ranking.iter().take(top_k).map(|&c| labels[c].clone()).collect();
+            (out.to_json(), out.steps_trained.iter().sum::<usize>() as u64, top)
+        })
+    };
+    // The ledger mirrors the driver even when the session errors out —
+    // partially-trained waves are real spent compute.
+    let spent_fallback: u64 =
+        session.ledger().spent_steps().iter().map(|&s| s as u64).sum();
+    match result {
+        Ok((outcome, spent, top)) => {
+            (Ok(frames::done(id, outcome, spent, &top)), spent)
+        }
+        Err(e) => (Err(e), spent_fallback),
+    }
+}

@@ -1,0 +1,264 @@
+//! The `nshpo serve` daemon: accepts connections on a Unix-domain or
+//! TCP socket, speaks the newline-delimited frame protocol
+//! ([`protocol`](crate::serve::protocol)), and multiplexes every tenant
+//! over one shared [`Scheduler`].
+//!
+//! Connection handling is deliberately simple std-only plumbing: a
+//! nonblocking accept loop polls for connections and a shutdown flag,
+//! and each connection gets a plain thread that reads frames line by
+//! line. All the interesting state lives in the scheduler; a connection
+//! thread holds no state beyond its socket, so dropping a client
+//! mid-stream never perturbs a job (its events are simply discarded).
+
+use crate::serve::protocol::{frames, FrameError, Request};
+use crate::serve::scheduler::{EventSink, Scheduler, SchedulerOptions};
+use crate::util::error::Result;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Where the daemon listens (and clients connect).
+#[derive(Clone, Debug)]
+pub enum Addr {
+    /// Unix-domain socket at this path (the default transport).
+    Unix(PathBuf),
+    /// TCP at `addr:port` (e.g. `127.0.0.1:7878`).
+    Tcp(String),
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+            Addr::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen address.
+    pub addr: Addr,
+    /// Scheduler worker threads (0 = all cores minus one).
+    pub workers: usize,
+    /// Global admission budget in raw training steps (`None` =
+    /// unlimited).
+    pub budget_steps: Option<u64>,
+    /// Echo frames to stderr as they are served.
+    pub verbose: bool,
+}
+
+/// One connected peer, transport-erased. `try_clone` gives the handler
+/// an independent read half while the write half lives behind a mutex
+/// shared with the job event sinks.
+enum Socket {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Socket {
+    fn try_clone(&self) -> std::io::Result<Socket> {
+        match self {
+            Socket::Unix(s) => s.try_clone().map(Socket::Unix),
+            Socket::Tcp(s) => s.try_clone().map(Socket::Tcp),
+        }
+    }
+}
+
+impl Read for Socket {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Socket::Unix(s) => s.read(buf),
+            Socket::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Socket {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Socket::Unix(s) => s.write(buf),
+            Socket::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Socket::Unix(s) => s.flush(),
+            Socket::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn bind(addr: &Addr) -> Result<Listener> {
+        match addr {
+            Addr::Unix(path) => {
+                // A stale socket file from a crashed daemon would make
+                // bind fail; remove it only if nothing is listening.
+                if path.exists() && UnixStream::connect(path).is_err() {
+                    let _ = std::fs::remove_file(path);
+                }
+                if let Some(dir) = path.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)
+                            .map_err(|e| crate::err!("cannot create {}: {e}", dir.display()))?;
+                    }
+                }
+                UnixListener::bind(path)
+                    .map(Listener::Unix)
+                    .map_err(|e| crate::err!("cannot bind {}: {e}", path.display()))
+            }
+            Addr::Tcp(a) => TcpListener::bind(a)
+                .map(Listener::Tcp)
+                .map_err(|e| crate::err!("cannot bind {a}: {e}")),
+        }
+    }
+
+    fn set_nonblocking(&self) -> std::io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(true),
+            Listener::Tcp(l) => l.set_nonblocking(true),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Socket> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Socket::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Socket::Tcp(s)),
+        }
+    }
+}
+
+/// Run the daemon until a client sends `shutdown`. Blocks the calling
+/// thread; returns after every in-flight job has settled, the final
+/// `bye` frame is sent, and (for Unix transports) the socket file is
+/// removed.
+pub fn serve(opts: ServeOptions) -> Result<()> {
+    let listener = Listener::bind(&opts.addr)?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| crate::err!("cannot set nonblocking accept: {e}"))?;
+    let sched = Arc::new(Scheduler::new(SchedulerOptions {
+        workers: opts.workers,
+        budget_steps: opts.budget_steps,
+    }));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+
+    if opts.verbose {
+        eprintln!("nshpo serve: listening on {}", opts.addr);
+    }
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok(sock) => {
+                let sched = Arc::clone(&sched);
+                let shutdown = Arc::clone(&shutdown);
+                let verbose = opts.verbose;
+                handles.push(std::thread::spawn(move || {
+                    handle_connection(sock, &sched, &shutdown, verbose);
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(crate::err!("accept failed: {e}")),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    // Idempotent: the shutting-down connection already drained, but a
+    // shutdown racing a just-accepted submit must still be waited out.
+    sched.drain();
+    if let Addr::Unix(path) = &opts.addr {
+        let _ = std::fs::remove_file(path);
+    }
+    if opts.verbose {
+        eprintln!("nshpo serve: shut down cleanly");
+    }
+    Ok(())
+}
+
+/// Serve one connection: read frames line by line, dispatch to the
+/// scheduler, stream replies. Write errors (client hung up) just drop
+/// the remaining event stream — the job itself keeps running.
+fn handle_connection(
+    sock: Socket,
+    sched: &Arc<Scheduler>,
+    shutdown: &Arc<AtomicBool>,
+    verbose: bool,
+) {
+    let reader = match sock.try_clone() {
+        Ok(r) => BufReader::new(r),
+        Err(_) => return,
+    };
+    let writer = Arc::new(Mutex::new(sock));
+    let sink: EventSink = {
+        let writer = Arc::clone(&writer);
+        Arc::new(move |line: &str| {
+            if verbose {
+                eprintln!("nshpo serve: {line}");
+            }
+            let mut w = writer.lock().unwrap();
+            let _ = w.write_all(line.as_bytes());
+            let _ = w.write_all(b"\n");
+            let _ = w.flush();
+        })
+    };
+
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::parse(&line) {
+            Ok(Request::Submit { id, spec }) => {
+                // The accepted frame (or rejection) is emitted inside
+                // submit; events stream through the sink as the job runs.
+                if let Err(e) = sched.submit(&id, &spec, Arc::clone(&sink)) {
+                    sink(&e.frame(Some(&id)));
+                }
+            }
+            Ok(Request::Status { id }) => match sched.status(&id) {
+                Ok(s) => sink(&frames::status(&s.id, s.state.as_str(), s.demand_steps, s.spent_steps)),
+                Err(e) => sink(&e.frame(Some(&id))),
+            },
+            Ok(Request::Cancel { id }) => match sched.cancel(&id) {
+                Ok(_) => sink(&frames::cancelled(&id)),
+                Err(e) => sink(&e.frame(Some(&id))),
+            },
+            Ok(Request::List) => {
+                let (jobs, ledger) = sched.list();
+                let rows: Vec<(String, &'static str)> =
+                    jobs.iter().map(|j| (j.id.clone(), j.state.as_str())).collect();
+                sink(&frames::list(
+                    &rows,
+                    ledger.spent_steps,
+                    ledger.committed_steps,
+                    ledger.budget_steps,
+                ));
+            }
+            Ok(Request::Shutdown) => {
+                let ledger = sched.drain();
+                sink(&frames::bye(ledger.spent_steps));
+                shutdown.store(true, Ordering::Relaxed);
+                return;
+            }
+            Err(e) => sink(&e.frame(None)),
+        }
+    }
+}

@@ -193,6 +193,101 @@ impl Json {
         }
         Ok(v)
     }
+
+    // ------------------------------------------------------------- scan
+
+    /// Lazily extract the value at `path` from raw JSON `bytes` without
+    /// building the full tree: siblings before the target are byte-skipped
+    /// (strings, numbers, and nested containers are scanned, not
+    /// materialized), and only the target value itself is parsed. This is
+    /// the serve protocol's dispatch path — a frame's `"cmd"` / `"id"` are
+    /// read without parsing the request body.
+    ///
+    /// Semantics match [`Json::path`] over a full [`Json::parse`]:
+    /// `Ok(None)` when the path misses (absent key, out-of-range or
+    /// non-numeric array index, scalar mid-path); `Err` when the scanned
+    /// prefix is malformed. Bytes *after* the located target are never
+    /// examined, so a document whose tail is garbage can still yield an
+    /// early field — that laziness is the point.
+    pub fn scan_field(bytes: &[u8], path: &[&str]) -> Result<Option<Json>, String> {
+        let mut p = Parser { b: bytes, i: 0 };
+        p.skip_ws();
+        for seg in path {
+            match p.peek() {
+                Some(b'{') => {
+                    p.i += 1;
+                    p.skip_ws();
+                    if p.peek() == Some(b'}') {
+                        return Ok(None);
+                    }
+                    loop {
+                        p.skip_ws();
+                        let key = p.string()?;
+                        p.skip_ws();
+                        p.expect(b':')?;
+                        p.skip_ws();
+                        if key == *seg {
+                            break; // cursor sits on the matched value
+                        }
+                        p.skip_value()?;
+                        p.skip_ws();
+                        match p.peek() {
+                            Some(b',') => p.i += 1,
+                            Some(b'}') => return Ok(None),
+                            other => {
+                                return Err(format!(
+                                    "expected ',' or '}}' at byte {} (found {:?})",
+                                    p.i,
+                                    other.map(|c| c as char)
+                                ))
+                            }
+                        }
+                    }
+                }
+                Some(b'[') => {
+                    let want: usize = match seg.parse() {
+                        Ok(i) => i,
+                        Err(_) => return Ok(None), // like Json::path
+                    };
+                    p.i += 1;
+                    p.skip_ws();
+                    if p.peek() == Some(b']') {
+                        return Ok(None);
+                    }
+                    let mut idx = 0usize;
+                    loop {
+                        p.skip_ws();
+                        if idx == want {
+                            break;
+                        }
+                        p.skip_value()?;
+                        p.skip_ws();
+                        match p.peek() {
+                            Some(b',') => {
+                                p.i += 1;
+                                idx += 1;
+                            }
+                            Some(b']') => return Ok(None),
+                            other => {
+                                return Err(format!(
+                                    "expected ',' or ']' at byte {} (found {:?})",
+                                    p.i,
+                                    other.map(|c| c as char)
+                                ))
+                            }
+                        }
+                    }
+                }
+                // Scalar mid-path: the path misses, like Json::path —
+                // but the scalar must still be well-formed.
+                _ => {
+                    p.skip_value()?;
+                    return Ok(None);
+                }
+            }
+        }
+        p.value().map(Some)
+    }
 }
 
 fn write_num(out: &mut String, x: f64) {
@@ -347,6 +442,123 @@ impl<'a> Parser<'a> {
         }
     }
 
+    // Byte-skip one complete value without materializing it (the lazy
+    // scanner's path past siblings). Containers validate their comma /
+    // colon structure; skipped strings only honor escapes (no UTF-8 or
+    // \u validation); skipped numbers consume the number character class
+    // without parsing. The target value of a scan is always fully parsed
+    // by `value`, so laxness here only applies to bytes the caller asked
+    // to ignore.
+    fn skip_value(&mut self) -> Result<(), String> {
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        other => {
+                            return Err(format!(
+                                "expected ',' or '}}' at byte {} (found {:?})",
+                                self.i,
+                                other.map(|c| c as char)
+                            ))
+                        }
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        other => {
+                            return Err(format!(
+                                "expected ',' or ']' at byte {} (found {:?})",
+                                self.i,
+                                other.map(|c| c as char)
+                            ))
+                        }
+                    }
+                }
+            }
+            Some(b'"') => self.skip_string(),
+            Some(b't') => self.skip_literal("true"),
+            Some(b'f') => self.skip_literal("false"),
+            Some(b'n') => self.skip_literal("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+                {
+                    self.i += 1;
+                }
+                Ok(())
+            }
+            other => Err(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.i
+            )),
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<(), String> {
+        self.expect(b'"')?;
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    // skip the escape introducer and the escaped byte
+                    // (\uXXXX hex digits are plain bytes, consumed below)
+                    self.i += 2;
+                    if self.i > self.b.len() {
+                        return Err("unterminated string".into());
+                    }
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    fn skip_literal(&mut self, word: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
     fn array(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut items = Vec::new();
@@ -460,6 +672,90 @@ mod tests {
     fn nonfinite_renders_null() {
         assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+    }
+
+    // ------------------------------------------------------------- scan
+
+    /// scan_field must agree with the full parse + path walk on every
+    /// (document, path) pair — including misses and whitespace styles.
+    #[test]
+    fn scan_field_matches_full_parse() {
+        let docs = [
+            r#"{"nshpo":"v1","cmd":"submit","id":"j1","plan":{"method":"asha@3","top_k":2}}"#
+                .to_string(),
+            r#"{"a": [1, 2, {"b": "x\ny", "c": null}], "d": -3.25, "e": true}"#.to_string(),
+            r#"[{"k": 1}, {"k": 2}, [3, 4]]"#.to_string(),
+            r#"{"empty": {}, "arr": [], "s": "A\\"}"#.to_string(),
+            "42".to_string(),
+            // pretty-printed whitespace must scan identically
+            Json::parse(r#"{"a":[10,{"b":[false,"z"]}],"c":{"d":0.5}}"#)
+                .unwrap()
+                .to_string_pretty(),
+        ];
+        let paths: [&[&str]; 14] = [
+            &[],
+            &["nshpo"],
+            &["cmd"],
+            &["plan", "method"],
+            &["plan", "top_k"],
+            &["a", "2", "b"],
+            &["a", "2", "c"],
+            &["a", "0"],
+            &["missing"],
+            &["a", "9"],
+            &["a", "notanindex"],
+            &["d", "too_deep"],
+            &["1", "k"],
+            &["c", "d"],
+        ];
+        for doc in &docs {
+            let full = Json::parse(doc).unwrap();
+            for path in paths {
+                let lazy = Json::scan_field(doc.as_bytes(), path)
+                    .unwrap_or_else(|e| panic!("scan {path:?} over {doc}: {e}"));
+                assert_eq!(
+                    lazy,
+                    full.path(path).cloned(),
+                    "path {path:?} over {doc}"
+                );
+            }
+        }
+    }
+
+    /// The scanner never looks past the target: a frame whose tail is
+    /// garbage still yields its dispatch fields (the serve daemon's
+    /// reason for scanning).
+    #[test]
+    fn scan_field_is_lazy_past_the_target() {
+        let line = br#"{"cmd":"list","junk":tru"#;
+        assert!(Json::parse(std::str::from_utf8(line).unwrap()).is_err());
+        assert_eq!(
+            Json::scan_field(line, &["cmd"]).unwrap(),
+            Some(Json::Str("list".into()))
+        );
+    }
+
+    /// Malformed input *before* the target is an error, not a miss.
+    #[test]
+    fn scan_field_rejects_malformed_input() {
+        let cases: [&[u8]; 7] = [
+            br#"{"a":tru,"b":1}"#,        // bad literal while skipping
+            br#"{"a":1 "b":2}"#,          // missing comma
+            br#"{"a":"unterminated"#,     // unterminated skipped string
+            br#"{"a" 1, "b":2}"#,         // missing colon
+            br#"{"a":1,"#,                // truncated mid-object
+            br#"[1,2"#,                   // truncated mid-array
+            br#"{"b": }"#,                // missing value at target
+        ];
+        for bad in cases {
+            assert!(
+                Json::scan_field(bad, &["b"]).is_err(),
+                "{}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+        // the located target itself is fully validated
+        assert!(Json::scan_field(br#"{"b":12..5}"#, &["b"]).is_err());
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Protocol pins for `nshpo serve`: one rejection test per malformed
+//! frame shape — each error must name the offending field — plus a
+//! socket-level round trip against a live daemon (garbage frame,
+//! over-budget submit, streamed toy job, status/list/cancel, graceful
+//! shutdown, and a loud post-shutdown failure).
+
+use nshpo::serve::protocol::event_kind;
+use nshpo::serve::{
+    serve, Addr, Client, FrameError, PlanSpec, Request, ServeOptions, SourceSpec,
+};
+use std::time::Duration;
+
+fn reject(line: &str) -> FrameError {
+    Request::parse(line).expect_err(&format!("frame must be rejected: {line}"))
+}
+
+// ------------------------------------------------- per-shape rejections
+
+#[test]
+fn frame_without_magic_is_rejected_naming_nshpo() {
+    assert_eq!(reject(r#"{"cmd":"list"}"#).field, "nshpo");
+}
+
+#[test]
+fn frame_with_wrong_magic_is_rejected_naming_nshpo() {
+    let err = reject(r#"{"nshpo":"v0","cmd":"list"}"#);
+    assert_eq!(err.field, "nshpo");
+    assert!(err.message.contains("v1"), "expected version in message: {err}");
+}
+
+#[test]
+fn frame_with_non_string_magic_is_rejected_naming_nshpo() {
+    assert_eq!(reject(r#"{"nshpo":1,"cmd":"list"}"#).field, "nshpo");
+}
+
+#[test]
+fn non_json_garbage_is_rejected_naming_nshpo() {
+    assert_eq!(reject("this is not a frame").field, "nshpo");
+    assert_eq!(reject("{\"nshpo\": oops").field, "nshpo");
+}
+
+#[test]
+fn frame_without_cmd_lists_the_commands() {
+    let err = reject(r#"{"nshpo":"v1"}"#);
+    assert_eq!(err.field, "cmd");
+    for cmd in ["submit", "status", "cancel", "list", "shutdown"] {
+        assert!(err.message.contains(cmd), "missing {cmd} in: {err}");
+    }
+}
+
+#[test]
+fn unknown_cmd_is_rejected_naming_cmd() {
+    let err = reject(r#"{"nshpo":"v1","cmd":"frobnicate"}"#);
+    assert_eq!(err.field, "cmd");
+    assert!(err.message.contains("frobnicate"), "{err}");
+}
+
+#[test]
+fn status_without_id_is_rejected_naming_id() {
+    assert_eq!(reject(r#"{"nshpo":"v1","cmd":"status"}"#).field, "id");
+    assert_eq!(reject(r#"{"nshpo":"v1","cmd":"cancel","id":""}"#).field, "id");
+}
+
+#[test]
+fn submit_without_plan_is_rejected_naming_plan() {
+    assert_eq!(reject(r#"{"nshpo":"v1","cmd":"submit","id":"j"}"#).field, "plan");
+}
+
+#[test]
+fn submit_without_method_is_rejected_naming_plan_method() {
+    let line = r#"{"nshpo":"v1","cmd":"submit","id":"j","plan":{"source":{"kind":"toy"}}}"#;
+    assert_eq!(reject(line).field, "plan.method");
+}
+
+#[test]
+fn unknown_source_kind_is_rejected_naming_plan_source_kind() {
+    let line = r#"{"nshpo":"v1","cmd":"submit","id":"j","plan":{"source":{"kind":"banana"},"method":"one-shot@6"}}"#;
+    let err = reject(line);
+    assert_eq!(err.field, "plan.source.kind");
+    assert!(err.message.contains("banana"), "{err}");
+}
+
+#[test]
+fn zero_source_shape_is_rejected_naming_the_axis() {
+    let line = r#"{"nshpo":"v1","cmd":"submit","id":"j","plan":{"source":{"kind":"toy","days":0},"method":"one-shot@6"}}"#;
+    assert_eq!(reject(line).field, "plan.source.days");
+}
+
+#[test]
+fn non_positive_budget_is_rejected_naming_plan_budget() {
+    let base = r#"{"nshpo":"v1","cmd":"submit","id":"j","plan":{"source":{"kind":"toy"},"method":"one-shot@6","budget":"#;
+    assert_eq!(reject(&format!("{base}-1}}}}")).field, "plan.budget");
+    assert_eq!(reject(&format!("{base}0}}}}")).field, "plan.budget");
+    assert_eq!(reject(&format!("{base}\"lots\"}}}}")).field, "plan.budget");
+}
+
+#[test]
+fn bad_top_k_and_stage_are_rejected_by_name() {
+    let base = r#"{"nshpo":"v1","cmd":"submit","id":"j","plan":{"source":{"kind":"toy"},"method":"one-shot@6","#;
+    assert_eq!(reject(&format!("{base}\"top_k\":0}}}}")).field, "plan.top_k");
+    assert_eq!(reject(&format!("{base}\"stage\":3}}}}")).field, "plan.stage");
+}
+
+// ------------------------------------------------------ socket round trip
+
+fn toy_spec(configs: usize, seed: u64) -> PlanSpec {
+    PlanSpec {
+        source: SourceSpec::Toy { configs, days: 12, steps_per_day: 8, seed },
+        method: "perf@0.5[3,6,9]".to_string(),
+        strategy: "constant".to_string(),
+        budget: None,
+        top_k: 2,
+        stage: 2,
+    }
+}
+
+#[test]
+fn daemon_round_trip_over_a_unix_socket() {
+    let path = std::env::temp_dir().join(format!("nshpo-proto-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let addr = Addr::Unix(path.clone());
+    let opts = ServeOptions {
+        addr: addr.clone(),
+        workers: 2,
+        budget_steps: Some(1_000),
+        verbose: false,
+    };
+    let server = std::thread::spawn(move || serve(opts));
+
+    let mut client = None;
+    for _ in 0..250 {
+        match Client::connect(&addr) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let mut client = client.expect("daemon did not come up within 5s");
+
+    // A garbage line gets an error frame naming the magic field — the
+    // connection stays usable.
+    client.send_line("this is not a frame").unwrap();
+    let reply = client.recv_line().unwrap().expect("reply to garbage");
+    assert_eq!(event_kind(&reply).as_deref(), Some("error"), "{reply}");
+    assert!(reply.contains("\"field\":\"nshpo\""), "{reply}");
+
+    // An over-budget submit is rejected with a structured frame naming
+    // plan.budget — before any training step (64 × 96 = 6144 > 1000).
+    let term = client.submit("too-big", &toy_spec(64, 0), |_| {}).unwrap();
+    assert_eq!(event_kind(&term).as_deref(), Some("error"), "{term}");
+    assert!(term.contains("\"field\":\"plan.budget\""), "{term}");
+    assert!(term.contains("\"id\":\"too-big\""), "{term}");
+
+    // A fitting toy job streams accepted → wave… → done (6 × 96 = 576,
+    // and the rejection above charged nothing).
+    let mut events = Vec::new();
+    let done = client.submit("ok-1", &toy_spec(6, 7), |l| events.push(l.to_string())).unwrap();
+    assert_eq!(event_kind(&done).as_deref(), Some("done"), "{done}");
+    assert!(done.contains("\"id\":\"ok-1\""), "{done}");
+    assert!(events.iter().any(|l| l.contains("\"ev\":\"accepted\"")), "{events:?}");
+    assert!(events.iter().any(|l| l.contains("\"ev\":\"wave\"")), "{events:?}");
+
+    // status / list / cancel-of-unknown on the same connection.
+    let st = client.request(&Request::Status { id: "ok-1".into() }).unwrap();
+    assert_eq!(event_kind(&st).as_deref(), Some("status"), "{st}");
+    assert!(st.contains("\"state\":\"done\""), "{st}");
+    let ls = client.request(&Request::List).unwrap();
+    assert_eq!(event_kind(&ls).as_deref(), Some("list"), "{ls}");
+    assert!(ls.contains("\"id\":\"ok-1\""), "{ls}");
+    let unk = client.request(&Request::Cancel { id: "ghost".into() }).unwrap();
+    assert_eq!(event_kind(&unk).as_deref(), Some("error"), "{unk}");
+    assert!(unk.contains("\"field\":\"id\""), "{unk}");
+
+    // Graceful shutdown: bye frame, clean daemon exit, socket file gone,
+    // and any further connection attempt fails loudly.
+    let bye = client.request(&Request::Shutdown).unwrap();
+    assert_eq!(event_kind(&bye).as_deref(), Some("bye"), "{bye}");
+    server.join().unwrap().expect("serve must exit cleanly after shutdown");
+    assert!(!path.exists(), "socket file must be removed on shutdown");
+    assert!(Client::connect(&addr).is_err(), "post-shutdown connect must fail");
+}

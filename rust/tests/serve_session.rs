@@ -1,0 +1,210 @@
+//! Serve scheduler pins: the determinism contract (same plan set →
+//! bit-identical outcome frames and ledger totals at any worker count or
+//! arrival order), admission control (over-budget plans rejected with a
+//! structured error before any training step), and event streaming.
+
+use nshpo::serve::scheduler::null_sink;
+use nshpo::serve::{EventSink, JobState, PlanSpec, Scheduler, SchedulerOptions, SourceSpec};
+use std::sync::{Arc, Mutex};
+
+fn toy_spec(configs: usize, seed: u64, method: &str, budget: Option<f64>) -> PlanSpec {
+    PlanSpec {
+        source: SourceSpec::Toy { configs, days: 12, steps_per_day: 8, seed },
+        method: method.to_string(),
+        strategy: "constant".to_string(),
+        budget,
+        top_k: 3,
+        stage: 2,
+    }
+}
+
+fn collecting_sink() -> (EventSink, Arc<Mutex<Vec<String>>>) {
+    let buf: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let b = Arc::clone(&buf);
+    let sink: EventSink = Arc::new(move |line: &str| b.lock().unwrap().push(line.to_string()));
+    (sink, buf)
+}
+
+/// The tentpole's hard requirement: the same three plans, submitted in
+/// every rotation of arrival order and run at 1 / 2 / 4 workers, settle
+/// to byte-identical terminal frames and identical ledger totals.
+#[test]
+fn outcomes_and_ledger_are_arrival_and_worker_invariant() {
+    let plans = [
+        ("job-a", toy_spec(8, 1, "perf@0.5[3,6,9]", None)),
+        ("job-b", toy_spec(6, 2, "one-shot@6", Some(0.6))),
+        ("job-c", toy_spec(10, 3, "asha@3", None)),
+    ];
+    let orders = [[0usize, 1, 2], [2, 0, 1], [1, 2, 0]];
+
+    let mut reference: Option<(Vec<Option<String>>, (u64, u64))> = None;
+    for workers in [1usize, 2, 4] {
+        for order in &orders {
+            let sched = Scheduler::new(SchedulerOptions { workers, budget_steps: None });
+            for &i in order {
+                let (id, spec) = &plans[i];
+                sched.submit(id, spec, null_sink()).unwrap_or_else(|e| panic!("{id}: {e}"));
+            }
+            let ledger = sched.drain();
+            let lines: Vec<Option<String>> =
+                plans.iter().map(|(id, _)| sched.done_line(id)).collect();
+            for (slot, (id, _)) in lines.iter().zip(plans.iter()) {
+                let line = slot.as_deref().unwrap_or_else(|| panic!("{id} has no done line"));
+                assert!(line.contains("\"ev\":\"done\""), "{id} did not finish: {line}");
+            }
+            let totals = (ledger.spent_steps, ledger.committed_steps);
+            match &reference {
+                None => reference = Some((lines, totals)),
+                Some((ref_lines, ref_totals)) => {
+                    assert_eq!(
+                        &lines, ref_lines,
+                        "outcome frames diverged at workers={workers} order={order:?}"
+                    );
+                    assert_eq!(
+                        &totals, ref_totals,
+                        "ledger totals diverged at workers={workers} order={order:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Admission control: a plan whose worst-case demand exceeds the global
+/// budget is rejected with an error naming `plan.budget`, the ledger
+/// stays untouched (no training step was charged), the job never enters
+/// the table — and a small plan still fits afterwards.
+#[test]
+fn over_budget_submission_is_rejected_before_any_training() {
+    // toy 8 × 12 × 8 → worst-case demand 768 steps; budget 100.
+    let sched = Scheduler::new(SchedulerOptions { workers: 1, budget_steps: Some(100) });
+    let err = sched
+        .submit("big", &toy_spec(8, 1, "one-shot@6", None), null_sink())
+        .expect_err("a 768-step plan must not fit a 100-step budget");
+    assert_eq!(err.field, "plan.budget", "{err}");
+    assert!(err.message.contains("100"), "remaining budget not named: {err}");
+    assert!(sched.status("big").is_err(), "rejected job must not enter the table");
+
+    let (jobs, ledger) = sched.list();
+    assert!(jobs.is_empty());
+    assert_eq!((ledger.spent_steps, ledger.committed_steps), (0, 0));
+
+    // 1 × 12 × 8 stage-2 demand: min(96 + 96, 96) = 96 <= 100.
+    let mut small = toy_spec(1, 1, "one-shot@6", None);
+    small.top_k = 1;
+    let admission = sched.submit("small", &small, null_sink()).unwrap();
+    assert_eq!(admission.demand_steps, 96);
+    assert_eq!(admission.remaining_steps, Some(4));
+    let ledger = sched.drain();
+    assert!(ledger.spent_steps > 0 && ledger.spent_steps <= 96, "{ledger:?}");
+    assert_eq!(ledger.committed_steps, 0);
+}
+
+/// Per-job settled spends reconcile exactly with the global ledger: the
+/// daemon's cross-tenant total is the sum of what each tenant was told.
+#[test]
+fn per_job_spends_reconcile_with_the_global_ledger() {
+    let plans = [
+        ("r1", toy_spec(5, 7, "perf@0.5[3,6,9]", None)),
+        ("r2", toy_spec(4, 8, "one-shot@4", None)),
+        ("r3", toy_spec(6, 9, "perf@0.25[4,8]", Some(0.8))),
+    ];
+    let sched = Scheduler::new(SchedulerOptions { workers: 2, budget_steps: None });
+    for (id, spec) in &plans {
+        sched.submit(id, spec, null_sink()).unwrap();
+    }
+    let ledger = sched.drain();
+    let per_job: u64 = plans
+        .iter()
+        .map(|(id, _)| {
+            let snap = sched.status(id).unwrap();
+            assert_eq!(snap.state, JobState::Done, "{id}");
+            assert!(snap.spent_steps <= snap.demand_steps, "{id} overspent its admission");
+            snap.spent_steps
+        })
+        .sum();
+    assert_eq!(ledger.spent_steps, per_job);
+    assert_eq!(ledger.committed_steps, 0);
+}
+
+/// A submission streams `accepted`, then at least one `wave`, then the
+/// terminal `done` — and the stream's final line is byte-identical to
+/// the retained done-line the determinism pin compares.
+#[test]
+fn events_stream_in_order_through_the_sink() {
+    let (sink, buf) = collecting_sink();
+    let sched = Scheduler::new(SchedulerOptions { workers: 1, budget_steps: None });
+    sched.submit("ev", &toy_spec(6, 5, "perf@0.5[3,6,9]", None), sink).unwrap();
+    sched.drain();
+
+    let lines = buf.lock().unwrap().clone();
+    assert!(lines.len() >= 3, "expected accepted + waves + done, got {lines:?}");
+    assert!(lines[0].contains("\"ev\":\"accepted\""), "{}", lines[0]);
+    let waves = lines.iter().filter(|l| l.contains("\"ev\":\"wave\"")).count();
+    assert!(waves >= 1, "no wave events: {lines:?}");
+    let last = lines.last().unwrap();
+    assert!(last.contains("\"ev\":\"done\""), "{last}");
+    assert_eq!(last, &sched.done_line("ev").unwrap());
+}
+
+/// Table hygiene: duplicate ids and unknown ids are structured errors
+/// naming `id`; cancelling an already-finished job is a no-op.
+#[test]
+fn duplicate_and_unknown_ids_are_field_named_errors() {
+    let sched = Scheduler::new(SchedulerOptions { workers: 1, budget_steps: None });
+    sched.submit("dup", &toy_spec(3, 1, "one-shot@6", None), null_sink()).unwrap();
+    let err = sched
+        .submit("dup", &toy_spec(3, 1, "one-shot@6", None), null_sink())
+        .expect_err("duplicate id must be rejected");
+    assert_eq!(err.field, "id", "{err}");
+
+    assert_eq!(sched.status("ghost").expect_err("unknown id").field, "id");
+    assert_eq!(sched.cancel("ghost").expect_err("unknown id").field, "id");
+
+    sched.drain();
+    let snap = sched.cancel("dup").unwrap();
+    assert_eq!(snap.state, JobState::Done, "finished job must stay done");
+    assert!(sched.done_line("dup").unwrap().contains("\"ev\":\"done\""));
+}
+
+/// Unresolvable plans are rejected at admission with field-named errors:
+/// a bad method tag, a bad strategy tag, and a live source naming an
+/// unknown family (which would otherwise panic deep in the sweep).
+#[test]
+fn bad_tags_and_unknown_family_are_rejected_at_admission() {
+    let sched = Scheduler::new(SchedulerOptions { workers: 1, budget_steps: None });
+
+    let mut spec = toy_spec(3, 1, "one-shot@6", None);
+    spec.method = "no-such-method".into();
+    assert_eq!(sched.submit("m", &spec, null_sink()).unwrap_err().field, "plan.method");
+
+    let mut spec = toy_spec(3, 1, "one-shot@6", None);
+    spec.strategy = "no-such-strategy".into();
+    assert_eq!(sched.submit("s", &spec, null_sink()).unwrap_err().field, "plan.strategy");
+
+    let spec = PlanSpec {
+        source: SourceSpec::Live {
+            family: "no-such-family".into(),
+            thin: 9,
+            days: 2,
+            steps_per_day: 2,
+            batch: 8,
+            scenario: "criteo_like".into(),
+            seed: 1,
+            clusters: 2,
+            eval_days: 1,
+        },
+        method: "one-shot@1".into(),
+        strategy: "constant".into(),
+        budget: None,
+        top_k: 1,
+        stage: 1,
+    };
+    let err = sched.submit("f", &spec, null_sink()).unwrap_err();
+    assert_eq!(err.field, "plan.source.family", "{err}");
+
+    let (jobs, ledger) = sched.list();
+    assert!(jobs.is_empty(), "no rejected submission may enter the table");
+    assert_eq!(ledger.committed_steps, 0);
+    sched.drain();
+}
