@@ -12,10 +12,12 @@
 //!
 //! Filter with: cargo bench -- <substring>. Output quoted in
 //! EXPERIMENTS.md §Perf. `cargo bench -- --json` additionally runs the
-//! replay comparison benches and writes BENCH_replay.json (raw numbers
-//! plus derived speedups) at the repo root, and the serve scheduler
-//! benches (submit→complete latency, serial vs multiplexed tenants)
-//! writing BENCH_serve.json.
+//! comparison benches and writes the perf trajectory at the repo root:
+//! one `BENCH_<topic>.json` per topic (`replay`, `search`, `serve`,
+//! `step`), each carrying raw numbers plus derived speedups
+//! (util::bench::topic_report; `nshpo bench-check` validates them).
+//! `NSHPO_BENCH_SAMPLES` / `NSHPO_BENCH_MIN_SAMPLE_MS` cap the sample
+//! budget (ci.sh's quick schema-validation run).
 
 use nshpo::data::{Plan, Stream, StreamConfig};
 use nshpo::metrics;
@@ -23,17 +25,25 @@ use nshpo::predict::{self, LawKind, Strategy};
 use nshpo::search::{equally_spaced_stops, ReplayExecutor, ReplayJob, SearchPlan};
 use nshpo::surrogate;
 use nshpo::train::{LogisticProxy, OnlineModel};
-use nshpo::util::bench::{bench, black_box, BenchResult};
+use nshpo::util::bench::{
+    bench, black_box, env_min_sample, env_samples, topic_report, BenchResult,
+};
 use nshpo::util::prng::Rng;
 use std::sync::Arc;
 use std::time::Duration;
 
-const SAMPLES: usize = 7;
-const MIN_SAMPLE: Duration = Duration::from_millis(40);
-
 fn main() {
     let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
     let json_out = std::env::args().any(|a| a == "--json");
+    let samples = env_samples(7);
+    let min_sample = env_min_sample(Duration::from_millis(40));
+    let few_samples = env_samples(3);
+    let note = format!(
+        "cargo bench -- --json ({} cores, {} samples x >= {:?}/sample)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        samples,
+        min_sample,
+    );
     let mut results: Vec<String> = Vec::new();
     let mut run = |name: &str, f: &mut dyn FnMut() -> BenchResult| {
         if let Some(fil) = &filter {
@@ -50,14 +60,14 @@ fn main() {
     let stream = Stream::new(StreamConfig::default());
     run("datagen/batch_at_256", &mut || {
         let mut t = 0usize;
-        bench("datagen/batch_at_256", SAMPLES, MIN_SAMPLE, || {
+        bench("datagen/batch_at_256", samples, min_sample, || {
             t = (t + 1) % 576;
             black_box(stream.batch_at(t))
         })
     });
     let batch = stream.batch_at(0);
     run("datagen/subsample_weights", &mut || {
-        bench("datagen/subsample_weights", SAMPLES, MIN_SAMPLE, || {
+        bench("datagen/subsample_weights", samples, min_sample, || {
             black_box(Plan::negative_only(0.5).weights(&batch, 7, 3))
         })
     });
@@ -68,14 +78,15 @@ fn main() {
         (0..2000).map(|_| (0..8).map(|_| rng.normal()).collect()).collect()
     };
     run("cluster/kmeans_fit_k32_n2000", &mut || {
-        bench("cluster/kmeans_fit_k32_n2000", 3, MIN_SAMPLE, || {
+        bench("cluster/kmeans_fit_k32_n2000", 3, min_sample, || {
             black_box(nshpo::cluster::fit(&pts, 32, 1, 10))
         })
     });
     let km = nshpo::cluster::fit(&pts, 32, 1, 10);
     run("cluster/assign_batch", &mut || {
-        bench("cluster/assign_batch", SAMPLES, MIN_SAMPLE, || {
-            black_box(nshpo::cluster::assign_rows_f32(&km.centroids, &batch.dense, 8))
+        bench("cluster/assign_batch", samples, min_sample, || {
+            // batch.dense is the SoA column-major layout
+            black_box(nshpo::cluster::assign_cols_f32(&km.centroids, &batch.dense, 8))
         })
     });
 
@@ -85,12 +96,12 @@ fn main() {
     let scores: Vec<f64> = (0..100).map(|_| rng.uniform_range(0.4, 0.6)).collect();
     let ranking = metrics::ranking_from_scores(&scores);
     run("metrics/per_100_configs", &mut || {
-        bench("metrics/per_100_configs", SAMPLES, MIN_SAMPLE, || {
+        bench("metrics/per_100_configs", samples, min_sample, || {
             black_box(metrics::per(&ranking, &truth))
         })
     });
     run("metrics/regret_at_3_100_configs", &mut || {
-        bench("metrics/regret_at_3_100_configs", SAMPLES, MIN_SAMPLE, || {
+        bench("metrics/regret_at_3_100_configs", samples, min_sample, || {
             black_box(metrics::regret_at_k(&ranking, &truth, 3))
         })
     });
@@ -104,7 +115,7 @@ fn main() {
         })
         .collect();
     run("predict/fit_pairwise_ipl_27cfg", &mut || {
-        bench("predict/fit_pairwise_ipl_27cfg", 3, MIN_SAMPLE, || {
+        bench("predict/fit_pairwise_ipl_27cfg", 3, min_sample, || {
             black_box(predict::trajectory_predict(
                 LawKind::InversePowerLaw,
                 &day_means,
@@ -114,7 +125,7 @@ fn main() {
         })
     });
     run("predict/constant_27cfg", &mut || {
-        bench("predict/constant_27cfg", SAMPLES, MIN_SAMPLE, || {
+        bench("predict/constant_27cfg", samples, min_sample, || {
             black_box(
                 day_means
                     .iter()
@@ -130,13 +141,13 @@ fn main() {
         11,
     );
     run("search/one_shot_constant", &mut || {
-        bench("search/one_shot_constant", SAMPLES, MIN_SAMPLE, || {
+        bench("search/one_shot_constant", samples, min_sample, || {
             black_box(SearchPlan::one_shot(12).run_replay(&ts).unwrap())
         })
     });
     run("search/perf_stopping_constant", &mut || {
         let stops = equally_spaced_stops(ts.days, 3);
-        bench("search/perf_stopping_constant", SAMPLES, MIN_SAMPLE, || {
+        bench("search/perf_stopping_constant", samples, min_sample, || {
             black_box(
                 SearchPlan::performance_based(stops.clone(), 0.5)
                     .run_replay(&ts)
@@ -146,7 +157,7 @@ fn main() {
     });
     run("search/perf_stopping_trajectory", &mut || {
         let stops = equally_spaced_stops(ts.days, 6);
-        bench("search/perf_stopping_trajectory", 3, MIN_SAMPLE, || {
+        bench("search/perf_stopping_trajectory", 3, min_sample, || {
             black_box(
                 SearchPlan::performance_based(stops.clone(), 0.5)
                     .strategy(Strategy::trajectory(LawKind::InversePowerLaw))
@@ -157,20 +168,30 @@ fn main() {
     });
 
     // The two rung/bracket schedulers head to head on one 32-config
-    // task, both with their parallel replay fast paths at 4 workers:
-    // asha promotes rung by rung with work-stealing wave scoring,
-    // hyperband_par evaluates brackets on scoped threads.
-    let sched_ts = surrogate::sample_task(
-        &surrogate::SurrogateConfig { n_configs: 32, ..Default::default() },
-        19,
-    );
-    run("search/asha_par_w4", &mut || {
-        bench("search/asha_par_w4", SAMPLES, MIN_SAMPLE, || {
+    // task, both with their parallel replay fast paths: asha promotes
+    // rung by rung with chunked work-stealing wave scoring, hyperband_par
+    // evaluates brackets on scoped threads. The serial-vs-4-worker asha
+    // contrast is the search topic's recorded speedup (outcomes are
+    // bit-identical across worker counts; method_matrix pins that).
+    let matches = |name: &str| filter.as_ref().map_or(true, |f| name.contains(f.as_str()));
+    let mut search_json: Vec<BenchResult> = Vec::new();
+    let mut search_derived: Vec<(String, f64)> = Vec::new();
+    if json_out || matches("search/asha_par") || matches("search/hyperband_par") {
+        let sched_ts = surrogate::sample_task(
+            &surrogate::SurrogateConfig { n_configs: 32, ..Default::default() },
+            19,
+        );
+        let r_w1 = bench("search/asha_par_w1", samples, min_sample, || {
+            black_box(nshpo::search::asha_par(&sched_ts, &Strategy::constant(), 3.0, None, 1))
+        });
+        println!("{}", r_w1.report());
+        results.push(r_w1.report());
+        let r_w4 = bench("search/asha_par_w4", samples, min_sample, || {
             black_box(nshpo::search::asha_par(&sched_ts, &Strategy::constant(), 3.0, None, 4))
-        })
-    });
-    run("search/hyperband_par_w4", &mut || {
-        bench("search/hyperband_par_w4", SAMPLES, MIN_SAMPLE, || {
+        });
+        println!("{}", r_w4.report());
+        results.push(r_w4.report());
+        let r_hb = bench("search/hyperband_par_w4", samples, min_sample, || {
             black_box(nshpo::search::hyperband::hyperband_par(
                 &sched_ts,
                 &Strategy::constant(),
@@ -178,12 +199,23 @@ fn main() {
                 7,
                 4,
             ))
-        })
-    });
+        });
+        println!("{}", r_hb.report());
+        results.push(r_hb.report());
+        println!(
+            "asha_par speedup: {:.2}x at 4 workers (cores available: {})",
+            r_w1.mean_ns() / r_w4.mean_ns(),
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        );
+        search_derived.push(("asha_par_w4_speedup".into(), r_w1.mean_ns() / r_w4.mean_ns()));
+        search_json.push(r_w1);
+        search_json.push(r_w4);
+        search_json.push(r_hb);
+    }
 
     // ---------------------------------------------------------- surrogate
     run("surrogate/sample_task_30cfg", &mut || {
-        bench("surrogate/sample_task_30cfg", 3, MIN_SAMPLE, || {
+        bench("surrogate/sample_task_30cfg", 3, min_sample, || {
             black_box(surrogate::sample_task(&Default::default(), 3))
         })
     });
@@ -192,8 +224,9 @@ fn main() {
     run("train/proxy_step_b256", &mut || {
         let mut m = LogisticProxy::new(0);
         let w = vec![1.0f32; batch.len()];
-        bench("train/proxy_step_b256", SAMPLES, MIN_SAMPLE, || {
-            black_box(m.step(&batch, &w, 0.5, [-2.0, -2.5, 1e-6]).unwrap())
+        let mut per_ex: Vec<f32> = Vec::new();
+        bench("train/proxy_step_b256", samples, min_sample, || {
+            black_box(m.step(&batch, &w, 0.5, [-2.0, -2.5, 1e-6], &mut per_ex).unwrap())
         })
     });
 
@@ -206,7 +239,7 @@ fn main() {
                 let model = engine.load_model(manifest.variant(name).unwrap()).unwrap();
                 let mut run_state = model.init_state(0).unwrap();
                 let w = vec![1.0f32; batch.len()];
-                bench(&label, 3, MIN_SAMPLE, || {
+                bench(&label, 3, min_sample, || {
                     black_box(
                         model
                             .step(&mut run_state, &batch, &w, 0.5, [-2.0, -2.5, 1e-6])
@@ -224,7 +257,7 @@ fn main() {
         let text = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
             r#"{"schema":{"batch":256,"n_dense":8,"n_cat":12},"variants":[]}"#.into()
         });
-        bench("io/json_parse_manifest_like", SAMPLES, MIN_SAMPLE, || {
+        bench("io/json_parse_manifest_like", samples, min_sample, || {
             black_box(nshpo::util::json::Json::parse(&text).unwrap())
         })
     });
@@ -233,7 +266,6 @@ fn main() {
     // Serial vs parallel replay of a fig4/fig5-sized exhibit job set:
     // the acceptance bar is >= 2x throughput at 4+ workers. (Placed after
     // the `run` helper's last use so both results can be compared here.)
-    let matches = |name: &str| filter.as_ref().map_or(true, |f| name.contains(f.as_str()));
     // Structured results + derived metrics for `--json` (BENCH_replay.json).
     let mut json_results: Vec<BenchResult> = Vec::new();
     let mut derived: Vec<(String, f64)> = Vec::new();
@@ -266,7 +298,7 @@ fn main() {
         let n_jobs = make_jobs().len();
         let serial_exec = ReplayExecutor::serial();
         let name_s = format!("replay/serial_{n_jobs}jobs");
-        let r_serial = bench(&name_s, 3, MIN_SAMPLE, || {
+        let r_serial = bench(&name_s, 3, min_sample, || {
             black_box(serial_exec.run(make_jobs()))
         });
         println!("{}", r_serial.report_throughput(n_jobs as f64, "jobs"));
@@ -275,7 +307,7 @@ fn main() {
         let workers = 4usize;
         let par_exec = ReplayExecutor::new(workers);
         let name_p = format!("replay/parallel_w{workers}_{n_jobs}jobs");
-        let r_par = bench(&name_p, 3, MIN_SAMPLE, || {
+        let r_par = bench(&name_p, 3, min_sample, || {
             black_box(par_exec.run(make_jobs()))
         });
         println!("{}", r_par.report_throughput(n_jobs as f64, "jobs"));
@@ -343,14 +375,14 @@ fn main() {
         // cache-on pays clustering (which warms the cache) + zero sweep
         // generation — exactly the once-per-sweep vs once-per-candidate
         // contrast, never a pre-warmed steady state.
-        let r_off = bench("live/sweep_4cfg_cache_off", 3, MIN_SAMPLE, || {
+        let r_off = bench("live/sweep_4cfg_cache_off", 3, min_sample, || {
             black_box(run_sweep(&mk_cs(0)))
         });
         println!("{}", r_off.report());
         results.push(r_off.report());
 
         let mut last_on: Option<ClusteredStream> = None;
-        let r_on = bench("live/sweep_4cfg_cache_on", 3, MIN_SAMPLE, || {
+        let r_on = bench("live/sweep_4cfg_cache_on", 3, min_sample, || {
             let cs = mk_cs(total);
             let out = run_sweep(&cs);
             last_on = Some(cs);
@@ -371,18 +403,148 @@ fn main() {
         );
     }
 
+    // -------------------------------------------------- step topic
+    // Pre-vs-post record of the zero-alloc training-step work: the
+    // optimized LogisticProxy step (SoA column passes, model-owned
+    // scratch, fused sparse update) against the in-tree pre-refactor
+    // reference (ReferenceProxy: example-major gathers, per-step
+    // allocations, the b*N_CAT `touched` buffer), plus SoA batch
+    // generation into a reused arena vs a fresh allocation, and the
+    // same contrast end to end on a 4-candidate live sweep. All
+    // contrasts are bit-identical (rust/tests/step_bitident.rs), so
+    // the speedups are pure raw-speed wins.
+    let mut step_json: Vec<BenchResult> = Vec::new();
+    let mut step_derived: Vec<(String, f64)> = Vec::new();
+    if json_out || matches("step/") {
+        use nshpo::coordinator::{
+            live::LiveSearch, ModelFactory, ProxyFactory, ReferenceProxyFactory,
+        };
+        use nshpo::search::sweep;
+        use nshpo::train::{ClusterSource, ClusteredStream, ReferenceProxy};
+
+        let w = vec![1.0f32; batch.len()];
+        let hp = [-2.0f32, -2.5, 1e-6];
+        let r_fast = {
+            let mut m = LogisticProxy::new(0);
+            let mut per_ex: Vec<f32> = Vec::new();
+            bench("step/proxy_fast_b256", samples, min_sample, || {
+                black_box(m.step(&batch, &w, 0.5, hp, &mut per_ex).unwrap())
+            })
+        };
+        println!("{}", r_fast.report_throughput(batch.len() as f64, "examples"));
+        results.push(r_fast.report());
+        let r_ref = {
+            let mut m = ReferenceProxy::new(0);
+            let mut per_ex: Vec<f32> = Vec::new();
+            bench("step/proxy_reference_b256", samples, min_sample, || {
+                black_box(m.step(&batch, &w, 0.5, hp, &mut per_ex).unwrap())
+            })
+        };
+        println!("{}", r_ref.report_throughput(batch.len() as f64, "examples"));
+        results.push(r_ref.report());
+        println!(
+            "zero-alloc step: {:.2}x over the allocating reference at b=256",
+            r_ref.mean_ns() / r_fast.mean_ns()
+        );
+        step_derived.push((
+            "step_pre_vs_post_speedup".into(),
+            r_ref.mean_ns() / r_fast.mean_ns(),
+        ));
+
+        let r_alloc = {
+            let mut t = 0usize;
+            bench("step/batch_at_alloc", samples, min_sample, || {
+                t = (t + 1) % 576;
+                black_box(stream.batch_at(t))
+            })
+        };
+        println!("{}", r_alloc.report());
+        results.push(r_alloc.report());
+        let r_reuse = {
+            let mut t = 0usize;
+            let mut out = nshpo::data::Batch::empty();
+            bench("step/batch_into_reuse", samples, min_sample, || {
+                t = (t + 1) % 576;
+                stream.batch_into(t, &mut out);
+                black_box(out.len())
+            })
+        };
+        println!("{}", r_reuse.report());
+        results.push(r_reuse.report());
+        step_derived.push((
+            "batch_into_reuse_speedup".into(),
+            r_alloc.mean_ns() / r_reuse.mean_ns(),
+        ));
+
+        // End to end: the same 4-candidate live sweep LiveSearch runs,
+        // once on the pre-refactor model and once on the optimized one.
+        let sweep_cfg = StreamConfig {
+            seed: 13,
+            days: 6,
+            steps_per_day: 6,
+            batch: 256,
+            n_clusters: 8,
+            ..StreamConfig::default()
+        };
+        let mk_cs = || {
+            ClusteredStream::build(
+                Stream::new(sweep_cfg.clone()).with_cache(sweep_cfg.total_steps()),
+                ClusterSource::Latent,
+                2,
+            )
+        };
+        let specs = sweep::thin(sweep::family_sweep("fm"), 7); // 4 configs
+        let plan = SearchPlan::performance_based(vec![], 0.5).build().unwrap();
+        let run_sweep = |factory: &dyn ModelFactory, cs: &ClusteredStream| {
+            LiveSearch {
+                factory,
+                cs,
+                specs: &specs,
+                data_plan: Plan::Full,
+                seed: 0,
+                workers: 2,
+            }
+            .run(&plan)
+            .unwrap()
+        };
+        let r_pre = bench("step/live_sweep_pre", few_samples, min_sample, || {
+            black_box(run_sweep(&ReferenceProxyFactory, &mk_cs()))
+        });
+        println!("{}", r_pre.report());
+        results.push(r_pre.report());
+        let r_post = bench("step/live_sweep_post", few_samples, min_sample, || {
+            black_box(run_sweep(&ProxyFactory, &mk_cs()))
+        });
+        println!("{}", r_post.report());
+        results.push(r_post.report());
+        println!(
+            "live sweep pre-vs-post: {:.2}x end to end (4 candidates, bit-identical outcomes)",
+            r_pre.mean_ns() / r_post.mean_ns()
+        );
+        step_derived.push((
+            "live_sweep_pre_vs_post_speedup".into(),
+            r_pre.mean_ns() / r_post.mean_ns(),
+        ));
+        step_json.push(r_fast);
+        step_json.push(r_ref);
+        step_json.push(r_alloc);
+        step_json.push(r_reuse);
+        step_json.push(r_pre);
+        step_json.push(r_post);
+    }
+
     // chunked vs per-item queueing for many tiny work items (the
     // amortization map_chunked exists for, DESIGN.md §3)
     if matches("threadpool/map") {
         let pool = nshpo::util::threadpool::ThreadPool::new(4);
         let items: Vec<u64> = (0..20_000).collect();
         let items_a = items.clone();
-        let r_item = bench("threadpool/map_indexed_20k_tiny", 3, MIN_SAMPLE, || {
+        let r_item = bench("threadpool/map_indexed_20k_tiny", 3, min_sample, || {
             black_box(pool.map_indexed(items_a.clone(), |i, x| x.wrapping_mul(3) ^ i as u64))
         });
         println!("{}", r_item.report());
         results.push(r_item.report());
-        let r_chunk = bench("threadpool/map_chunked_20k_tiny", 3, MIN_SAMPLE, || {
+        let r_chunk = bench("threadpool/map_chunked_20k_tiny", 3, min_sample, || {
             black_box(pool.map_chunked(items.clone(), 512, |i, x| x.wrapping_mul(3) ^ i as u64))
         });
         println!("{}", r_chunk.report());
@@ -448,7 +610,7 @@ fn main() {
         save_v3(&bank, &v3_dir, &CompactOptions { max_shard_runs: 128 }, 4).unwrap();
         drop(bank);
 
-        let r_mono = bench("replay/monolithic_cell", 3, MIN_SAMPLE, || {
+        let r_mono = bench("replay/monolithic_cell", 3, min_sample, || {
             let b = Bank::load(&v2_path).unwrap();
             let (ts, _) = b.trajectory_set("f0", "full", 0).unwrap();
             black_box(SearchPlan::one_shot(6).run_replay(&ts).unwrap())
@@ -456,7 +618,7 @@ fn main() {
         println!("{}", r_mono.report());
         results.push(r_mono.report());
 
-        let r_shard = bench("replay/sharded_cell", 3, MIN_SAMPLE, || {
+        let r_shard = bench("replay/sharded_cell", 3, min_sample, || {
             let store = Arc::new(ShardStore::open(&v3_dir).unwrap().with_cache_budget(2));
             black_box(
                 ReplayJob::from_store(
@@ -507,7 +669,7 @@ fn main() {
         let mut serve_json: Vec<BenchResult> = Vec::new();
         let mut serve_derived: Vec<(String, f64)> = Vec::new();
 
-        let r_lat = bench("serve/submit_drain_1job", 3, MIN_SAMPLE, || {
+        let r_lat = bench("serve/submit_drain_1job", 3, min_sample, || {
             let sched = Scheduler::new(SchedulerOptions { workers: 1, budget_steps: None });
             sched.submit("lat", &spec_for(0), null_sink()).unwrap();
             black_box(sched.drain())
@@ -523,13 +685,13 @@ fn main() {
             }
             sched.drain()
         };
-        let r_serial = bench("serve/6tenants_serial_w1", 3, MIN_SAMPLE, || {
+        let r_serial = bench("serve/6tenants_serial_w1", 3, min_sample, || {
             black_box(run_tenants(1))
         });
         println!("{}", r_serial.report());
         results.push(r_serial.report());
 
-        let r_mux = bench("serve/6tenants_multiplexed_w4", 3, MIN_SAMPLE, || {
+        let r_mux = bench("serve/6tenants_multiplexed_w4", 3, min_sample, || {
             black_box(run_tenants(4))
         });
         println!("{}", r_mux.report());
@@ -550,16 +712,24 @@ fn main() {
         serve_json.push(r_mux);
 
         if json_out {
-            let doc = nshpo::util::bench::json_report(&serve_json, &serve_derived);
+            let doc = topic_report("serve", &note, &serve_json, &serve_derived);
             std::fs::write("BENCH_serve.json", &doc).expect("writing BENCH_serve.json");
             println!("wrote BENCH_serve.json ({} results)", serve_json.len());
         }
     }
 
     if json_out {
-        let doc = nshpo::util::bench::json_report(&json_results, &derived);
+        let doc = topic_report("replay", &note, &json_results, &derived);
         std::fs::write("BENCH_replay.json", &doc).expect("writing BENCH_replay.json");
         println!("wrote BENCH_replay.json ({} results)", json_results.len());
+
+        let doc = topic_report("search", &note, &search_json, &search_derived);
+        std::fs::write("BENCH_search.json", &doc).expect("writing BENCH_search.json");
+        println!("wrote BENCH_search.json ({} results)", search_json.len());
+
+        let doc = topic_report("step", &note, &step_json, &step_derived);
+        std::fs::write("BENCH_step.json", &doc).expect("writing BENCH_step.json");
+        println!("wrote BENCH_step.json ({} results)", step_json.len());
     }
 
     println!("\n{} benches run", results.len());

@@ -139,6 +139,32 @@ if cargo run --release -- submit --socket "$SOCK" --id too-late \
   exit 1
 fi
 
+echo "== perf gate =="
+# The perf trajectory must keep emitting: a quick-mode bench run (sample
+# budget capped via util::bench's env knobs) regenerates every
+# BENCH_<topic>.json in a scratch dir, then bench-check validates the
+# schema of each — the gate fails loudly if a topic stops emitting.
+# Absolute numbers are not gated (CI hardware varies); the committed
+# files at the repo root are the recorded trajectory, refreshed on perf
+# PRs with a plain `cargo bench -- --json`.
+cargo test -q --test step_bitident
+PERFTMP=$(mktemp -d)
+(
+  cd "$PERFTMP"
+  NSHPO_BENCH_SAMPLES=2 NSHPO_BENCH_MIN_SAMPLE_MS=1 \
+    cargo bench --manifest-path "$OLDPWD/Cargo.toml" -- --json >/dev/null
+)
+for topic in replay search serve step; do
+  test -f "$PERFTMP/BENCH_${topic}.json" || {
+    echo "FAIL: quick bench did not write BENCH_${topic}.json" >&2
+    exit 1
+  }
+done
+cargo run --release -- bench-check --dir "$PERFTMP"
+# the committed trajectory files must stay schema-valid too
+cargo run --release -- bench-check --dir .
+rm -rf "$PERFTMP"
+
 echo "== rustdoc gate =="
 # The crate carries #![warn(missing_docs)]; the public API must document
 # cleanly (docs/API.md is the committed markdown rendering of it).

@@ -31,6 +31,13 @@ pub fn fit(points: &[Vec<f64>], k: usize, seed: u64, max_iters: usize) -> KMeans
     let mut assign = vec![0usize; points.len()];
     let mut iterations = 0;
 
+    // Update-step arenas allocated once and zeroed per iteration, not
+    // reallocated inside the Lloyd loop (zeroed buffers accumulate the
+    // same sums as fresh ones — bit-identical fits).
+    let dim = points[0].len();
+    let mut sums = vec![vec![0.0; dim]; centroids.len()];
+    let mut counts = vec![0usize; centroids.len()];
+
     for it in 0..max_iters {
         iterations = it + 1;
         // assignment step
@@ -43,9 +50,10 @@ pub fn fit(points: &[Vec<f64>], k: usize, seed: u64, max_iters: usize) -> KMeans
             }
         }
         // update step
-        let dim = points[0].len();
-        let mut sums = vec![vec![0.0; dim]; centroids.len()];
-        let mut counts = vec![0usize; centroids.len()];
+        for s in &mut sums {
+            s.iter_mut().for_each(|x| *x = 0.0);
+        }
+        counts.iter_mut().for_each(|c| *c = 0);
         for (i, p) in points.iter().enumerate() {
             counts[assign[i]] += 1;
             for (s, &x) in sums[assign[i]].iter_mut().zip(p) {
@@ -138,6 +146,28 @@ pub fn assign_rows_f32(centroids: &[Vec<f64>], rows: &[f32], dim: usize) -> Vec<
         .collect()
 }
 
+/// Assign a batch of f32 points stored column-major (`cols[j*n + i]` is
+/// feature `j` of point `i`, the `data::schema::Batch` SoA layout) to
+/// centroids. Gathers each point into an f64 scratch row and reuses
+/// [`nearest`], so assignments are bit-identical to
+/// [`assign_rows_f32`] on the transposed data.
+pub fn assign_cols_f32(centroids: &[Vec<f64>], cols: &[f32], dim: usize) -> Vec<u16> {
+    if dim == 0 {
+        return Vec::new();
+    }
+    debug_assert_eq!(cols.len() % dim, 0);
+    let n = cols.len() / dim;
+    let mut scratch = vec![0.0f64; dim];
+    (0..n)
+        .map(|i| {
+            for (j, s) in scratch.iter_mut().enumerate() {
+                *s = cols[j * n + i] as f64;
+            }
+            nearest(centroids, &scratch).0 as u16
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +241,26 @@ mod tests {
         let rows: Vec<f32> = vec![0.1, -0.1, 9.5, 10.2, 0.4, 0.2];
         let a = assign_rows_f32(&centroids, &rows, 2);
         assert_eq!(a, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn assign_cols_f32_matches_rows_on_transpose() {
+        let mut rng = Rng::new(41);
+        let centroids: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..3).map(|_| rng.normal()).collect()).collect();
+        let n = 17;
+        let rows: Vec<f32> = (0..n * 3).map(|_| rng.normal() as f32).collect();
+        // transpose rows [n x 3] into cols [3 x n]
+        let mut cols = vec![0.0f32; n * 3];
+        for i in 0..n {
+            for j in 0..3 {
+                cols[j * n + i] = rows[i * 3 + j];
+            }
+        }
+        assert_eq!(
+            assign_rows_f32(&centroids, &rows, 3),
+            assign_cols_f32(&centroids, &cols, 3)
+        );
+        assert!(assign_cols_f32(&centroids, &[], 3).is_empty());
     }
 }

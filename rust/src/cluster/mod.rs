@@ -4,5 +4,5 @@
 pub mod kmeans;
 pub mod slices;
 
-pub use kmeans::{assign_rows_f32, fit, KMeans};
+pub use kmeans::{assign_cols_f32, assign_rows_f32, fit, KMeans};
 pub use slices::{aggregate_to_slices, slice_clusters};

@@ -213,7 +213,8 @@ fn build_into(opts: &BankOptions, sink: &mut dyn RunSink) -> Result<()> {
         };
         let done = AtomicUsize::new(0);
         let total = jobs.len();
-        let trajs = ThreadPool::scoped_map(workers, &jobs, |_, job| {
+        let chunk = ThreadPool::chunk_for(jobs.len(), workers);
+        let trajs = ThreadPool::scoped_map_chunked(workers, &jobs, chunk, |_, job| {
             let mut model = LogisticProxy::new(job.seed);
             let traj = run_full(
                 &mut model,
@@ -350,6 +351,23 @@ impl ModelFactory for ProxyFactory {
         seed: i32,
     ) -> Result<Box<dyn OnlineModel + Send + 'a>> {
         Ok(Box::new(LogisticProxy::new(seed)))
+    }
+}
+
+/// Factory over [`crate::train::ReferenceProxy`], the pre-optimization
+/// allocating step path. Benchmarks only: swapping this in where
+/// [`ProxyFactory`] is used measures the full before/after cost of the
+/// zero-alloc step work on an end-to-end run, and the losses it records
+/// are bit-identical (`rust/tests/step_bitident.rs`).
+pub struct ReferenceProxyFactory;
+
+impl ModelFactory for ReferenceProxyFactory {
+    fn create<'a>(
+        &'a self,
+        _spec: &ConfigSpec,
+        seed: i32,
+    ) -> Result<Box<dyn OnlineModel + Send + 'a>> {
+        Ok(Box::new(crate::train::ReferenceProxy::new(seed)))
     }
 }
 

@@ -157,21 +157,40 @@ impl Stream {
 
     /// Generate batch `t`. Pure in (config, t); always regenerates —
     /// [`batch_arc`](Stream::batch_arc) is the cached path and returns
-    /// bit-identical content.
+    /// bit-identical content, and [`batch_into`](Stream::batch_into) is
+    /// the allocation-reusing path for tight single-consumer loops.
     pub fn batch_at(&self, t: usize) -> Batch {
+        let mut out = Batch::empty();
+        self.batch_into(t, &mut out);
+        out
+    }
+
+    /// Generate batch `t` into `out`, reusing its buffers (bit-identical
+    /// to [`batch_at`](Stream::batch_at)). A caller sweeping many steps
+    /// with one scratch `Batch` pays the feature-buffer allocations once
+    /// instead of once per step. The RNG draw sequence per example is
+    /// part of the stream contract: cluster, dense noise (j ascending),
+    /// zipf ranks (f ascending), label — changing it changes the data.
+    pub fn batch_into(&self, t: usize, out: &mut Batch) {
         let mut rng = Rng::new(self.cfg.seed ^ 0x5EED_BA7C).fork(t as u64);
         let d = self.cfg.day_of(t);
         let pi = self.scenario.mixture(d);
         let eps = self.scenario.hardness(d);
         let b = self.cfg.batch;
 
-        let mut dense = Vec::with_capacity(b * N_DENSE);
-        let mut cat = Vec::with_capacity(b * N_CAT);
-        let mut labels = Vec::with_capacity(b);
-        let mut latent = Vec::with_capacity(b);
-        let mut mean = vec![0.0f64; N_DENSE];
+        // Column-major feature storage (see `data::schema::Batch`):
+        // example i writes dense[j*b + i] / cat[f*b + i].
+        out.dense.clear();
+        out.dense.resize(b * N_DENSE, 0.0);
+        out.cat.clear();
+        out.cat.resize(b * N_CAT, 0);
+        out.labels.clear();
+        out.labels.reserve(b);
+        out.latent_cluster.clear();
+        out.latent_cluster.reserve(b);
+        let mut mean = [0.0f64; N_DENSE];
 
-        for _ in 0..b {
+        for i in 0..b {
             let k = rng.categorical(&pi);
             self.scenario.mean_at(k, d, &mut mean);
 
@@ -180,7 +199,7 @@ impl Stream {
             for j in 0..N_DENSE {
                 let x = mean[j] + 0.6 * rng.normal();
                 dense_signal += self.alpha[j] * x;
-                dense.push(x as f32);
+                out.dense[j * b + i] = x as f32;
             }
 
             // Categorical ids: zipf rank + the scenario's drifting
@@ -191,7 +210,7 @@ impl Stream {
                 let entity = self.scenario.vocab_pointer(k, f, d) + rank;
                 let raw = mix_id(f as u64, entity);
                 id_signal += id_weight(raw);
-                cat.push(raw);
+                out.cat[f * b + i] = raw;
             }
             id_signal *= self.gamma / (N_CAT as f64).sqrt();
 
@@ -199,11 +218,9 @@ impl Stream {
             let logit = self.scenario.logit(k, d) + dense_signal + id_signal - 1.2;
             let p_model = 1.0 / (1.0 + (-logit).exp());
             let p = (1.0 - eps) * p_model + eps * 0.5;
-            labels.push(if rng.bernoulli(p) { 1.0 } else { 0.0 });
-            latent.push(k as u16);
+            out.labels.push(if rng.bernoulli(p) { 1.0 } else { 0.0 });
+            out.latent_cluster.push(k as u16);
         }
-
-        Batch { dense, cat, labels, latent_cluster: latent }
     }
 
     /// Batch `t` through the shared cache (generated at most once per
@@ -275,6 +292,22 @@ mod tests {
         // different steps differ
         let c = s.batch_at(8);
         assert_ne!(a.labels, c.labels);
+    }
+
+    #[test]
+    fn batch_into_reuse_is_bit_identical() {
+        let s = small();
+        let mut scratch = Batch::empty();
+        // reuse the same scratch across steps, in a scrambled order, and
+        // compare against fresh generation — stale capacity must never leak
+        for t in [7usize, 0, 11, 7, 3] {
+            s.batch_into(t, &mut scratch);
+            let fresh = s.batch_at(t);
+            assert_eq!(scratch.dense, fresh.dense, "t={t}");
+            assert_eq!(scratch.cat, fresh.cat, "t={t}");
+            assert_eq!(scratch.labels, fresh.labels, "t={t}");
+            assert_eq!(scratch.latent_cluster, fresh.latent_cluster, "t={t}");
+        }
     }
 
     #[test]
@@ -390,7 +423,7 @@ mod tests {
         // partially (pointer drift) — the "new ads appear" phenomenon.
         let s = small();
         let ids_day = |t: usize| -> std::collections::HashSet<i32> {
-            s.batch_at(t).cat.iter().step_by(N_CAT).copied().collect()
+            s.batch_at(t).cat_col(0).iter().copied().collect()
         };
         let d0 = ids_day(0);
         let d5 = ids_day(5 * 4);
@@ -410,7 +443,7 @@ mod tests {
         });
         assert_eq!(s.scenario_tag(), "stationary_control");
         let ids_day = |t: usize| -> std::collections::HashSet<i32> {
-            s.batch_at(t).cat.iter().step_by(N_CAT).copied().collect()
+            s.batch_at(t).cat_col(0).iter().copied().collect()
         };
         let d0 = ids_day(0);
         let d5 = ids_day(5 * 4);

@@ -10,13 +10,22 @@ pub const N_DENSE: usize = 8;
 /// reduce them modulo their own vocab — the hashing trick).
 pub const N_CAT: usize = 12;
 
-/// One mini-batch of the chronological stream. Row-major: example `i`
-/// owns `dense[i*N_DENSE..]`, `cat[i*N_CAT..]`.
+/// One mini-batch of the chronological stream.
+///
+/// Feature storage is structure-of-arrays (column-major): feature `j`
+/// owns the contiguous slice `dense[j*len..(j+1)*len]`, so the proxy
+/// trainer's dense inner products and the k-means assignment sweep run
+/// over contiguous per-feature columns instead of strided rows. The
+/// PJRT upload boundary re-materializes row-major tensors via
+/// [`Batch::dense_row_major`] / [`Batch::cat_row_major`] (the AOT step
+/// function keeps its `[batch, features]` layout).
 #[derive(Clone, Debug)]
 pub struct Batch {
-    /// Row-major `[len x N_DENSE]` continuous features.
+    /// Column-major `[N_DENSE x len]` continuous features: feature `j`
+    /// is `dense[j*len..(j+1)*len]`.
     pub dense: Vec<f32>,
-    /// Row-major `[len x N_CAT]` non-negative hashed categorical ids.
+    /// Column-major `[N_CAT x len]` non-negative hashed categorical ids:
+    /// feature `f` is `cat[f*len..(f+1)*len]`.
     pub cat: Vec<i32>,
     /// Binary click labels (0.0 / 1.0), one per example.
     pub labels: Vec<f32>,
@@ -27,6 +36,17 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// An empty batch — the scratch target for
+    /// [`Stream::batch_into`](super::gen::Stream::batch_into) reuse.
+    pub fn empty() -> Batch {
+        Batch {
+            dense: Vec::new(),
+            cat: Vec::new(),
+            labels: Vec::new(),
+            latent_cluster: Vec::new(),
+        }
+    }
+
     /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
@@ -37,14 +57,67 @@ impl Batch {
         self.labels.is_empty()
     }
 
-    /// Dense feature row of example `i`.
-    pub fn dense_row(&self, i: usize) -> &[f32] {
-        &self.dense[i * N_DENSE..(i + 1) * N_DENSE]
+    /// Contiguous column of dense feature `j` (one value per example).
+    #[inline]
+    pub fn dense_col(&self, j: usize) -> &[f32] {
+        let n = self.len();
+        &self.dense[j * n..(j + 1) * n]
     }
 
-    /// Categorical id row of example `i`.
-    pub fn cat_row(&self, i: usize) -> &[i32] {
-        &self.cat[i * N_CAT..(i + 1) * N_CAT]
+    /// Contiguous column of categorical feature `f` (one id per example).
+    #[inline]
+    pub fn cat_col(&self, f: usize) -> &[i32] {
+        let n = self.len();
+        &self.cat[f * n..(f + 1) * n]
+    }
+
+    /// Dense feature `j` of example `i`.
+    #[inline]
+    pub fn dense_at(&self, i: usize, j: usize) -> f32 {
+        self.dense[j * self.len() + i]
+    }
+
+    /// Categorical id `f` of example `i`.
+    #[inline]
+    pub fn cat_at(&self, i: usize, f: usize) -> i32 {
+        self.cat[f * self.len() + i]
+    }
+
+    /// Gather example `i`'s dense row into `out` (length `N_DENSE`),
+    /// widened to f64 — the k-means fit/assign gather.
+    #[inline]
+    pub fn gather_dense_f64(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), N_DENSE);
+        let n = self.len();
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.dense[j * n + i] as f64;
+        }
+    }
+
+    /// Materialize the dense features row-major `[len x N_DENSE]` — the
+    /// PJRT device-upload layout.
+    pub fn dense_row_major(&self) -> Vec<f32> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(n * N_DENSE);
+        for i in 0..n {
+            for j in 0..N_DENSE {
+                out.push(self.dense[j * n + i]);
+            }
+        }
+        out
+    }
+
+    /// Materialize the categorical ids row-major `[len x N_CAT]` — the
+    /// PJRT device-upload layout.
+    pub fn cat_row_major(&self) -> Vec<i32> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(n * N_CAT);
+        for i in 0..n {
+            for f in 0..N_CAT {
+                out.push(self.cat[f * n + i]);
+            }
+        }
+        out
     }
 
     /// Fraction of positive labels (0 for an empty batch).
@@ -60,17 +133,47 @@ impl Batch {
 mod tests {
     use super::*;
 
-    #[test]
-    fn rows_slice_correctly() {
-        let b = Batch {
+    fn two_example_batch() -> Batch {
+        // columns: dense[j][i] = j*2+i, cat[f][i] = f*2+i
+        Batch {
             dense: (0..2 * N_DENSE).map(|x| x as f32).collect(),
             cat: (0..2 * N_CAT).map(|x| x as i32).collect(),
             labels: vec![1.0, 0.0],
             latent_cluster: vec![3, 4],
-        };
+        }
+    }
+
+    #[test]
+    fn columns_slice_correctly() {
+        let b = two_example_batch();
         assert_eq!(b.len(), 2);
-        assert_eq!(b.dense_row(1)[0], N_DENSE as f32);
-        assert_eq!(b.cat_row(1)[0], N_CAT as i32);
+        assert_eq!(b.dense_col(1), &[2.0, 3.0]);
+        assert_eq!(b.cat_col(1), &[2, 3]);
+        assert_eq!(b.dense_at(1, 0), 1.0);
+        assert_eq!(b.cat_at(0, 2), 4);
         assert_eq!(b.positive_rate(), 0.5);
+    }
+
+    #[test]
+    fn row_major_materialization_transposes() {
+        let b = two_example_batch();
+        let dr = b.dense_row_major();
+        // example 0's row is column j's element 0, j ascending
+        let row0: Vec<f32> = (0..N_DENSE).map(|j| b.dense_at(0, j)).collect();
+        assert_eq!(&dr[..N_DENSE], row0.as_slice());
+        let cr = b.cat_row_major();
+        let row1: Vec<i32> = (0..N_CAT).map(|f| b.cat_at(1, f)).collect();
+        assert_eq!(&cr[N_CAT..], row1.as_slice());
+        let mut g = [0.0f64; N_DENSE];
+        b.gather_dense_f64(1, &mut g);
+        assert_eq!(g[2], b.dense_at(1, 2) as f64);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let b = Batch::empty();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.positive_rate(), 0.0);
     }
 }

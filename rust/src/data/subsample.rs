@@ -52,15 +52,28 @@ impl Plan {
     /// 0/1 training weights for a batch. Deterministic in
     /// (plan, seed, t, example index) so replays are exact.
     pub fn weights(&self, batch: &Batch, seed: u64, t: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.weights_into(batch, seed, t, &mut out);
+        out
+    }
+
+    /// [`weights`](Plan::weights) into a caller-owned buffer (cleared and
+    /// refilled) — the allocation-free path `train::online::run_range`
+    /// uses once per step. Bit-identical to `weights`: the bernoulli draw
+    /// sequence over labels is the determinism contract.
+    pub fn weights_into(&self, batch: &Batch, seed: u64, t: usize, out: &mut Vec<f32>) {
+        out.clear();
         if matches!(self, Plan::Full) {
-            return vec![1.0; batch.len()];
+            out.resize(batch.len(), 1.0);
+            return;
         }
         let mut rng = Rng::new(seed ^ 0xDA7A_5A3C_3B00_57E5).fork(t as u64);
-        batch
-            .labels
-            .iter()
-            .map(|&y| if rng.bernoulli(self.lambda(y)) { 1.0 } else { 0.0 })
-            .collect()
+        out.extend(
+            batch
+                .labels
+                .iter()
+                .map(|&y| if rng.bernoulli(self.lambda(y)) { 1.0 } else { 0.0 }),
+        );
     }
 
     /// Short id used in bank filenames and figure legends.
@@ -142,6 +155,18 @@ mod tests {
         assert_eq!(p.weights(&b, 3, 11), p.weights(&b, 3, 11));
         assert_ne!(p.weights(&b, 3, 11), p.weights(&b, 3, 12));
         assert_ne!(p.weights(&b, 4, 11), p.weights(&b, 3, 11));
+    }
+
+    #[test]
+    fn weights_into_reuse_matches_weights() {
+        let b = batch();
+        let mut buf = vec![9.0f32; 7]; // stale content must be cleared
+        for plan in [Plan::Full, Plan::Uniform(0.25), Plan::negative_only(0.5)] {
+            for t in [0usize, 3, 11] {
+                plan.weights_into(&b, 7, t, &mut buf);
+                assert_eq!(buf, plan.weights(&b, 7, t), "{plan:?} t={t}");
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   methods    list the registered search methods (search::method)
 //!   sim        industrial surrogate sweep (Fig 6 style)
 //!   info       inspect artifacts and banks
+//!   bench-check  validate committed BENCH_<topic>.json perf files
 //!   serve      persistent multi-tenant search coordinator daemon
 //!   submit     client for a running serve daemon
 
@@ -94,6 +95,11 @@ USAGE: nshpo <subcommand> [flags]
   methods    list registered search methods (tag, reference, use)
   sim       [--tasks 12] [--configs 30] [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
+  bench-check  [--dir .] [--topics replay,search,serve,step]
+            validate the committed BENCH_<topic>.json perf-trajectory
+            files (schema + topic tag; regenerate with
+            `cargo bench -- --json`); exits nonzero on any problem
+            so ci.sh fails loudly if a topic stops emitting
   serve     persistent multi-tenant search coordinator daemon
             (newline-delimited JSON frames; DESIGN.md §8):
             [--socket results/nshpo.sock | --tcp 127.0.0.1:7878]
@@ -127,6 +133,7 @@ fn main() {
         Some("methods") => cmd_methods(),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         Some("serve") => cmd_serve(&args),
         Some("submit") => cmd_submit(&args),
         _ => {
@@ -639,6 +646,32 @@ fn cmd_info(args: &Args) -> Result<()> {
     match resolve_bank_path(&bank_arg) {
         Some(p) => print!("{}", Bank::inspect(&p)?.render()),
         None => println!("bank: {bank_arg:?} not found"),
+    }
+    Ok(())
+}
+
+/// Validate the committed `BENCH_<topic>.json` perf-trajectory files:
+/// each requested topic must exist, parse, carry its topic tag, and
+/// hold at least one sane result (util::bench::validate_report).
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("dir", "."));
+    let topics = args.str_or("topics", "replay,search,serve,step");
+    let mut failed = false;
+    for topic in topics.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let path = dir.join(format!("BENCH_{topic}.json"));
+        let outcome = std::fs::read_to_string(&path)
+            .map_err(|e| format!("unreadable: {e}"))
+            .and_then(|text| nshpo::util::bench::validate_report(&text, topic));
+        match outcome {
+            Ok(()) => println!("bench-check {path:?}: ok"),
+            Err(e) => {
+                eprintln!("bench-check {path:?}: FAIL — {e}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        bail!("bench-check failed (regenerate with `cargo bench -- --json`)");
     }
     Ok(())
 }

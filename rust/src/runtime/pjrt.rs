@@ -101,10 +101,13 @@ impl Model {
         debug_assert_eq!(batch.len(), b, "batch size mismatch");
         debug_assert_eq!(weights.len(), b);
 
-        let dense = xla::Literal::vec1(&batch.dense)
+        // The batch stores features column-major (SoA); the AOT step
+        // function takes row-major [batch, features] tensors, so the
+        // upload boundary re-materializes rows here.
+        let dense = xla::Literal::vec1(&batch.dense_row_major())
             .reshape(&[b as i64, self.meta.n_dense as i64])
             .map_err(wrap)?;
-        let cat = xla::Literal::vec1(&batch.cat)
+        let cat = xla::Literal::vec1(&batch.cat_row_major())
             .reshape(&[b as i64, self.meta.n_cat as i64])
             .map_err(wrap)?;
         let labels = xla::Literal::vec1(&batch.labels);

@@ -312,7 +312,8 @@ impl SearchDriver for LiveDriver<'_> {
         }
 
         let (cs, plan, specs, seed) = (self.cs, self.data_plan, self.specs, self.seed as u64);
-        ThreadPool::scoped_map(self.workers.min(jobs.len()), &jobs, |_, m| {
+        let w = self.workers.min(jobs.len());
+        ThreadPool::scoped_map_chunked(w, &jobs, ThreadPool::chunk_for(jobs.len(), w), |_, m| {
             let mut guard = m.lock().expect("segment job mutex");
             let j = &mut *guard;
             let t0 = Instant::now();

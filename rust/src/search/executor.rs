@@ -338,15 +338,21 @@ impl ReplayExecutor {
     }
 
     /// Execute a job set; the i-th result corresponds to the i-th job.
+    /// Jobs are claimed in chunks ([`ThreadPool::chunk_for`]) so large
+    /// job sets pay one queue round-trip per chunk, not per job.
     pub fn run(&self, jobs: Vec<ReplayJob>) -> Vec<ReplayResult> {
         match &self.pool {
-            Some(pool) if jobs.len() > 1 => pool.map_indexed(jobs, |_, job| job.execute()),
+            Some(pool) if jobs.len() > 1 => {
+                let chunk = ThreadPool::chunk_for(jobs.len(), self.workers);
+                pool.map_chunked(jobs, chunk, |_, job| job.execute())
+            }
             _ => jobs.iter().map(ReplayJob::execute).collect(),
         }
     }
 
     /// Order-preserving map for replay work that is not a [`ReplayJob`]
-    /// (e.g. the surrogate's per-task sampling + replay).
+    /// (e.g. the surrogate's per-task sampling + replay). Chunked like
+    /// [`run`](Self::run); output is identical to the serial map.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -354,7 +360,10 @@ impl ReplayExecutor {
         F: Fn(usize, T) -> R + Send + Sync + 'static,
     {
         match &self.pool {
-            Some(pool) if items.len() > 1 => pool.map_indexed(items, f),
+            Some(pool) if items.len() > 1 => {
+                let chunk = ThreadPool::chunk_for(items.len(), self.workers);
+                pool.map_chunked(items, chunk, f)
+            }
             _ => items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect(),
         }
     }

@@ -168,7 +168,8 @@ pub fn hyperband_par(
     workers: usize,
 ) -> HyperbandOutcome {
     let (plans, rho) = plan_brackets(ts.n_configs(), ts.days, eta, seed);
-    let outs: Vec<Algo1Out> = ThreadPool::scoped_map(workers, &plans, |_, p| {
+    let chunk = ThreadPool::chunk_for(plans.len(), workers);
+    let outs: Vec<Algo1Out> = ThreadPool::scoped_map_chunked(workers, &plans, chunk, |_, p| {
         let mut driver = ReplayDriver::new(ts);
         algorithm1(&mut driver, strategy, &p.stops, rho, &p.subset, None)
             .expect("replay bracket cannot fail")

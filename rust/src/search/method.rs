@@ -1087,9 +1087,10 @@ pub(crate) fn asha_run(
 /// Replay fast path for ASHA: the same deterministic decision loop as
 /// the registered method, with each wave's rung-group scoring fanned out
 /// work-stealing over `workers` scoped threads
-/// ([`ThreadPool::scoped_map`]'s atomic-cursor index claiming). Results
-/// are collected in group order, so the outcome is **bit-identical**
-/// across worker counts and to the serial method path
+/// ([`ThreadPool::scoped_map_chunked`]'s atomic-cursor chunk claiming,
+/// chunk size from [`ThreadPool::chunk_for`]). Results are collected in
+/// group order, so the outcome is **bit-identical** across worker
+/// counts and chunk sizes and to the serial method path
 /// (`rust/tests/method_matrix.rs` pins both).
 pub fn asha_par(
     ts: &TrajectorySet,
@@ -1103,7 +1104,8 @@ pub fn asha_par(
     // independent of any training cursor.
     let probe = ReplayDriver::new(ts);
     let scorer = |reqs: &[RungScore]| -> Vec<Vec<f64>> {
-        ThreadPool::scoped_map(workers.max(1), reqs, |_, req| {
+        let w = workers.max(1);
+        ThreadPool::scoped_map_chunked(w, reqs, ThreadPool::chunk_for(reqs.len(), w), |_, req| {
             if req.observed {
                 probe.final_scores(&req.configs)
             } else {

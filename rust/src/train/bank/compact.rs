@@ -121,8 +121,9 @@ pub fn compact(
 
     // Write shard files in parallel; each chunk loads the source shards
     // it needs (the stores' caches share loads across chunks).
+    let w = workers.max(1);
     let written: Vec<Result<ShardEntry, SerError>> =
-        ThreadPool::scoped_map(workers.max(1), &chunks, |_, chunk| {
+        ThreadPool::scoped_map_chunked(w, &chunks, ThreadPool::chunk_for(chunks.len(), w), |_, chunk| {
             let (seq, family, plan_tag, refs) = chunk;
             let file = shard_file_name(*seq, family, plan_tag);
             let mut w = Writer::new(SHARD_MAGIC, V3_VERSION);

@@ -11,5 +11,5 @@ pub use bank::{
     migrate, resolve_bank_path, save_v3, Bank, BankAppender, BankIndex, BankMeta,
     BankSummary, CacheStats, CompactOptions, RunKey, RunRecord, ShardStore,
 };
-pub use model::{LogisticProxy, OnlineModel, PjrtOnline};
+pub use model::{LogisticProxy, OnlineModel, PjrtOnline, ReferenceProxy};
 pub use online::{run_full, run_range, ClusterSource, ClusteredStream, RunTrajectory};

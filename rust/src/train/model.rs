@@ -9,6 +9,15 @@
 //!   quick modes, and as the "cheaper proxy model" baseline the
 //!   data-efficient-training literature selects with (Coleman et al.,
 //!   2019) — see DESIGN.md.
+//!
+//! The step contract is allocation-free in steady state: callers pass a
+//! reusable `per_ex` buffer (cleared and refilled each step) and the
+//! proxy keeps its own [`StepScratch`], so a multi-day sweep allocates
+//! feature/loss buffers once, not once per step. DESIGN.md "Hot paths
+//! and the perf trajectory" documents the contract and the bit-identity
+//! obligations of the fast path; [`LogisticProxy::step_reference`] keeps
+//! the pre-refactor loop as the in-tree oracle the golden tests and the
+//! pre-vs-post benches compare against.
 
 use crate::data::{Batch, N_CAT, N_DENSE};
 use crate::runtime::{Model, RunState};
@@ -21,15 +30,19 @@ pub trait OnlineModel {
     fn reset(&mut self, seed: i32) -> Result<()>;
 
     /// One step of online training with progressive validation:
-    /// evaluate on the whole batch with theta_{t-1} (returning the mean
-    /// and per-example losses), then update on the weighted examples.
+    /// evaluate on the whole batch with theta_{t-1}, then update on the
+    /// weighted examples. Returns the mean pre-update loss; per-example
+    /// losses are written into `per_ex` (cleared, then one entry per
+    /// example). Reusing `per_ex` across steps keeps the path
+    /// allocation-free; a fresh `Vec` works too.
     fn step(
         &mut self,
         batch: &Batch,
         weights: &[f32],
         progress: f32,
         hparams: [f32; 3],
-    ) -> Result<(f32, Vec<f32>)>;
+        per_ex: &mut Vec<f32>,
+    ) -> Result<f32>;
 }
 
 // ------------------------------------------------------------- PJRT
@@ -65,8 +78,13 @@ impl<'a> OnlineModel for PjrtOnline<'a> {
         weights: &[f32],
         progress: f32,
         hparams: [f32; 3],
-    ) -> Result<(f32, Vec<f32>)> {
-        self.model.step(&mut self.run, batch, weights, progress, hparams)
+        per_ex: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let (loss, losses) =
+            self.model.step(&mut self.run, batch, weights, progress, hparams)?;
+        per_ex.clear();
+        per_ex.extend_from_slice(&losses);
+        Ok(loss)
     }
 }
 
@@ -75,6 +93,22 @@ impl<'a> OnlineModel for PjrtOnline<'a> {
 const HASH_BITS: usize = 16;
 const HASH_SIZE: usize = 1 << HASH_BITS;
 const ADAGRAD_EPS: f64 = 1e-8;
+
+/// Reusable per-step buffers owned by [`LogisticProxy`]: logits, forward
+/// probabilities, and per-example error terms. Sized lazily to the batch
+/// on first use; steady-state steps allocate nothing.
+#[derive(Default)]
+struct StepScratch {
+    /// Per-example logit accumulator (forward pass).
+    z: Vec<f64>,
+    /// Per-example sigmoid(z) with theta_{t-1}.
+    probs: Vec<f64>,
+    /// Per-example weighted error `w * (p - y) / denom` (0 for skipped
+    /// examples; the backward loops gate on `weights[i] != 0.0`, not on
+    /// the error value — a saturated sigmoid can make the error exactly
+    /// 0.0 for an example whose weight-decay term still updates).
+    errs: Vec<f64>,
+}
 
 /// Hashed logistic regression with Adagrad — same update semantics as the
 /// AOT train step, hot path entirely in Rust.
@@ -85,18 +119,22 @@ pub struct LogisticProxy {
     acc_bias: f64,
     acc_dense: [f64; N_DENSE],
     acc_cat: Vec<f32>,
+    scratch: StepScratch,
 }
 
 impl LogisticProxy {
-    /// A fresh proxy with parameters initialized from `seed`.
+    /// A fresh proxy with parameters initialized from `seed`. The
+    /// parameter tables are filled exactly once (by `reset`), not
+    /// zero-filled and then overwritten.
     pub fn new(seed: i32) -> LogisticProxy {
         let mut p = LogisticProxy {
             bias: 0.0,
             w_dense: [0.0; N_DENSE],
-            w_cat: vec![0.0; HASH_SIZE],
+            w_cat: Vec::new(),
             acc_bias: 0.0,
             acc_dense: [0.0; N_DENSE],
-            acc_cat: vec![0.0; HASH_SIZE],
+            acc_cat: Vec::new(),
+            scratch: StepScratch::default(),
         };
         p.reset(seed).unwrap();
         p
@@ -108,25 +146,15 @@ impl LogisticProxy {
         z ^= z >> 29;
         (z as usize) & (HASH_SIZE - 1)
     }
-}
 
-impl OnlineModel for LogisticProxy {
-    fn reset(&mut self, seed: i32) -> Result<()> {
-        let mut rng = Rng::new(seed as u64 ^ 0xB1A5);
-        self.bias = -2.0;
-        for w in &mut self.w_dense {
-            *w = 0.01 * rng.normal();
-        }
-        for w in &mut self.w_cat {
-            *w = (0.01 * rng.normal()) as f32;
-        }
-        self.acc_bias = 0.0;
-        self.acc_dense = [0.0; N_DENSE];
-        self.acc_cat.iter_mut().for_each(|a| *a = 0.0);
-        Ok(())
-    }
-
-    fn step(
+    /// The pre-refactor step path: example-major loops, per-call `Vec`
+    /// allocations (including the old `b * N_CAT` `touched` buffer).
+    /// Kept verbatim-in-structure as the bit-identity oracle for the
+    /// zero-alloc/SoA fast path — `rust/tests/step_bitident.rs` asserts
+    /// `(mean_loss, per_ex)` and the resulting parameter trajectory match
+    /// bit-for-bit, and `benches/bench_main.rs` derives the pre-vs-post
+    /// speedup from it. Not part of the training API.
+    pub fn step_reference(
         &mut self,
         batch: &Batch,
         weights: &[f32],
@@ -139,16 +167,18 @@ impl OnlineModel for LogisticProxy {
         let wd = hparams[2] as f64;
         let denom: f64 = weights.iter().map(|&w| w as f64).sum::<f64>().max(1.0);
 
-        // Forward with theta_{t-1}.
+        // Forward with theta_{t-1}, example-major (strided gathers under
+        // the SoA layout — that stride is part of what the fast path
+        // removes).
         let mut per_ex = Vec::with_capacity(b);
         let mut probs = Vec::with_capacity(b);
         for i in 0..b {
             let mut z = self.bias;
-            for (j, &x) in batch.dense_row(i).iter().enumerate() {
-                z += self.w_dense[j] * x as f64;
+            for (j, w) in self.w_dense.iter().enumerate() {
+                z += w * batch.dense_at(i, j) as f64;
             }
-            for &id in batch.cat_row(i) {
-                z += self.w_cat[Self::slot(id)] as f64;
+            for f in 0..N_CAT {
+                z += self.w_cat[Self::slot(batch.cat_at(i, f))] as f64;
             }
             let y = batch.labels[i] as f64;
             per_ex.push(crate::metrics::logloss_from_logit(z, y) as f32);
@@ -173,11 +203,11 @@ impl OnlineModel for LogisticProxy {
                 }
                 let err = w * (probs[i] - batch.labels[i] as f64) / denom;
                 g_bias += err;
-                for (j, &x) in batch.dense_row(i).iter().enumerate() {
-                    g_dense[j] += err * x as f64;
+                for (j, g) in g_dense.iter_mut().enumerate() {
+                    *g += err * batch.dense_at(i, j) as f64;
                 }
-                for &id in batch.cat_row(i) {
-                    touched.push((Self::slot(id), err));
+                for f in 0..N_CAT {
+                    touched.push((Self::slot(batch.cat_at(i, f)), err));
                 }
             }
             self.acc_bias += g_bias * g_bias;
@@ -194,6 +224,172 @@ impl OnlineModel for LogisticProxy {
             }
         }
         Ok((mean_loss, per_ex))
+    }
+}
+
+impl OnlineModel for LogisticProxy {
+    fn reset(&mut self, seed: i32) -> Result<()> {
+        let mut rng = Rng::new(seed as u64 ^ 0xB1A5);
+        self.bias = -2.0;
+        for w in &mut self.w_dense {
+            *w = 0.01 * rng.normal();
+        }
+        // first reset allocates the tables; later resets reuse them
+        self.w_cat.resize(HASH_SIZE, 0.0);
+        for w in &mut self.w_cat {
+            *w = (0.01 * rng.normal()) as f32;
+        }
+        self.acc_bias = 0.0;
+        self.acc_dense = [0.0; N_DENSE];
+        self.acc_cat.clear();
+        self.acc_cat.resize(HASH_SIZE, 0.0);
+        Ok(())
+    }
+
+    /// Zero-alloc SoA step. Bit-identical to
+    /// [`step_reference`](LogisticProxy::step_reference): every f64
+    /// accumulator sees the same additions in the same order (per-example
+    /// logit: bias, dense j ascending, cat f ascending; per-feature
+    /// gradients: active examples i ascending; sparse cat Adagrad
+    /// updates: (i, f) lexicographic, reading the mutating table).
+    fn step(
+        &mut self,
+        batch: &Batch,
+        weights: &[f32],
+        progress: f32,
+        hparams: [f32; 3],
+        per_ex: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let b = batch.len();
+        let p = progress as f64;
+        let lr = 10f64.powf(hparams[0] as f64 * (1.0 - p) + hparams[1] as f64 * p);
+        let wd = hparams[2] as f64;
+        let denom: f64 = weights.iter().map(|&w| w as f64).sum::<f64>().max(1.0);
+
+        // Forward with theta_{t-1}, column-major: one contiguous pass per
+        // feature. Each example's logit still accumulates bias, then
+        // dense features j ascending, then cat features f ascending —
+        // the same f64 addition order as the example-major reference.
+        let z = &mut self.scratch.z;
+        z.clear();
+        z.resize(b, self.bias);
+        for (j, wj) in self.w_dense.iter().enumerate() {
+            for (zi, &x) in z.iter_mut().zip(batch.dense_col(j)) {
+                *zi += wj * x as f64;
+            }
+        }
+        for f in 0..N_CAT {
+            for (zi, &id) in z.iter_mut().zip(batch.cat_col(f)) {
+                *zi += self.w_cat[Self::slot(id)] as f64;
+            }
+        }
+        let probs = &mut self.scratch.probs;
+        probs.clear();
+        probs.reserve(b);
+        per_ex.clear();
+        per_ex.reserve(b);
+        let mut loss_sum = 0.0f64;
+        for (&zi, &y) in z.iter().zip(&batch.labels) {
+            let l = crate::metrics::logloss_from_logit(zi, y as f64) as f32;
+            per_ex.push(l);
+            loss_sum += l as f64;
+            probs.push(1.0 / (1.0 + (-zi).exp()));
+        }
+        let mean_loss = (loss_sum / b as f64) as f32;
+
+        // Weighted gradient + Adagrad update.
+        if weights.iter().any(|&w| w > 0.0) {
+            let mut g_bias = wd * self.bias;
+            let mut g_dense = [0.0f64; N_DENSE];
+            for j in 0..N_DENSE {
+                g_dense[j] = wd * self.w_dense[j];
+            }
+            let errs = &mut self.scratch.errs;
+            errs.clear();
+            errs.resize(b, 0.0);
+            for i in 0..b {
+                let w = weights[i] as f64;
+                if w == 0.0 {
+                    continue;
+                }
+                let err = w * (probs[i] - batch.labels[i] as f64) / denom;
+                errs[i] = err;
+                g_bias += err;
+            }
+            // dense gradient per column; skipping exactly the examples
+            // the reference skips keeps each g_dense[j] accumulation
+            // sequence — and its bits — identical
+            for (j, g) in g_dense.iter_mut().enumerate() {
+                let col = batch.dense_col(j);
+                for i in 0..b {
+                    if weights[i] != 0.0 {
+                        *g += errs[i] * col[i] as f64;
+                    }
+                }
+            }
+            // sparse cat updates, fused: the reference materialized a
+            // (slot, err) list of up to b * N_CAT entries and applied it
+            // afterwards; applying in the same (i, f) visit order reads
+            // and writes the mutating tables identically without the
+            // buffer. Disjoint from the bias/dense updates below, so
+            // relative order with those doesn't matter.
+            for i in 0..b {
+                if weights[i] == 0.0 {
+                    continue;
+                }
+                let err = errs[i];
+                for f in 0..N_CAT {
+                    let slot = Self::slot(batch.cat_at(i, f));
+                    let g = err + wd * self.w_cat[slot] as f64;
+                    self.acc_cat[slot] += (g * g) as f32;
+                    self.w_cat[slot] -=
+                        (lr * g / ((self.acc_cat[slot] as f64).sqrt() + ADAGRAD_EPS)) as f32;
+                }
+            }
+            self.acc_bias += g_bias * g_bias;
+            self.bias -= lr * g_bias / (self.acc_bias.sqrt() + ADAGRAD_EPS);
+            for j in 0..N_DENSE {
+                self.acc_dense[j] += g_dense[j] * g_dense[j];
+                self.w_dense[j] -= lr * g_dense[j] / (self.acc_dense[j].sqrt() + ADAGRAD_EPS);
+            }
+        }
+        Ok(mean_loss)
+    }
+}
+
+// ------------------------------------------------- reference wrapper
+
+/// [`OnlineModel`] over [`LogisticProxy::step_reference`]: the
+/// pre-refactor (allocating, example-major) step path behind the same
+/// trait, so whole sweeps can run against it. Exists for the pre-vs-post
+/// benchmark contrast and the golden bit-identity tests; not a training
+/// backend.
+pub struct ReferenceProxy(LogisticProxy);
+
+impl ReferenceProxy {
+    /// A fresh reference proxy (same parameter init as the fast proxy).
+    pub fn new(seed: i32) -> ReferenceProxy {
+        ReferenceProxy(LogisticProxy::new(seed))
+    }
+}
+
+impl OnlineModel for ReferenceProxy {
+    fn reset(&mut self, seed: i32) -> Result<()> {
+        self.0.reset(seed)
+    }
+
+    fn step(
+        &mut self,
+        batch: &Batch,
+        weights: &[f32],
+        progress: f32,
+        hparams: [f32; 3],
+        per_ex: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let (loss, losses) = self.0.step_reference(batch, weights, progress, hparams)?;
+        // hand the freshly allocated buffer over, like the old API did
+        *per_ex = losses;
+        Ok(loss)
     }
 }
 
@@ -220,11 +416,12 @@ mod tests {
         let hp = [-1.5f32, -1.5, 0.0];
         let t_total = s.cfg.total_steps();
         let mut losses = Vec::with_capacity(t_total);
+        let mut per_ex = Vec::new();
         for t in 0..t_total {
             let b = s.batch_at(t);
             let w = Plan::Full.weights(&b, 0, t);
-            let (loss, per_ex) =
-                m.step(&b, &w, t as f32 / t_total as f32, hp).unwrap();
+            let loss =
+                m.step(&b, &w, t as f32 / t_total as f32, hp, &mut per_ex).unwrap();
             assert_eq!(per_ex.len(), 128);
             losses.push(loss as f64);
         }
@@ -242,8 +439,9 @@ mod tests {
         let w = Plan::Full.weights(&b, 0, 0);
         let mut m1 = LogisticProxy::new(7);
         let mut m2 = LogisticProxy::new(7);
-        let (l1, _) = m1.step(&b, &w, 0.0, [-3.0, -3.0, 0.0]).unwrap();
-        let (l2, _) = m2.step(&b, &w, 0.0, [-0.5, -0.5, 0.0]).unwrap();
+        let mut pe = Vec::new();
+        let l1 = m1.step(&b, &w, 0.0, [-3.0, -3.0, 0.0], &mut pe).unwrap();
+        let l2 = m2.step(&b, &w, 0.0, [-0.5, -0.5, 0.0], &mut pe).unwrap();
         assert_eq!(l1, l2);
     }
 
@@ -253,13 +451,14 @@ mod tests {
         let b = s.batch_at(0);
         let zeros = vec![0.0f32; b.len()];
         let mut m = LogisticProxy::new(1);
-        let (_, _) = m.step(&b, &zeros, 0.0, [-1.0, -1.0, 1e-4]).unwrap();
+        let mut pe = Vec::new();
+        m.step(&b, &zeros, 0.0, [-1.0, -1.0, 1e-4], &mut pe).unwrap();
         let mut m2 = LogisticProxy::new(1);
         // identical first-loss on a second batch means no params moved
         let b2 = s.batch_at(1);
         let w2 = vec![1.0f32; b2.len()];
-        let (after_frozen, _) = m.step(&b2, &w2, 0.0, [-1.0, -1.0, 0.0]).unwrap();
-        let (fresh, _) = m2.step(&b2, &w2, 0.0, [-1.0, -1.0, 0.0]).unwrap();
+        let after_frozen = m.step(&b2, &w2, 0.0, [-1.0, -1.0, 0.0], &mut pe).unwrap();
+        let fresh = m2.step(&b2, &w2, 0.0, [-1.0, -1.0, 0.0], &mut pe).unwrap();
         assert_eq!(after_frozen, fresh);
     }
 
@@ -269,12 +468,36 @@ mod tests {
         let b = s.batch_at(2);
         let w = vec![1.0f32; b.len()];
         let mut m = LogisticProxy::new(5);
-        let (l1, _) = m.step(&b, &w, 0.0, [-2.0, -2.0, 0.0]).unwrap();
+        let mut pe = Vec::new();
+        let l1 = m.step(&b, &w, 0.0, [-2.0, -2.0, 0.0], &mut pe).unwrap();
         m.reset(5).unwrap();
-        let (l2, _) = m.step(&b, &w, 0.0, [-2.0, -2.0, 0.0]).unwrap();
+        let l2 = m.step(&b, &w, 0.0, [-2.0, -2.0, 0.0], &mut pe).unwrap();
         assert_eq!(l1, l2);
         m.reset(6).unwrap();
-        let (l3, _) = m.step(&b, &w, 0.0, [-2.0, -2.0, 0.0]).unwrap();
+        let l3 = m.step(&b, &w, 0.0, [-2.0, -2.0, 0.0], &mut pe).unwrap();
         assert_ne!(l1, l3);
+    }
+
+    #[test]
+    fn fast_step_matches_reference_bitwise() {
+        // Module-level smoke of the golden invariant (the full matrix
+        // lives in rust/tests/step_bitident.rs): fast and reference
+        // paths produce bit-identical losses on a shared trajectory.
+        let s = stream();
+        let mut fast = LogisticProxy::new(9);
+        let mut refr = ReferenceProxy::new(9);
+        let mut pe_f = Vec::new();
+        let mut pe_r = Vec::new();
+        let hp = [-1.8f32, -2.2, 1e-5];
+        for t in 0..12 {
+            let b = s.batch_at(t);
+            let w = Plan::negative_only(0.5).weights(&b, 4, t);
+            let lf = fast.step(&b, &w, t as f32 / 12.0, hp, &mut pe_f).unwrap();
+            let lr = refr.step(&b, &w, t as f32 / 12.0, hp, &mut pe_r).unwrap();
+            assert_eq!(lf.to_bits(), lr.to_bits(), "mean loss diverged at t={t}");
+            let bits_f: Vec<u32> = pe_f.iter().map(|x| x.to_bits()).collect();
+            let bits_r: Vec<u32> = pe_r.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits_f, bits_r, "per-example losses diverged at t={t}");
+        }
     }
 }

@@ -50,17 +50,18 @@ impl ClusteredStream {
                 (a, stream.n_clusters())
             }
             ClusterSource::KMeans { k, sample_days } => {
-                // Fit on early-history dense rows.
+                // Fit on early-history dense rows (gathered from the
+                // batch's per-feature columns).
                 let sample_steps = (sample_days.max(1) * spd).min(t_total);
                 let mut points: Vec<Vec<f64>> = Vec::new();
+                let mut row = [0.0f64; N_DENSE];
                 for t in 0..sample_steps {
                     let b = stream.batch_arc(t);
                     for i in 0..b.len() {
                         // thin to keep k-means fast: every 4th example
                         if i % 4 == 0 {
-                            points.push(
-                                b.dense_row(i).iter().map(|&x| x as f64).collect(),
-                            );
+                            b.gather_dense_f64(i, &mut row);
+                            points.push(row.to_vec());
                         }
                     }
                 }
@@ -68,7 +69,7 @@ impl ClusteredStream {
                 let a: Vec<Vec<u16>> = (0..t_total)
                     .map(|t| {
                         let b = stream.batch_arc(t);
-                        cluster::assign_rows_f32(&km.centroids, &b.dense, N_DENSE)
+                        cluster::assign_cols_f32(&km.centroids, &b.dense, N_DENSE)
                     })
                     .collect();
                 (a, km.centroids.len())
@@ -129,13 +130,18 @@ pub fn run_range(
     let t_total = cfg.total_steps();
     let spd = cfg.steps_per_day;
     debug_assert!(t_to <= t_total);
+    // Day-arena buffers: one weights + per-example-loss allocation for
+    // the whole range, refilled each step (the model owns its own
+    // scratch — see train::model::StepScratch).
+    let mut weights: Vec<f32> = Vec::new();
+    let mut per_ex: Vec<f32> = Vec::new();
     for t in t_from..t_to {
         // Cached path: with a shared BatchCache, N candidates sweeping
         // the same steps generate each batch once instead of N times.
         let batch = cs.stream.batch_arc(t);
-        let weights = plan.weights(&batch, subsample_seed, t);
+        plan.weights_into(&batch, subsample_seed, t, &mut weights);
         let progress = t as f32 / t_total as f32;
-        let (loss, per_ex) = model.step(&batch, &weights, progress, hparams)?;
+        let loss = model.step(&batch, &weights, progress, hparams, &mut per_ex)?;
         traj.step_losses.push(loss);
         let d = t / spd;
         let day_row = &mut traj.cluster_loss_sums[d];

@@ -157,6 +157,111 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
+/// Sample count for benchmark runs: `NSHPO_BENCH_SAMPLES` if set and
+/// parseable (clamped to >= 1), else `default`. CI's perf gate caps this
+/// for quick schema-validation runs.
+pub fn env_samples(default: usize) -> usize {
+    std::env::var("NSHPO_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(default)
+}
+
+/// Minimum per-sample duration: `NSHPO_BENCH_MIN_SAMPLE_MS` milliseconds
+/// if set and parseable, else `default`.
+pub fn env_min_sample(default: Duration) -> Duration {
+    std::env::var("NSHPO_BENCH_MIN_SAMPLE_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(default)
+}
+
+/// Like [`json_report`] but carrying the perf-trajectory envelope:
+/// a `"topic"` tag (`replay`, `search`, `serve`, `step`) and a free-form
+/// `"note"` (provenance: which machine / mode produced the numbers).
+/// `cargo bench -- --json` writes one `BENCH_<topic>.json` per topic
+/// with this; `nshpo bench-check` and ci.sh validate it with
+/// [`validate_report`].
+pub fn topic_report(
+    topic: &str,
+    note: &str,
+    results: &[BenchResult],
+    derived: &[(String, f64)],
+) -> String {
+    let body = json_report(results, derived);
+    // Splice the topic/note fields into the leading object brace so the
+    // results/derived layout (and its pinned test) stays untouched.
+    let rest = body
+        .strip_prefix("{\n")
+        .expect("json_report always opens an object");
+    format!(
+        "{{\n  \"topic\": \"{}\",\n  \"note\": \"{}\",\n{rest}",
+        json_escape(topic),
+        json_escape(note)
+    )
+}
+
+/// Validate one `BENCH_<topic>.json` document: parseable, tagged with
+/// `expected_topic`, at least one result with sane timing fields, and a
+/// numeric `derived` map. Returns a description of the first problem.
+pub fn validate_report(text: &str, expected_topic: &str) -> std::result::Result<(), String> {
+    let doc = crate::util::json::Json::parse(text)
+        .map_err(|e| format!("not valid JSON: {e}"))?;
+    let topic = doc
+        .get("topic")
+        .and_then(|t| t.as_str())
+        .ok_or("missing string field \"topic\"")?;
+    if topic != expected_topic {
+        return Err(format!(
+            "topic is \"{topic}\", expected \"{expected_topic}\""
+        ));
+    }
+    if doc.get("note").and_then(|n| n.as_str()).is_none() {
+        return Err("missing string field \"note\"".into());
+    }
+    let results = doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or("missing array field \"results\"")?;
+    if results.is_empty() {
+        return Err("\"results\" is empty — the topic stopped emitting".into());
+    }
+    for (i, r) in results.iter().enumerate() {
+        if r.get("name").and_then(|n| n.as_str()).is_none() {
+            return Err(format!("results[{i}] missing \"name\""));
+        }
+        for field in ["mean_ns", "median_ns", "p95_ns", "std_ns"] {
+            let v = r
+                .get(field)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("results[{i}] missing \"{field}\""))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("results[{i}].{field} = {v} is not sane"));
+            }
+        }
+        if r.get("samples").and_then(|v| v.as_usize()).unwrap_or(0) == 0 {
+            return Err(format!("results[{i}] has no samples"));
+        }
+    }
+    match doc.get("derived") {
+        None => Err("missing object field \"derived\"".into()),
+        Some(crate::util::json::Json::Obj(pairs)) => {
+            for (k, v) in pairs {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| format!("derived.{k} is not a number"))?;
+                if !x.is_finite() {
+                    return Err(format!("derived.{k} = {x} is not finite"));
+                }
+            }
+            Ok(())
+        }
+        Some(_) => Err("\"derived\" is not an object".into()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +315,46 @@ mod tests {
                 .abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn topic_report_roundtrips_and_validates() {
+        let r = BenchResult {
+            name: "step/proxy_fast_b256".into(),
+            samples_ns: vec![1000.0, 2000.0],
+            iters_per_sample: 3,
+        };
+        let text = topic_report(
+            "step",
+            "authoring seed",
+            std::slice::from_ref(&r),
+            &[("step_pre_vs_post_speedup".into(), 2.5)],
+        );
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("topic").unwrap().as_str().unwrap(), "step");
+        assert_eq!(doc.get("note").unwrap().as_str().unwrap(), "authoring seed");
+        assert_eq!(doc.get("results").unwrap().as_arr().unwrap().len(), 1);
+        validate_report(&text, "step").unwrap();
+        // wrong topic, truncated doc, and empty results all fail loudly
+        assert!(validate_report(&text, "replay").is_err());
+        assert!(validate_report("{", "step").is_err());
+        let empty = topic_report("step", "n", &[], &[]);
+        assert!(validate_report(&empty, "step").unwrap_err().contains("empty"));
+    }
+
+    #[test]
+    fn env_caps_parse_and_fall_back() {
+        // No env mutation (tests run in parallel): exercise the fallback
+        // path only when the variables are genuinely unset.
+        if std::env::var_os("NSHPO_BENCH_SAMPLES").is_none() {
+            assert_eq!(env_samples(7), 7);
+        }
+        if std::env::var_os("NSHPO_BENCH_MIN_SAMPLE_MS").is_none() {
+            assert_eq!(
+                env_min_sample(Duration::from_millis(40)),
+                Duration::from_millis(40)
+            );
+        }
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * [`ThreadPool::scoped_map`] — scoped threads over *borrowed* items
 //!   and closure (no `'static` bound, no `Arc` plumbing); used by the
 //!   bank builder and the bracket-parallel hyperband replay.
+//! * [`ThreadPool::scoped_map_chunked`] — the same scoped map with
+//!   chunked cursor claims (one atomic + one channel send per chunk);
+//!   [`ThreadPool::chunk_for`] picks the chunk size. `scoped_map` is the
+//!   chunk-size-1 case, so every fan-out shares one engine.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -141,7 +145,43 @@ impl ThreadPool {
     /// items nor the closure need `'static`. Items are claimed from a
     /// shared atomic cursor (work stealing by index); results come back
     /// in input order. A panic in `f` propagates when the scope joins.
+    ///
+    /// This is [`scoped_map_chunked`](Self::scoped_map_chunked) with a
+    /// chunk size of 1 — right for coarse per-item work (a full training
+    /// segment, a bracket replay). For many small items, pick a chunk
+    /// via [`chunk_for`](Self::chunk_for) to amortize the per-claim
+    /// atomic + channel round-trip.
     pub fn scoped_map<T, R, F>(n_threads: usize, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        Self::scoped_map_chunked(n_threads, items, 1, f)
+    }
+
+    /// Chunk-size heuristic for the chunked maps: about 4 claimable
+    /// chunks per thread, so work stealing still balances uneven items
+    /// while the per-chunk overhead stays amortized. Always at least 1.
+    pub fn chunk_for(n_items: usize, n_threads: usize) -> usize {
+        let lanes = n_threads.max(1) * 4;
+        ((n_items + lanes - 1) / lanes).max(1)
+    }
+
+    /// [`scoped_map`](Self::scoped_map) with chunked claiming: threads
+    /// grab `chunk_size` consecutive items per cursor claim and send one
+    /// result block per chunk, amortizing the atomic increment and the
+    /// channel send over the chunk. Results still come back in input
+    /// order, and `f` still sees each item's global index, so the output
+    /// is identical to the serial map (and to any other chunk size /
+    /// worker count) for pure `f`. A panic in `f` propagates when the
+    /// scope joins.
+    pub fn scoped_map_chunked<T, R, F>(
+        n_threads: usize,
+        items: &[T],
+        chunk_size: usize,
+        f: F,
+    ) -> Vec<R>
     where
         T: Sync,
         R: Send,
@@ -151,23 +191,28 @@ impl ThreadPool {
         if n == 0 {
             return Vec::new();
         }
-        let threads = n_threads.max(1).min(n);
+        let chunk = chunk_size.max(1);
+        let n_chunks = (n + chunk - 1) / chunk;
+        let threads = n_threads.max(1).min(n_chunks);
         if threads == 1 {
             return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
         }
         let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        let (tx, rx) = mpsc::channel::<(usize, Vec<R>)>();
         thread::scope(|s| {
             for _ in 0..threads {
                 let tx = tx.clone();
                 let next = &next;
                 let f = &f;
                 s.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
                         break;
                     }
-                    if tx.send((i, f(i, &items[i]))).is_err() {
+                    let end = (start + chunk).min(n);
+                    let block: Vec<R> =
+                        (start..end).map(|i| f(i, &items[i])).collect();
+                    if tx.send((start, block)).is_err() {
                         break;
                     }
                 });
@@ -175,12 +220,14 @@ impl ThreadPool {
         });
         drop(tx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            slots[i] = Some(r);
+        for (start, block) in rx {
+            for (k, r) in block.into_iter().enumerate() {
+                slots[start + k] = Some(r);
+            }
         }
         slots
             .into_iter()
-            .map(|s| s.expect("scoped_map missing result"))
+            .map(|s| s.expect("scoped_map_chunked missing result"))
             .collect()
     }
 }
@@ -293,6 +340,69 @@ mod tests {
     }
 
     #[test]
+    fn scoped_map_chunked_order_and_bits_across_shapes() {
+        // the satellite invariant: result order and f64 bit-identity
+        // across chunk sizes 1/7/len and worker counts 1/2/4
+        let items: Vec<f64> = (0..53).map(|i| (i as f64) * 1.37e-3 - 2.0).collect();
+        let f = |i: usize, x: &f64| (x * 3.0 + i as f64).sin() / 7.0;
+        let expected: Vec<f64> = items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        for workers in [1usize, 2, 4] {
+            for chunk in [1usize, 7, items.len()] {
+                let got = ThreadPool::scoped_map_chunked(workers, &items, chunk, f);
+                let got_bits: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+                let exp_bits: Vec<u64> = expected.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got_bits, exp_bits, "workers={workers} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_map_chunked_empty_and_degenerate() {
+        let empty: [f64; 0] = [];
+        for workers in [1usize, 2, 4] {
+            for chunk in [0usize, 1, 7] {
+                assert!(
+                    ThreadPool::scoped_map_chunked(workers, &empty, chunk, |_, x| *x)
+                        .is_empty(),
+                    "workers={workers} chunk={chunk}"
+                );
+            }
+        }
+        // chunk 0 clamps to 1; chunk > len is one chunk (serial fast path)
+        let xs = [5u32, 6, 7];
+        assert_eq!(
+            ThreadPool::scoped_map_chunked(4, &xs, 0, |_, x| x + 1),
+            vec![6, 7, 8]
+        );
+        assert_eq!(
+            ThreadPool::scoped_map_chunked(4, &xs, 99, |_, x| x + 1),
+            vec![6, 7, 8]
+        );
+    }
+
+    #[test]
+    fn chunk_for_is_sane() {
+        assert_eq!(ThreadPool::chunk_for(0, 4), 1);
+        assert_eq!(ThreadPool::chunk_for(1, 4), 1);
+        assert_eq!(ThreadPool::chunk_for(16, 4), 1);
+        assert_eq!(ThreadPool::chunk_for(17, 4), 2);
+        assert_eq!(ThreadPool::chunk_for(20_000, 4), 1250);
+        assert_eq!(ThreadPool::chunk_for(10, 0), 3); // 0 threads clamps to 1
+    }
+
+    #[test]
+    #[should_panic(expected = "chunked boom")]
+    fn scoped_map_chunked_propagates_panics() {
+        let xs: Vec<u32> = (0..40).collect();
+        let _ = ThreadPool::scoped_map_chunked(3, &xs, 4, |_, &x| {
+            if x == 23 {
+                panic!("chunked boom");
+            }
+            x
+        });
+    }
+
+    #[test]
     #[should_panic]
     fn scoped_map_propagates_panics() {
         let xs: Vec<u32> = (0..8).collect();
@@ -339,6 +449,12 @@ mod tests {
                 if ThreadPool::scoped_map(workers, items, |i, x| x * 3.0 + i as f64) != expected
                 {
                     return Err("scoped_map diverged from serial".into());
+                }
+                if ThreadPool::scoped_map_chunked(workers, items, chunk, |i, x| {
+                    x * 3.0 + i as f64
+                }) != expected
+                {
+                    return Err("scoped_map_chunked diverged from serial".into());
                 }
                 Ok(())
             },

@@ -1,0 +1,159 @@
+//! Golden bit-identity tests for the zero-alloc/SoA training-step path.
+//!
+//! The PR that introduced the fast path (SoA batches, model-owned
+//! scratch, fused sparse updates) kept the pre-refactor loop in-tree as
+//! `LogisticProxy::step_reference` (wrapped by `ReferenceProxy`). These
+//! tests are the acceptance gate: across scenarios, sub-sampling plans,
+//! seeds, and batch shapes, the fast path must reproduce the reference
+//! **bit for bit** — mean loss, per-example losses, and the entire
+//! downstream trajectory (`run_full`), because every figure, bank, and
+//! search outcome in the repo is derived from those bits.
+
+use nshpo::data::{Plan, Stream, StreamConfig};
+use nshpo::train::{
+    run_full, ClusterSource, ClusteredStream, LogisticProxy, OnlineModel, ReferenceProxy,
+};
+
+fn stream(scenario: &str, seed: u64, batch: usize) -> Stream {
+    Stream::new(StreamConfig {
+        seed,
+        days: 4,
+        steps_per_day: 4,
+        batch,
+        n_clusters: 6,
+        scenario: scenario.to_string(),
+    })
+}
+
+/// Step both models in lockstep over the stream and assert bitwise
+/// equality of the mean and per-example losses at every step.
+fn assert_lockstep(s: &Stream, plan: Plan, model_seed: i32, hp: [f32; 3]) {
+    let t_total = s.cfg.total_steps();
+    let mut fast = LogisticProxy::new(model_seed);
+    let mut refr = ReferenceProxy::new(model_seed);
+    let mut pe_f: Vec<f32> = Vec::new();
+    let mut pe_r: Vec<f32> = Vec::new();
+    for t in 0..t_total {
+        let b = s.batch_at(t);
+        let w = plan.weights(&b, 11, t);
+        let progress = t as f32 / t_total as f32;
+        let lf = fast.step(&b, &w, progress, hp, &mut pe_f).unwrap();
+        let lr = refr.step(&b, &w, progress, hp, &mut pe_r).unwrap();
+        assert_eq!(
+            lf.to_bits(),
+            lr.to_bits(),
+            "mean loss diverged at t={t} (plan {plan:?}, seed {model_seed})"
+        );
+        let bits_f: Vec<u32> = pe_f.iter().map(|x| x.to_bits()).collect();
+        let bits_r: Vec<u32> = pe_r.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(
+            bits_f, bits_r,
+            "per-example losses diverged at t={t} (plan {plan:?}, seed {model_seed})"
+        );
+    }
+}
+
+#[test]
+fn lockstep_across_plans_and_seeds() {
+    let s = stream("criteo_like", 17, 96);
+    for plan in [Plan::Full, Plan::Uniform(0.25), Plan::negative_only(0.5)] {
+        for model_seed in [0, 9] {
+            assert_lockstep(&s, plan, model_seed, [-2.0, -2.5, 1e-6]);
+        }
+    }
+}
+
+#[test]
+fn lockstep_across_scenarios() {
+    // Drift regimes stress different parts of the forward/backward path
+    // (cold vocab, abrupt mean shifts); the bit contract holds in all.
+    for scenario in ["abrupt_shift", "churn_storm", "cold_start", "stationary_control"] {
+        let s = stream(scenario, 23, 64);
+        assert_lockstep(&s, Plan::negative_only(0.5), 3, [-1.8, -2.2, 1e-5]);
+    }
+}
+
+#[test]
+fn lockstep_with_weight_decay_off_and_on() {
+    let s = stream("criteo_like", 5, 64);
+    // wd = 0 exercises the signed-zero-sensitive g_dense path; large wd
+    // makes the weight-decay-only contribution of skipped examples
+    // visible if the fast path ever gated on err instead of weight.
+    assert_lockstep(&s, Plan::Uniform(0.5), 1, [-2.0, -2.0, 0.0]);
+    assert_lockstep(&s, Plan::Uniform(0.5), 1, [-2.0, -2.0, 1e-3]);
+}
+
+#[test]
+fn all_zero_weights_step_is_bit_identical_and_frozen() {
+    // An all-skipped batch (evaluation-only step) must match bitwise and
+    // leave both models in identical states for the next trained step.
+    let s = stream("criteo_like", 29, 48);
+    let mut fast = LogisticProxy::new(2);
+    let mut refr = ReferenceProxy::new(2);
+    let mut pe_f: Vec<f32> = Vec::new();
+    let mut pe_r: Vec<f32> = Vec::new();
+    let hp = [-2.0f32, -2.5, 1e-6];
+
+    let b0 = s.batch_at(0);
+    let zeros = vec![0.0f32; b0.len()];
+    let lf = fast.step(&b0, &zeros, 0.0, hp, &mut pe_f).unwrap();
+    let lr = refr.step(&b0, &zeros, 0.0, hp, &mut pe_r).unwrap();
+    assert_eq!(lf.to_bits(), lr.to_bits());
+    assert_eq!(pe_f.len(), b0.len());
+
+    let b1 = s.batch_at(1);
+    let ones = vec![1.0f32; b1.len()];
+    let lf = fast.step(&b1, &ones, 0.1, hp, &mut pe_f).unwrap();
+    let lr = refr.step(&b1, &ones, 0.1, hp, &mut pe_r).unwrap();
+    assert_eq!(lf.to_bits(), lr.to_bits(), "state diverged through the frozen step");
+}
+
+#[test]
+fn whole_run_trajectories_match_bitwise() {
+    // End to end through run_full: step losses, per-day per-cluster loss
+    // sums, and the examples accounting all come out identical, so banks
+    // recorded with either path are interchangeable.
+    let cs = ClusteredStream::build(
+        stream("criteo_like", 13, 96),
+        ClusterSource::KMeans { k: 6, sample_days: 2 },
+        2,
+    );
+    let hp = [-2.0f32, -2.5, 1e-6];
+    let mut fast = LogisticProxy::new(7);
+    let mut refr = ReferenceProxy::new(7);
+    let tf = run_full(&mut fast, &cs, Plan::negative_only(0.5), hp, 1).unwrap();
+    let tr = run_full(&mut refr, &cs, Plan::negative_only(0.5), hp, 1).unwrap();
+
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&tf.step_losses), bits(&tr.step_losses));
+    assert_eq!(tf.cluster_loss_sums.len(), tr.cluster_loss_sums.len());
+    for (df, dr) in tf.cluster_loss_sums.iter().zip(&tr.cluster_loss_sums) {
+        assert_eq!(bits(df), bits(dr));
+    }
+    assert_eq!(tf.examples_trained, tr.examples_trained);
+    assert_eq!(tf.examples_seen, tr.examples_seen);
+}
+
+#[test]
+fn reused_buffers_carry_no_state_between_steps() {
+    // A dirty oversized per_ex buffer and interleaved batch sizes must
+    // not leak into results: compare against fresh-buffer stepping.
+    let s = stream("criteo_like", 31, 32);
+    let hp = [-2.0f32, -2.0, 1e-6];
+    let mut reused = LogisticProxy::new(4);
+    let mut fresh = LogisticProxy::new(4);
+    let mut pe: Vec<f32> = vec![999.0; 1024]; // dirty and oversized
+    for t in 0..8 {
+        let b = s.batch_at(t);
+        let w = Plan::Full.weights(&b, 0, t);
+        let l_reused = reused.step(&b, &w, t as f32 / 8.0, hp, &mut pe).unwrap();
+        assert_eq!(pe.len(), b.len(), "per_ex not clear+refilled");
+        let mut pe2: Vec<f32> = Vec::new();
+        let l_fresh = fresh.step(&b, &w, t as f32 / 8.0, hp, &mut pe2).unwrap();
+        assert_eq!(l_reused.to_bits(), l_fresh.to_bits());
+        assert_eq!(
+            pe.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            pe2.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+        );
+    }
+}
