@@ -27,6 +27,53 @@ if cargo run --release -- search --live --proxy --scenario no_such_regime \
   exit 1
 fi
 
+echo "== scenario-algebra gate =="
+# Combinator and trace tags are first-class scenarios: the listing must
+# show the combinator forms, a nested composite must drive a (tiny) live
+# search end to end, `trace record` -> replay must round-trip through
+# the search path, and a corrupt trace file must fail loudly — both on a
+# direct search and through a daemon submit. The rejection/round-trip/
+# provenance acceptance suite is part of `cargo test` above; run it by
+# name so the gate stays loud if the target is ever dropped.
+cargo test -q --test scenario_algebra
+cargo run --release -- scenarios | grep -q 'seq(a@day,b)'
+cargo run --release -- scenarios | grep -q 'trace@file'
+cargo run --release -- search --live --proxy \
+  --scenario 'seq(criteo_like@2,mix(churn_storm:2,cold_start:1))' \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+ALGTMP=$(mktemp -d)
+cargo run --release -- trace record --out "$ALGTMP/trace.json" \
+  --scenario 'seq(criteo_like@2,churn_storm)' --seed 11 --days 4 \
+  --steps-per-day 4 --latent-clusters 8
+cargo run --release -- search --live --proxy \
+  --scenario "trace@$ALGTMP/trace.json" --seed 11 --days 4 \
+  --steps-per-day 4 --batch 64 --latent-clusters 8 --thin 9 \
+  --workers 2 >/dev/null
+echo '{ "nshpo_trace": "v1", "broken":' > "$ALGTMP/corrupt.json"
+if cargo run --release -- search --live --proxy \
+    --scenario "trace@$ALGTMP/corrupt.json" --days 4 --steps-per-day 4 \
+    --batch 64 --thin 9 >/dev/null 2>&1; then
+  echo "FAIL: corrupt trace file was accepted" >&2
+  exit 1
+fi
+ALGSOCK="$ALGTMP/alg.sock"
+cargo run --release -- serve --socket "$ALGSOCK" --workers 2 &
+ALG_PID=$!
+for _ in $(seq 1 100); do
+  [ -S "$ALGSOCK" ] && break
+  sleep 0.1
+done
+test -S "$ALGSOCK"
+if cargo run --release -- submit --socket "$ALGSOCK" --id alg-corrupt \
+    --live --scenario "trace@$ALGTMP/corrupt.json" --method one-shot@2 \
+    >/dev/null 2>&1; then
+  echo "FAIL: daemon live search over a corrupt trace did not fail" >&2
+  exit 1
+fi
+cargo run --release -- submit --socket "$ALGSOCK" --shutdown | grep -q '"ev":"bye"'
+wait "$ALG_PID"
+rm -rf "$ALGTMP"
+
 echo "== strategy gate =="
 # Same contract on the prediction axis: the registry must list, a
 # non-default registered strategy must drive a (tiny) live search end to

@@ -41,9 +41,12 @@ pub struct StreamConfig {
     pub batch: usize,
     /// Latent clusters the scenario mixes over.
     pub n_clusters: usize,
-    /// Registry tag of the scenario owning the day-level dynamics
-    /// (`data::scenario`): `criteo_like`, `abrupt_shift[@day]`,
-    /// `churn_storm`, `cold_start`, `stationary_control`.
+    /// Tag of the scenario owning the day-level dynamics
+    /// (`data::scenario`): a registry tag (`criteo_like`,
+    /// `abrupt_shift[@day]`, `churn_storm`, `cold_start`,
+    /// `stationary_control`), a combinator expression over them
+    /// (`seq(a@day,b)`, `mix(a:w1,b:w2)`, `overlay(base,mod)`), or a
+    /// recorded trace replay (`trace@<stats.json>`).
     pub scenario: String,
 }
 
@@ -143,6 +146,12 @@ impl Stream {
     /// (bank provenance records this).
     pub fn scenario_tag(&self) -> String {
         self.scenario.tag()
+    }
+
+    /// The scenario driving this stream's dynamics (`trace record`
+    /// samples its day-level statistics through this).
+    pub fn scenario(&self) -> &dyn Scenario {
+        self.scenario.as_ref()
     }
 
     /// Latent clusters the scenario mixes over.

@@ -11,6 +11,7 @@ pub mod gen;
 pub mod scenario;
 pub mod schema;
 pub mod subsample;
+pub mod trace;
 
 pub use cache::BatchCache;
 pub use gen::{Stream, StreamConfig};

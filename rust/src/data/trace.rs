@@ -1,0 +1,381 @@
+//! Recorded drift traces: dump any scenario's day-level statistics to
+//! JSON (`nshpo trace record`) and replay them as a scenario
+//! (`--scenario trace@<stats.json>`). A trace samples the source
+//! scenario once per day at the day midpoint (`d + 0.5`) — per-cluster
+//! mixture weights, label hardness, CTR logits, dense means, and the
+//! `f = 0` vocab pointer — and the replay holds each day's sample
+//! piecewise-constant across the day. Because every in-tree regime's
+//! pointer decomposes as `<per-(k, d) value> + f * POINTER_F_STRIDE`
+//! (`data::scenario`), the per-cluster `f = 0` pointer reconstructs all
+//! categorical features' pointers exactly; `rust/tests/scenario_algebra.rs`
+//! pins the replay-vs-source day statistics.
+
+use super::gen::{Stream, StreamConfig};
+use super::scenario::{Scenario, POINTER_F_STRIDE};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+
+/// Schema marker every trace file must carry under `"nshpo_trace"`.
+pub const TRACE_SCHEMA: &str = "v1";
+
+/// One day's sampled drift statistics (taken at the day midpoint).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DayStats {
+    /// Normalized mixture over latent clusters.
+    pub mixture: Vec<f64>,
+    /// Shared label-noise level, in `[0, 1]`.
+    pub hardness: f64,
+    /// Per-cluster CTR logit offsets.
+    pub logits: Vec<f64>,
+    /// Per-cluster zipf-head pointers at categorical feature 0
+    /// (feature `f`'s pointer is `pointers[k] + f * POINTER_F_STRIDE`).
+    pub pointers: Vec<u64>,
+    /// Per-cluster dense feature means (`n_clusters x n_dense`).
+    pub means: Vec<Vec<f64>>,
+}
+
+/// A recorded trace: provenance plus one [`DayStats`] per day.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceFile {
+    /// Canonical tag of the scenario the trace was sampled from.
+    pub scenario: String,
+    /// Stream seed the source scenario was constructed with.
+    pub seed: u64,
+    /// Days recorded (one [`DayStats`] each).
+    pub days: usize,
+    /// Latent clusters of the source stream.
+    pub n_clusters: usize,
+    /// Dense features per cluster mean.
+    pub n_dense: usize,
+    /// Per-day samples, day 0 first.
+    pub days_stats: Vec<DayStats>,
+}
+
+impl TraceFile {
+    /// Sample `stream`'s scenario at every day midpoint.
+    pub fn record(stream: &Stream) -> TraceFile {
+        let cfg = &stream.cfg;
+        let sc = stream.scenario();
+        let n_dense = super::schema::N_DENSE;
+        let mut days_stats = Vec::with_capacity(cfg.days);
+        for day in 0..cfg.days {
+            let d = day as f64 + 0.5;
+            let mixture = sc.mixture(d);
+            let mut logits = Vec::with_capacity(cfg.n_clusters);
+            let mut pointers = Vec::with_capacity(cfg.n_clusters);
+            let mut means = Vec::with_capacity(cfg.n_clusters);
+            for k in 0..cfg.n_clusters {
+                logits.push(sc.logit(k, d));
+                pointers.push(sc.vocab_pointer(k, 0, d));
+                let mut mean = vec![0.0; n_dense];
+                sc.mean_at(k, d, &mut mean);
+                means.push(mean);
+            }
+            days_stats.push(DayStats {
+                mixture,
+                hardness: sc.hardness(d),
+                logits,
+                pointers,
+                means,
+            });
+        }
+        TraceFile {
+            scenario: sc.tag(),
+            seed: cfg.seed,
+            days: cfg.days,
+            n_clusters: cfg.n_clusters,
+            n_dense,
+            days_stats,
+        }
+    }
+
+    /// Render as JSON. `f64` values print shortest-round-trip, so
+    /// `to_json` → [`TraceFile::from_json`] is exact.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("nshpo_trace", Json::Str(TRACE_SCHEMA.to_string()));
+        root.set("scenario", Json::Str(self.scenario.clone()));
+        root.set("seed", Json::Num(self.seed as f64));
+        root.set("days", Json::Num(self.days as f64));
+        root.set("n_clusters", Json::Num(self.n_clusters as f64));
+        root.set("n_dense", Json::Num(self.n_dense as f64));
+        let mut days = Vec::with_capacity(self.days_stats.len());
+        for s in &self.days_stats {
+            let mut day = Json::obj();
+            day.set("mixture", Json::from_f64s(&s.mixture));
+            day.set("hardness", Json::Num(s.hardness));
+            day.set("logits", Json::from_f64s(&s.logits));
+            day.set(
+                "pointers",
+                Json::Arr(s.pointers.iter().map(|&p| Json::Num(p as f64)).collect()),
+            );
+            day.set(
+                "means",
+                Json::Arr(s.means.iter().map(|m| Json::from_f64s(m)).collect()),
+            );
+            days.push(day);
+        }
+        root.set("days_stats", Json::Arr(days));
+        root
+    }
+
+    /// Parse and validate a trace document; every rejection names the
+    /// offending field.
+    pub fn from_json(root: &Json) -> Result<TraceFile> {
+        let schema = root
+            .get("nshpo_trace")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("trace file: missing field \"nshpo_trace\""))?;
+        if schema != TRACE_SCHEMA {
+            bail!("trace file: nshpo_trace is {schema:?}, want {TRACE_SCHEMA:?}");
+        }
+        let scenario = root
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("trace file: missing field \"scenario\""))?
+            .to_string();
+        let num = |key: &str| -> Result<usize> {
+            root.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| err!("trace file: missing numeric field {key:?}"))
+        };
+        let seed = num("seed")? as u64;
+        let days = num("days")?;
+        let n_clusters = num("n_clusters")?;
+        let n_dense = num("n_dense")?;
+        if days == 0 || n_clusters == 0 || n_dense == 0 {
+            bail!("trace file: days, n_clusters, and n_dense must all be >= 1");
+        }
+        let arr = root
+            .get("days_stats")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err!("trace file: missing array field \"days_stats\""))?;
+        if arr.len() != days {
+            bail!(
+                "trace file: days_stats has {} entries, want days={days}",
+                arr.len()
+            );
+        }
+        // One finite-f64 vector, length-checked, named by day and field.
+        let f64s = |day: usize, name: &str, val: Option<&Json>, want: usize| -> Result<Vec<f64>> {
+            let xs = val
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err!("days_stats[{day}].{name} is missing or not an array"))?;
+            if xs.len() != want {
+                bail!("days_stats[{day}].{name} has {} entries, want {want}", xs.len());
+            }
+            let mut out = Vec::with_capacity(want);
+            for x in xs {
+                let v = x
+                    .as_f64()
+                    .ok_or_else(|| err!("days_stats[{day}].{name} holds a non-number"))?;
+                if !v.is_finite() {
+                    bail!("days_stats[{day}].{name} holds a non-finite value");
+                }
+                out.push(v);
+            }
+            Ok(out)
+        };
+        let mut days_stats = Vec::with_capacity(days);
+        for (day, entry) in arr.iter().enumerate() {
+            let mixture = f64s(day, "mixture", entry.get("mixture"), n_clusters)?;
+            let total: f64 = mixture.iter().sum();
+            if (total - 1.0).abs() > 1e-6 || mixture.iter().any(|&w| w < 0.0) {
+                bail!(
+                    "days_stats[{day}].mixture is not a distribution (sums to {total}, \
+                     want 1 within 1e-6, all weights >= 0)"
+                );
+            }
+            let hardness = entry
+                .get("hardness")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err!("days_stats[{day}].hardness is missing or not a number"))?;
+            if !(0.0..=1.0).contains(&hardness) {
+                bail!("days_stats[{day}].hardness is {hardness}, want a value in [0, 1]");
+            }
+            let logits = f64s(day, "logits", entry.get("logits"), n_clusters)?;
+            let pointers = f64s(day, "pointers", entry.get("pointers"), n_clusters)?
+                .into_iter()
+                .map(|p| {
+                    if p < 0.0 || p != p.trunc() {
+                        bail!("days_stats[{day}].pointers holds {p}, want a non-negative integer")
+                    } else {
+                        Ok(p as u64)
+                    }
+                })
+                .collect::<Result<Vec<u64>>>()?;
+            let means_arr = entry
+                .get("means")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err!("days_stats[{day}].means is missing or not an array"))?;
+            if means_arr.len() != n_clusters {
+                bail!(
+                    "days_stats[{day}].means has {} rows, want n_clusters={n_clusters}",
+                    means_arr.len()
+                );
+            }
+            let mut means = Vec::with_capacity(n_clusters);
+            for (k, row) in means_arr.iter().enumerate() {
+                means.push(f64s(day, &format!("means[{k}]"), Some(row), n_dense)?);
+            }
+            days_stats.push(DayStats { mixture, hardness, logits, pointers, means });
+        }
+        Ok(TraceFile { scenario, seed, days, n_clusters, n_dense, days_stats })
+    }
+
+    /// Write to `path` as pretty-printed JSON, creating parent dirs.
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| err!("trace file {path:?}: creating parent dir: {e}"))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| err!("trace file {path:?}: write failed: {e}"))
+    }
+
+    /// Read and validate the trace at `path`.
+    pub fn load(path: &str) -> Result<TraceFile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("trace file {path:?}: {e}"))?;
+        let root = Json::parse(&text).map_err(|e| err!("trace file {path:?}: {e}"))?;
+        TraceFile::from_json(&root).map_err(|e| err!("trace file {path:?}: {e}"))
+    }
+}
+
+/// Replays a [`TraceFile`] as a scenario: each recorded day's sample
+/// holds piecewise-constant across that day (fractional `d` clamps to
+/// the nearest recorded day).
+pub struct TraceScenario {
+    /// Path the trace was loaded from — the scenario's tag parameter.
+    path: String,
+    trace: TraceFile,
+}
+
+impl TraceScenario {
+    /// Load the trace at `path` and check it fits the stream shape;
+    /// every mismatch names the path and the flag that fixes it.
+    pub fn load(path: &str, cfg: &StreamConfig) -> Result<TraceScenario> {
+        let trace = TraceFile::load(path)?;
+        if trace.n_clusters != cfg.n_clusters {
+            bail!(
+                "trace file {path:?} was recorded with n_clusters={}, stream wants {} \
+                 (pass --latent-clusters {})",
+                trace.n_clusters,
+                cfg.n_clusters,
+                trace.n_clusters
+            );
+        }
+        if trace.n_dense != super::schema::N_DENSE {
+            bail!(
+                "trace file {path:?} was recorded with n_dense={}, this build has {}",
+                trace.n_dense,
+                super::schema::N_DENSE
+            );
+        }
+        if trace.days < cfg.days {
+            bail!(
+                "trace file {path:?} records {} days, stream wants {} (pass --days {})",
+                trace.days,
+                cfg.days,
+                trace.days
+            );
+        }
+        Ok(TraceScenario { path: path.to_string(), trace })
+    }
+
+    fn day(&self, d: f64) -> &DayStats {
+        let i = (d.floor().max(0.0) as usize).min(self.trace.days_stats.len() - 1);
+        &self.trace.days_stats[i]
+    }
+}
+
+impl Scenario for TraceScenario {
+    fn tag(&self) -> String {
+        format!("trace@{}", self.path)
+    }
+
+    fn mixture(&self, d: f64) -> Vec<f64> {
+        self.day(d).mixture.clone()
+    }
+
+    fn hardness(&self, d: f64) -> f64 {
+        self.day(d).hardness
+    }
+
+    fn logit(&self, k: usize, d: f64) -> f64 {
+        self.day(d).logits[k]
+    }
+
+    fn mean_at(&self, k: usize, d: f64, out: &mut [f64]) {
+        out.copy_from_slice(&self.day(d).means[k]);
+    }
+
+    fn vocab_pointer(&self, k: usize, f: usize, d: f64) -> u64 {
+        self.day(d).pointers[k] + f as u64 * POINTER_F_STRIDE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(scenario: &str) -> Stream {
+        let cfg = StreamConfig {
+            seed: 41,
+            days: 4,
+            steps_per_day: 3,
+            batch: 32,
+            n_clusters: 5,
+            scenario: scenario.to_string(),
+        };
+        Stream::try_new(cfg).expect("stream")
+    }
+
+    #[test]
+    fn record_save_load_round_trips_exactly() {
+        let s = stream("churn_storm");
+        let rec = TraceFile::record(&s);
+        assert_eq!(rec.days_stats.len(), 4);
+        let reparsed =
+            TraceFile::from_json(&Json::parse(&rec.to_json().to_string_pretty()).unwrap())
+                .expect("round trip");
+        assert_eq!(rec, reparsed);
+    }
+
+    #[test]
+    fn from_json_names_the_offending_field() {
+        let mut root = Json::obj();
+        root.set("days", Json::Num(2.0));
+        let e = format!("{:#}", TraceFile::from_json(&root).unwrap_err());
+        assert!(e.contains("nshpo_trace"), "got {e}");
+
+        let s = stream("criteo_like");
+        let mut good = TraceFile::record(&s).to_json();
+        good.set("n_clusters", Json::Num(9.0));
+        let e = format!("{:#}", TraceFile::from_json(&good).unwrap_err());
+        assert!(e.contains("days_stats[0].mixture"), "got {e}");
+    }
+
+    #[test]
+    fn replay_mismatched_shape_is_rejected_with_the_fix() {
+        let s = stream("criteo_like");
+        let dir = std::env::temp_dir().join(format!("nshpo-trace-unit-{}", std::process::id()));
+        let path = dir.join("t.json");
+        let path = path.to_str().unwrap().to_string();
+        TraceFile::record(&s).save(&path).unwrap();
+
+        let mut cfg = s.cfg.clone();
+        cfg.n_clusters = 7;
+        let e = format!("{:#}", TraceScenario::load(&path, &cfg).unwrap_err());
+        assert!(e.contains("--latent-clusters 5"), "got {e}");
+
+        let mut cfg = s.cfg.clone();
+        cfg.days = 9;
+        let e = format!("{:#}", TraceScenario::load(&path, &cfg).unwrap_err());
+        assert!(e.contains("--days 4"), "got {e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -28,10 +28,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 /// Every exhibit id `nshpo figure --all` regenerates.
-pub const ALL_FIGURES: [&str; 19] = [
+pub const ALL_FIGURES: [&str; 20] = [
     "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11", "t1", "seeds", "summary",
     // extensions/ablations beyond the paper's exhibits (DESIGN.md §6):
-    "rho", "slices", "hb", "strat", "methods",
+    "rho", "slices", "hb", "strat", "methods", "drift",
 ];
 
 /// Stopping days used for one-shot cost sweeps.
@@ -220,6 +220,7 @@ pub fn run_figure_with(
         "hb" => ablation_hyperband(store, out_dir, exec),
         "strat" => ablation_strategies(store, out_dir, exec),
         "methods" => ablation_methods(store, out_dir, exec),
+        "drift" => drift_profile(store, out_dir),
         other => Err(err!("unknown figure {other:?} (known: {ALL_FIGURES:?})")),
     }
 }
@@ -261,6 +262,58 @@ fn fig1(store: &ShardStore, out: &Path) -> Result<()> {
         false,
     );
     write_out(out, "1", &text, &plot::to_csv(&series, "day", "share"))
+}
+
+/// `drift` exhibit: day-level drift profile of whatever scenario the
+/// bank was built on — composite tags included — read empirically from
+/// the recorded per-day cluster counts (the bank's own observation of
+/// the mixture; the stream's latent scenario is not reconstructible
+/// from bank metadata alone). Three series per day: normalized mixture
+/// entropy, the top cluster's share, and the total-variation distance
+/// to the previous day's empirical mixture (the drift speed).
+fn drift_profile(store: &ShardStore, out: &Path) -> Result<()> {
+    let meta = store.meta();
+    let days = meta.days;
+    let k = meta.n_clusters;
+    if days == 0 || k == 0 {
+        return Err(err!("bank records no day cluster counts"));
+    }
+    let shares = |d: usize| -> Vec<f64> {
+        let total: u32 = meta.day_cluster_counts[d].iter().sum();
+        meta.day_cluster_counts[d]
+            .iter()
+            .map(|&c| c as f64 / total.max(1) as f64)
+            .collect()
+    };
+    let mut entropy = Vec::with_capacity(days);
+    let mut top = Vec::with_capacity(days);
+    let mut tv = Vec::with_capacity(days);
+    let mut prev: Option<Vec<f64>> = None;
+    for d in 0..days {
+        let s = shares(d);
+        let h: f64 = -s.iter().filter(|&&p| p > 0.0).map(|&p| p * p.ln()).sum::<f64>();
+        entropy.push((d as f64, h / (k as f64).ln().max(1e-12)));
+        top.push((d as f64, s.iter().cloned().fold(0.0f64, f64::max)));
+        if let Some(p) = &prev {
+            let dist: f64 =
+                0.5 * s.iter().zip(p).map(|(a, b)| (a - b).abs()).sum::<f64>();
+            tv.push((d as f64, dist));
+        }
+        prev = Some(s);
+    }
+    let series = vec![
+        Series { name: "mixture entropy (normalized)".to_string(), points: entropy },
+        Series { name: "top cluster share".to_string(), points: top },
+        Series { name: "TV(day, day-1)".to_string(), points: tv },
+    ];
+    let text = plot::render(
+        &format!("Drift profile: empirical day-level mixture dynamics [{}]", meta.scenario),
+        "day",
+        "value",
+        &series,
+        false,
+    );
+    write_out(out, "drift", &text, &plot::to_csv(&series, "day", "value"))
 }
 
 /// Fig 2: (left) per-config day-mean loss; (right) loss relative to a

@@ -6,6 +6,7 @@
 //!   search     unified two-stage search (replay or live backend)
 //!   live       thin alias for `search --live`
 //!   scenarios  list the registered data scenarios (data::scenario)
+//!   trace      record a scenario's day-level drift statistics (data::trace)
 //!   strategies list the registered prediction strategies (predict::strategy)
 //!   methods    list the registered search methods (search::method)
 //!   sim        industrial surrogate sweep (Fig 6 style)
@@ -72,7 +73,8 @@ USAGE: nshpo <subcommand> [flags]
             [--scenario criteo_like]  (live: pick the regime; replay:
             provenance guard against the bank; e.g. abrupt_shift,
             abrupt_shift@8, churn_storm, cold_start,
-            stationary_control)
+            stationary_control, or a combinator/trace tag —
+            see `nshpo scenarios`)
             [--no-batch-cache]  (live: regenerate batches per config)
             [--workers N]  (live backend only; replay figures
             parallelize via `figure --workers`)
@@ -91,6 +93,14 @@ USAGE: nshpo <subcommand> [flags]
             [--family fm] [--thin 3] [--stop-every 3] [--rho 0.5]
             [--proxy] [--days 12] [--steps-per-day 12] [--workers N]
   scenarios  list registered data scenarios (tag, dynamics, stresses)
+            and the tag combinators: seq(a@day,b), mix(a:w1,b:w2),
+            overlay(base,mod), trace@file — nestable, e.g.
+            --scenario 'seq(criteo_like@7,mix(churn_storm:2,cold_start:1))'
+  trace record  --out trace.json [--scenario TAG] [--seed 17]
+            [--days 12] [--steps-per-day 12] [--latent-clusters 32]
+            (sample the scenario's per-day mixture/hardness/logits/
+            pointers/means at day midpoints; replay the file anywhere
+            a scenario tag is accepted via --scenario trace@<file>)
   strategies list registered prediction strategies (tag, reference, use)
   methods    list registered search methods (tag, reference, use)
   sim       [--tasks 12] [--configs 30] [--out results]
@@ -129,6 +139,7 @@ fn main() {
         Some("search") => run_search(&args, args.has("live"), 2),
         Some("live") => run_search(&args, true, 1),
         Some("scenarios") => cmd_scenarios(),
+        Some("trace") => cmd_trace(&args),
         Some("strategies") => cmd_strategies(),
         Some("methods") => cmd_methods(),
         Some("sim") => cmd_sim(&args),
@@ -162,7 +173,43 @@ fn stream_from(args: &Args) -> StreamConfig {
 
 fn cmd_scenarios() -> Result<()> {
     print!("{}", nshpo::data::scenario::registry_table());
-    println!("\nuse with: nshpo bank|search --scenario <tag>  (abrupt_shift takes @<day>)");
+    println!(
+        "\nuse with: nshpo bank|search --scenario <tag>  (abrupt_shift takes @<day>; \
+         combinators nest, e.g. seq(criteo_like@7,mix(churn_storm:2,cold_start:1)); \
+         record/replay traces with `nshpo trace record` + --scenario trace@<file>)"
+    );
+    Ok(())
+}
+
+/// `nshpo trace record`: sample a scenario's day-level drift statistics
+/// (data::trace) to a JSON file replayable via `--scenario trace@<file>`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("record") => {}
+        Some(other) => bail!("unknown trace subcommand {other:?} (want: trace record)"),
+        None => bail!("trace needs a subcommand (want: trace record --out <file>)"),
+    }
+    let out = match args.str_opt("out") {
+        Some(o) => o.to_string(),
+        None => bail!("trace record needs --out <file>"),
+    };
+    let mut cfg = stream_from(args);
+    // Mirror the live-search defaults: a recorded trace is usually
+    // replayed through `search --live`, so record the same shape.
+    if !args.has("days") {
+        cfg.days = 12;
+    }
+    if !args.has("steps-per-day") {
+        cfg.steps_per_day = 12;
+    }
+    let stream = nshpo::data::Stream::try_new(cfg)?;
+    let trace = nshpo::data::trace::TraceFile::record(&stream);
+    trace.save(&out)?;
+    eprintln!(
+        "trace: {} days x {} clusters of {:?} (seed {}) -> {out:?}",
+        trace.days, trace.n_clusters, trace.scenario, trace.seed
+    );
+    eprintln!("replay with: nshpo search --live --scenario trace@{out} --latent-clusters {}", trace.n_clusters);
     Ok(())
 }
 

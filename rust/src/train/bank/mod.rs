@@ -54,7 +54,10 @@ pub struct RunKey {
     pub seed: i32,
     /// Canonical tag of the data scenario the run was trained on
     /// (`data::scenario`) — trajectories from different regimes must
-    /// never be compared as if they shared a stream.
+    /// never be compared as if they shared a stream. Composite tags
+    /// record in canonical form (defaults materialized, e.g.
+    /// `seq(abrupt_shift@4,churn_storm)`), and `tags_match` compares
+    /// them structurally against requested tags.
     pub scenario: String,
 }
 
@@ -89,7 +92,9 @@ pub struct Bank {
     pub eval_days: usize,
     /// Seed of the stream every run trained on.
     pub stream_seed: u64,
-    /// Canonical scenario tag of the stream every run trained on.
+    /// Canonical scenario tag of the stream every run trained on —
+    /// atomic, combinator (`seq`/`mix`/`overlay`), or `trace@file`;
+    /// provenance guards compare it via `data::scenario::tags_match`.
     pub scenario: String,
     /// `[day][cluster]` data-side example counts.
     pub day_cluster_counts: Vec<Vec<u32>>,

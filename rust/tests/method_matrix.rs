@@ -31,6 +31,30 @@ use std::sync::Arc;
 const SCENARIOS: [&str; 2] = ["criteo_like", "abrupt_shift"];
 const STRATEGIES: [&str; 2] = ["constant", "stratified@3"];
 
+/// The grid's scenario axis: the two atomic regimes plus one nested
+/// combinator composite and one recorded trace (written to a temp file
+/// named per test so concurrent tests never share a path) — composites
+/// are first-class scenarios and must hold every cell contract.
+fn matrix_scenarios(test: &str) -> Vec<String> {
+    let mut tags: Vec<String> = SCENARIOS.iter().map(|s| s.to_string()).collect();
+    tags.push("seq(criteo_like@3,mix(churn_storm:2,cold_start:1))".to_string());
+    let dir = std::env::temp_dir()
+        .join(format!("nshpo-method-matrix-{}", std::process::id()));
+    let path = dir.join(format!("{test}.json"));
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    let source = Stream::new(StreamConfig {
+        seed: 91,
+        days: 8,
+        steps_per_day: 3,
+        batch: 64,
+        n_clusters: 6,
+        scenario: "seq(criteo_like@3,churn_storm)".to_string(),
+    });
+    nshpo::data::trace::TraceFile::record(&source).save(&path).unwrap();
+    tags.push(format!("trace@{path}"));
+    tags
+}
+
 /// Method tags covering the whole registry, parameterized for the tiny
 /// 8-day matrix stream where a parameter matters.
 fn matrix_methods() -> Vec<Method> {
@@ -87,7 +111,8 @@ fn bank_from(cs: &ClusteredStream, specs: &[ConfigSpec], seed: i32) -> Trajector
 /// (scenario × strategy × method) grid.
 #[test]
 fn grid_replay_vs_live_parity_and_ledger_reconciliation() {
-    for scenario in SCENARIOS {
+    for scenario in &matrix_scenarios("grid") {
+        let scenario = scenario.as_str();
         let cs = clustered_stream_on(scenario);
         let specs = sweep::thin(sweep::family_sweep("fm"), 9); // 3 configs
         let ts = bank_from(&cs, &specs, 0);
@@ -196,6 +221,41 @@ fn every_method_is_bit_identical_serial_vs_parallel() {
                 a.outcome.cost.to_bits(),
                 b.outcome.cost.to_bits(),
                 "[{strategy_tag} × {}] cost diverged",
+                a.tag
+            );
+        }
+    }
+}
+
+/// Serial-vs-parallel bit-identity on trajectory sets recorded from the
+/// composite and trace scenarios themselves (not the toy set): every
+/// registered method replays the composite-scenario bank identically at
+/// 4 workers and serially.
+#[test]
+fn composite_and_trace_cells_are_bit_identical_serial_vs_parallel() {
+    for scenario in matrix_scenarios("serpar").iter().skip(2) {
+        let cs = clustered_stream_on(scenario);
+        let specs = sweep::thin(sweep::family_sweep("fm"), 9); // 3 configs
+        let ts = Arc::new(bank_from(&cs, &specs, 0));
+        let strategy = Strategy::parse("stratified@3").unwrap();
+        let jobs: Vec<ReplayJob> = matrix_methods()
+            .iter()
+            .map(|m| ReplayJob::method(&ts, m, &strategy))
+            .collect();
+        let serial = ReplayExecutor::serial().run(jobs.clone());
+        let parallel = ReplayExecutor::new(4).run(jobs);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.tag, b.tag, "[{scenario}] job order changed");
+            assert_eq!(
+                a.outcome.ranking, b.outcome.ranking,
+                "[{scenario} × {}] ranking diverged",
+                a.tag
+            );
+            assert_eq!(
+                a.outcome.cost.to_bits(),
+                b.outcome.cost.to_bits(),
+                "[{scenario} × {}] cost diverged",
                 a.tag
             );
         }

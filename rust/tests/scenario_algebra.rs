@@ -1,0 +1,484 @@
+//! Acceptance suite for the scenario algebra (`data::scenario`) and
+//! trace-driven regimes (`data::trace`):
+//!
+//! * malformed combinator/trace tags are rejected — one test per shape,
+//!   each pinning that the error names the offending field;
+//! * canonical tags round-trip: build → `tag()` → rebuild under the
+//!   same seed is bitwise the same scenario, and defaulted inner
+//!   parameters materialize into the canonical form;
+//! * v3 banks record composite provenance canonically and
+//!   `tags_match` compares it structurally — one build→search
+//!   integration cell per combinator, plus one over a recorded trace;
+//! * the issue's acceptance criterion: a recorded trace of
+//!   `seq(criteo_like@7,churn_storm)` replays with day-level mixture /
+//!   hardness / churn statistics matching the source exactly.
+
+use std::path::{Path, PathBuf};
+
+use nshpo::coordinator::{build_bank_v3, BankOptions};
+use nshpo::data::scenario::{self, POINTER_F_STRIDE};
+use nshpo::data::trace::TraceFile;
+use nshpo::data::{Plan, Stream, StreamConfig, N_DENSE};
+use nshpo::search::SearchPlan;
+use nshpo::train::ShardStore;
+use nshpo::util::json::Json;
+
+fn cfg(tag: &str, days: usize) -> StreamConfig {
+    StreamConfig {
+        seed: 17,
+        days,
+        steps_per_day: 3,
+        batch: 32,
+        n_clusters: 6,
+        scenario: tag.to_string(),
+    }
+}
+
+/// Per-test temp dir, so concurrently running tests never share a path.
+fn temp_dir(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("nshpo-scenario-algebra-{}", std::process::id()))
+        .join(test);
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir
+}
+
+// ------------------------------------------------------ rejection shapes
+
+/// Building `tag` over a `days`-day stream must fail, with an error
+/// that names the offending field via `needle`.
+fn reject(tag: &str, days: usize, needle: &str) {
+    match Stream::try_new(cfg(tag, days)) {
+        Ok(_) => panic!("{tag:?} was accepted"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(msg.contains(needle), "{tag:?}: error {msg:?} misses {needle:?}");
+        }
+    }
+}
+
+#[test]
+fn rejects_unbalanced_parens() {
+    reject("seq(criteo_like@2,churn_storm", 6, "unbalanced parens");
+    reject("criteo_like)", 6, "unbalanced parens");
+    reject("mix(criteo_like:1,churn_storm:1))", 6, "unbalanced parens");
+}
+
+#[test]
+fn rejects_a_negative_mix_weight() {
+    reject("mix(criteo_like:-1,churn_storm:2)", 6, "must be finite and non-negative");
+}
+
+#[test]
+fn rejects_a_non_finite_mix_weight() {
+    reject("mix(criteo_like:inf,churn_storm:1)", 6, "must be finite and non-negative");
+}
+
+#[test]
+fn rejects_all_zero_mix_weights() {
+    reject("mix(criteo_like:0,churn_storm:0)", 6, "mix weights sum to zero");
+}
+
+#[test]
+fn rejects_a_non_numeric_mix_weight() {
+    reject("mix(criteo_like:heavy,churn_storm:1)", 6, "is not a number");
+}
+
+#[test]
+fn rejects_a_weightless_mix_arm() {
+    reject("mix(criteo_like,churn_storm:1)", 6, "has no weight");
+}
+
+#[test]
+fn rejects_a_single_arm_mix() {
+    reject("mix(criteo_like:1)", 6, "at least two weighted arms");
+}
+
+#[test]
+fn rejects_seq_without_a_day() {
+    reject("seq(criteo_like,churn_storm)", 6, "seq day missing");
+}
+
+#[test]
+fn rejects_a_non_numeric_seq_day() {
+    reject("seq(criteo_like@tuesday,churn_storm)", 6, "is not a day number");
+}
+
+#[test]
+fn rejects_seq_day_zero() {
+    reject("seq(criteo_like@0,churn_storm)", 6, "must be >= 1");
+}
+
+#[test]
+fn rejects_a_seq_day_at_or_beyond_the_horizon() {
+    reject("seq(criteo_like@99,churn_storm)", 6, "beyond horizon");
+    // the boundary day belongs to the second regime, so day == days
+    // would also leave it with zero days
+    reject("seq(criteo_like@6,churn_storm)", 6, "beyond horizon");
+    Stream::try_new(cfg("seq(criteo_like@5,churn_storm)", 6)).expect("last valid day");
+}
+
+#[test]
+fn rejects_wrong_combinator_arity() {
+    reject("seq(criteo_like@2,churn_storm,cold_start)", 6, "exactly two regimes");
+    reject("overlay(criteo_like)", 6, "overlay takes exactly two regimes");
+}
+
+#[test]
+fn rejects_an_unknown_inner_tag() {
+    reject("seq(bogus@2,churn_storm)", 6, "unknown scenario \"bogus\"");
+}
+
+#[test]
+fn rejects_an_unknown_combinator() {
+    reject("blend(criteo_like:1,churn_storm:1)", 6, "unknown combinator \"blend\"");
+}
+
+#[test]
+fn rejects_nesting_beyond_the_depth_cap() {
+    // 4 nested combinators sit exactly at MAX_TAG_DEPTH and build;
+    // a 5th is rejected with the cap named.
+    let four = "overlay(overlay(overlay(overlay(criteo_like,churn_storm),\
+                churn_storm),churn_storm),churn_storm)";
+    Stream::try_new(cfg(four, 6)).expect("depth 4 builds");
+    let five = format!("overlay({four},churn_storm)");
+    reject(&five, 6, "nesting depth exceeds the cap");
+}
+
+#[test]
+fn rejects_a_bare_trace_tag() {
+    reject("trace", 6, "trace scenario needs a file");
+}
+
+#[test]
+fn rejects_a_missing_trace_file() {
+    reject("trace@/nonexistent/nshpo-no-such-trace.json", 6, "trace file");
+}
+
+#[test]
+fn rejects_a_corrupt_trace_file() {
+    let dir = temp_dir("corrupt");
+    let path = dir.join("corrupt.json");
+    std::fs::write(&path, "{ not json at all").unwrap();
+    let tag = format!("trace@{}", path.display());
+    reject(&tag, 6, "trace file");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rejects_a_schema_invalid_trace_file() {
+    let dir = temp_dir("schema");
+
+    // missing the schema marker entirely
+    let unmarked = dir.join("unmarked.json");
+    std::fs::write(&unmarked, "{\"days\": 2}").unwrap();
+    reject(&format!("trace@{}", unmarked.display()), 6, "nshpo_trace");
+
+    // a real recording whose declared shape no longer matches its data
+    let source = Stream::try_new(cfg("criteo_like", 4)).unwrap();
+    let mut doc = TraceFile::record(&source).to_json();
+    doc.set("n_clusters", Json::Num(9.0));
+    let torn = dir.join("torn.json");
+    std::fs::write(&torn, doc.to_string_pretty()).unwrap();
+    reject(&format!("trace@{}", torn.display()), 4, "days_stats[0].mixture");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --------------------------------------------------- canonical round-trip
+
+/// Compare two streams' scenario functions bitwise on a deterministic
+/// (k, f, d) grid covering every cluster, several categorical features,
+/// and quarter-day resolution over the whole horizon.
+fn assert_scenarios_bitwise_equal(a: &Stream, b: &Stream, label: &str) {
+    let (sa, sb) = (a.scenario(), b.scenario());
+    let mut ma = vec![0.0f64; N_DENSE];
+    let mut mb = vec![0.0f64; N_DENSE];
+    for quarter in 0..a.cfg.days * 4 {
+        let d = quarter as f64 * 0.25;
+        let (xa, xb) = (sa.mixture(d), sb.mixture(d));
+        assert!(
+            xa.iter().map(|x| x.to_bits()).eq(xb.iter().map(|x| x.to_bits())),
+            "[{label}] mixture differs at d={d}"
+        );
+        assert_eq!(
+            sa.hardness(d).to_bits(),
+            sb.hardness(d).to_bits(),
+            "[{label}] hardness differs at d={d}"
+        );
+        for k in 0..a.cfg.n_clusters {
+            assert_eq!(
+                sa.logit(k, d).to_bits(),
+                sb.logit(k, d).to_bits(),
+                "[{label}] logit differs at k={k} d={d}"
+            );
+            for f in [0usize, 3, 11] {
+                assert_eq!(
+                    sa.vocab_pointer(k, f, d),
+                    sb.vocab_pointer(k, f, d),
+                    "[{label}] pointer differs at k={k} f={f} d={d}"
+                );
+            }
+            sa.mean_at(k, d, &mut ma);
+            sb.mean_at(k, d, &mut mb);
+            assert!(
+                ma.iter().map(|x| x.to_bits()).eq(mb.iter().map(|x| x.to_bits())),
+                "[{label}] mean differs at k={k} d={d}"
+            );
+        }
+    }
+}
+
+/// Build `tag`, demand its canonical form is `want`, rebuild from the
+/// canonical form under the same seed, and demand the rebuild is the
+/// same scenario bitwise (and renders the same canonical tag again).
+fn assert_round_trip(tag: &str, want: &str, days: usize) {
+    let built = Stream::try_new(cfg(tag, days))
+        .unwrap_or_else(|e| panic!("[{tag}] build: {e:#}"));
+    let canonical = built.scenario_tag();
+    assert_eq!(canonical, want, "[{tag}] canonical form");
+    let rebuilt = Stream::try_new(cfg(&canonical, days))
+        .unwrap_or_else(|e| panic!("[{canonical}] rebuild: {e:#}"));
+    assert_eq!(rebuilt.scenario_tag(), canonical, "[{tag}] canonical is not a fixed point");
+    assert_scenarios_bitwise_equal(&built, &rebuilt, tag);
+    assert!(
+        scenario::tags_match(tag, &canonical),
+        "[{tag}] does not match its own canonical form {canonical:?}"
+    );
+}
+
+#[test]
+fn seq_round_trips_canonically() {
+    assert_round_trip(
+        "seq(criteo_like@3,mix(churn_storm:2,cold_start:1))",
+        "seq(criteo_like@3,mix(churn_storm:2,cold_start:1))",
+        8,
+    );
+}
+
+#[test]
+fn mix_round_trips_canonically_with_written_weights() {
+    assert_round_trip(
+        "mix(criteo_like:2,churn_storm:6)",
+        "mix(criteo_like:2,churn_storm:6)",
+        8,
+    );
+    assert_round_trip(
+        "mix(criteo_like:0.5,churn_storm:1.5)",
+        "mix(criteo_like:0.5,churn_storm:1.5)",
+        8,
+    );
+}
+
+#[test]
+fn overlay_round_trips_canonically() {
+    assert_round_trip(
+        "overlay(cold_start,churn_storm)",
+        "overlay(cold_start,churn_storm)",
+        8,
+    );
+}
+
+#[test]
+fn defaulted_inner_parameters_materialize_into_the_canonical_tag() {
+    // the @3 binds to seq; the bare abrupt_shift inside materializes its
+    // default shift day (days/2 = 4) into the canonical form
+    assert_round_trip(
+        "seq(abrupt_shift@3,cold_start)",
+        "seq(abrupt_shift@4@3,cold_start)",
+        8,
+    );
+}
+
+// -------------------------------------- v3 bank provenance + integration
+
+fn bank_opts(tag: &str) -> BankOptions {
+    BankOptions {
+        stream: StreamConfig {
+            seed: 77,
+            days: 8,
+            steps_per_day: 3,
+            batch: 96,
+            n_clusters: 12,
+            scenario: tag.to_string(),
+        },
+        eval_days: 3,
+        families: vec!["fm".into()],
+        plans: vec![Plan::Full],
+        thin: 3, // 9 configs
+        use_proxy: true,
+        variance_seeds: 0,
+        cluster_k: 8,
+        verbose: false,
+        ..BankOptions::default()
+    }
+}
+
+/// Build a v3 bank over `requested`, reopen it through the lazy store,
+/// check the recorded provenance matches the requested tag structurally,
+/// and run a replay search over the cell.
+fn assert_bank_cell(requested: &str, dir: &Path) {
+    build_bank_v3(&bank_opts(requested), dir, 0)
+        .unwrap_or_else(|e| panic!("[{requested}] bank build: {e:#}"));
+    let store = ShardStore::open(dir).unwrap();
+    assert!(
+        scenario::tags_match(requested, store.scenario()),
+        "[{requested}] provenance mismatch: bank records {:?}",
+        store.scenario()
+    );
+    let (ts, labels) = store.trajectory_set("fm", "full", 0).unwrap().expect("fm/full cell");
+    assert_eq!(labels.len(), 9, "[{requested}] config count");
+    let out = SearchPlan::performance_based(vec![2, 4, 6], 0.5).run_replay(&ts).unwrap();
+    let mut r = out.ranking.clone();
+    r.sort_unstable();
+    assert_eq!(r, (0..9).collect::<Vec<_>>(), "[{requested}] ranking not a permutation");
+    assert!(out.cost < 1.0, "[{requested}] no savings: {}", out.cost);
+}
+
+#[test]
+fn v3_bank_builds_and_searches_a_nested_seq_composite() {
+    let dir = temp_dir("bank-seq");
+    assert_bank_cell("seq(criteo_like@3,mix(churn_storm:2,cold_start:1))", &dir);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v3_bank_builds_and_searches_a_mix_composite() {
+    let dir = temp_dir("bank-mix");
+    assert_bank_cell("mix(criteo_like:3,churn_storm:1)", &dir);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v3_bank_builds_and_searches_an_overlay_composite() {
+    let dir = temp_dir("bank-overlay");
+    assert_bank_cell("overlay(cold_start,churn_storm)", &dir);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v3_bank_builds_and_searches_a_recorded_trace() {
+    let dir = temp_dir("bank-trace");
+    // record the trace on the exact stream shape the bank trains over
+    let source = Stream::try_new(StreamConfig {
+        seed: 77,
+        days: 8,
+        steps_per_day: 3,
+        batch: 96,
+        n_clusters: 12,
+        scenario: "seq(criteo_like@3,churn_storm)".to_string(),
+    })
+    .unwrap();
+    let path = dir.join("trace.json");
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    TraceFile::record(&source).save(&path).unwrap();
+    let bank_dir = dir.join("bank");
+    assert_bank_cell(&format!("trace@{path}"), &bank_dir);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bank_provenance_matching_is_structural_not_textual() {
+    // a bank recorded under a canonicalized composite still answers to
+    // the shorthand the user requested: defaulted inner parameters and
+    // rescaled mix weights match; different structures do not
+    let recorded = "seq(abrupt_shift@4@3,mix(churn_storm:2,cold_start:1))";
+    assert!(scenario::tags_match(
+        "seq(abrupt_shift@3,mix(churn_storm:2,cold_start:1))",
+        recorded
+    ));
+    assert!(scenario::tags_match(
+        "seq(abrupt_shift@3,mix(churn_storm:4,cold_start:2))",
+        recorded
+    ));
+    assert!(!scenario::tags_match(
+        "seq(abrupt_shift@3,mix(churn_storm:1,cold_start:1))",
+        recorded
+    ));
+    assert!(!scenario::tags_match(
+        "seq(abrupt_shift@5,mix(churn_storm:2,cold_start:1))",
+        recorded
+    ));
+    assert!(!scenario::tags_match("overlay(criteo_like,churn_storm)", recorded));
+}
+
+// ------------------------------------------------- trace-replay criterion
+
+/// The issue's acceptance criterion, pinned exactly: record
+/// `seq(criteo_like@7,churn_storm)`, replay it through `trace@file`,
+/// and the replayed day-level statistics equal the source at every day
+/// midpoint — mixture/hardness/logits/means bitwise, pointers exactly
+/// (including `f > 0`, reconstructed via `POINTER_F_STRIDE`) — while
+/// the day-over-day pointer deltas show the 8x churn handoff at day 7.
+#[test]
+fn recorded_trace_of_seq_criteo7_churn_replays_the_source_day_statistics() {
+    let dir = temp_dir("acceptance");
+    let days = 10;
+    let source = Stream::try_new(cfg("seq(criteo_like@7,churn_storm)", days)).unwrap();
+    let rec = TraceFile::record(&source);
+    assert!(
+        scenario::tags_match("seq(criteo_like@7,churn_storm)", &rec.scenario),
+        "recorded provenance {:?}",
+        rec.scenario
+    );
+    let path = dir.join("seq7.json");
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    rec.save(&path).unwrap();
+
+    let replay = Stream::try_new(cfg(&format!("trace@{path}"), days)).unwrap();
+    let (src, rep) = (source.scenario(), replay.scenario());
+    let mut ms = vec![0.0f64; N_DENSE];
+    let mut mr = vec![0.0f64; N_DENSE];
+    for day in 0..days {
+        let d = day as f64 + 0.5;
+        let (xs, xr) = (src.mixture(d), rep.mixture(d));
+        assert!(
+            xs.iter().map(|x| x.to_bits()).eq(xr.iter().map(|x| x.to_bits())),
+            "mixture differs at day {day}"
+        );
+        assert_eq!(
+            src.hardness(d).to_bits(),
+            rep.hardness(d).to_bits(),
+            "hardness differs at day {day}"
+        );
+        for k in 0..source.cfg.n_clusters {
+            assert_eq!(
+                src.logit(k, d).to_bits(),
+                rep.logit(k, d).to_bits(),
+                "logit differs at k={k} day {day}"
+            );
+            src.mean_at(k, d, &mut ms);
+            rep.mean_at(k, d, &mut mr);
+            assert!(
+                ms.iter().map(|x| x.to_bits()).eq(mr.iter().map(|x| x.to_bits())),
+                "means differ at k={k} day {day}"
+            );
+            // the per-cluster f=0 pointer reconstructs every feature's
+            // pointer exactly through the shared stride
+            for f in [0usize, 3, 11] {
+                assert_eq!(
+                    src.vocab_pointer(k, f, d),
+                    rep.vocab_pointer(k, f, d),
+                    "pointer differs at k={k} f={f} day {day}"
+                );
+                assert_eq!(
+                    rep.vocab_pointer(k, f, d),
+                    rep.vocab_pointer(k, 0, d) + f as u64 * POINTER_F_STRIDE,
+                    "stride reconstruction broke at k={k} f={f} day {day}"
+                );
+            }
+        }
+    }
+
+    // churn profile: the criteo segment drifts 60 ids/day, the storm
+    // segment 8x that, and day 7's handoff jumps onto the storm schedule
+    let p: Vec<u64> = (0..days).map(|day| rep.vocab_pointer(0, 0, day as f64 + 0.5)).collect();
+    for day in 0..6 {
+        assert_eq!(p[day + 1] - p[day], 60, "criteo-segment drift at day {day}");
+    }
+    for day in 7..9 {
+        assert_eq!(p[day + 1] - p[day], 480, "storm-segment drift at day {day}");
+    }
+    assert!(p[7] > p[6] + 480, "no churn handoff at the seq boundary");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,4 +1,5 @@
-//! Property tests (util::propcheck) over every registered data scenario:
+//! Property tests (util::propcheck) over every registered data scenario
+//! AND the combinator/trace composites built over them:
 //!
 //! * `batch_at(t)` is deterministic — across repeated calls, across
 //!   fresh `Stream` instances, and across the cache hit/miss boundary
@@ -6,7 +7,11 @@
 //! * Sub-sampling plans are *paired*: every plan sees byte-identical
 //!   examples, only the 0/1 training weights differ, and the weights
 //!   themselves are deterministic in (plan, seed, t).
+//! * `mix` weight normalization: a sole positive-weight arm delegates
+//!   exactly (`mix(a:1,b:0)` ≡ `a` at the scenario-function level,
+//!   bitwise) and blends are invariant to weight rescaling.
 
+use nshpo::data::trace::TraceFile;
 use nshpo::data::{scenario, Batch, Plan, Stream, StreamConfig};
 use nshpo::util::propcheck::check;
 
@@ -19,6 +24,29 @@ fn cfg(tag: &str) -> StreamConfig {
         n_clusters: 6,
         scenario: tag.to_string(),
     }
+}
+
+/// Write a trace of `source` (under this suite's stream shape) to a
+/// temp file named per test, so concurrent tests never share a path.
+fn trace_tag(source: &str, test: &str) -> String {
+    let dir = std::env::temp_dir()
+        .join(format!("nshpo-scenario-props-{}", std::process::id()));
+    let path = dir.join(format!("{test}.json"));
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    let stream = Stream::try_new(cfg(source)).expect("source stream");
+    TraceFile::record(&stream).save(&path).expect("save trace");
+    format!("trace@{path}")
+}
+
+/// Atomic registry tags plus one of each combinator shape (seq days
+/// sized to this suite's 5-day horizon) and a recorded trace.
+fn all_tags(test: &str) -> Vec<String> {
+    let mut tags: Vec<String> = scenario::tags().iter().map(|s| s.to_string()).collect();
+    tags.push("seq(criteo_like@2,mix(churn_storm:2,cold_start:1))".to_string());
+    tags.push("mix(criteo_like:3,churn_storm:1)".to_string());
+    tags.push("overlay(cold_start,churn_storm)".to_string());
+    tags.push(trace_tag("seq(criteo_like@2,churn_storm)", test));
+    tags
 }
 
 fn batches_equal(a: &Batch, b: &Batch) -> Result<(), String> {
@@ -39,7 +67,8 @@ fn batches_equal(a: &Batch, b: &Batch) -> Result<(), String> {
 
 #[test]
 fn batch_at_is_deterministic_and_cache_transparent_for_every_scenario() {
-    for tag in scenario::tags() {
+    for tag in &all_tags("determinism") {
+        let tag = tag.as_str();
         let fresh_a = Stream::new(cfg(tag));
         let fresh_b = Stream::new(cfg(tag));
         // capacity far below total_steps: hits, misses, *and* evictions
@@ -79,7 +108,8 @@ fn subsampling_plans_stay_paired_for_every_scenario() {
         Plan::Uniform(0.25),
         Plan::negative_only(0.5),
     ];
-    for tag in scenario::tags() {
+    for tag in &all_tags("pairing") {
+        let tag = tag.as_str();
         let stream = Stream::new(cfg(tag));
         let total = stream.cfg.total_steps();
         check(
@@ -122,4 +152,90 @@ fn subsampling_plans_stay_paired_for_every_scenario() {
             },
         );
     }
+}
+
+/// Compare two scenarios' functions bitwise at propcheck-sampled
+/// (k, f, d) points. Both streams share a seed, so construction draws
+/// line up when the scenario layouts do.
+fn scenario_fns_equal(a: &Stream, b: &Stream, label: &str) {
+    let k = a.cfg.n_clusters;
+    let days = a.cfg.days as f64;
+    check(
+        0xF00D + label.len() as u64,
+        60,
+        |rng| {
+            (
+                (rng.below(k as u64) as usize, rng.below(12) as usize),
+                rng.uniform_range(0.0, days),
+            )
+        },
+        |&((kk, f), d)| {
+            let (sa, sb) = (a.scenario(), b.scenario());
+            if sa.mixture(d) != sb.mixture(d) {
+                return Err(format!("[{label}] mixture differs at d={d}"));
+            }
+            if sa.hardness(d).to_bits() != sb.hardness(d).to_bits() {
+                return Err(format!("[{label}] hardness differs at d={d}"));
+            }
+            if sa.logit(kk, d).to_bits() != sb.logit(kk, d).to_bits() {
+                return Err(format!("[{label}] logit differs at k={kk} d={d}"));
+            }
+            if sa.vocab_pointer(kk, f, d) != sb.vocab_pointer(kk, f, d) {
+                return Err(format!("[{label}] pointer differs at k={kk} f={f} d={d}"));
+            }
+            let mut ma = vec![0.0f64; nshpo::data::N_DENSE];
+            let mut mb = vec![0.0f64; nshpo::data::N_DENSE];
+            sa.mean_at(kk, d, &mut ma);
+            sb.mean_at(kk, d, &mut mb);
+            if ma.iter().map(|x| x.to_bits()).ne(mb.iter().map(|x| x.to_bits())) {
+                return Err(format!("[{label}] mean differs at k={kk} d={d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `mix(a:1,b:0)` ≡ `a` at the scenario-function level, bitwise: the
+/// sole positive-weight arm delegates instead of accumulating 1.0*x,
+/// and arm `a` — constructed first — consumes the same seed draws as
+/// the standalone scenario. (Batch-level equality is ruled out by
+/// design: composite construction consumes extra draws, shifting the
+/// stream's own alpha — the scenario functions are the contract.)
+#[test]
+fn mix_with_a_sole_positive_arm_delegates_bitwise() {
+    let mixed = Stream::new(cfg("mix(criteo_like:1,churn_storm:0)"));
+    let plain = Stream::new(cfg("criteo_like"));
+    scenario_fns_equal(&mixed, &plain, "mix(a:1,b:0) vs a");
+
+    let nested = Stream::new(cfg("mix(overlay(cold_start,churn_storm):2,criteo_like:0)"));
+    let plain2 = Stream::new(cfg("overlay(cold_start,churn_storm)"));
+    scenario_fns_equal(&nested, &plain2, "mix(ov:2,b:0) vs ov");
+}
+
+/// Blends are invariant to rescaling the written weights: only the
+/// normalized weights enter the arithmetic, so `mix(a:2,b:6)` evaluates
+/// bit-identically to `mix(a:1,b:3)`.
+#[test]
+fn mix_blend_is_invariant_to_weight_rescaling() {
+    let x = Stream::new(cfg("mix(criteo_like:2,churn_storm:6)"));
+    let y = Stream::new(cfg("mix(criteo_like:1,churn_storm:3)"));
+    scenario_fns_equal(&x, &y, "mix rescale");
+}
+
+/// A trace replayed through the stream is itself deterministic: two
+/// streams built from the same (trace tag, seed) agree bitwise, and
+/// re-recording the replay reproduces the file's own statistics.
+#[test]
+fn trace_replay_is_deterministic_and_idempotent() {
+    let tag = trace_tag("mix(criteo_like:3,churn_storm:1)", "idempotent");
+    let a = Stream::new(cfg(&tag));
+    let b = Stream::new(cfg(&tag));
+    scenario_fns_equal(&a, &b, "trace determinism");
+    // record(replay) == the file: replaying a trace and re-sampling it
+    // at day midpoints returns exactly the recorded statistics
+    let path = tag.strip_prefix("trace@").unwrap();
+    let original = TraceFile::load(path).expect("load trace");
+    let recorded_again = TraceFile::record(&a);
+    assert_eq!(original.days_stats, recorded_again.days_stats);
+    assert_eq!(original.n_clusters, recorded_again.n_clusters);
 }

@@ -137,42 +137,76 @@ fn one_shot_live_matches_replay() {
 /// scenario, not just the default stream — and the live side runs over
 /// the shared batch cache while the recorded bank is built uncached, so
 /// this also pins cache/no-cache bit-identity end to end.
+fn assert_scenario_parity(tag: &str) {
+    let cs_live = clustered_stream_on(tag, true);
+    let cs_bank = clustered_stream_on(tag, false);
+    let specs = sweep::thin(sweep::family_sweep("fm"), 9); // 3 configs
+    let plan = || {
+        SearchPlan::performance_based(vec![2, 4, 6], 0.5)
+            .build()
+            .unwrap()
+    };
+
+    let live = {
+        let mut driver = LiveDriver::new(&ProxyFactory, &cs_live, &specs, Plan::Full, 0)
+            .with_workers(2);
+        SearchSession::new(plan(), &mut driver).run().unwrap()
+    };
+    let ts = bank_from(&cs_bank, &specs, 0);
+    let replayed = {
+        let mut driver = ReplayDriver::new(&ts);
+        SearchSession::new(plan(), &mut driver).run().unwrap()
+    };
+
+    assert_eq!(live.ranking, replayed.ranking, "[{tag}] ranking diverged");
+    assert_eq!(live.steps_trained, replayed.steps_trained, "[{tag}] steps diverged");
+    assert_eq!(
+        live.cost.to_bits(),
+        replayed.cost.to_bits(),
+        "[{tag}] cost diverged: {} vs {}",
+        live.cost,
+        replayed.cost
+    );
+    // the cached live path really shared batches across configs
+    let cache = cs_live.stream.cache().expect("live stream is cached");
+    assert!(cache.hits() > 0, "[{tag}] cache never hit");
+}
+
 #[test]
 fn parity_holds_for_every_scenario() {
     for tag in scenario::tags() {
-        let cs_live = clustered_stream_on(tag, true);
-        let cs_bank = clustered_stream_on(tag, false);
-        let specs = sweep::thin(sweep::family_sweep("fm"), 9); // 3 configs
-        let plan = || {
-            SearchPlan::performance_based(vec![2, 4, 6], 0.5)
-                .build()
-                .unwrap()
-        };
-
-        let live = {
-            let mut driver = LiveDriver::new(&ProxyFactory, &cs_live, &specs, Plan::Full, 0)
-                .with_workers(2);
-            SearchSession::new(plan(), &mut driver).run().unwrap()
-        };
-        let ts = bank_from(&cs_bank, &specs, 0);
-        let replayed = {
-            let mut driver = ReplayDriver::new(&ts);
-            SearchSession::new(plan(), &mut driver).run().unwrap()
-        };
-
-        assert_eq!(live.ranking, replayed.ranking, "[{tag}] ranking diverged");
-        assert_eq!(live.steps_trained, replayed.steps_trained, "[{tag}] steps diverged");
-        assert_eq!(
-            live.cost.to_bits(),
-            replayed.cost.to_bits(),
-            "[{tag}] cost diverged: {} vs {}",
-            live.cost,
-            replayed.cost
-        );
-        // the cached live path really shared batches across configs
-        let cache = cs_live.stream.cache().expect("live stream is cached");
-        assert!(cache.hits() > 0, "[{tag}] cache never hit");
+        assert_scenario_parity(tag);
     }
+}
+
+/// Composite scenarios join the same replay-vs-live grid the atomic
+/// regimes pin: a nested combinator tag is a first-class `--scenario`
+/// everywhere, so it must hold the same parity contract.
+#[test]
+fn parity_holds_for_a_nested_composite() {
+    assert_scenario_parity("seq(criteo_like@3,mix(churn_storm:2,cold_start:1))");
+}
+
+/// A recorded trace is a scenario like any other: record a composite's
+/// day statistics on this suite's stream shape, then run the full
+/// replay-vs-live parity cell over the `trace@file` tag.
+#[test]
+fn parity_holds_for_a_recorded_trace() {
+    let dir = std::env::temp_dir()
+        .join(format!("nshpo-session-parity-{}", std::process::id()));
+    let path = dir.join("trace.json");
+    let path = path.to_str().expect("utf8 temp path").to_string();
+    let source = Stream::new(StreamConfig {
+        seed: 91,
+        days: 8,
+        steps_per_day: 3,
+        batch: 64,
+        n_clusters: 6,
+        scenario: "seq(criteo_like@3,churn_storm)".to_string(),
+    });
+    nshpo::data::trace::TraceFile::record(&source).save(&path).unwrap();
+    assert_scenario_parity(&format!("trace@{path}"));
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
