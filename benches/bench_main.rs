@@ -662,6 +662,7 @@ fn main() {
             source: SourceSpec::Toy { configs: 16, days: 12, steps_per_day: 8, seed: i as u64 },
             method: "perf@0.5[3,6,9]".to_string(),
             strategy: "constant".to_string(),
+            surrogate: None,
             budget: None,
             top_k: 3,
             stage: 2,

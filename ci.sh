@@ -107,6 +107,36 @@ fi
 # by name so the gate stays loud if the target is ever dropped.
 cargo test -q --test method_matrix
 
+echo "== surrogate gate =="
+# Fourth registry, same contract: the listing must name the registered
+# surrogates, the cost-aware bandit method must drive a (tiny) live
+# search end to end, --surrogate must bind into the gated strategy's
+# slot, and unknown or unbindable tags must be rejected with the valid
+# tags named. The rejection/equivalence acceptance suite is part of
+# `cargo test` above; run it by name so the gate stays loud if the
+# target is ever dropped.
+cargo test -q --test surrogate_registry
+cargo run --release -- surrogates | grep -q simulator
+cargo run --release -- surrogates | grep -q fitted
+cargo run --release -- search --live --proxy --method bandit@2 \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+cargo run --release -- search --live --proxy --strategy gated@inf,2 \
+  --surrogate simulator \
+  --days 4 --steps-per-day 4 --batch 64 --thin 9 --workers 2 >/dev/null
+if cargo run --release -- search --live --proxy --surrogate no_such_surrogate \
+    --strategy gated --days 4 --steps-per-day 4 --batch 64 --thin 9 \
+    >/dev/null 2>&1; then
+  echo "FAIL: unknown surrogate tag was accepted" >&2
+  exit 1
+fi
+# a surrogate on a slotless strategy must be rejected, not ignored
+if cargo run --release -- search --live --proxy --strategy constant \
+    --surrogate simulator --days 4 --steps-per-day 4 --batch 64 --thin 9 \
+    >/dev/null 2>&1; then
+  echo "FAIL: surrogate bound into a slotless strategy was accepted" >&2
+  exit 1
+fi
+
 echo "== bank gate =="
 # The sharded v3 pipeline end to end: build (streamed to shards) ->
 # inspect -> replay search; v2 build -> migrate -> inspect -> replay;

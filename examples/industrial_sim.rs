@@ -34,7 +34,10 @@ fn main() {
     println!("\n{:<18} {:>8} {:>14} {:>14}", "stop every (days)", "C", "regret@3 mean", "regret@3 std");
     let mut two_x: Option<(f64, f64)> = None;
     for spacing in [2, 3, 4, 6, 8, 12] {
-        let (c, m, s) = fig6_point(&cfg, spacing, 0.5, 20, 777);
+        let (c, m, s) = fig6_point(&cfg, spacing, 0.5, 20, 777).unwrap_or_else(|e| {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        });
         println!("{spacing:<18} {c:>8.3} {m:>14.6} {s:>14.6}");
         // the paper's 2x claim: the largest cost point at or below C=0.5
         if c <= 0.5 && two_x.map(|(pc, _)| c > pc).unwrap_or(true) {

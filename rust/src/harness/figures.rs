@@ -511,7 +511,7 @@ fn fig6(out: &Path, exec: &ReplayExecutor) -> Result<()> {
     let mut hi_series = Series { name: "mean + std".into(), points: vec![] };
     let mut csv = String::from("stop_every_days,cost,regret3_mean,regret3_std\n");
     for spacing in [2, 3, 4, 6, 8, 12] {
-        let (c, m, s) = surrogate::fig6_point_with(exec, &cfg, spacing, RHO, 12, 777);
+        let (c, m, s) = surrogate::fig6_point_with(exec, &cfg, spacing, RHO, 12, 777)?;
         mean_series.points.push((c, m));
         hi_series.points.push((c, m + s));
         csv.push_str(&format!("{spacing},{c},{m},{s}\n"));

@@ -25,16 +25,19 @@
 //!   `Strategy::parse` tags, `nshpo strategies`).
 //! * [`search`] — the unified two-stage `SearchSession` API: every
 //!   scheduling policy (one-shot, Algorithm 1, late starting, Hyperband,
-//!   ASHA, budget-greedy) lives in the pluggable `search::method`
-//!   registry (`SearchMethod` trait, `Method::parse` tags, `nshpo
-//!   methods`), written once against the `SearchDriver` trait, with
-//!   replay and live backends, the cost model + `CostLedger` (§4.1),
-//!   and the parallel replay executor every exhibit runs on.
+//!   ASHA, budget-greedy, cost-aware bandit) lives in the pluggable
+//!   `search::method` registry (`SearchMethod` trait, `Method::parse`
+//!   tags, `nshpo methods`), written once against the `SearchDriver`
+//!   trait, with replay and live backends, the cost model + `CostLedger`
+//!   (§4.1), and the parallel replay executor every exhibit runs on.
 //! * [`serve`] — the `nshpo serve` daemon: a persistent multi-tenant
 //!   search coordinator multiplexing concurrent `SearchSession`s over a
 //!   shared worker pool behind a newline-delimited JSON socket protocol,
 //!   with global-budget admission control (DESIGN.md §8).
-//! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6).
+//! * [`surrogate`] — calibrated industrial-scale simulator (Fig 6) and
+//!   the pluggable stage-1 surrogate registry (`surrogate::registry`:
+//!   `SurrogateModel` trait, `Surrogate::parse` tags, `nshpo
+//!   surrogates`) that the evidence-gated `gated` strategy hands off to.
 //! * [`coordinator`] — experiment scheduler (bank building, wall-clock
 //!   accounting for live sessions over real PJRT runs).
 //! * [`harness`] — per-figure/table generators (Figs 1-11, Table 1).

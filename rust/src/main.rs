@@ -84,7 +84,10 @@ USAGE: nshpo <subcommand> [flags]
             e.g. asha@3, asha@3,4, budget_greedy@0.4, perf@0.25)
             [--strategy <tag>]  (registry tag, see `nshpo strategies`;
             e.g. constant, recency@1.5, trajectory@VaporPressure,
-            stratified@8, stratified-constant, switching@4)
+            stratified@8, stratified-constant, switching@4, gated@0.05,3)
+            [--surrogate <tag>]  (registry tag, see `nshpo surrogates`;
+            binds into the strategy's surrogate slot, e.g.
+            --strategy gated --surrogate simulator)
             [--slices 5]  (sugar: parameterizes a bare stratified tag)
             [--stop-every 3] [--rho 0.5] [--day-stop N]
             [--start-day N] [--eta 3] [--bracket-seed 7]
@@ -103,7 +106,9 @@ USAGE: nshpo <subcommand> [flags]
             a scenario tag is accepted via --scenario trace@<file>)
   strategies list registered prediction strategies (tag, reference, use)
   methods    list registered search methods (tag, reference, use)
-  sim       [--tasks 12] [--configs 30] [--out results]
+  surrogates list registered stage-1 surrogates (tag, reference, use)
+  sim       [--tasks 12] [--configs 30] [--rho 0.5] [--seed 777]
+            [--out results]
   info      [--bank results/bank] [--artifacts artifacts]
   bench-check  [--dir .] [--topics replay,search,serve,step]
             validate the committed BENCH_<topic>.json perf-trajectory
@@ -125,7 +130,8 @@ USAGE: nshpo <subcommand> [flags]
                    | (default) toy [--configs 8] [--days 12]
                      [--steps-per-day 8] [--seed 0]
             plan:    [--id job1] [--method one-shot@6] [--strategy
-                     constant] [--budget C] [--top-k 3] [--stage 2]
+                     constant] [--surrogate TAG] [--budget C]
+                     [--top-k 3] [--stage 2]
             admin:   --status ID | --cancel ID | --list | --shutdown
             (streams event frames to stdout; exits nonzero unless the
             job reaches \"done\" / the admin reply is not an error)
@@ -142,6 +148,7 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("strategies") => cmd_strategies(),
         Some("methods") => cmd_methods(),
+        Some("surrogates") => cmd_surrogates(),
         Some("sim") => cmd_sim(&args),
         Some("info") => cmd_info(&args),
         Some("bench-check") => cmd_bench_check(&args),
@@ -226,7 +233,16 @@ fn cmd_methods() -> Result<()> {
     print!("{}", nshpo::search::method::registry_table());
     println!(
         "\nuse with: nshpo search --method <tag>  (parameters attach as @<param>, \
-         e.g. one-shot@6, perf@0.25, asha@3, asha@3,4, budget_greedy@0.4)"
+         e.g. one-shot@6, perf@0.25, asha@3, asha@3,4, budget_greedy@0.4, bandit@2)"
+    );
+    Ok(())
+}
+
+fn cmd_surrogates() -> Result<()> {
+    print!("{}", nshpo::surrogate::registry::registry_table());
+    println!(
+        "\nuse with: nshpo search --strategy gated --surrogate <tag>  (binds into \
+         the strategy's surrogate slot; fitted takes @<law>, e.g. fitted@VaporPressure)"
     );
     Ok(())
 }
@@ -466,6 +482,12 @@ fn plan_from(args: &Args, days: usize, plan_mult: f64) -> Result<SearchPlan> {
         .strategy(parse_strategy(args)?)
         .plan_mult(plan_mult)
         .top_k(args.usize_or("top-k", 3));
+    if args.has("surrogate") {
+        let tag = args.str_opt("surrogate").ok_or_else(|| {
+            nshpo::err!("--surrogate expects a registry tag (see `nshpo surrogates`)")
+        })?;
+        builder = builder.surrogate(nshpo::surrogate::Surrogate::parse(tag)?);
+    }
     if args.has("budget") {
         let text = args
             .str_opt("budget")
@@ -667,10 +689,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         ..surrogate::SurrogateConfig::default()
     };
     let tasks = args.usize_or("tasks", 12);
+    let rho = args.f64_or("rho", 0.5);
+    if !(rho.is_finite() && (0.0..1.0).contains(&rho)) {
+        bail!("--rho must be in [0, 1), got {rho}");
+    }
+    let seed = args.u64_or("seed", 777);
     println!("industrial surrogate: {} configs, {} tasks", cfg.n_configs, tasks);
     println!("{:<18} {:>8} {:>12} {:>12}", "stop_every_days", "C", "regret@3", "std");
     for spacing in [2, 3, 4, 6, 8, 12] {
-        let (c, m, s) = surrogate::fig6_point(&cfg, spacing, 0.5, tasks, 777);
+        let (c, m, s) = surrogate::fig6_point(&cfg, spacing, rho, tasks, seed)?;
         println!("{spacing:<18} {c:>8.3} {m:>12.6} {s:>12.6}");
     }
     Ok(())
@@ -808,6 +835,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
         source,
         method: args.str_or("method", "one-shot@6"),
         strategy: args.str_or("strategy", "constant"),
+        surrogate: args.str_opt("surrogate").map(|s| s.to_string()),
         budget: args.str_opt("budget").map(|_| args.f64_or("budget", 1.0)),
         top_k: args.usize_or("top-k", 3),
         stage: args.usize_or("stage", 2),

@@ -17,7 +17,11 @@
 //!   room for external implementations ([`Strategy::custom`]).
 //!
 //! [`fit`] holds the Levenberg-Marquardt pairwise fitter and [`laws`]
-//! the parametric learning-curve laws (paper Table 1).
+//! the parametric learning-curve laws (paper Table 1). [`fit_points`]
+//! and [`eval_fracs`] are the shared evidence primitives both the
+//! estimators here and the [`surrogate`](crate::surrogate) registry
+//! consume — one definition of "the trailing observed points" and "the
+//! eval window" across the whole stage-1 stack.
 
 pub mod fit;
 pub mod laws;
@@ -67,7 +71,12 @@ pub fn recency_prediction(day_means: &[f64], half_life_days: f64) -> f64 {
 
 /// Day fractions D_d = (d+1)/total for the trailing `fit_days` observed
 /// days, paired with their metric values; skips non-finite entries.
-fn fit_points(day_means: &[f64], total_days: usize, fit_days: usize) -> Vec<(f64, f64)> {
+///
+/// Part of the shared evidence interface: the same points feed
+/// [`trajectory_predict`] and every fitted surrogate in the
+/// [`surrogate`](crate::surrogate) registry (also reachable per config
+/// via [`PredictContext::fit_points`]).
+pub fn fit_points(day_means: &[f64], total_days: usize, fit_days: usize) -> Vec<(f64, f64)> {
     let n = day_means.len();
     let from = n.saturating_sub(fit_days);
     (from..n)
@@ -77,7 +86,10 @@ fn fit_points(day_means: &[f64], total_days: usize, fit_days: usize) -> Vec<(f64
 }
 
 /// Eval-window day fractions (the last `eval_days` of `total_days`).
-fn eval_fracs(total_days: usize, eval_days: usize) -> Vec<f64> {
+///
+/// Part of the shared evidence interface (see [`PredictContext::eval_fracs`]):
+/// fitted surrogates average their law over exactly these fractions.
+pub fn eval_fracs(total_days: usize, eval_days: usize) -> Vec<f64> {
     (total_days - eval_days..total_days)
         .map(|d| (d + 1) as f64 / total_days as f64)
         .collect()

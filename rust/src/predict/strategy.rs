@@ -23,6 +23,13 @@
 //! * `switching[@day]` — starts constant, hands off to trajectory once
 //!   `day` days are observed (Škrlj et al., 2022: dynamic surrogate
 //!   switching, tuned for non-stationary fits that need warm-up).
+//! * `gated[@rmse,days][surrogate]` — evidence-gated switching: starts
+//!   constant and hands off to a registered
+//!   [`Surrogate`](crate::surrogate::Surrogate) once at least `days`
+//!   days are observed *and* the surrogate's fit-quality report clears
+//!   the RMSE threshold — the day-hardcoded `switching` generalized to a
+//!   fit-quality gate (`rmse` of `inf` gates on evidence days alone and
+//!   reduces bit-identically to `switching@days`).
 //!
 //! The three paper strategies are the exact functions from
 //! [`predict`](crate::predict) behind the trait — bit-identical to the
@@ -38,6 +45,7 @@ use super::{
     constant_prediction, recency_prediction, stratified_predict, trajectory_predict, FIT_DAYS,
 };
 use crate::err;
+use crate::surrogate::Surrogate;
 use crate::util::error::Result;
 
 /// Default half-life (days) of the `recency` strategy.
@@ -49,6 +57,12 @@ pub const DEFAULT_SLICES: usize = 5;
 /// uses the trailing [`FIT_DAYS`] days, so it needs a few days of
 /// observations before extrapolation beats the recent average).
 pub const DEFAULT_SWITCH_DAY: usize = 6;
+/// Default fit-quality threshold (max per-config RMSE of the surrogate's
+/// fitted curve over its own fit points) of the `gated` strategy. Day
+/// means here are per-example losses in roughly `[0.3, 1.0]`, so an
+/// average residual of 0.05 separates "the law tracks the curve" from
+/// "the fit is guessing".
+pub const DEFAULT_GATE_RMSE: f64 = 0.05;
 
 /// Everything a strategy may observe at a stopping day, assembled by
 /// [`TrajectorySet::predict_context`](crate::search::TrajectorySet::predict_context).
@@ -75,6 +89,26 @@ pub struct PredictContext<'a> {
     pub eval_cluster_counts: &'a [u64],
 }
 
+impl PredictContext<'_> {
+    /// Trailing [`FIT_DAYS`] fit points per config, `(D, m)` pairs with
+    /// D the day fraction — the shared evidence every fitted estimator
+    /// consumes, whether a [`PredictionStrategy`] here or a
+    /// [`Surrogate`](crate::surrogate::Surrogate) from the registry
+    /// (see [`fit_points`](super::fit_points)).
+    pub fn fit_points(&self) -> Vec<Vec<(f64, f64)>> {
+        self.day_means
+            .iter()
+            .map(|dm| super::fit_points(dm, self.total_days, FIT_DAYS))
+            .collect()
+    }
+
+    /// Eval-window day fractions the prediction targets (see
+    /// [`eval_fracs`](super::eval_fracs)).
+    pub fn eval_fracs(&self) -> Vec<f64> {
+        super::eval_fracs(self.total_days, self.eval_days)
+    }
+}
+
 /// One prediction strategy (§4.2): estimates each configuration's
 /// eval-window metric from the truncated observations in a
 /// [`PredictContext`]. Implementations must be deterministic pure
@@ -93,6 +127,16 @@ pub trait PredictionStrategy: Send + Sync {
     /// Predicted eval-window metric per config, aligned with the
     /// context's series (smaller = better, like every metric here).
     fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64>;
+
+    /// Rebind this strategy around a plan-selected surrogate (the
+    /// `--surrogate` axis of a [`SearchPlan`](crate::search::SearchPlan)).
+    /// Strategies with a surrogate slot (`gated`) return the rebound
+    /// strategy; the default `None` means "no slot", which the plan
+    /// builder surfaces as a configuration error instead of silently
+    /// dropping the surrogate.
+    fn with_surrogate(&self, _surrogate: &Surrogate) -> Option<Strategy> {
+        None
+    }
 }
 
 /// A cheap clonable handle to a [`PredictionStrategy`] — this is what
@@ -140,6 +184,22 @@ impl Strategy {
         Strategy(Arc::new(Switching { after_days, inner }))
     }
 
+    /// Evidence-gated dynamic switching: constant prediction until at
+    /// least `min_days` days are observed *and* the surrogate's
+    /// fit-quality report ([`Surrogate::fit`]) clears `max_rmse`; from
+    /// then on the surrogate predicts. `max_rmse` of [`f64::INFINITY`]
+    /// gates on evidence days alone — with the default fitted surrogate
+    /// that reduces bit-identically to [`Strategy::switching`] at the
+    /// same day (`rust/tests/surrogate_registry.rs` pins it).
+    pub fn gated(min_days: usize, max_rmse: f64, surrogate: Surrogate) -> Strategy {
+        assert!(min_days >= 1, "gated needs a minimum evidence day >= 1");
+        assert!(
+            max_rmse > 0.0 && !max_rmse.is_nan(),
+            "gated fit-quality threshold must be positive (inf allowed)"
+        );
+        Strategy(Arc::new(Gated { min_days, max_rmse, surrogate }))
+    }
+
     /// Wrap a custom [`PredictionStrategy`] implementation — the open
     /// end of the registry (external strategies plug in here).
     pub fn custom(implementation: Arc<dyn PredictionStrategy>) -> Strategy {
@@ -148,7 +208,8 @@ impl Strategy {
 
     /// Resolve a registry tag (`constant`, `recency@1.5`,
     /// `trajectory@VaporPressure`, `stratified@8`,
-    /// `stratified-constant@3`, `switching@4`) into a strategy. The
+    /// `stratified-constant@3`, `switching@4`, `gated@0.05,4`) into a
+    /// strategy. The
     /// bracketed canonical forms also parse, so every `tag()` a strategy
     /// prints round-trips: `stratified@5[VaporPressure]` picks the
     /// per-slice law, and `switching@6[<inner tag>]` nests any
@@ -294,6 +355,58 @@ impl Strategy {
                 };
                 Ok(Strategy::switching(day, inner))
             }
+            "gated" => {
+                let (head, bracket) = match param {
+                    None => (String::new(), None),
+                    Some(p) => split_bracket(p),
+                };
+                let (max_rmse, min_days) = if head.is_empty() && param.is_none() {
+                    (DEFAULT_GATE_RMSE, FIT_DAYS)
+                } else {
+                    let (rmse_part, days_part) = match head.split_once(',') {
+                        Some((r, d)) => (r, Some(d)),
+                        None => (head.as_str(), None),
+                    };
+                    let rmse = rmse_part
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|r| *r > 0.0 && !r.is_nan())
+                        .ok_or_else(|| {
+                            err!(
+                                "gated fit-quality threshold (max RMSE) must be a \
+                                 positive number ('inf' gates on evidence days \
+                                 alone), got {tag:?} (registered: {})",
+                                listed()
+                            )
+                        })?;
+                    let days = match days_part {
+                        None => FIT_DAYS,
+                        Some(d) => {
+                            d.parse::<usize>().ok().filter(|&d| d >= 1).ok_or_else(|| {
+                                err!(
+                                    "gated minimum evidence days must be an integer \
+                                     >= 1, got {tag:?} (registered: {})",
+                                    listed()
+                                )
+                            })?
+                        }
+                    };
+                    (rmse, days)
+                };
+                let surrogate = match bracket {
+                    None => Surrogate::fitted(LawKind::InversePowerLaw),
+                    Some(surrogate_tag) => {
+                        Surrogate::parse(&surrogate_tag).map_err(|e| {
+                            err!(
+                                "gated surrogate in {tag:?}: {e:#} (registered \
+                                 strategies: {})",
+                                listed()
+                            )
+                        })?
+                    }
+                };
+                Ok(Strategy::gated(min_days, max_rmse, surrogate))
+            }
             other => Err(err!(
                 "unknown strategy {other:?} (registered: {})",
                 listed()
@@ -321,6 +434,14 @@ impl Strategy {
     /// Predict eval-window metrics for the context's config subset.
     pub fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
         self.0.predict(ctx)
+    }
+
+    /// Rebind around a plan-selected surrogate, if this strategy has a
+    /// surrogate slot (see [`PredictionStrategy::with_surrogate`]);
+    /// `None` means the strategy ignores surrogates and the caller
+    /// should treat the combination as a configuration error.
+    pub fn with_surrogate(&self, surrogate: &Surrogate) -> Option<Strategy> {
+        self.0.with_surrogate(surrogate)
     }
 }
 
@@ -468,6 +589,58 @@ impl PredictionStrategy for Switching {
     }
 }
 
+/// Evidence-gated surrogate switching: [`Switching`] generalized from a
+/// hardcoded handoff day to a fit-quality gate. Constant prediction
+/// until `min_days` days are observed *and* the surrogate's own
+/// [`FitReport`](crate::surrogate::FitReport) clears `max_rmse` (≥ 2
+/// fit points per config, max per-config RMSE at most the threshold);
+/// from then on the surrogate predicts. An infinite threshold skips the
+/// fit entirely, so the gate fires on evidence days alone.
+struct Gated {
+    min_days: usize,
+    max_rmse: f64,
+    surrogate: Surrogate,
+}
+
+impl PredictionStrategy for Gated {
+    fn tag(&self) -> String {
+        // The registry default hands off to the fitted power-law
+        // surrogate; any other surrogate is surfaced in the tag so
+        // labels stay unique.
+        if self.surrogate.tag() == "fitted@InversePowerLaw" {
+            format!("gated@{},{}", self.max_rmse, self.min_days)
+        } else {
+            format!(
+                "gated@{},{}[{}]",
+                self.max_rmse,
+                self.min_days,
+                self.surrogate.tag()
+            )
+        }
+    }
+
+    fn provenance(&self) -> &'static str {
+        "Škrlj et al., 2022 (evidence-gated surrogate switching)"
+    }
+
+    fn predict(&self, ctx: &PredictContext<'_>) -> Vec<f64> {
+        let fired = ctx.day_stop >= self.min_days
+            && (self.max_rmse.is_infinite() || {
+                let report = self.surrogate.fit(ctx);
+                report.min_points >= 2 && report.max_rmse <= self.max_rmse
+            });
+        if fired {
+            self.surrogate.predict(ctx)
+        } else {
+            Constant.predict(ctx)
+        }
+    }
+
+    fn with_surrogate(&self, surrogate: &Surrogate) -> Option<Strategy> {
+        Some(Strategy::gated(self.min_days, self.max_rmse, surrogate.clone()))
+    }
+}
+
 // -------------------------------------------------------------- registry
 
 /// One registry row: base tag, provenance, and the one-line guidance
@@ -482,9 +655,10 @@ pub struct StrategyInfo {
 }
 
 /// Every registered strategy, base tags only — `recency`, `trajectory`,
-/// `stratified`, `stratified-constant`, and `switching` also accept an
-/// `@<param>` (half-life days / law name / slice count / handoff day).
-pub const REGISTRY: [StrategyInfo; 6] = [
+/// `stratified`, `stratified-constant`, `switching`, and `gated` also
+/// accept an `@<param>` (half-life days / law name / slice count /
+/// handoff day / RMSE-threshold[,min-days]).
+pub const REGISTRY: [StrategyInfo; 7] = [
     StrategyInfo {
         tag: "constant",
         reference: "paper §4.2.1",
@@ -514,6 +688,11 @@ pub const REGISTRY: [StrategyInfo; 6] = [
         tag: "switching",
         reference: "Škrlj et al., 2022",
         when_to_use: "long searches: constant early, trajectory once fits stabilize",
+    },
+    StrategyInfo {
+        tag: "gated",
+        reference: "Škrlj et al., 2022 + surrogate registry",
+        when_to_use: "hand off to a surrogate only once its fit quality earns trust",
     },
 ];
 
@@ -607,6 +786,9 @@ mod tests {
             Strategy::stratified(Some(LawKind::LogPower), 4),
             Strategy::switching(6, Strategy::trajectory(LawKind::InversePowerLaw)),
             Strategy::switching(6, Strategy::constant()),
+            Strategy::gated(3, 0.05, Surrogate::fitted(LawKind::InversePowerLaw)),
+            Strategy::gated(3, 0.05, Surrogate::simulator()),
+            Strategy::gated(3, f64::INFINITY, Surrogate::fitted(LawKind::InversePowerLaw)),
         ];
         let mut names: Vec<String> = strategies.iter().map(|s| s.tag()).collect();
         names.sort();
@@ -625,6 +807,9 @@ mod tests {
             Strategy::switching(6, Strategy::constant()),
             Strategy::switching(4, Strategy::stratified(None, 3)),
             Strategy::switching(2, Strategy::switching(5, Strategy::constant())),
+            Strategy::gated(4, 0.1, Surrogate::simulator()),
+            Strategy::gated(5, f64::INFINITY, Surrogate::constant()),
+            Strategy::gated(3, 0.05, Surrogate::fitted(LawKind::VaporPressure)),
         ] {
             let tag = strat.tag();
             let reparsed = Strategy::parse(&tag)
@@ -655,6 +840,13 @@ mod tests {
             "switching@0",
             "switching@later",
             "switching@4[no_such_inner]",
+            "gated@0",
+            "gated@-0.1",
+            "gated@nan",
+            "gated@0.05,0",
+            "gated@0.05,soon",
+            "gated@0.05[no_such_surrogate]",
+            "gated@",
             "",
         ] {
             let err = Strategy::parse(bad).unwrap_err();
@@ -714,6 +906,37 @@ mod tests {
         let d = Strategy::trajectory(LawKind::InversePowerLaw).predict(&post);
         for (x, y) in c.iter().zip(&d) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn gated_is_constant_before_the_gate_and_the_surrogate_after() {
+        let (counts, sums, eval, day_means) = toy_ctx(8);
+        let surrogate = Surrogate::fitted(LawKind::InversePowerLaw);
+        let gated = Strategy::gated(6, f64::INFINITY, surrogate.clone());
+
+        // too few evidence days: bit-identical to constant
+        let dm4: Vec<Vec<f64>> = day_means.iter().map(|dm| dm[..4].to_vec()).collect();
+        let pre = ctx_of(4, &counts[..4], &sums, &eval, &dm4);
+        for (x, y) in gated.predict(&pre).iter().zip(&Strategy::constant().predict(&pre)) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+
+        // gate open (infinite threshold fires on days alone): bit-identical
+        // to the surrogate's own prediction
+        let post = ctx_of(8, &counts, &sums, &eval, &day_means);
+        for (x, y) in gated.predict(&post).iter().zip(&surrogate.predict(&post)) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn with_surrogate_rebinds_gated_and_rejects_slotless_strategies() {
+        let sim = Surrogate::simulator();
+        let rebound = Strategy::parse("gated").unwrap().with_surrogate(&sim).unwrap();
+        assert_eq!(rebound.tag(), "gated@0.05,3[simulator]");
+        for slotless in [Strategy::constant(), Strategy::parse("switching@4").unwrap()] {
+            assert!(slotless.with_surrogate(&sim).is_none(), "{}", slotless.tag());
         }
     }
 

@@ -28,6 +28,12 @@
 //! * `budget_greedy[@cap]` — consumes the [`CostLedger`] to spend a hard
 //!   relative-cost cap one probe at a time on the currently
 //!   best-predicted config (arXiv:2101.06590).
+//! * `bandit[@eta]` — cost-aware successive elimination over the
+//!   [`CostLedger`]: after each geometric round only the top `1/eta`
+//!   fraction survives, and within a round the next one-day probe always
+//!   goes to the predicted leader — the highest predicted-regret-per-step
+//!   reduction (arXiv:2101.06590). Probes charge commit/settle exactly
+//!   like `budget_greedy`, so a plan budget is never overshot.
 //!
 //! The four legacy policies are the exact scheduling cores the closed
 //! `SearchMethod` enum ran — bit-identical through the registry
@@ -57,6 +63,8 @@ pub const DEFAULT_ETA: f64 = 3.0;
 pub const DEFAULT_BRACKETS_SEED: u64 = 7;
 /// Default relative-cost cap of `budget_greedy`.
 pub const DEFAULT_GREEDY_CAP: f64 = 0.5;
+/// Default elimination factor eta of `bandit`.
+pub const DEFAULT_BANDIT_ETA: f64 = 3.0;
 
 /// Everything a search method schedules over: the backend driver (train
 /// / predict / observe), the plan's prediction strategy and budget, and
@@ -203,6 +211,13 @@ impl Method {
         Method(Arc::new(BudgetGreedy { cap }))
     }
 
+    /// Cost-aware successive elimination with factor `eta` (> 1): keep
+    /// the best `1/eta` fraction after each geometric round, probing the
+    /// predicted leader first within a round.
+    pub fn bandit(eta: f64) -> Method {
+        Method(Arc::new(Bandit { eta }))
+    }
+
     /// Wrap a custom [`SearchMethod`] implementation — the open end of
     /// the registry (external scheduling policies plug in here).
     pub fn custom(implementation: Arc<dyn SearchMethod>) -> Method {
@@ -211,7 +226,7 @@ impl Method {
 
     /// Resolve a registry tag (`one-shot@6`, `perf@0.25`,
     /// `perf@0.5[3,6,9]`, `late-start@2,8`, `hyperband@3`, `asha@3,4`,
-    /// `budget_greedy@0.4`) into a method. Bare base tags pick the
+    /// `budget_greedy@0.4`, `bandit@2`) into a method. Bare base tags pick the
     /// documented defaults (day/window parameters resolve against the
     /// horizon at schedule time), and every `tag()` a method prints
     /// round-trips.
@@ -394,6 +409,23 @@ impl Method {
                         })?,
                 };
                 Ok(Method(Arc::new(BudgetGreedy { cap })))
+            }
+            "bandit" => {
+                let eta = match param {
+                    None => DEFAULT_BANDIT_ETA,
+                    Some(p) => p
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|x| x.is_finite() && *x > 1.0)
+                        .ok_or_else(|| {
+                            err!(
+                                "bandit eta must be a finite number > 1, got {tag:?} \
+                                 (registered: {})",
+                                listed()
+                            )
+                        })?,
+                };
+                Ok(Method(Arc::new(Bandit { eta })))
             }
             other => Err(err!("unknown method {other:?} (registered: {})", listed())),
         }
@@ -903,6 +935,136 @@ impl SearchMethod for BudgetGreedy {
     }
 }
 
+/// Cost-aware successive elimination over the [`CostLedger`]: probe all
+/// configs for [`FIT_DAYS`] days, then run geometric rounds — eliminate
+/// all but the best `1/eta` fraction, grow the round horizon by `eta`,
+/// and advance the survivors one committed/settled day-probe at a time,
+/// predicted leader first (ties: fewer spent steps, then index). The
+/// plan budget caps total spend exactly like `budget_greedy`.
+struct Bandit {
+    eta: f64,
+}
+
+impl SearchMethod for Bandit {
+    fn tag(&self) -> String {
+        format!("bandit@{}", self.eta)
+    }
+
+    fn provenance(&self) -> &'static str {
+        "arXiv:2101.06590 (successive elimination / cost-aware bandit)"
+    }
+
+    fn validate(&self, _budget: Option<f64>) -> Result<()> {
+        if !(self.eta.is_finite() && self.eta > 1.0) {
+            return Err(err!("bandit eta must be > 1, got {}", self.eta));
+        }
+        Ok(())
+    }
+
+    fn schedule(&self, ctx: &mut MethodContext<'_, '_>) -> Result<SearchOutcome> {
+        let strategy = ctx.strategy.clone();
+        let n = ctx.n_configs();
+        let days = ctx.days();
+        let spd = ctx.steps_per_day();
+        let t_total = days * spd;
+        let cap = ctx.budget.unwrap_or(1.0);
+        let cap_steps = (cap * (n * t_total) as f64).floor() as usize;
+
+        let probe_days = FIT_DAYS.min(days);
+        if n * probe_days * spd > cap_steps {
+            return Err(err!(
+                "bandit budget {cap} cannot cover the initial {probe_days}-day \
+                 probe of {n} configs"
+            ));
+        }
+        let all: Vec<usize> = (0..n).collect();
+        ctx.train_to(&all, probe_days)?;
+        let mut day_of = vec![probe_days; n];
+        let mut score: Vec<f64> = if probe_days == days {
+            ctx.final_scores(&all)
+        } else {
+            ctx.predict(&strategy, probe_days, &all)
+        };
+
+        let mut active: Vec<usize> = (0..n).collect();
+        // Eliminated groups per round, best first within a group; later
+        // rounds survived longer and rank ahead of earlier ones.
+        let mut eliminated: Vec<Vec<usize>> = Vec::new();
+        let mut target = probe_days;
+        let mut budget_out = false;
+
+        while !budget_out {
+            if active.len() > 1 {
+                let sub: Vec<f64> = active.iter().map(|&c| score[c]).collect();
+                let order: Vec<usize> =
+                    metrics::ranking_from_scores(&sub).into_iter().map(|i| active[i]).collect();
+                let keep = (((order.len() as f64) / self.eta).floor() as usize).max(1);
+                if keep < order.len() {
+                    eliminated.push(order[keep..].to_vec());
+                }
+                active = order[..keep].to_vec();
+            }
+            if target >= days {
+                break;
+            }
+            // eta > 1 makes the round horizon strictly increase, so the
+            // loop always reaches the full horizon.
+            target = days.min(((target as f64) * self.eta).ceil() as usize);
+            loop {
+                // Next probe: the predicted leader still short of the
+                // round horizon; ties by fewer spent steps, then index.
+                let mut pick: Option<usize> = None;
+                for &c in &active {
+                    if day_of[c] >= target {
+                        continue;
+                    }
+                    let better = match pick {
+                        None => true,
+                        Some(p) => match score[c].partial_cmp(&score[p]) {
+                            Some(std::cmp::Ordering::Less) => true,
+                            Some(std::cmp::Ordering::Greater) => false,
+                            _ => (ctx.ledger.spent(c), c) < (ctx.ledger.spent(p), p),
+                        },
+                    };
+                    if better {
+                        pick = Some(c);
+                    }
+                }
+                let Some(c) = pick else { break };
+                ctx.ledger.commit(c, spd);
+                if ctx.ledger.would_exceed(cap_steps) {
+                    ctx.ledger.settle(c);
+                    budget_out = true;
+                    break;
+                }
+                ctx.train_to(&[c], day_of[c] + 1)?;
+                ctx.ledger.settle(c);
+                day_of[c] += 1;
+                score[c] = if day_of[c] == days {
+                    ctx.final_scores(&[c])[0]
+                } else {
+                    ctx.predict(&strategy, day_of[c], &[c])[0]
+                };
+            }
+        }
+
+        // Survivors rank first by score; eliminated groups follow,
+        // last-eliminated (longest-surviving) first.
+        let sub: Vec<f64> = active.iter().map(|&c| score[c]).collect();
+        let mut ranking: Vec<usize> =
+            metrics::ranking_from_scores(&sub).into_iter().map(|i| active[i]).collect();
+        for round in eliminated.iter().rev() {
+            ranking.extend(round.iter().copied());
+        }
+        let steps_trained: Vec<usize> = (0..n).map(|c| ctx.steps_trained(c)).collect();
+        Ok(SearchOutcome {
+            ranking,
+            cost: cost::empirical(&steps_trained, t_total),
+            steps_trained,
+        })
+    }
+}
+
 // -------------------------------------------------------------- asha
 
 /// Geometric rung budgets in days: rung k trains through
@@ -1133,8 +1295,8 @@ pub struct MethodInfo {
 
 /// Every registered method, base tags only — all of them also accept an
 /// `@<param>` (stopping day / rho[+stop days] / start,stop / eta[,seed]
-/// / eta[,rungs] / cap).
-pub const REGISTRY: [MethodInfo; 6] = [
+/// / eta[,rungs] / cap / eta).
+pub const REGISTRY: [MethodInfo; 7] = [
     MethodInfo {
         tag: "one-shot",
         reference: "paper §4.1.1",
@@ -1164,6 +1326,11 @@ pub const REGISTRY: [MethodInfo; 6] = [
         tag: "budget_greedy",
         reference: "arXiv:2101.06590",
         when_to_use: "hard compute cap: spend it one probe at a time on the best",
+    },
+    MethodInfo {
+        tag: "bandit",
+        reference: "arXiv:2101.06590",
+        when_to_use: "eliminate losers in geometric rounds, probe the leaders first",
     },
 ];
 
@@ -1313,6 +1480,71 @@ mod tests {
     }
 
     #[test]
+    fn bandit_respects_budget_and_ranks_everyone() {
+        let ts = toy();
+        let out = SearchPlan::with_method(Method::bandit(3.0)).run_replay(&ts).unwrap();
+        let mut r = out.ranking.clone();
+        r.sort_unstable();
+        assert_eq!(r, (0..9).collect::<Vec<_>>());
+        assert!(out.cost < 1.0, "no savings: {}", out.cost);
+        for budget in [0.4, 0.6] {
+            let capped = SearchPlan::with_method(Method::bandit(3.0))
+                .budget(budget)
+                .run_replay(&ts)
+                .unwrap();
+            assert!(capped.cost <= budget + 1e-12, "cost {} exceeds {budget}", capped.cost);
+            let mut r = capped.ranking.clone();
+            r.sort_unstable();
+            assert_eq!(r, (0..9).collect::<Vec<_>>());
+        }
+        // a budget below the initial probe errors instead of overrunning
+        assert!(SearchPlan::with_method(Method::bandit(3.0))
+            .budget(1e-6)
+            .run_replay(&ts)
+            .is_err());
+    }
+
+    #[test]
+    fn bandit_ledger_reconciles_with_the_outcome() {
+        let ts = toy();
+        let plan = SearchPlan::with_method(Method::bandit(3.0)).build().unwrap();
+        let mut d = ReplayDriver::new(&ts);
+        let mut session = SearchSession::new(plan, &mut d);
+        let out = session.run().unwrap();
+        assert_eq!(session.ledger().spent_steps(), &out.steps_trained[..]);
+        assert_eq!(session.ledger().total_committed(), 0);
+        assert_eq!(
+            session.ledger().relative_cost().to_bits(),
+            out.cost.to_bits()
+        );
+    }
+
+    #[test]
+    fn bandit_concentrates_compute_on_the_better_configs() {
+        // toy quality is ordered by index: each elimination round must
+        // leave the surviving compute at the low indices.
+        let ts = toy();
+        let out = SearchPlan::with_method(Method::bandit(3.0)).run_replay(&ts).unwrap();
+        let best_half: usize = out.steps_trained[..4].iter().sum();
+        let worst_half: usize = out.steps_trained[5..].iter().sum();
+        assert!(
+            best_half > worst_half,
+            "bandit did not concentrate: {:?}",
+            out.steps_trained
+        );
+    }
+
+    #[test]
+    fn bandit_defaults_and_rejects_bad_eta() {
+        assert_eq!(Method::parse("bandit").unwrap().tag(), "bandit@3");
+        for t in ["bandit@1", "bandit@0", "bandit@nan", "bandit@inf", "bandit@x"] {
+            let e = Method::parse(t).expect_err(t);
+            let msg = format!("{e:#}");
+            assert!(msg.contains("eta"), "{t}: {msg}");
+        }
+    }
+
+    #[test]
     fn method_tags_are_unique_and_roundtrip() {
         let methods = [
             Method::one_shot(6),
@@ -1323,6 +1555,7 @@ mod tests {
             Method::asha(3.0, None),
             Method::asha(2.0, Some(4)),
             Method::budget_greedy(0.4),
+            Method::bandit(2.5),
         ];
         let mut tags: Vec<String> = methods.iter().map(|m| m.tag()).collect();
         for t in &tags {

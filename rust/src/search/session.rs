@@ -28,6 +28,7 @@ use super::{SearchOutcome, TrajectorySet};
 use crate::err;
 use crate::metrics;
 use crate::predict::Strategy;
+use crate::surrogate::Surrogate;
 use crate::util::error::Result;
 
 /// A validated search plan: method × prediction strategy × data-reduction
@@ -51,6 +52,11 @@ pub struct SearchPlan {
     pub budget: Option<f64>,
     /// Finalists stage 2 resumes to the full horizon.
     pub top_k: usize,
+    /// Surrogate bound into the strategy's surrogate slot at build time
+    /// (registry handle; see [`Surrogate::parse`] and `nshpo
+    /// surrogates`). `None` when the plan did not request one; when
+    /// `Some`, `strategy` is already the rebound handle.
+    pub surrogate: Option<Surrogate>,
 }
 
 impl SearchPlan {
@@ -110,6 +116,15 @@ impl SearchPlan {
 ///     .unwrap();
 /// assert_eq!(plan.method.tag(), "asha@3");
 ///
+/// // a surrogate binds into a strategy's surrogate slot at build time
+/// use nshpo::surrogate::Surrogate;
+/// let plan = SearchPlan::one_shot(6)
+///     .strategy(Strategy::parse("gated@0.05,3").unwrap())
+///     .surrogate(Surrogate::parse("simulator").unwrap())
+///     .build()
+///     .unwrap();
+/// assert_eq!(plan.strategy.tag(), "gated@0.05,3[simulator]");
+///
 /// // build() returns errors instead of panicking on bad parameters:
 /// assert!(SearchPlan::performance_based(vec![3], 1.5).build().is_err());
 /// assert!(SearchPlan::one_shot(0).build().is_err());
@@ -121,6 +136,7 @@ pub struct SearchPlanBuilder {
     plan_mult: f64,
     budget: Option<f64>,
     top_k: usize,
+    surrogate: Option<Surrogate>,
 }
 
 impl SearchPlanBuilder {
@@ -131,6 +147,7 @@ impl SearchPlanBuilder {
             plan_mult: 1.0,
             budget: None,
             top_k: 3,
+            surrogate: None,
         }
     }
 
@@ -161,6 +178,14 @@ impl SearchPlanBuilder {
         self
     }
 
+    /// Bind a [`Surrogate`] into the strategy's surrogate slot at build
+    /// time ([`Strategy::with_surrogate`]). Building errors if the plan's
+    /// strategy has no surrogate slot (only `gated` does today).
+    pub fn surrogate(mut self, surrogate: Surrogate) -> Self {
+        self.surrogate = Some(surrogate);
+        self
+    }
+
     /// Validate and build. Every rejection is an error, not a panic —
     /// CLI and live callers feed user input straight in. Method-specific
     /// parameters are validated by the method itself
@@ -178,12 +203,24 @@ impl SearchPlanBuilder {
             return Err(err!("top_k must be >= 1"));
         }
         self.method.validate(self.budget)?;
+        let strategy = match &self.surrogate {
+            None => self.strategy,
+            Some(s) => self.strategy.with_surrogate(s).ok_or_else(|| {
+                err!(
+                    "strategy {:?} has no surrogate slot to bind {:?} into \
+                     (use a slotted strategy like gated[@rmse,days])",
+                    self.strategy.tag(),
+                    s.tag()
+                )
+            })?,
+        };
         Ok(SearchPlan {
             method: self.method,
-            strategy: self.strategy,
+            strategy,
             plan_mult: self.plan_mult,
             budget: self.budget,
             top_k: self.top_k,
+            surrogate: self.surrogate,
         })
     }
 
@@ -480,6 +517,39 @@ mod tests {
         assert!(SearchPlan::one_shot(6).top_k(0).build().is_err());
         assert!(SearchPlan::one_shot(6).plan_mult(0.0).build().is_err());
         assert!(SearchPlan::one_shot(6).plan_mult(f64::INFINITY).build().is_err());
+    }
+
+    #[test]
+    fn build_binds_surrogates_into_slotted_strategies_only() {
+        use crate::surrogate::Surrogate;
+        // a gated strategy accepts the surrogate and rebinds its tag
+        let plan = SearchPlan::one_shot(6)
+            .strategy(Strategy::parse("gated@0.05,3").unwrap())
+            .surrogate(Surrogate::simulator())
+            .build()
+            .unwrap();
+        assert_eq!(plan.strategy.tag(), "gated@0.05,3[simulator]");
+        assert_eq!(plan.surrogate.as_ref().unwrap().tag(), "simulator");
+        // slotless strategies error, naming both tags
+        for strat in [Strategy::constant(), Strategy::parse("switching@6").unwrap()] {
+            let tag = strat.tag();
+            let e = SearchPlan::one_shot(6)
+                .strategy(strat)
+                .surrogate(Surrogate::simulator())
+                .build()
+                .expect_err(&tag);
+            let msg = format!("{e:#}");
+            assert!(msg.contains("surrogate slot"), "[{tag}] {msg}");
+            assert!(msg.contains(&tag), "[{tag}] {msg}");
+            assert!(msg.contains("simulator"), "[{tag}] {msg}");
+        }
+        // no surrogate requested: the strategy passes through untouched
+        let plan = SearchPlan::one_shot(6)
+            .strategy(Strategy::parse("gated@0.05,3").unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(plan.strategy.tag(), "gated@0.05,3");
+        assert!(plan.surrogate.is_none());
     }
 
     #[test]

@@ -124,6 +124,9 @@ pub struct PlanSpec {
     pub method: String,
     /// Prediction-strategy registry tag (`nshpo strategies`).
     pub strategy: String,
+    /// Optional surrogate registry tag (`nshpo surrogates`) bound into
+    /// the strategy's surrogate slot at admission.
+    pub surrogate: Option<String>,
     /// Optional cap on the stage-1 relative cost C.
     pub budget: Option<f64>,
     /// Finalists stage 2 resumes to the full horizon.
@@ -306,6 +309,17 @@ impl PlanSpec {
             }
         };
         let strategy = field_str(plan, "plan", "strategy", "constant")?;
+        let surrogate = match plan.get("surrogate") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) if !s.is_empty() => Some(s.clone()),
+            Some(_) => {
+                return Err(FrameError::new(
+                    "plan.surrogate",
+                    "must be a non-empty string (a surrogate registry tag; \
+                     see `nshpo surrogates`)",
+                ))
+            }
+        };
         let budget = match plan.get("budget") {
             None | Some(Json::Null) => None,
             Some(v) => Some(v.as_f64().filter(|b| b.is_finite() && *b > 0.0).ok_or_else(
@@ -323,7 +337,7 @@ impl PlanSpec {
                 "must be 1 (identify) or 2 (identify + finish finalists)",
             ));
         }
-        Ok(PlanSpec { source, method, strategy, budget, top_k, stage })
+        Ok(PlanSpec { source, method, strategy, surrogate, budget, top_k, stage })
     }
 
     /// Serialize back to the `"plan"` object (client side).
@@ -334,6 +348,9 @@ impl PlanSpec {
             .set("strategy", Json::Str(self.strategy.clone()))
             .set("top_k", Json::Num(self.top_k as f64))
             .set("stage", Json::Num(self.stage as f64));
+        if let Some(s) = &self.surrogate {
+            o.set("surrogate", Json::Str(s.clone()));
+        }
         if let Some(b) = self.budget {
             o.set("budget", Json::Num(b));
         }
@@ -593,6 +610,7 @@ mod tests {
                     source: SourceSpec::Toy { configs: 8, days: 12, steps_per_day: 8, seed: 3 },
                     method: "asha@3".into(),
                     strategy: "constant".into(),
+                    surrogate: None,
                     budget: Some(0.5),
                     top_k: 2,
                     stage: 2,

@@ -219,6 +219,13 @@ impl Scheduler {
             .map_err(|e| FrameError::new("plan.method", format!("{e:#}")))?;
         let strategy = Strategy::parse(&spec.strategy)
             .map_err(|e| FrameError::new("plan.strategy", format!("{e:#}")))?;
+        let surrogate = match &spec.surrogate {
+            None => None,
+            Some(tag) => Some(
+                crate::surrogate::Surrogate::parse(tag)
+                    .map_err(|e| FrameError::new("plan.surrogate", format!("{e:#}")))?,
+            ),
+        };
 
         let mut st = self.inner.state.lock().unwrap();
         if !st.accepting {
@@ -233,6 +240,9 @@ impl Scheduler {
             .strategy(strategy)
             .plan_mult(mult)
             .top_k(spec.top_k);
+        if let Some(s) = surrogate {
+            builder = builder.surrogate(s);
+        }
         if let Some(b) = spec.budget {
             builder = builder.budget(b);
         }

@@ -17,10 +17,24 @@
 //! simulator runs at 100x the step count of the public benchmark at
 //! trivial cost, which is the point: the *decision dynamics* of the
 //! stopping algorithm are exercised at industrial scale.
+//!
+//! The module also hosts the **surrogate registry** ([`registry`]): the
+//! fourth pluggable axis after scenario / strategy / method. A
+//! [`Surrogate`] is a tagged fit/predict model over the shared
+//! [`Evidence`] interface — the calibrated simulator's curve family
+//! (`simulator`), the paper's fitted power law (`fitted[@law]`), and
+//! the trailing-mean baseline (`constant`) are registered; plans select
+//! one via `--surrogate` and the `gated` strategy decides when to trust
+//! it.
+
+pub mod registry;
+
+pub use registry::{Evidence, FitReport, Surrogate, SurrogateInfo, SurrogateModel};
 
 use crate::metrics;
 use crate::predict::Strategy;
 use crate::search::{equally_spaced_stops, SearchPlan, TrajectorySet};
+use crate::util::error::Result;
 use crate::util::prng::Rng;
 
 /// Parameters of the calibrated learning-curve simulator.
@@ -108,7 +122,7 @@ pub fn sample_task(cfg: &SurrogateConfig, seed: u64) -> TrajectorySet {
                         .iter()
                         .map(|&x| x as f64)
                         .sum();
-                    vec![sum as f32 / cfg.steps_per_day as f32 * cfg.steps_per_day as f32]
+                    vec![sum as f32]
                 })
                 .collect()
         })
@@ -121,7 +135,10 @@ pub fn sample_task(cfg: &SurrogateConfig, seed: u64) -> TrajectorySet {
         step_losses,
         day_cluster_counts,
         cluster_loss_sums,
-        eval_cluster_counts: vec![1000],
+        // One cluster covering the configured eval window, so stratified
+        // reweighting and cost/regret normalization stay consistent
+        // across SurrogateConfigs instead of assuming 1000 examples.
+        eval_cluster_counts: vec![(cfg.eval_days * cfg.steps_per_day) as u64],
     }
 }
 
@@ -129,13 +146,17 @@ pub fn sample_task(cfg: &SurrogateConfig, seed: u64) -> TrajectorySet {
 /// constant prediction at a given stopping frequency over `n_tasks`
 /// tasks; return (mean cost, mean regret@3, std regret@3) with regret
 /// normalized by each task's best config metric (the reference).
+///
+/// Invalid plan parameters (e.g. a rho outside `[0, 1)`) surface as an
+/// `Err` naming the parameter — validated once up front, never as a
+/// panic inside an executor worker.
 pub fn fig6_point(
     cfg: &SurrogateConfig,
     stop_every_days: usize,
     rho: f64,
     n_tasks: usize,
     seed: u64,
-) -> (f64, f64, f64) {
+) -> Result<(f64, f64, f64)> {
     fig6_point_with(
         &crate::search::ReplayExecutor::serial(),
         cfg,
@@ -149,7 +170,8 @@ pub fn fig6_point(
 /// [`fig6_point`] with explicit execution: tasks are independent
 /// (sample + replay), so they fan out on the replay executor; per-task
 /// results are collected in task order, making the aggregate
-/// bit-identical to the serial path.
+/// bit-identical to the serial path. The plan is validated once before
+/// any worker runs.
 pub fn fig6_point_with(
     exec: &crate::search::ReplayExecutor,
     cfg: &SurrogateConfig,
@@ -157,27 +179,42 @@ pub fn fig6_point_with(
     rho: f64,
     n_tasks: usize,
     seed: u64,
-) -> (f64, f64, f64) {
+) -> Result<(f64, f64, f64)> {
     let cfg = cfg.clone();
+    let stops = equally_spaced_stops(cfg.days, stop_every_days);
+    // Validate the plan once, up front: every task runs the same plan
+    // shape, so a bad parameter must be an error here — not a panic
+    // inside a worker closure.
+    SearchPlan::performance_based(stops.clone(), rho)
+        .strategy(Strategy::constant())
+        .build()?;
     let tasks: Vec<u64> = (0..n_tasks as u64).collect();
-    let per_task: Vec<(f64, f64)> = exec.map(tasks, move |_, task| {
-        let ts = sample_task(&cfg, seed ^ task.wrapping_mul(0x9E37_79B9));
-        let stops = equally_spaced_stops(cfg.days, stop_every_days);
-        let out = SearchPlan::performance_based(stops, rho)
-            .strategy(Strategy::constant())
-            .run_replay(&ts)
-            .expect("invalid surrogate search parameters");
-        let gt = ts.ground_truth();
-        let reference = gt.iter().cloned().fold(f64::MAX, f64::min);
-        (out.cost, metrics::regret_at_k(&out.ranking, &gt, 3) / reference)
-    });
-    let costs: Vec<f64> = per_task.iter().map(|p| p.0).collect();
-    let regrets: Vec<f64> = per_task.iter().map(|p| p.1).collect();
-    (
+    let per_task: Vec<std::result::Result<(f64, f64), String>> =
+        exec.map(tasks, move |_, task| {
+            let ts = sample_task(&cfg, seed ^ task.wrapping_mul(0x9E37_79B9));
+            let out = match SearchPlan::performance_based(stops.clone(), rho)
+                .strategy(Strategy::constant())
+                .run_replay(&ts)
+            {
+                Ok(out) => out,
+                Err(e) => return Err(format!("surrogate task {task}: {e:#}")),
+            };
+            let gt = ts.ground_truth();
+            let reference = gt.iter().cloned().fold(f64::MAX, f64::min);
+            Ok((out.cost, metrics::regret_at_k(&out.ranking, &gt, 3) / reference))
+        });
+    let mut costs = Vec::with_capacity(per_task.len());
+    let mut regrets = Vec::with_capacity(per_task.len());
+    for r in per_task {
+        let (c, m) = r.map_err(crate::util::error::Error::msg)?;
+        costs.push(c);
+        regrets.push(m);
+    }
+    Ok((
         crate::util::stats::mean(&costs),
         crate::util::stats::mean(&regrets),
         crate::util::stats::std(&regrets),
-    )
+    ))
 }
 
 #[cfg(test)]
@@ -222,9 +259,56 @@ mod tests {
     fn fig6_point_monotonicity_in_stopping_frequency() {
         let cfg = small();
         // Stopping rarely (large spacing) costs more than stopping often.
-        let (c_rare, _, _) = fig6_point(&cfg, 6, 0.5, 5, 42);
-        let (c_often, _, _) = fig6_point(&cfg, 2, 0.5, 5, 42);
+        let (c_rare, _, _) = fig6_point(&cfg, 6, 0.5, 5, 42).unwrap();
+        let (c_often, _, _) = fig6_point(&cfg, 2, 0.5, 5, 42).unwrap();
         assert!(c_often < c_rare, "{c_often} vs {c_rare}");
+    }
+
+    #[test]
+    fn fig6_bad_rho_is_an_error_naming_the_parameter() {
+        // regression: an invalid rho used to reach `.expect` inside an
+        // executor worker closure and panic the worker
+        for bad in [1.5, -0.1, f64::NAN] {
+            let err = fig6_point(&small(), 3, bad, 2, 1).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("rho"), "error does not name rho: {msg}");
+        }
+    }
+
+    #[test]
+    fn cluster_sums_store_exact_day_sums() {
+        // regression: the stored day sum used to round-trip through an
+        // f32 divide-then-multiply by steps_per_day, injecting rounding
+        let cfg = small();
+        let ts = sample_task(&cfg, 3);
+        for c in [0usize, 5, 11] {
+            for d in [0usize, 4, 11] {
+                let expected: f64 = ts.step_losses[c]
+                    [d * cfg.steps_per_day..(d + 1) * cfg.steps_per_day]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum();
+                assert_eq!(
+                    ts.cluster_loss_sums[c][d][0].to_bits(),
+                    (expected as f32).to_bits(),
+                    "config {c} day {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_cluster_counts_derive_from_the_eval_window() {
+        // regression: previously hard-coded to 1000 examples regardless
+        // of the configured eval window
+        let cfg = small();
+        let ts = sample_task(&cfg, 4);
+        assert_eq!(
+            ts.eval_cluster_counts,
+            vec![(cfg.eval_days * cfg.steps_per_day) as u64]
+        );
+        let wide = SurrogateConfig { eval_days: 5, steps_per_day: 40, ..small() };
+        assert_eq!(sample_task(&wide, 4).eval_cluster_counts, vec![200]);
     }
 
     #[test]
@@ -250,8 +334,9 @@ mod tests {
     #[test]
     fn fig6_parallel_matches_serial() {
         let cfg = small();
-        let serial = fig6_point(&cfg, 3, 0.5, 6, 99);
-        let par = fig6_point_with(&crate::search::ReplayExecutor::new(4), &cfg, 3, 0.5, 6, 99);
+        let serial = fig6_point(&cfg, 3, 0.5, 6, 99).unwrap();
+        let par = fig6_point_with(&crate::search::ReplayExecutor::new(4), &cfg, 3, 0.5, 6, 99)
+            .unwrap();
         assert_eq!(serial.0.to_bits(), par.0.to_bits());
         assert_eq!(serial.1.to_bits(), par.1.to_bits());
         assert_eq!(serial.2.to_bits(), par.2.to_bits());

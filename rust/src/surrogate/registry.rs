@@ -1,0 +1,573 @@
+//! The fourth pluggable registry: stage-1 **surrogates** behind
+//! `--surrogate` and `nshpo surrogates`.
+//!
+//! A surrogate is the model-of-the-model stage 1 ranks configurations
+//! with: it consumes the same [`Evidence`] a prediction strategy
+//! receives (the truncated-observation view assembled by
+//! [`TrajectorySet::predict_context`](crate::search::TrajectorySet::predict_context))
+//! and produces per-config eval-window estimates, plus a fit-quality
+//! report the evidence-gated `gated` strategy uses to decide *when* the
+//! surrogate has earned trust
+//! ([`Strategy::gated`](crate::predict::Strategy::gated)).
+//!
+//! This mirrors the scenario / strategy / method registries: a
+//! [`SurrogateModel`] is the trait, a [`Surrogate`] is the cheap
+//! clonable handle plans and the serve protocol thread around, tags
+//! resolve via [`Surrogate::parse`], and [`Surrogate::custom`] is the
+//! open end for external implementations.
+//!
+//! Registered tags (see [`REGISTRY`]):
+//!
+//! * `constant` — the trailing-mean predictor (§4.2.1) wearing the
+//!   surrogate interface; its fit report measures how flat the trailing
+//!   window actually is.
+//! * `fitted[@law]` — the paper's trajectory surrogate: one joint
+//!   pairwise-difference law fit across configs
+//!   ([`fit::fit_pairwise`]), extrapolated to the eval window.
+//!   Bit-identical to
+//!   [`trajectory_predict`](crate::predict::trajectory_predict).
+//! * `simulator` — the calibrated industrial learning-curve family of
+//!   [`sample_task`](super::sample_task) (`l_inf + a·D^-alpha`, Fig 6),
+//!   fit to each config *independently* — no cross-config nuisance
+//!   cancellation, which is exactly what makes it an informative
+//!   contrast to `fitted` under shared drift.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::err;
+use crate::predict::{constant_prediction, fit, LawKind, PredictContext, FIT_DAYS};
+use crate::util::error::Result;
+
+/// The shared evidence interface every surrogate consumes: exactly the
+/// truncated-observation view a
+/// [`PredictionStrategy`](crate::predict::PredictionStrategy) receives,
+/// so strategies and surrogates are interchangeable consumers of one
+/// observation contract (fit points via [`PredictContext::fit_points`],
+/// eval targets via [`PredictContext::eval_fracs`]).
+pub type Evidence<'a> = PredictContext<'a>;
+
+/// What a surrogate learned from the evidence, summarized for gating
+/// decisions (the `gated` strategy's handoff test).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FitReport {
+    /// Worst per-config RMSE of the surrogate's fitted curve over that
+    /// config's own fit points ([`f64::INFINITY`] when any config has
+    /// too few points or the fit diverged). Smaller = the surrogate
+    /// tracks the observed trajectories.
+    pub max_rmse: f64,
+    /// Fewest finite fit points any config contributed — extrapolation
+    /// needs at least 2.
+    pub min_points: usize,
+}
+
+/// One stage-1 surrogate: fit-quality reporting plus eval-window
+/// prediction over the shared [`Evidence`] interface. Implementations
+/// must be deterministic pure functions of the evidence (replay-vs-live
+/// parity and bit-identical parallel replay depend on it).
+pub trait SurrogateModel: Send + Sync {
+    /// Canonical registry tag, including parameters
+    /// (`fitted@VaporPressure`). Used for CLI round-trips and labels.
+    fn tag(&self) -> String;
+
+    /// Where the surrogate comes from (paper section or citation) —
+    /// shown by `nshpo surrogates`.
+    fn provenance(&self) -> &'static str;
+
+    /// Fit the surrogate to the evidence and report how well it tracks
+    /// the observed trajectories (the gate of
+    /// [`Strategy::gated`](crate::predict::Strategy::gated)).
+    fn fit(&self, evidence: &Evidence<'_>) -> FitReport;
+
+    /// Predicted eval-window metric per config, aligned with the
+    /// evidence's series (smaller = better).
+    fn predict(&self, evidence: &Evidence<'_>) -> Vec<f64>;
+}
+
+/// A cheap clonable handle to a [`SurrogateModel`] — what
+/// [`SearchPlan`](crate::search::SearchPlan)s carry, the serve protocol
+/// resolves from `plan.surrogate`, and `--surrogate` parses into. Build
+/// one via the constructors ([`Surrogate::constant`],
+/// [`Surrogate::fitted`], [`Surrogate::simulator`]), from a registry tag
+/// ([`Surrogate::parse`]), or from any custom trait implementation
+/// ([`Surrogate::custom`]).
+#[derive(Clone)]
+pub struct Surrogate(Arc<dyn SurrogateModel>);
+
+impl Surrogate {
+    /// The trailing-mean predictor (§4.2.1) as a surrogate. Its fit
+    /// report is the spread of the trailing window around its mean.
+    pub fn constant() -> Surrogate {
+        Surrogate(Arc::new(ConstantSurrogate))
+    }
+
+    /// The fitted power-law surrogate (§4.2.2): one joint
+    /// pairwise-difference fit of `law` across configs, extrapolated to
+    /// the eval window — bit-identical to
+    /// [`trajectory_predict`](crate::predict::trajectory_predict).
+    pub fn fitted(law: LawKind) -> Surrogate {
+        Surrogate(Arc::new(FittedSurrogate { law }))
+    }
+
+    /// The calibrated industrial simulator's learning-curve family
+    /// (`l_inf + a·D^-alpha`, the generator of
+    /// [`sample_task`](super::sample_task)), fit to each config
+    /// independently — no cross-config nuisance cancellation.
+    pub fn simulator() -> Surrogate {
+        Surrogate(Arc::new(SimulatorSurrogate))
+    }
+
+    /// Wrap a custom [`SurrogateModel`] implementation — the open end
+    /// of the registry.
+    pub fn custom(implementation: Arc<dyn SurrogateModel>) -> Surrogate {
+        Surrogate(implementation)
+    }
+
+    /// Resolve a registry tag (`constant`, `fitted`,
+    /// `fitted@VaporPressure`, `simulator`) into a surrogate. Every
+    /// `tag()` a registry surrogate prints round-trips through here.
+    ///
+    /// Every rejection is a [`util::error`](crate::util::error)
+    /// `Result` naming the offending field and the registered tags —
+    /// CLI and serve input feed straight in.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nshpo::surrogate::Surrogate;
+    ///
+    /// assert_eq!(Surrogate::parse("constant").unwrap().tag(), "constant");
+    /// assert_eq!(Surrogate::parse("fitted").unwrap().tag(), "fitted@InversePowerLaw");
+    /// assert_eq!(Surrogate::parse("fitted@vp").unwrap().tag(), "fitted@VaporPressure");
+    /// assert_eq!(Surrogate::parse("simulator").unwrap().tag(), "simulator");
+    ///
+    /// // Unknown tags are errors (no panics), listing the valid tags.
+    /// let err = Surrogate::parse("oracle").unwrap_err();
+    /// assert!(format!("{err:#}").contains("simulator"));
+    /// ```
+    pub fn parse(tag: &str) -> Result<Surrogate> {
+        let (base, param) = match tag.split_once('@') {
+            Some((b, p)) => (b, Some(p)),
+            None => (tag, None),
+        };
+        let listed = || tags().join(", ");
+        match base {
+            "constant" => match param {
+                None => Ok(Surrogate::constant()),
+                Some(_) => Err(err!(
+                    "surrogate 'constant' takes no @parameter, got {tag:?} \
+                     (registered: {})",
+                    listed()
+                )),
+            },
+            "fitted" => {
+                let law = match param {
+                    None => LawKind::InversePowerLaw,
+                    Some(p) => LawKind::parse(p).ok_or_else(|| {
+                        err!(
+                            "unknown fitted-surrogate law in {tag:?} (laws: {}; \
+                             registered surrogates: {})",
+                            LawKind::all_names().join(", "),
+                            listed()
+                        )
+                    })?,
+                };
+                Ok(Surrogate::fitted(law))
+            }
+            "simulator" => match param {
+                None => Ok(Surrogate::simulator()),
+                Some(_) => Err(err!(
+                    "surrogate 'simulator' takes no @parameter (its curve family \
+                     is the Fig-6 calibration), got {tag:?} (registered: {})",
+                    listed()
+                )),
+            },
+            other => Err(err!(
+                "unknown surrogate {other:?} (registered: {})",
+                listed()
+            )),
+        }
+    }
+
+    /// Canonical registry tag of this surrogate (round-trips through
+    /// [`Surrogate::parse`] for registry-built surrogates).
+    pub fn tag(&self) -> String {
+        self.0.tag()
+    }
+
+    /// Paper-section / citation provenance of the surrogate.
+    pub fn provenance(&self) -> &'static str {
+        self.0.provenance()
+    }
+
+    /// Fit to the evidence and report fit quality (see
+    /// [`SurrogateModel::fit`]).
+    pub fn fit(&self, evidence: &Evidence<'_>) -> FitReport {
+        self.0.fit(evidence)
+    }
+
+    /// Predict eval-window metrics for the evidence's config subset.
+    pub fn predict(&self, evidence: &Evidence<'_>) -> Vec<f64> {
+        self.0.predict(evidence)
+    }
+}
+
+impl fmt::Debug for Surrogate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Surrogate({})", self.tag())
+    }
+}
+
+impl PartialEq for Surrogate {
+    fn eq(&self, other: &Surrogate) -> bool {
+        self.tag() == other.tag()
+    }
+}
+
+// ------------------------------------------------ registered surrogates
+
+/// Worst per-config RMSE of `law(params)` over each config's fit points;
+/// infinite if any residual is non-finite.
+fn max_rmse_of(law: LawKind, pts: &[Vec<(f64, f64)>], params: &[Vec<f64>]) -> f64 {
+    let mut worst = 0.0f64;
+    for (p, prm) in pts.iter().zip(params) {
+        let mut se = 0.0;
+        for &(d, m) in p {
+            let r = law.eval(d, prm) - m;
+            se += r * r;
+        }
+        let rmse = (se / p.len().max(1) as f64).sqrt();
+        if !rmse.is_finite() {
+            return f64::INFINITY;
+        }
+        worst = worst.max(rmse);
+    }
+    worst
+}
+
+/// Smallest per-config fit-point count (0 for an empty subset).
+fn min_points_of(pts: &[Vec<(f64, f64)>]) -> usize {
+    pts.iter().map(|p| p.len()).min().unwrap_or(0)
+}
+
+/// §4.2.1 trailing mean wearing the surrogate interface.
+struct ConstantSurrogate;
+
+impl SurrogateModel for ConstantSurrogate {
+    fn tag(&self) -> String {
+        "constant".to_string()
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.2.1"
+    }
+
+    fn fit(&self, evidence: &Evidence<'_>) -> FitReport {
+        // The "fit" is the trailing mean itself; the report measures how
+        // flat the trailing window really is.
+        let pts = evidence.fit_points();
+        let min_points = min_points_of(&pts);
+        let mut worst = 0.0f64;
+        for p in &pts {
+            if p.is_empty() {
+                return FitReport { max_rmse: f64::INFINITY, min_points };
+            }
+            let mean = p.iter().map(|&(_, m)| m).sum::<f64>() / p.len() as f64;
+            let se: f64 = p.iter().map(|&(_, m)| (m - mean) * (m - mean)).sum();
+            let rmse = (se / p.len() as f64).sqrt();
+            if !rmse.is_finite() {
+                return FitReport { max_rmse: f64::INFINITY, min_points };
+            }
+            worst = worst.max(rmse);
+        }
+        FitReport { max_rmse: worst, min_points }
+    }
+
+    fn predict(&self, evidence: &Evidence<'_>) -> Vec<f64> {
+        evidence
+            .day_means
+            .iter()
+            .map(|dm| constant_prediction(dm, FIT_DAYS))
+            .collect()
+    }
+}
+
+/// §4.2.2 joint pairwise-difference law fit as a surrogate.
+struct FittedSurrogate {
+    law: LawKind,
+}
+
+impl SurrogateModel for FittedSurrogate {
+    fn tag(&self) -> String {
+        format!("fitted@{}", self.law.name())
+    }
+
+    fn provenance(&self) -> &'static str {
+        "paper §4.2.2 (joint pairwise fit)"
+    }
+
+    fn fit(&self, evidence: &Evidence<'_>) -> FitReport {
+        let pts = evidence.fit_points();
+        let min_points = min_points_of(&pts);
+        if pts.is_empty() || min_points < 2 {
+            return FitReport { max_rmse: f64::INFINITY, min_points };
+        }
+        let params = fit::fit_pairwise(self.law, &pts, |_, _| {});
+        FitReport { max_rmse: max_rmse_of(self.law, &pts, &params), min_points }
+    }
+
+    fn predict(&self, evidence: &Evidence<'_>) -> Vec<f64> {
+        // Exactly trajectory_predict — the strategy and the surrogate
+        // are the same estimator seen through two interfaces, and the
+        // gated-vs-switching bit-identity pin depends on it.
+        crate::predict::trajectory_predict(
+            self.law,
+            &evidence.day_means,
+            evidence.total_days,
+            evidence.eval_days,
+        )
+    }
+}
+
+/// The calibrated industrial simulator's curve family, fit per config
+/// independently.
+struct SimulatorSurrogate;
+
+/// The simulator's generator is `l_inf + a·D^-alpha` (see
+/// [`sample_task`](super::sample_task)) — the inverse power law.
+const SIMULATOR_LAW: LawKind = LawKind::InversePowerLaw;
+
+impl SurrogateModel for SimulatorSurrogate {
+    fn tag(&self) -> String {
+        "simulator".to_string()
+    }
+
+    fn provenance(&self) -> &'static str {
+        "Fig-6 calibration (surrogate::sample_task)"
+    }
+
+    fn fit(&self, evidence: &Evidence<'_>) -> FitReport {
+        let pts = evidence.fit_points();
+        let min_points = min_points_of(&pts);
+        if pts.is_empty() || min_points < 2 {
+            return FitReport { max_rmse: f64::INFINITY, min_points };
+        }
+        let mut worst = 0.0f64;
+        for p in &pts {
+            let params = fit::fit_pairwise(SIMULATOR_LAW, std::slice::from_ref(p), |_, _| {});
+            let rmse = max_rmse_of(SIMULATOR_LAW, std::slice::from_ref(p), &params);
+            if !rmse.is_finite() {
+                return FitReport { max_rmse: f64::INFINITY, min_points };
+            }
+            worst = worst.max(rmse);
+        }
+        FitReport { max_rmse: worst, min_points }
+    }
+
+    fn predict(&self, evidence: &Evidence<'_>) -> Vec<f64> {
+        let evals = evidence.eval_fracs();
+        evidence
+            .day_means
+            .iter()
+            .zip(evidence.fit_points())
+            .map(|(dm, p)| {
+                if p.len() < 2 {
+                    return constant_prediction(dm, FIT_DAYS);
+                }
+                let params =
+                    fit::fit_pairwise(SIMULATOR_LAW, std::slice::from_ref(&p), |_, _| {});
+                let v = evals.iter().map(|&d| SIMULATOR_LAW.eval(d, &params[0])).sum::<f64>()
+                    / evals.len() as f64;
+                if v.is_finite() {
+                    v
+                } else {
+                    constant_prediction(dm, FIT_DAYS)
+                }
+            })
+            .collect()
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// One registry row: tag, provenance, and the one-line guidance shown
+/// by `nshpo surrogates`.
+pub struct SurrogateInfo {
+    /// Base registry tag (`fitted` also accepts `@<law>`).
+    pub tag: &'static str,
+    /// Paper section or citation the surrogate implements.
+    pub reference: &'static str,
+    /// When to reach for this surrogate.
+    pub when_to_use: &'static str,
+}
+
+/// Every registered surrogate, base tags only.
+pub const REGISTRY: [SurrogateInfo; 3] = [
+    SurrogateInfo {
+        tag: "constant",
+        reference: "paper §4.2.1",
+        when_to_use: "cheap baseline: trailing mean, no extrapolation",
+    },
+    SurrogateInfo {
+        tag: "fitted",
+        reference: "paper §4.2.2",
+        when_to_use: "shared drift: joint pairwise fit cancels day-level nuisance",
+    },
+    SurrogateInfo {
+        tag: "simulator",
+        reference: "Fig-6 calibration",
+        when_to_use: "independent per-config curves (the industrial simulator family)",
+    },
+];
+
+/// Base tags of every registered surrogate, registry order.
+pub fn tags() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.tag).collect()
+}
+
+/// The `nshpo surrogates` table: one row per registered tag with its
+/// provenance and usage guidance. Tests pin that every registered tag
+/// appears here, so the CLI listing cannot silently drop one.
+pub fn registry_table() -> String {
+    let mut out = format!("{:<20} {:<34} when to use\n", "tag", "reference");
+    for info in &REGISTRY {
+        out.push_str(&format!(
+            "{:<20} {:<34} {}\n",
+            info.tag, info.reference, info.when_to_use
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 2-config single-cluster evidence fixture over `day_stop` of 12
+    /// days, with smoothly decaying curves.
+    fn fixture(day_stop: usize) -> (Vec<Vec<u32>>, Vec<Vec<Vec<f32>>>, Vec<u64>, Vec<Vec<f64>>) {
+        let counts: Vec<Vec<u32>> = (0..day_stop).map(|_| vec![10u32]).collect();
+        let day_means: Vec<Vec<f64>> = (0..2)
+            .map(|c| {
+                (0..day_stop)
+                    .map(|d| 0.5 + 0.1 * c as f64 + 0.3 / (d + 1) as f64)
+                    .collect()
+            })
+            .collect();
+        let sums: Vec<Vec<Vec<f32>>> = day_means
+            .iter()
+            .map(|dm| dm.iter().map(|&m| vec![(m * 10.0) as f32]).collect())
+            .collect();
+        (counts, sums, vec![100], day_means)
+    }
+
+    fn evidence_of<'a>(
+        day_stop: usize,
+        counts: &'a [Vec<u32>],
+        sums: &'a [Vec<Vec<f32>>],
+        eval: &'a [u64],
+        day_means: &[Vec<f64>],
+    ) -> Evidence<'a> {
+        Evidence {
+            day_stop,
+            total_days: 12,
+            eval_days: 3,
+            day_means: day_means.to_vec(),
+            day_cluster_counts: counts,
+            cluster_loss_sums: sums.iter().map(|s| s.as_slice()).collect(),
+            eval_cluster_counts: eval,
+        }
+    }
+
+    #[test]
+    fn registry_tags_parse_and_roundtrip() {
+        for info in &REGISTRY {
+            let s = Surrogate::parse(info.tag).unwrap();
+            let canonical = s.tag();
+            assert!(
+                canonical == info.tag || canonical.starts_with(&format!("{}@", info.tag)),
+                "{} -> {canonical}",
+                info.tag
+            );
+            let again = Surrogate::parse(&canonical).unwrap();
+            assert_eq!(again.tag(), canonical);
+            assert!(!s.provenance().is_empty());
+        }
+        assert!(tags().len() >= 3);
+    }
+
+    #[test]
+    fn registry_table_lists_every_tag() {
+        let table = registry_table();
+        for t in tags() {
+            assert!(table.contains(t), "{t} missing from table:\n{table}");
+        }
+    }
+
+    #[test]
+    fn fitted_predict_is_trajectory_predict_bit_for_bit() {
+        let (counts, sums, eval, day_means) = fixture(8);
+        let ev = evidence_of(8, &counts, &sums, &eval, &day_means);
+        let s = Surrogate::fitted(LawKind::InversePowerLaw).predict(&ev);
+        let t = crate::predict::trajectory_predict(
+            LawKind::InversePowerLaw,
+            &day_means,
+            12,
+            3,
+        );
+        assert_eq!(s.len(), t.len());
+        for (a, b) in s.iter().zip(&t) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fit_reports_flag_thin_evidence() {
+        let (counts, sums, eval, day_means) = fixture(1);
+        let ev = evidence_of(1, &counts, &sums, &eval, &day_means);
+        for s in [Surrogate::fitted(LawKind::InversePowerLaw), Surrogate::simulator()] {
+            let r = s.fit(&ev);
+            assert_eq!(r.min_points, 1, "{}", s.tag());
+            assert!(r.max_rmse.is_infinite(), "{}: {r:?}", s.tag());
+        }
+    }
+
+    #[test]
+    fn fit_reports_are_small_on_law_shaped_curves() {
+        let (counts, sums, eval, day_means) = fixture(8);
+        let ev = evidence_of(8, &counts, &sums, &eval, &day_means);
+        for s in [
+            Surrogate::fitted(LawKind::InversePowerLaw),
+            Surrogate::simulator(),
+        ] {
+            let r = s.fit(&ev);
+            assert_eq!(r.min_points, 3, "{}", s.tag());
+            assert!(
+                r.max_rmse.is_finite() && r.max_rmse < 0.1,
+                "{}: {r:?}",
+                s.tag()
+            );
+        }
+    }
+
+    #[test]
+    fn constant_surrogate_reports_the_trailing_spread() {
+        let (counts, sums, eval, _) = fixture(6);
+        let flat = vec![vec![0.7; 6], vec![0.9; 6]];
+        let ev = evidence_of(6, &counts, &sums, &eval, &flat);
+        let r = Surrogate::constant().fit(&ev);
+        assert_eq!(r.min_points, 3);
+        assert!(r.max_rmse < 1e-12, "{r:?}");
+        let p = Surrogate::constant().predict(&ev);
+        assert!((p[0] - 0.7).abs() < 1e-12 && (p[1] - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn debug_and_eq_use_tags() {
+        let a = Surrogate::parse("fitted").unwrap();
+        let b = Surrogate::fitted(LawKind::InversePowerLaw);
+        assert_eq!(a, b);
+        assert_eq!(format!("{a:?}"), "Surrogate(fitted@InversePowerLaw)");
+        assert_ne!(a, Surrogate::constant());
+    }
+}

@@ -108,6 +108,7 @@ fn toy_spec(configs: usize, seed: u64) -> PlanSpec {
         source: SourceSpec::Toy { configs, days: 12, steps_per_day: 8, seed },
         method: "perf@0.5[3,6,9]".to_string(),
         strategy: "constant".to_string(),
+        surrogate: None,
         budget: None,
         top_k: 2,
         stage: 2,

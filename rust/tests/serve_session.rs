@@ -12,6 +12,7 @@ fn toy_spec(configs: usize, seed: u64, method: &str, budget: Option<f64>) -> Pla
         source: SourceSpec::Toy { configs, days: 12, steps_per_day: 8, seed },
         method: method.to_string(),
         strategy: "constant".to_string(),
+        surrogate: None,
         budget,
         top_k: 3,
         stage: 2,
@@ -182,6 +183,16 @@ fn bad_tags_and_unknown_family_are_rejected_at_admission() {
     spec.strategy = "no-such-strategy".into();
     assert_eq!(sched.submit("s", &spec, null_sink()).unwrap_err().field, "plan.strategy");
 
+    let mut spec = toy_spec(3, 1, "one-shot@6", None);
+    spec.surrogate = Some("no-such-surrogate".into());
+    assert_eq!(sched.submit("g", &spec, null_sink()).unwrap_err().field, "plan.surrogate");
+
+    // a resolvable surrogate on a slotless strategy fails plan validation
+    let mut spec = toy_spec(3, 1, "one-shot@6", None);
+    spec.surrogate = Some("simulator".into());
+    let err = sched.submit("g2", &spec, null_sink()).unwrap_err();
+    assert_eq!(err.field, "plan", "{err}");
+
     let spec = PlanSpec {
         source: SourceSpec::Live {
             family: "no-such-family".into(),
@@ -196,6 +207,7 @@ fn bad_tags_and_unknown_family_are_rejected_at_admission() {
         },
         method: "one-shot@1".into(),
         strategy: "constant".into(),
+        surrogate: None,
         budget: None,
         top_k: 1,
         stage: 1,

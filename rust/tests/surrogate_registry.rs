@@ -1,0 +1,175 @@
+//! Acceptance gates of the pluggable surrogate registry.
+//!
+//! * **Rejection** — every malformed tag shape is an error naming the
+//!   offending field, never a panic (CLI and serve input feed straight
+//!   into `Surrogate::parse`).
+//! * **Constructor-vs-tag equivalence** — the simulator surrogate built
+//!   by constructor and resolved from its registry tag are the same
+//!   estimator: equal tags and bit-identical predictions on a calibrated
+//!   industrial task.
+//! * **Gated ≡ switching** — evidence-gated dynamic switching with the
+//!   gate forced open (`max_rmse` = ∞) and the default fitted power-law
+//!   surrogate is bit-identical to the day-hardcoded `switching@day`
+//!   strategy it generalizes, at every stopping day and through a full
+//!   search plan.
+//! * **fig6 plan validation** — an out-of-range rho surfaces as an error
+//!   naming the parameter, not a worker panic.
+
+use nshpo::predict::{LawKind, Strategy};
+use nshpo::search::{Method, SearchPlan, TrajectorySet};
+use nshpo::surrogate::{fig6_point, sample_task, Surrogate, SurrogateConfig};
+
+/// A cheap industrial task: same calibrated generator, scaled down.
+fn small_cfg() -> SurrogateConfig {
+    SurrogateConfig { n_configs: 8, days: 12, steps_per_day: 10, ..SurrogateConfig::default() }
+}
+
+// ------------------------------------------------------------ rejection
+
+/// One malformed tag per shape; each error names the offending field.
+#[test]
+fn malformed_tags_are_field_named_errors() {
+    for (tag, needle) in [
+        // parameter on a parameterless surrogate
+        ("constant@3", "constant"),
+        ("simulator@vp", "simulator"),
+        // unknown law on the fitted surrogate
+        ("fitted@no_such_law", "law"),
+        // unknown base tag
+        ("oracle", "unknown surrogate"),
+        ("", "unknown surrogate"),
+    ] {
+        let e = Surrogate::parse(tag).expect_err(tag);
+        let msg = format!("{e:#}");
+        assert!(msg.contains(needle), "{tag:?}: {msg}");
+        // every rejection lists the registered tags for recovery
+        assert!(msg.contains("registered"), "{tag:?}: {msg}");
+        assert!(msg.contains("simulator"), "{tag:?}: {msg}");
+    }
+}
+
+/// The registry lists at least the three seeded surrogates, and the
+/// `nshpo surrogates` table carries every tag.
+#[test]
+fn registry_lists_at_least_three_tags() {
+    let tags = nshpo::surrogate::registry::tags();
+    assert!(tags.len() >= 3, "registry shrank: {tags:?}");
+    let table = nshpo::surrogate::registry::registry_table();
+    for t in tags {
+        assert!(table.contains(t), "{t} missing from table:\n{table}");
+    }
+}
+
+// ---------------------------------------- constructor-vs-tag equivalence
+
+/// `Surrogate::simulator()` and `Surrogate::parse("simulator")` are the
+/// same estimator: equal tags, bit-identical predictions and fit reports
+/// on a calibrated industrial task.
+#[test]
+fn simulator_constructor_and_tag_are_the_same_estimator() {
+    let built = Surrogate::simulator();
+    let parsed = Surrogate::parse("simulator").unwrap();
+    assert_eq!(built, parsed);
+    assert_eq!(built.tag(), parsed.tag());
+
+    let cfg = small_cfg();
+    let ts = sample_task(&cfg, 11);
+    let all: Vec<usize> = (0..ts.n_configs()).collect();
+    for day_stop in [3, 6, ts.days] {
+        let ev = ts.predict_context(day_stop, &all);
+        let a = built.predict(&ev);
+        let b = parsed.predict(&ev);
+        assert_eq!(a.len(), b.len(), "day {day_stop}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "day {day_stop}");
+        }
+        assert_eq!(built.fit(&ev), parsed.fit(&ev), "day {day_stop}");
+    }
+}
+
+// ------------------------------------------------- gated vs switching
+
+/// With the gate forced open (`max_rmse` = ∞) and the default fitted
+/// power-law surrogate, `gated@inf,<d>` predicts bit-identically to
+/// `switching@<d>` at every stopping day — the generalization collapses
+/// to the strategy it replaces.
+#[test]
+fn forced_gate_is_bit_identical_to_switching_at_the_same_day() {
+    let cfg = small_cfg();
+    let ts = sample_task(&cfg, 7);
+    let all: Vec<usize> = (0..ts.n_configs()).collect();
+    for handoff in [2usize, 4, 6] {
+        let gated =
+            Strategy::gated(handoff, f64::INFINITY, Surrogate::fitted(LawKind::InversePowerLaw));
+        let switching = Strategy::parse(&format!("switching@{handoff}")).unwrap();
+        for day_stop in 1..=ts.days {
+            let g = ts.predict_subset(&gated, day_stop, &all);
+            let s = ts.predict_subset(&switching, day_stop, &all);
+            assert_eq!(g.len(), s.len());
+            for (c, (a, b)) in g.iter().zip(&s).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "handoff {handoff}, day {day_stop}, config {c}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+/// The same bit-identity holds through a full search plan: ranking,
+/// per-config steps, and cost bits all match, on a toy set and on the
+/// industrial task.
+#[test]
+fn forced_gate_matches_switching_through_a_full_plan() {
+    for ts in [TrajectorySet::toy(8, 12, 6, 21), sample_task(&small_cfg(), 3)] {
+        let run = |strategy: Strategy| {
+            SearchPlan::with_method(Method::parse("perf@0.5").unwrap())
+                .strategy(strategy)
+                .run_replay(&ts)
+                .unwrap()
+        };
+        let g = run(Strategy::gated(
+            4,
+            f64::INFINITY,
+            Surrogate::fitted(LawKind::InversePowerLaw),
+        ));
+        let s = run(Strategy::parse("switching@4").unwrap());
+        assert_eq!(g.ranking, s.ranking);
+        assert_eq!(g.steps_trained, s.steps_trained);
+        assert_eq!(g.cost.to_bits(), s.cost.to_bits());
+    }
+}
+
+/// A closed gate (tiny evidence floor never reached) leaves gated
+/// bit-identical to plain constant prediction.
+#[test]
+fn closed_gate_is_bit_identical_to_constant() {
+    let ts = sample_task(&small_cfg(), 5);
+    let all: Vec<usize> = (0..ts.n_configs()).collect();
+    let gated = Strategy::gated(ts.days + 1, f64::INFINITY, Surrogate::simulator());
+    for day_stop in 1..=ts.days {
+        let g = ts.predict_subset(&gated, day_stop, &all);
+        let c = ts.predict_subset(&Strategy::constant(), day_stop, &all);
+        for (a, b) in g.iter().zip(&c) {
+            assert_eq!(a.to_bits(), b.to_bits(), "day {day_stop}");
+        }
+    }
+}
+
+// ------------------------------------------------- fig6 plan validation
+
+/// `fig6_point` validates the plan up front: a bad rho is an error
+/// naming the parameter, not a panic inside an executor worker.
+#[test]
+fn fig6_bad_rho_errors_name_the_parameter() {
+    let cfg = small_cfg();
+    for rho in [1.0, 1.5, -0.1, f64::NAN] {
+        let e = match fig6_point(&cfg, 3, rho, 2, 9) {
+            Err(e) => e,
+            Ok(_) => panic!("rho {rho} was accepted"),
+        };
+        let msg = format!("{e:#}");
+        assert!(msg.contains("rho"), "rho {rho}: {msg}");
+    }
+}
